@@ -1,0 +1,57 @@
+//! Reproduce the paper's analytical results: Table 1, the (l/m)^2 dilation
+//! of §5.1.1, and the arithmetic savings of §5.1.2.
+//!
+//!   cargo run --release --example model_analysis
+
+use swcnn::bench::print_table;
+use swcnn::model::{table1, LayerModel};
+use swcnn::nn::vgg16;
+
+fn main() {
+    let net = vgg16();
+
+    // Table 1 (m = 2).
+    let rows: Vec<Vec<String>> = table1(&net, 2)
+        .iter()
+        .map(|s| {
+            vec![
+                format!("Conv stage {} (x{})", s.stage, s.layers),
+                s.neurons.to_string(),
+                s.weights.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 1: parameters per conv layer after Winograd transform (m=2)",
+        &["stage", "# Winograd neurons", "# Winograd weights"],
+        &rows,
+    );
+
+    // Dilation + multiplication savings per m (design-space view, §5.1).
+    let conv5 = net.convs[10];
+    let rows: Vec<Vec<String>> = [2usize, 3, 4, 6]
+        .iter()
+        .map(|&m| {
+            let lm = LayerModel::new(&conv5, m);
+            vec![
+                m.to_string(),
+                format!("{}", lm.l),
+                format!("{:.2}x", lm.dilation()),
+                lm.arithmetic.m_w.to_string(),
+                format!(
+                    "{:.2}x",
+                    conv5.direct_macs() as f64 / lm.arithmetic.m_w as f64
+                ),
+            ]
+        })
+        .collect();
+    print_table(
+        "conv5_x: storage dilation & multiplication savings vs m",
+        &["m", "l", "dilation (l/m)^2", "multiplies M_W", "savings vs direct"],
+        &rows,
+    );
+
+    println!("\npaper check: m=2 dilation = 4.00x storage for transformed");
+    println!("maps; multiplication savings grow with m while weight volume");
+    println!("(eq. 8) grows as l^2 — the §5.1.3 trade-off that picks m=2-4.");
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT-compiled Winograd conv layer, run it through
+//! PJRT, and check the numerics against the in-crate direct convolution.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::{bail, Result};
+use swcnn::runtime::{read_f32_bin, Runtime};
+use swcnn::tensor::Tensor;
+use swcnn::util::Rng;
+use swcnn::winograd::direct_conv2d;
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = rt.load("quickstart")?;
+    let meta = &model.spec.meta;
+    let (c, k, h, w) = (
+        meta.req("C")?.as_usize().unwrap(),
+        meta.req("K")?.as_usize().unwrap(),
+        meta.req("H")?.as_usize().unwrap(),
+        meta.req("W")?.as_usize().unwrap(),
+    );
+    println!("quickstart layer: C={c} K={k} {h}x{w} (m=2, r=3, SAME + ReLU)");
+
+    // Random input image.
+    let mut rng = Rng::new(1234);
+    let x = rng.gaussian_vec(c * h * w);
+
+    // Run on the accelerator runtime.
+    let out = model.run(&[x.clone()])?;
+    let y = Tensor::from_vec(&[k, h, w], out[0].clone());
+
+    // Oracle: direct convolution with the spatial weights that shipped
+    // alongside the artifact.
+    let g_meta = meta.req("g_spatial")?;
+    let g_file = g_meta.req("file")?.as_str().unwrap();
+    let g = read_f32_bin(
+        &std::path::Path::new("artifacts").join(g_file),
+        k * c * 3 * 3,
+    )?;
+    let g = Tensor::from_vec(&[k, c, 3, 3], g);
+    // SAME padding: pad the input by 1 on each side.
+    let mut xp = Tensor::zeros(&[c, h + 2, w + 2]);
+    for cc in 0..c {
+        for i in 0..h {
+            for j in 0..w {
+                xp.set3(cc, i + 1, j + 1, x[(cc * h + i) * w + j]);
+            }
+        }
+    }
+    let mut want = direct_conv2d(&xp, &g);
+    for v in want.data_mut() {
+        *v = v.max(0.0); // ReLU
+    }
+
+    let diff = y.max_abs_diff(&want);
+    println!("max |pjrt - direct| = {diff:.2e}");
+    if diff > 1e-3 {
+        bail!("numerics mismatch: {diff}");
+    }
+    println!("quickstart OK — Winograd pipeline matches direct convolution");
+    Ok(())
+}

@@ -1,0 +1,394 @@
+"""AOT compilation: lower the L2 model to HLO text artifacts (build time).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (in ``--out-dir``, default ``../artifacts``):
+
+- ``<name>.hlo.txt``     — one per artifact (see ``ARTIFACTS``)
+- ``<name>__<param>.bin``— raw little-endian tensor data for every runtime
+                           parameter that is a weight (the rust runtime
+                           loads these once at startup)
+- ``manifest.json``      — input/output shapes + dtypes + parameter data
+                           files, consumed by ``rust/src/runtime``
+
+Run via ``make artifacts`` (no-op when inputs are unchanged) or directly:
+``cd python && python -m compile.aot --out-dir ../artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.sparse import prune_winograd_weights
+from .winograd import tile_size
+
+SCHEMA_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring).
+
+    Two print options are load-bearing:
+    - ``print_large_constants``: the default printer elides big constant
+      literals as ``constant({...})`` — which the *old* HLO parser happily
+      accepts and fills with zeros, silently corrupting any model whose
+      transform matrices were baked in as constants.
+    - ``print_metadata=False``: jax's metadata now includes attributes
+      (``source_end_line`` etc.) the 0.5.1-era parser rejects outright.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def _spec(a: np.ndarray) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+class ArtifactBuilder:
+    """Collects one artifact: a function, its example inputs, and which
+    inputs are baked weights (shipped as .bin) vs request-time inputs."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict[str, dict] = {}
+
+    def emit(
+        self,
+        name: str,
+        fn: Callable,
+        request_inputs: Dict[str, np.ndarray],
+        weights: Dict[str, np.ndarray],
+        meta: Optional[dict] = None,
+    ) -> None:
+        """Lower fn(*request_inputs, *weights) and write all files.
+
+        Argument order: request inputs first, then weights — the rust
+        runtime appends its cached weight literals after the request data.
+        """
+        names = list(request_inputs) + list(weights)
+        arrays = {**request_inputs, **weights}
+        specs = [_spec(arrays[n]) for n in names]
+        lowered = jax.jit(fn).lower(*specs)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+
+        out_specs = jax.eval_shape(fn, *specs)
+        if not isinstance(out_specs, (tuple, list)):
+            out_specs = (out_specs,)
+
+        inputs_meta = []
+        for n in names:
+            a = arrays[n]
+            entry = {
+                "name": n,
+                "shape": list(a.shape),
+                "dtype": str(a.dtype),
+            }
+            if n in weights:
+                bin_file = f"{name}__{n}.bin"
+                a.astype(a.dtype, copy=False).tofile(
+                    os.path.join(self.out_dir, bin_file)
+                )
+                entry["data"] = bin_file
+            inputs_meta.append(entry)
+
+        self.manifest[name] = {
+            "hlo": hlo_file,
+            "inputs": inputs_meta,
+            "outputs": [
+                {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+                for s in out_specs
+            ],
+            "meta": meta or {},
+        }
+        n_bytes = sum(arrays[n].nbytes for n in weights)
+        print(
+            f"  {name}: hlo={len(hlo)//1024} KiB, "
+            f"{len(weights)} weight tensors ({n_bytes//1024} KiB)"
+        )
+
+    def finalize(self) -> None:
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(
+                {"schema": SCHEMA_VERSION, "artifacts": self.manifest},
+                f,
+                indent=2,
+            )
+        print(f"  manifest.json: {len(self.manifest)} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def _sparse_layer_masks(
+    cfg: M.NetConfig,
+    params: Dict[str, np.ndarray],
+    sparsity: float,
+    block_size: int = 4,
+) -> Tuple[Dict[str, np.ndarray], List[int]]:
+    """Prune every block-size-compatible conv layer; returns (pruned params
+    + f32 masks dict, indices of sparse layers)."""
+    out: Dict[str, np.ndarray] = {}
+    sparse_layers: List[int] = []
+    for i, spec in enumerate(cfg.conv_specs()):
+        u = params[f"conv{i}_u"]
+        if spec.in_ch % block_size == 0 and spec.out_ch % block_size == 0:
+            pu, mask = prune_winograd_weights(u, sparsity, block_size, seed=i)
+            out[f"conv{i}_u"] = pu
+            out[f"conv{i}_mask"] = mask.astype(np.float32)
+            sparse_layers.append(i)
+        else:
+            out[f"conv{i}_u"] = u
+    return out, sparse_layers
+
+
+def emit_quickstart(b: ArtifactBuilder, m: int = 2, r: int = 3) -> None:
+    """Small single Winograd conv layer — the smoke-test artifact."""
+    c, k, hw = 8, 16, 16
+    rng = np.random.default_rng(7)
+    g = rng.standard_normal((k, c, r, r)).astype(np.float32) * 0.2
+    u = np.asarray(M.filter_transform(jnp.asarray(g), m, r))
+    x = np.zeros((c, hw, hw), np.float32)
+
+    def fn(x, u):
+        return (M.single_layer(x, u, m, r),)
+
+    b.emit(
+        "quickstart",
+        fn,
+        {"x": x},
+        {"u": u},
+        meta={"m": m, "r": r, "C": c, "K": k, "H": hw, "W": hw},
+    )
+    # Spatial weights ride along for oracle checks on the rust side.
+    g.tofile(os.path.join(b.out_dir, "quickstart__g_spatial.bin"))
+    b.manifest["quickstart"]["meta"]["g_spatial"] = {
+        "file": "quickstart__g_spatial.bin",
+        "shape": [k, c, r, r],
+        "dtype": "float32",
+    }
+
+    # The same layer through the fused megakernel (identical weights):
+    # rust integration tests assert quickstart == quickstart_fused.
+    from .kernels.fused import fused_conv_layer
+
+    def fn_fused(x, u):
+        return (fused_conv_layer(x, u, m, r),)
+
+    b.emit(
+        "quickstart_fused",
+        fn_fused,
+        {"x": x},
+        {"u": u},
+        meta={"m": m, "r": r, "C": c, "K": k, "H": hw, "W": hw, "fused": True},
+    )
+
+
+def emit_vgg_tiny(b: ArtifactBuilder, m: int = 2, r: int = 3) -> None:
+    """Full VGG-Tiny forward — the end-to-end serving artifact (dense),
+    emitted at batch sizes 1 and 4 (vmap) for the dynamic batcher."""
+    cfg = M.VGG_TINY
+    params = M.init_params(cfg, m)
+    names = M.runtime_param_names(cfg)
+    weights = {n: params[n] for n in names}
+
+    def fn(x, *ps):
+        return (M.forward(cfg, x, ps, m, r),)
+
+    x1 = np.zeros((cfg.input_ch, cfg.input_hw, cfg.input_hw), np.float32)
+    b.emit(
+        "vgg_tiny_b1",
+        fn,
+        {"x": x1},
+        weights,
+        meta={"net": cfg.name, "m": m, "r": r, "batch": 1, "classes": cfg.fc[-1]},
+    )
+
+    # Batched executable: the batch rides the *tile* dimension of the
+    # l^2 matmuls (paper-style tile batching; see model.forward_batched) —
+    # measured ~5x faster per image than the vmap form it replaced
+    # (EXPERIMENTS.md §Perf).
+    def fn_b(xb, *ps):
+        return (M.forward_batched(cfg, xb, ps, m, r),)
+
+    for batch in (4,):
+        xb = np.zeros(
+            (batch, cfg.input_ch, cfg.input_hw, cfg.input_hw), np.float32
+        )
+        b.emit(
+            f"vgg_tiny_b{batch}",
+            fn_b,
+            {"x": xb},
+            weights,
+            meta={
+                "net": cfg.name,
+                "m": m,
+                "r": r,
+                "batch": batch,
+                "classes": cfg.fc[-1],
+            },
+        )
+
+
+def emit_vgg_tiny_sparse(
+    b: ArtifactBuilder, sparsity: float = 0.8, m: int = 2, r: int = 3
+) -> None:
+    """VGG-Tiny with block-pruned Winograd weights (paper §3.3 numerics)."""
+    cfg = M.VGG_TINY
+    block = 4
+    params = M.init_params(cfg, m)
+    pruned, sparse_layers = _sparse_layer_masks(cfg, params, sparsity, block)
+    n_conv = len(cfg.conv_specs())
+
+    weight_names = [f"conv{i}_u" for i in range(n_conv)]
+    mask_names = [f"conv{i}_mask" for i in sparse_layers]
+    fc_names = M.fc_param_names(cfg)
+    weights = {n: pruned[n] for n in weight_names}
+    weights.update({n: pruned[n] for n in mask_names})
+    weights.update({n: params[n] for n in fc_names})
+
+    def fn(x, *ps):
+        us = list(ps[:n_conv])
+        masks_flat = list(ps[n_conv : n_conv + len(sparse_layers)])
+        fc = list(ps[n_conv + len(sparse_layers) :])
+        masks: List = [None] * n_conv
+        for j, i in enumerate(sparse_layers):
+            masks[i] = masks_flat[j] > 0.5
+        return (M.forward_sparse(cfg, x, us + fc, masks, m, r, block),)
+
+    x1 = np.zeros((cfg.input_ch, cfg.input_hw, cfg.input_hw), np.float32)
+    b.emit(
+        "vgg_tiny_sparse_b1",
+        fn,
+        {"x": x1},
+        weights,
+        meta={
+            "net": cfg.name,
+            "m": m,
+            "r": r,
+            "batch": 1,
+            "sparsity": sparsity,
+            "block": block,
+            "sparse_layers": sparse_layers,
+            "classes": cfg.fc[-1],
+        },
+    )
+
+
+def emit_vgg16_layer(b: ArtifactBuilder, m: int = 2, r: int = 3) -> None:
+    """A real VGG16 layer (conv5-shape: 512x512 @ 14x14) for layer benches."""
+    c = k = 512
+    hw = 14
+    rng = np.random.default_rng(11)
+    g = rng.standard_normal((k, c, r, r)).astype(np.float32) * np.sqrt(
+        2.0 / (c * r * r)
+    ).astype(np.float32)
+    u = np.asarray(M.filter_transform(jnp.asarray(g), m, r))
+
+    def fn(x, u):
+        return (M.single_layer(x, u, m, r),)
+
+    x = np.zeros((c, hw, hw), np.float32)
+    b.emit(
+        "vgg16_conv5",
+        fn,
+        {"x": x},
+        {"u": u},
+        meta={"m": m, "r": r, "C": c, "K": k, "H": hw, "W": hw, "layer": "conv5_x"},
+    )
+
+
+def emit_m_sweep_layer(b: ArtifactBuilder, r: int = 3) -> None:
+    """Same conv layer lowered at m in {2, 4, 6} — the Fig. 7 sweep on the
+    numerics side (the latency sweep itself runs in the rust simulator)."""
+    c, k, hw = 32, 32, 16
+    rng = np.random.default_rng(13)
+    g = rng.standard_normal((k, c, r, r)).astype(np.float32) * 0.15
+    x = np.zeros((c, hw, hw), np.float32)
+    for m in (2, 4, 6):
+        u = np.asarray(M.filter_transform(jnp.asarray(g), m, r))
+
+        def fn(x, u, m=m):
+            return (M.single_layer(x, u, m, r),)
+
+        b.emit(
+            f"layer_m{m}",
+            fn,
+            {"x": x},
+            {"u": u},
+            meta={"m": m, "r": r, "C": c, "K": k, "H": hw, "W": hw},
+        )
+
+
+def emit_fc(b: ArtifactBuilder) -> None:
+    """FC layer artifact (paper §4.4 extension to other layer types)."""
+    in_f, out_f = 512, 128
+    rng = np.random.default_rng(17)
+    w = rng.standard_normal((in_f, out_f)).astype(np.float32) * 0.05
+    bias = rng.standard_normal((out_f,)).astype(np.float32) * 0.01
+
+    def fn(x, w, bias):
+        return (M.relu(M.dense(x, w, bias)),)
+
+    x = np.zeros((in_f,), np.float32)
+    b.emit("fc", fn, {"x": x}, {"w": w, "b": bias}, meta={"in": in_f, "out": out_f})
+
+
+ARTIFACTS: Dict[str, Callable[[ArtifactBuilder], None]] = {
+    "quickstart": emit_quickstart,
+    "vgg_tiny": emit_vgg_tiny,
+    "vgg_tiny_sparse": emit_vgg_tiny_sparse,
+    "vgg16_conv5": emit_vgg16_layer,
+    "m_sweep": emit_m_sweep_layer,
+    "fc": emit_fc,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        nargs="*",
+        choices=sorted(ARTIFACTS),
+        help="emit only these artifact groups",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = ArtifactBuilder(args.out_dir)
+    selected = args.only or list(ARTIFACTS)
+    for name in selected:
+        print(f"[aot] emitting {name} ...")
+        ARTIFACTS[name](b)
+    b.finalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""L1 Pallas kernels for sparse Winograd convolution (build-time only).
+
+Public surface:
+
+- :mod:`.transforms` — input transform V = B^T d B, filter transform
+  U = G g G^T, inverse transform Y = A^T M A (paper §4.1, adder-only
+  systolic passes).
+- :mod:`.matmul` — the l^2 batched tile matmuls of eq. (5) (paper §4.2-4.3,
+  clusters of systolic arrays).
+- :mod:`.sparse` — block-masked sparse matmul + pruning helpers
+  (paper §3.3, BCOO pruned Winograd weights).
+- :mod:`.ref` — pure-jnp oracles for all of the above.
+"""
+
+from .matmul import batched_matmul
+from .sparse import block_sparse_matmul, block_sparsity, prune_winograd_weights
+from .transforms import filter_transform, input_transform, inverse_transform
+
+__all__ = [
+    "batched_matmul",
+    "block_sparse_matmul",
+    "block_sparsity",
+    "prune_winograd_weights",
+    "filter_transform",
+    "input_transform",
+    "inverse_transform",
+]

@@ -1,0 +1,109 @@
+"""Fused Winograd convolution megakernel (L1 optimization).
+
+The staged kernels in `transforms`/`matmul` materialize the full
+transformed feature map V (the (l/m)^2 storage dilation of §5.1.1) in HBM
+between stages.  This kernel fuses the paper's three-stage pipeline
+(Fig. 1) *per tile*: each grid step
+
+1. loads one overlapping l x l input tile for all C channels (VMEM),
+2. transforms it (V = B^T d B — adder-only on the paper's hardware),
+3. contracts against the resident pre-transformed weights
+   (M = sum_c U[..,k,c] * V[c,..], eq. 5) for all K,
+4. inverse-transforms (Y = A^T M A) and writes the m x m output tile —
+
+so the dilated V tensor never exists in memory.  This is the TPU analogue
+of the paper's on-chip pipeline where transformed tiles stream directly
+from the transform arrays into the cluster FIFOs.
+
+Trade-off (documented for the §Perf log): the weights U (l*l, K, C) must
+be VMEM-resident per grid step, so the fused form fits layers up to
+~VMEM/(l^2*4B) weight elements; the staged path covers the rest.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..winograd import num_tiles, tile_size, winograd_matrices
+
+INTERPRET = True
+
+
+def _fused_kernel(bt_ref, at_ref, u_ref, x_ref, o_ref, *, m: int, l: int):
+    """One grid step: full Winograd pipeline for one (ty, tx) tile."""
+    ty = pl.program_id(0)
+    tx = pl.program_id(1)
+    c = x_ref.shape[0]
+    bt = bt_ref[...]
+    at = at_ref[...]
+    u = u_ref[...]  # (l*l, K, C)
+
+    # Stage 1: gather + transform (adder-only on the paper's arrays).
+    d = lax.dynamic_slice(x_ref[...], (0, ty * m, tx * m), (c, l, l))
+    v = jnp.einsum("ij,cjk,lk->cil", bt, d, bt,
+                   preferred_element_type=jnp.float32)  # (C, l, l)
+
+    # Stage 2: eq. (5) contraction over channels for every coordinate.
+    v_mat = v.transpose(1, 2, 0).reshape(l * l, c)  # (l*l, C)
+    mm = jnp.einsum("tkc,tc->tk", u, v_mat,
+                    preferred_element_type=jnp.float32)  # (l*l, K)
+
+    # Stage 3: inverse transform, one tile per output channel.
+    k = u.shape[1]
+    m_tiles = mm.reshape(l, l, k)
+    y = jnp.einsum("ij,jlk,ml->kim", at, m_tiles, at,
+                   preferred_element_type=jnp.float32)  # (K, m, m)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def fused_winograd_conv2d(
+    x: jnp.ndarray, u: jnp.ndarray, m: int, r: int
+) -> jnp.ndarray:
+    """Fused VALID Winograd convolution.
+
+    x: (C, H, W), u: (l*l, K, C) pre-transformed -> (K, H-r+1, W-r+1).
+    """
+    c, h, w = x.shape
+    l = tile_size(m, r)
+    t2, k, c2 = u.shape
+    assert t2 == l * l and c2 == c, (u.shape, x.shape)
+    oh, ow = h - r + 1, w - r + 1
+    nty, ntx = num_tiles(oh, m), num_tiles(ow, m)
+    ph, pw = (nty - 1) * m + l, (ntx - 1) * m + l
+    xp = jnp.pad(x, ((0, 0), (0, ph - h), (0, pw - w)))
+    at_np, _, bt_np = winograd_matrices(m, r)
+    bt = jnp.asarray(bt_np)
+    at = jnp.asarray(at_np)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, m=m, l=l),
+        grid=(nty, ntx),
+        in_specs=[
+            pl.BlockSpec((l, l), lambda ty, tx: (0, 0)),
+            pl.BlockSpec((m, l), lambda ty, tx: (0, 0)),
+            pl.BlockSpec((l * l, k, c), lambda ty, tx: (0, 0, 0)),
+            pl.BlockSpec(xp.shape, lambda ty, tx: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k, m, m), lambda ty, tx: (ty, tx, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nty, ntx, k, m, m), x.dtype),
+        interpret=INTERPRET,
+    )(bt, at, u, xp)
+    y = out.transpose(2, 0, 3, 1, 4).reshape(k, nty * m, ntx * m)
+    return y[:, :oh, :ow]
+
+
+def fused_conv_layer(x: jnp.ndarray, u: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """SAME-padded fused layer + ReLU (the serving-artifact flavour)."""
+    pad = (r - 1) // 2
+    h, w = x.shape[1], x.shape[2]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    y = fused_winograd_conv2d(xp, u, m, r)
+    return jnp.maximum(y[:, :h, :w], 0.0)

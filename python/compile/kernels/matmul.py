@@ -1,0 +1,126 @@
+"""Pallas kernels for the l^2 batched tile matmuls (paper §3.1, §4.2-4.3).
+
+The paper disentangles eq. (5) into l^2 = (m+r-1)^2 independent matrix
+multiplications M^(i,j) = U^(i,j) (K x C) @ V^(i,j) (C x B) and executes
+them on 8 clusters of four l x l systolic arrays.
+
+TPU adaptation: the leading grid dimension iterates the l^2 independent
+matmuls (the paper's "3-D extension", Fig. 5); the K/B/C block dimensions
+play the role of the Z-Morton block schedule — each (bk x bc) x (bc x bb)
+block product is one cluster iteration, and the revisited output block is
+the output-stationary partial sum the paper keeps resident inside the
+systolic array between iterations (§4.2: results are "spilled out" only
+after the C-dimension reduction completes).  Block shapes default to
+MXU-friendly multiples on TPU; the cycle-level simulator models the
+paper's l=4 blocks.
+
+``interpret=True`` throughout (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# Default (bk, bc, bb) block sizes.  On a real TPU these would be
+# (128, 128, 128) to fill the MXU systolic array.
+DEFAULT_BLOCK = (32, 32, 32)
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Use the preferred block unless the dimension is smaller than it."""
+    return dim if dim < pref else pref
+
+
+def _matmul_kernel(u_ref, v_ref, o_ref, *, n_c_blocks: int):
+    """One (t, k-block, b-block, c-block) grid step; output-stationary."""
+    c_idx = pl.program_id(3)
+    u = u_ref[0]  # (bk, bc)
+    v = v_ref[0]  # (bc, bb)
+    prod = jnp.dot(u, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        o_ref[0] = prod
+
+    @pl.when(c_idx > 0)
+    def _accumulate():
+        o_ref[0] += prod
+
+
+def _batched_matmul_kernel(u_ref, v_ref, o_ref):
+    """All l^2 coordinate matmuls in one kernel invocation.
+
+    Performance note (EXPERIMENTS.md §Perf): interpret-mode grids carry
+    every operand buffer through a lowered while-loop, costing ~7 ms *per
+    grid step* at VGG scale; a single no-grid invocation runs at XLA dot
+    speed.  The grid-blocked variant below remains the TPU-shaped
+    reference (output-stationary accumulation, MXU-sized blocks) and is
+    equality-tested against this one.
+    """
+    o_ref[...] = jnp.einsum(
+        "tkc,tcb->tkb", u_ref[...], v_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def batched_matmul(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """M[t] = U[t] @ V[t] for t in 0..l*l-1 (single-invocation kernel).
+
+    u: (T, K, C), v: (T, C, B) -> (T, K, B) — the paper's l^2 independent
+    matmuls of eq. (5).
+    """
+    t, k, c = u.shape
+    t2, c2, b = v.shape
+    assert t == t2 and c == c2, (u.shape, v.shape)
+    return pl.pallas_call(
+        _batched_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, k, b), u.dtype),
+        interpret=INTERPRET,
+    )(u, v)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def batched_matmul_blocked(
+    u: jnp.ndarray, v: jnp.ndarray, block: tuple = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """Grid-blocked M[t] = U[t] @ V[t] (TPU-shaped reference).
+
+    u: (T, K, C), v: (T, C, B) -> (T, K, B).  T is the paper's l^2
+    independent matmuls; the grid runs them in its leading dimension (the
+    8-cluster parallelism of Fig. 5) with output-stationary accumulation
+    over C blocks.
+    """
+    t, k, c = u.shape
+    t2, c2, b = v.shape
+    assert t == t2 and c == c2, (u.shape, v.shape)
+    bk = _pick_block(k, block[0])
+    bc = _pick_block(c, block[1])
+    bb = _pick_block(b, block[2])
+    kp, cp, bp = _ceil_to(k, bk), _ceil_to(c, bc), _ceil_to(b, bb)
+    up = jnp.pad(u, ((0, 0), (0, kp - k), (0, cp - c)))
+    vp = jnp.pad(v, ((0, 0), (0, cp - c), (0, bp - b)))
+    n_c_blocks = cp // bc
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_c_blocks=n_c_blocks),
+        grid=(t, kp // bk, bp // bb, n_c_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bk, bc), lambda t, i, j, cc: (t, i, cc)),
+            pl.BlockSpec((1, bc, bb), lambda t, i, j, cc: (t, cc, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bb), lambda t, i, j, cc: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, kp, bp), u.dtype),
+        interpret=INTERPRET,
+    )(up, vp)
+    return out[:, :k, :b]

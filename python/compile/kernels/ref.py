@@ -1,0 +1,137 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here.
+These run no Pallas machinery at all — plain jax.numpy — and are the ground
+truth the pytest/hypothesis suites compare against.  The direct convolution
+(eq. 1 of the paper) is additionally the oracle for the whole Winograd
+pipeline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..winograd import num_tiles, tile_size, winograd_matrices
+
+
+def direct_conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Spatial convolution, eq. (1) of the paper (correlation, VALID, stride 1).
+
+    x: (C, H, W), w: (K, C, r, r) -> (K, H - r + 1, W - r + 1).
+    """
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def extract_tiles(x: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """Extract overlapping l x l input tiles with stride m (overlap r - 1).
+
+    x: (C, H, W) -> (n_ty, n_tx, C, l, l).  The image is zero-padded on the
+    bottom/right so that every tile is full (matches ceil(H/m) tiling).
+    """
+    c, h, w = x.shape
+    l = tile_size(m, r)
+    nty, ntx = num_tiles(h - r + 1, m), num_tiles(w - r + 1, m)
+    ph, pw = (nty - 1) * m + l, (ntx - 1) * m + l
+    xp = jnp.pad(x, ((0, 0), (0, ph - h), (0, pw - w)))
+    rows = []
+    for ty in range(nty):
+        cols = []
+        for tx in range(ntx):
+            cols.append(xp[:, ty * m : ty * m + l, tx * m : tx * m + l])
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)  # (nty, ntx, C, l, l)
+
+
+def input_transform_ref(x: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """V = B^T d B over all tiles.
+
+    x: (C, H, W) -> (l*l, C, n_tiles) — the matrix-form layout of eq. (5):
+    one (C x n_tiles) matrix per Winograd coordinate (i, j).
+    """
+    bt = jnp.asarray(winograd_matrices(m, r)[2])
+    tiles = extract_tiles(x, m, r)  # (nty, ntx, C, l, l)
+    v = jnp.einsum("ij,tscjk,lk->tscil", bt, tiles, bt)
+    nty, ntx, c, l, _ = v.shape
+    # (nty, ntx, C, l, l) -> (l*l, C, nty*ntx)
+    return v.transpose(3, 4, 2, 0, 1).reshape(l * l, c, nty * ntx)
+
+
+def filter_transform_ref(w: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """U = G g G^T, laid out as (l*l, K, C) for the batched matmuls."""
+    g = jnp.asarray(winograd_matrices(m, r)[1])
+    u = jnp.einsum("ij,kcjl,ml->kcim", g, w, g)  # (K, C, l, l)
+    k, c, l, _ = u.shape
+    return u.transpose(2, 3, 0, 1).reshape(l * l, k, c)
+
+
+def batched_matmul_ref(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """M[t] = U[t] @ V[t] for every Winograd coordinate t in 0..l*l-1.
+
+    u: (l*l, K, C), v: (l*l, C, B) -> (l*l, K, B).  This is the paper's
+    eq. (5) summation disentangled into l^2 independent matmuls — the
+    compute the systolic-array clusters execute.
+    """
+    return jnp.einsum("tkc,tcb->tkb", u, v)
+
+
+def block_masked_matmul_ref(
+    u: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray, block: int
+) -> jnp.ndarray:
+    """Sparse variant: U is block-sparse with (block x block) granularity.
+
+    mask: (l*l, K/block, C/block) — True where the U block is retained.
+    Zeroed-out blocks contribute nothing; numerically this equals masking U
+    then running the dense batched matmul (the cycle-level skipping happens
+    in the rust simulator, not here).
+    """
+    t, k, c = u.shape
+    mk = jnp.repeat(jnp.repeat(mask, block, axis=1), block, axis=2)
+    return batched_matmul_ref(u * mk.astype(u.dtype), v)
+
+
+def inverse_transform_ref(
+    mm: jnp.ndarray, m: int, r: int, out_h: int, out_w: int
+) -> jnp.ndarray:
+    """Y = A^T M A per tile, re-assembled into feature maps.
+
+    mm: (l*l, K, n_tiles) -> (K, out_h, out_w).
+    """
+    at = jnp.asarray(winograd_matrices(m, r)[0])
+    l = tile_size(m, r)
+    t2, k, nt = mm.shape
+    assert t2 == l * l
+    nty, ntx = num_tiles(out_h, m), num_tiles(out_w, m)
+    assert nty * ntx == nt
+    tiles = mm.reshape(l, l, k, nty, ntx)
+    y = jnp.einsum("ij,jlkyx,ml->kyxim", at, tiles, at)  # (K, nty, ntx, m, m)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(k, nty * m, ntx * m)
+    return y[:, :out_h, :out_w]
+
+
+def winograd_conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Full dense Winograd convolution, eq. (4)/(5) — oracle for the pipeline.
+
+    x: (C, H, W), w: (K, C, r, r) -> (K, H - r + 1, W - r + 1).
+    """
+    r = w.shape[-1]
+    out_h, out_w = x.shape[1] - r + 1, x.shape[2] - r + 1
+    v = input_transform_ref(x, m, r)
+    u = filter_transform_ref(w, m, r)
+    mm = batched_matmul_ref(u, v)
+    return inverse_transform_ref(mm, m, r, out_h, out_w)
+
+
+def winograd_conv1d_ref(d: np.ndarray, g: np.ndarray, m: int) -> np.ndarray:
+    """1-D F(m, r) on a single tile — used by the matrix-generator tests."""
+    r = g.shape[0]
+    at, gm, bt = winograd_matrices(m, r, dtype=np.float64)
+    return at @ ((gm @ g.astype(np.float64)) * (bt @ d.astype(np.float64)))

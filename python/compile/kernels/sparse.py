@@ -1,0 +1,131 @@
+"""Pallas kernel for the block-sparse (pruned) Winograd matmul (paper §3.3).
+
+The paper stores pruned Winograd weights in a block-based sparse coordinate
+format (BCOO): only l x l blocks containing nonzeros are kept, and the
+cluster's circular FIFOs grow a decompressor.  Zero blocks are never
+fetched and never multiplied.
+
+JAX/XLA needs static shapes, so this kernel models the *numerics* of the
+sparse path with a block mask: a (T, K/bs, C/bs) boolean array marking
+retained blocks.  A masked block contributes exactly zero, bit-identically
+matching the hardware that skips it.  The *performance* effect of skipping
+(fewer cluster iterations, less FIFO traffic) is modelled by the rust
+cycle-level simulator (`rust/src/systolic/`), which consumes the real BCOO
+stream — see DESIGN.md §2 (substitution table).
+
+Also provides the pruning helpers used to generate synthetic pruned
+Winograd weights at a target sparsity (the paper takes these from [2]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def _masked_matmul_kernel(u_ref, v_ref, mask_ref, o_ref, *, bs: int):
+    """One (t, k-block, b-block, c-block) step with block masking.
+
+    The mask block is expanded to element granularity and applied to U
+    before the MAC — the systolic-array analogue is the decompressor
+    feeding zeros for pruned positions inside a retained block and the
+    scheduler skipping non-retained blocks outright.
+    """
+    c_idx = pl.program_id(3)
+    u = u_ref[0]  # (bk, bc)
+    v = v_ref[0]  # (bc, bb)
+    mask = mask_ref[0]  # (bk/bs, bc/bs) boolean
+    mk = jnp.repeat(jnp.repeat(mask, bs, axis=0), bs, axis=1).astype(u.dtype)
+    prod = jnp.dot(u * mk, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        o_ref[0] = prod
+
+    @pl.when(c_idx > 0)
+    def _accumulate():
+        o_ref[0] += prod
+
+
+def _masked_matmul_single_kernel(u_ref, v_ref, mask_ref, o_ref, *, bs: int):
+    """All coordinates in one invocation (see matmul.py §Perf note)."""
+    u = u_ref[...]
+    mask = mask_ref[...]
+    mk = jnp.repeat(jnp.repeat(mask, bs, axis=1), bs, axis=2).astype(u.dtype)
+    o_ref[...] = jnp.einsum(
+        "tkc,tcb->tkb", u * mk, v_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def block_sparse_matmul(
+    u: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    block_size: int = 4,
+) -> jnp.ndarray:
+    """M[t] = (U[t] ⊙ mask) @ V[t] with (block_size x block_size) granularity.
+
+    u: (T, K, C), v: (T, C, B), mask: (T, K/bs, C/bs) -> (T, K, B).
+    """
+    t, k, c = u.shape
+    _, _, b = v.shape
+    bs = block_size
+    assert k % bs == 0 and c % bs == 0, "K and C must be multiples of block_size"
+    assert mask.shape == (t, k // bs, c // bs), mask.shape
+    return pl.pallas_call(
+        functools.partial(_masked_matmul_single_kernel, bs=bs),
+        out_shape=jax.ShapeDtypeStruct((t, k, b), u.dtype),
+        interpret=INTERPRET,
+    )(u, v, mask.astype(u.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pruning helpers (build-time; numpy) — synthetic stand-in for the pruned
+# Winograd weights of reference [2] (Choi et al.), per DESIGN.md §2.
+# ---------------------------------------------------------------------------
+
+
+def prune_winograd_weights(
+    u: np.ndarray, sparsity: float, block_size: int = 4, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Magnitude-prune transformed weights U to a target *block* sparsity.
+
+    u: (T, K, C).  Whole (block_size x block_size) blocks are ranked by
+    L1 magnitude and the smallest `sparsity` fraction is zeroed — matching
+    the paper's block-granular BCOO storage.  Returns (pruned_u, mask) with
+    mask: (T, K/bs, C/bs) bool.
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1), got {sparsity}")
+    t, k, c = u.shape
+    bs = block_size
+    assert k % bs == 0 and c % bs == 0
+    blocks = u.reshape(t, k // bs, bs, c // bs, bs)
+    scores = np.abs(blocks).sum(axis=(2, 4))  # (T, K/bs, C/bs)
+    flat = scores.reshape(-1)
+    n_prune = int(round(sparsity * flat.size))
+    mask = np.ones_like(flat, dtype=bool)
+    if n_prune > 0:
+        # Deterministic tie-break via stable argsort of (score, index).
+        order = np.argsort(flat, kind="stable")
+        mask[order[:n_prune]] = False
+    mask = mask.reshape(scores.shape)
+    mk = np.repeat(np.repeat(mask, bs, axis=1), bs, axis=2)
+    return u * mk.astype(u.dtype), mask
+
+
+def block_sparsity(mask: np.ndarray) -> float:
+    """Fraction of pruned blocks."""
+    return 1.0 - float(mask.sum()) / mask.size

@@ -1,0 +1,207 @@
+"""Pallas kernels for the Winograd transforms (paper §4.1).
+
+The paper performs B^T d B (and A^T M A) on l x l systolic arrays in
+*adder-only* mode: the entries of B/A are 0/±1/±2/... and control
+add/subtract/pass-through in the PEs — no DSP multipliers are consumed.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the overlapped tile fetch
+(stride m, size l, overlap r-1) that the paper implements with inter-array
+forwarding is expressed as l^2 *strided slices* of the feature map — pure
+layout work XLA fuses away — and the transform itself runs as a Pallas
+kernel over VMEM-resident chunks of tiles.  The transform is two small
+constant matmuls which XLA strength-reduces to adds for ±1 entries; the
+rust simulator models the adder-only hardware cost.
+
+Performance note (EXPERIMENTS.md §Perf): the first version of these
+kernels passed the whole feature map as an un-blocked operand and
+`dynamic_slice`d per (ty, tx) grid step — interpret mode then copies the
+full array *per step*.  The chunked form below cut VGG-Tiny end-to-end
+latency ~3x.
+
+All kernels run with ``interpret=True`` — real-TPU lowering would emit a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..winograd import num_tiles, tile_size, winograd_matrices
+
+# Interpret mode is mandatory on this (CPU) toolchain; kept as a module
+# constant so a TPU build can flip it in one place.
+INTERPRET = True
+
+#: Tiles processed per transform-kernel grid step (VMEM chunk).
+TILE_CHUNK = 64
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def extract_tiles_strided(x: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """Overlapping l x l tiles via l^2 strided slices (no gather).
+
+    x: (C, H, W) -> (n_tiles, C, l, l), zero-padded to whole tiles.  Each
+    (i, j) in the tile is a strided view x[:, i::m, j::m] — the same data
+    movement the paper's (r-1)-column forwarding between transform arrays
+    performs in hardware.
+    """
+    c, h, w = x.shape
+    l = tile_size(m, r)
+    nty, ntx = num_tiles(h - r + 1, m), num_tiles(w - r + 1, m)
+    ph, pw = (nty - 1) * m + l, (ntx - 1) * m + l
+    xp = jnp.pad(x, ((0, 0), (0, ph - h), (0, pw - w)))
+    rows = []
+    for i in range(l):
+        cols = []
+        for j in range(l):
+            sl = xp[:, i : i + nty * m : m, j : j + ntx * m : m]
+            cols.append(sl)  # (C, nty, ntx)
+        rows.append(jnp.stack(cols))  # (l, C, nty, ntx)
+    tiles = jnp.stack(rows)  # (l, l, C, nty, ntx)
+    return tiles.transpose(3, 4, 2, 0, 1).reshape(nty * ntx, c, l, l)
+
+
+def _tile_transform_kernel(bt_ref, t_ref, o_ref):
+    """Transform all tiles in one invocation: V = B^T d B per (tile, ch).
+
+    No grid: interpret-mode grid steps carry every buffer through a
+    while-loop (EXPERIMENTS.md §Perf); one invocation runs at XLA speed.
+    The chunked-grid variant `input_transform_chunked` remains the
+    TPU-shaped reference.
+    """
+    bt = bt_ref[...]
+    d = t_ref[...]  # (nT, C, l, l)
+    v = jnp.einsum(
+        "ij,tcjk,lk->tcil", bt, d, bt, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = v.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def input_transform(x: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """V = B^T d B over all overlapping tiles of a (C, H, W) feature map.
+
+    Returns the matrix-form layout of eq. (5): (l*l, C, n_tiles).
+    """
+    c = x.shape[0]
+    l = tile_size(m, r)
+    bt = jnp.asarray(winograd_matrices(m, r)[2])
+    tiles = extract_tiles_strided(x, m, r)  # (nT, C, l, l)
+    nt = tiles.shape[0]
+    out = pl.pallas_call(
+        _tile_transform_kernel,
+        out_shape=jax.ShapeDtypeStruct((nt, c, l, l), x.dtype),
+        interpret=INTERPRET,
+    )(bt, tiles)
+    # (nT, C, l, l) -> (l*l, C, nT): layout change, fused by XLA.
+    return out.transpose(2, 3, 1, 0).reshape(l * l, c, nt)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def input_transform_chunked(x: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """Grid-chunked variant of :func:`input_transform` (TPU-shaped
+    reference: VMEM-sized tile chunks per grid step)."""
+    c = x.shape[0]
+    l = tile_size(m, r)
+    bt = jnp.asarray(winograd_matrices(m, r)[2])
+    tiles = extract_tiles_strided(x, m, r)  # (nT, C, l, l)
+    nt = tiles.shape[0]
+    chunk = min(TILE_CHUNK, nt)
+    ntp = _ceil_to(nt, chunk)
+    tiles = jnp.pad(tiles, ((0, ntp - nt), (0, 0), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        _tile_transform_kernel,
+        grid=(ntp // chunk,),
+        in_specs=[
+            pl.BlockSpec((l, l), lambda i: (0, 0)),
+            pl.BlockSpec((chunk, c, l, l), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, c, l, l), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntp, c, l, l), x.dtype),
+        interpret=INTERPRET,
+    )(bt, tiles)
+    return out[:nt].transpose(2, 3, 1, 0).reshape(l * l, c, nt)
+
+
+def _filter_transform_kernel(g_ref, w_ref, o_ref):
+    """Transform one output-channel slab of filters: U = G g G^T."""
+    g = g_ref[...]
+    u = jnp.einsum(
+        "ij,kcjl,ml->kcim", g, w_ref[...], g, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = u.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r"))
+def filter_transform(w: jnp.ndarray, m: int, r: int) -> jnp.ndarray:
+    """U = G g G^T for a (K, C, r, r) filter bank -> (l*l, K, C).
+
+    The paper pre-computes U offline; this kernel is the build-time tool
+    that does it (and doubles as the on-line path for F(m, r) sweeps).
+    """
+    k, c, _, _ = w.shape
+    l = tile_size(m, r)
+    g = jnp.asarray(winograd_matrices(m, r)[1])
+    out = pl.pallas_call(
+        _filter_transform_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((l, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, c, r, r), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, l, l), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, c, l, l), w.dtype),
+        interpret=INTERPRET,
+    )(g, w)
+    return out.transpose(2, 3, 0, 1).reshape(l * l, k, c)
+
+
+def _inverse_transform_kernel(at_ref, m_ref, o_ref):
+    """Inverse-transform tiles: Y = A^T M A (single invocation)."""
+    at = at_ref[...]
+    mm = m_ref[...]  # (nT, K, l, l)
+    y = jnp.einsum(
+        "ij,tkjl,ml->tkim", at, mm, at, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "r", "out_h", "out_w"))
+def inverse_transform(
+    mm: jnp.ndarray, m: int, r: int, out_h: int, out_w: int
+) -> jnp.ndarray:
+    """Y = A^T M A per tile, re-assembled to (K, out_h, out_w).
+
+    mm: (l*l, K, n_tiles) — the accumulated products of eq. (5).  The
+    amortization the paper highlights (one inverse transform per output
+    tile, *after* summing over C) is inherited from this layout.
+    """
+    l = tile_size(m, r)
+    t2, k, nt = mm.shape
+    assert t2 == l * l, mm.shape
+    nty, ntx = num_tiles(out_h, m), num_tiles(out_w, m)
+    assert nty * ntx == nt, (nty, ntx, nt)
+    at = jnp.asarray(winograd_matrices(m, r)[0])
+    # (l*l, K, nT) -> (nT, K, l, l)
+    tiles = mm.reshape(l, l, k, nt).transpose(3, 2, 0, 1)
+
+    out = pl.pallas_call(
+        _inverse_transform_kernel,
+        out_shape=jax.ShapeDtypeStruct((nt, k, m, m), mm.dtype),
+        interpret=INTERPRET,
+    )(at, tiles)
+    # (nT, K, m, m) -> (K, nty*m, ntx*m)
+    y = (
+        out.reshape(nty, ntx, k, m, m)
+        .transpose(2, 0, 3, 1, 4)
+        .reshape(k, nty * m, ntx * m)
+    )
+    return y[:, :out_h, :out_w]

@@ -1,0 +1,369 @@
+"""L2 — the JAX compute graph: Winograd-convolution CNNs (VGG16 / VGG-Tiny).
+
+This is the paper's workload (VGG16, §6) expressed as a JAX function whose
+3x3 convolutions run through the L1 Pallas kernels: input transform →
+l^2 batched tile matmuls → inverse transform (Fig. 1's three-stage
+pipeline).  Weights arrive *pre-transformed* (U = G g G^T), exactly as in
+the paper where Winograd weights are computed offline and stored.
+
+Build-time only: `aot.py` lowers these functions to HLO text once; the rust
+coordinator loads and executes the artifacts via PJRT.  Python never sits
+on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import (
+    batched_matmul,
+    block_sparse_matmul,
+    filter_transform,
+    input_transform,
+    inverse_transform,
+)
+
+# ---------------------------------------------------------------------------
+# Layer primitives
+# ---------------------------------------------------------------------------
+
+
+def winograd_conv2d(
+    x: jnp.ndarray, u: jnp.ndarray, m: int, r: int
+) -> jnp.ndarray:
+    """SAME-padded 3-stage Winograd convolution (Fig. 1).
+
+    x: (C, H, W); u: (l*l, K, C) pre-transformed weights -> (K, H, W).
+    """
+    pad = (r - 1) // 2
+    h, w = x.shape[1], x.shape[2]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    v = input_transform(xp, m, r)          # stage 1: B^T d B
+    mm = batched_matmul(u, v)              # stage 2: l^2 matmuls over C
+    return inverse_transform(mm, m, r, h, w)  # stage 3: A^T M A
+
+
+def winograd_conv2d_sparse(
+    x: jnp.ndarray,
+    u: jnp.ndarray,
+    mask: jnp.ndarray,
+    m: int,
+    r: int,
+    block_size: int = 4,
+) -> jnp.ndarray:
+    """Sparse variant: pruned U with a (block x block) retention mask."""
+    pad = (r - 1) // 2
+    h, w = x.shape[1], x.shape[2]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    v = input_transform(xp, m, r)
+    mm = block_sparse_matmul(u, v, mask, block_size=block_size)
+    return inverse_transform(mm, m, r, h, w)
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    """ReLU — implemented "by accompanying comparators to the output
+    buffers" in the paper (§4.4)."""
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max pooling over (C, H, W)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2), (1, 2, 2), "VALID"
+    ).astype(x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """FC layer — "essentially computed through matrix multiplications"
+    (§4.4); on hardware it reuses the same systolic clusters."""
+    return x @ w + b
+
+
+# ---------------------------------------------------------------------------
+# Network configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    in_ch: int
+    out_ch: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """A VGG-style network: conv stages separated by 2x2 maxpools."""
+
+    name: str
+    input_hw: int
+    input_ch: int
+    # Each stage is a list of conv (in, out) channel pairs; a 2x2 pool
+    # follows every stage.
+    stages: Tuple[Tuple[ConvSpec, ...], ...]
+    fc: Tuple[int, ...]  # FC widths; last entry = classes
+
+    def conv_specs(self) -> List[ConvSpec]:
+        return [c for stage in self.stages for c in stage]
+
+    def final_hw(self) -> int:
+        return self.input_hw // (2 ** len(self.stages))
+
+    def flat_features(self) -> int:
+        return self.stages[-1][-1].out_ch * self.final_hw() ** 2
+
+
+def _stage(chans: Sequence[int]) -> Tuple[ConvSpec, ...]:
+    return tuple(ConvSpec(a, b) for a, b in zip(chans[:-1], chans[1:]))
+
+
+#: Full VGG16 (paper §6.1: 224x224x3 input).  13 conv layers in 5 stages.
+VGG16 = NetConfig(
+    name="vgg16",
+    input_hw=224,
+    input_ch=3,
+    stages=(
+        _stage([3, 64, 64]),
+        _stage([64, 128, 128]),
+        _stage([128, 256, 256, 256]),
+        _stage([256, 512, 512, 512]),
+        _stage([512, 512, 512, 512]),
+    ),
+    fc=(4096, 4096, 1000),
+)
+
+#: Reduced VGG for the end-to-end CPU-speed driver (CIFAR-like 32x32 input).
+VGG_TINY = NetConfig(
+    name="vgg_tiny",
+    input_hw=32,
+    input_ch=3,
+    stages=(
+        _stage([3, 16, 16]),
+        _stage([16, 32, 32]),
+        _stage([32, 64]),
+    ),
+    fc=(128, 10),
+)
+
+CONFIGS = {c.name: c for c in (VGG16, VGG_TINY)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (deterministic, seeded — synthetic weights per
+# DESIGN.md §2: the paper's learned/pruned weights are not available)
+# ---------------------------------------------------------------------------
+
+
+def init_params(
+    cfg: NetConfig, m: int, r: int = 3, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """He-initialized spatial weights, pre-transformed to Winograd domain.
+
+    Returns a flat dict: conv{i}_u -> (l*l, K, C) plus conv{i}_g spatial
+    originals (kept for the oracles); fc{i}_w / fc{i}_b.
+    """
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for i, spec in enumerate(cfg.conv_specs()):
+        std = np.float32(np.sqrt(2.0 / (spec.in_ch * r * r)))
+        g = (
+            rng.standard_normal((spec.out_ch, spec.in_ch, r, r)).astype(
+                np.float32
+            )
+            * std
+        )
+        params[f"conv{i}_g"] = g
+        params[f"conv{i}_u"] = np.asarray(filter_transform(jnp.asarray(g), m, r))
+    in_f = cfg.flat_features()
+    for i, width in enumerate(cfg.fc):
+        std = np.float32(np.sqrt(2.0 / in_f))
+        params[f"fc{i}_w"] = (
+            rng.standard_normal((in_f, width)).astype(np.float32) * std
+        )
+        params[f"fc{i}_b"] = np.zeros((width,), np.float32)
+        in_f = width
+    return params
+
+
+def conv_param_names(cfg: NetConfig) -> List[str]:
+    return [f"conv{i}_u" for i in range(len(cfg.conv_specs()))]
+
+
+def fc_param_names(cfg: NetConfig) -> List[str]:
+    names: List[str] = []
+    for i in range(len(cfg.fc)):
+        names += [f"fc{i}_w", f"fc{i}_b"]
+    return names
+
+
+def runtime_param_names(cfg: NetConfig) -> List[str]:
+    """Parameters the AOT artifact takes at runtime, in positional order."""
+    return conv_param_names(cfg) + fc_param_names(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: NetConfig,
+    x: jnp.ndarray,
+    params: Sequence[jnp.ndarray],
+    m: int,
+    r: int = 3,
+) -> jnp.ndarray:
+    """Dense Winograd forward pass: (C, H, W) image -> (classes,) logits.
+
+    ``params`` is positional, ordered by :func:`runtime_param_names`.
+    """
+    n_conv = len(cfg.conv_specs())
+    conv_us = params[:n_conv]
+    fc_ps = params[n_conv:]
+    h = x
+    ci = 0
+    for stage in cfg.stages:
+        for _ in stage:
+            h = relu(winograd_conv2d(h, conv_us[ci], m, r))
+            ci += 1
+        h = maxpool2(h)
+    h = h.reshape(-1)
+    for i in range(len(cfg.fc)):
+        h = dense(h, fc_ps[2 * i], fc_ps[2 * i + 1])
+        if i != len(cfg.fc) - 1:
+            h = relu(h)
+    return h
+
+
+def forward_sparse(
+    cfg: NetConfig,
+    x: jnp.ndarray,
+    params: Sequence[jnp.ndarray],
+    masks: Sequence[jnp.ndarray],
+    m: int,
+    r: int = 3,
+    block_size: int = 4,
+) -> jnp.ndarray:
+    """Sparse forward pass: conv layers with block-pruned Winograd weights.
+
+    Layers whose channel counts are not multiples of ``block_size`` (the
+    3-channel input layer) fall back to the dense path, mirroring the paper
+    which leaves the first layer dense.
+    """
+    n_conv = len(cfg.conv_specs())
+    conv_us = params[:n_conv]
+    fc_ps = params[n_conv:]
+    h = x
+    ci = 0
+    for stage in cfg.stages:
+        for spec in stage:
+            u = conv_us[ci]
+            if spec.in_ch % block_size == 0 and spec.out_ch % block_size == 0:
+                h = relu(
+                    winograd_conv2d_sparse(h, u, masks[ci], m, r, block_size)
+                )
+            else:
+                h = relu(winograd_conv2d(h, u, m, r))
+            ci += 1
+        h = maxpool2(h)
+    h = h.reshape(-1)
+    for i in range(len(cfg.fc)):
+        h = dense(h, fc_ps[2 * i], fc_ps[2 * i + 1])
+        if i != len(cfg.fc) - 1:
+            h = relu(h)
+    return h
+
+
+def single_layer(
+    x: jnp.ndarray, u: jnp.ndarray, m: int, r: int = 3
+) -> jnp.ndarray:
+    """One Winograd conv layer + ReLU — the per-layer serving artifact."""
+    return relu(winograd_conv2d(x, u, m, r))
+
+
+def single_layer_sparse(
+    x: jnp.ndarray,
+    u: jnp.ndarray,
+    mask: jnp.ndarray,
+    m: int,
+    r: int = 3,
+    block_size: int = 4,
+) -> jnp.ndarray:
+    """One sparse Winograd conv layer + ReLU."""
+    return relu(winograd_conv2d_sparse(x, u, mask, m, r, block_size))
+
+
+# ---------------------------------------------------------------------------
+# Batched forward (performance path)
+#
+# vmap-ing the per-image forward over a batch re-traces every Pallas grid
+# per image (interpret-mode loops serialize), which measured ~5x slower
+# per image than b1 (EXPERIMENTS.md §Perf).  The paper's own batching move
+# is better: tiles from different images are just more columns in the
+# (C x B) operand of eq. (5), so the batch rides the *tile* dimension of
+# the same l^2 matmuls and the weight operand is fetched once.
+# ---------------------------------------------------------------------------
+
+
+def winograd_conv2d_batched(
+    xb: jnp.ndarray, u: jnp.ndarray, m: int, r: int
+) -> jnp.ndarray:
+    """SAME-padded Winograd conv over a batch: (N, C, H, W) -> (N, K, H, W).
+
+    The batch dimension is folded into the channel axis for the transform
+    (each image's channels are independent tiles) and into the tile axis
+    for the matmul — one kernel launch each, no vmap.
+    """
+    n, c, h, w = xb.shape
+    pad = (r - 1) // 2
+    xp = jnp.pad(xb, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    # Transform treats (N*C) as the channel axis: (N*C, H+2p, W+2p).
+    v_nc = input_transform(xp.reshape(n * c, h + 2 * pad, w + 2 * pad), m, r)
+    t2, _, nt = v_nc.shape
+    # (l*l, N*C, T) -> (l*l, C, N*T): batch becomes extra tiles.
+    v = (
+        v_nc.reshape(t2, n, c, nt)
+        .transpose(0, 2, 1, 3)
+        .reshape(t2, c, n * nt)
+    )
+    mm = batched_matmul(u, v)  # (l*l, K, N*T)
+    k = u.shape[1]
+    # Back to per-image tiles for the inverse transform.
+    mm_n = (
+        mm.reshape(t2, k, n, nt).transpose(0, 2, 1, 3).reshape(t2, n * k, nt)
+    )
+    y = inverse_transform(mm_n, m, r, h, w)  # (N*K, H, W)
+    return y.reshape(n, k, h, w)
+
+
+def forward_batched(
+    cfg: NetConfig,
+    xb: jnp.ndarray,
+    params: Sequence[jnp.ndarray],
+    m: int,
+    r: int = 3,
+) -> jnp.ndarray:
+    """Batched dense forward: (N, C, H, W) -> (N, classes)."""
+    n_conv = len(cfg.conv_specs())
+    conv_us = params[:n_conv]
+    fc_ps = params[n_conv:]
+    h = xb
+    ci = 0
+    for stage in cfg.stages:
+        for _ in stage:
+            h = relu(winograd_conv2d_batched(h, conv_us[ci], m, r))
+            ci += 1
+        # Pool each image: fold batch into channels for reduce_window.
+        n, k, hh, ww = h.shape
+        h = maxpool2(h.reshape(n * k, hh, ww)).reshape(n, k, hh // 2, ww // 2)
+    n = h.shape[0]
+    h = h.reshape(n, -1)
+    for i in range(len(cfg.fc)):
+        h = h @ fc_ps[2 * i] + fc_ps[2 * i + 1]
+        if i != len(cfg.fc) - 1:
+            h = relu(h)
+    return h

@@ -1,0 +1,160 @@
+"""Exact Cook-Toom construction of Winograd convolution matrices F(m, r).
+
+Generates the (A^T, G, B^T) triple such that for a length-(m+r-1) input
+vector ``d`` and a length-``r`` filter ``g``::
+
+    y = A^T [ (G g) * (B^T d) ]          (1-D, m outputs, correlation form)
+    Y = A^T [ (G g G^T) * (B^T d B) ] A  (2-D, m x m outputs)
+
+All arithmetic is carried out in exact rational arithmetic
+(``fractions.Fraction``) and only converted to float at the very end, so the
+generated transforms are exact for every supported tile size.  The
+construction follows the classic Toom-Cook evaluation/interpolation scheme
+with one point at infinity (Winograd 1980; Lavin & Gray 2016 "wincnn").
+
+The paper's hardware uses l x l systolic arrays with l = m + r - 1; the
+matrices produced here for F(2, 3) match the paper's Section 2.2 matrices up
+to a per-interpolation-point sign (an equivalence class of the algorithm).
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from functools import lru_cache
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+# Canonical interpolation-point sequence.  Small magnitudes first: they keep
+# the transform entries small, which matters for numerical conditioning and
+# mirrors the points used by wincnn / the paper (0, +-1, +-2, +-1/2, ...).
+_CANONICAL_POINTS: List[Fraction] = [
+    Fraction(0),
+    Fraction(1),
+    Fraction(-1),
+    Fraction(2),
+    Fraction(-2),
+    Fraction(1, 2),
+    Fraction(-1, 2),
+    Fraction(3),
+    Fraction(-3),
+    Fraction(1, 3),
+    Fraction(-1, 3),
+    Fraction(4),
+    Fraction(-4),
+]
+
+
+def interpolation_points(alpha_minus_1: int) -> List[Fraction]:
+    """The first ``alpha - 1`` canonical finite interpolation points."""
+    if alpha_minus_1 > len(_CANONICAL_POINTS):
+        raise ValueError(
+            f"F(m, r) with m + r - 2 = {alpha_minus_1} needs more canonical "
+            f"points than are defined ({len(_CANONICAL_POINTS)})"
+        )
+    return _CANONICAL_POINTS[:alpha_minus_1]
+
+
+def _poly_mul(p: Sequence[Fraction], q: Sequence[Fraction]) -> List[Fraction]:
+    """Multiply two polynomials given as ascending-power coefficient lists."""
+    out = [Fraction(0)] * (len(p) + len(q) - 1)
+    for i, a in enumerate(p):
+        for j, b in enumerate(q):
+            out[i + j] += a * b
+    return out
+
+
+def _poly_from_roots(roots: Sequence[Fraction]) -> List[Fraction]:
+    """Coefficients (ascending powers) of prod_k (x - roots[k])."""
+    poly = [Fraction(1)]
+    for rt in roots:
+        poly = _poly_mul(poly, [-rt, Fraction(1)])
+    return poly
+
+
+@lru_cache(maxsize=None)
+def _cook_toom_fractions(
+    m: int, r: int
+) -> Tuple[Tuple[Tuple[Fraction, ...], ...], ...]:
+    """Exact (A^T, G, B^T) for F(m, r) as nested Fraction tuples."""
+    if m < 1 or r < 1:
+        raise ValueError("m and r must be positive")
+    alpha = m + r - 1  # tile size l
+    pts = interpolation_points(alpha - 1)
+
+    # A^T: m x alpha.  Column i (finite point): [p_i^0 .. p_i^(m-1)].
+    # Final column (point at infinity): e_{m-1}.
+    at = [
+        [pts[i] ** j if i < alpha - 1 else Fraction(1 if j == m - 1 else 0)
+         for i in range(alpha)]
+        for j in range(m)
+    ]
+
+    # G: alpha x r.  Row i (finite point): [p_i^0 .. p_i^(r-1)] / N_i with
+    # N_i = prod_{k != i} (p_i - p_k).  Final row (infinity): e_{r-1}.
+    g_rows: List[List[Fraction]] = []
+    for i in range(alpha - 1):
+        n_i = Fraction(1)
+        for k in range(alpha - 1):
+            if k != i:
+                n_i *= pts[i] - pts[k]
+        g_rows.append([pts[i] ** j / n_i for j in range(r)])
+    g_rows.append([Fraction(1 if j == r - 1 else 0) for j in range(r)])
+
+    # B^T: alpha x alpha.  Row i (finite point): ascending coefficients of
+    # prod_{k != i} (x - p_k).  Final row: coefficients of the full modulus
+    # polynomial prod_k (x - p_k) (degree alpha - 1 -> alpha coefficients).
+    bt_rows: List[List[Fraction]] = []
+    for i in range(alpha - 1):
+        roots = [pts[k] for k in range(alpha - 1) if k != i]
+        coeffs = _poly_from_roots(roots)  # length alpha - 1
+        coeffs = coeffs + [Fraction(0)] * (alpha - len(coeffs))
+        bt_rows.append(coeffs)
+    full = _poly_from_roots(pts)  # length alpha
+    bt_rows.append(full)
+
+    freeze = lambda rows: tuple(tuple(row) for row in rows)
+    return freeze(at), freeze(g_rows), freeze(bt_rows)
+
+
+def _to_numpy(rows: Tuple[Tuple[Fraction, ...], ...], dtype) -> np.ndarray:
+    return np.array([[float(v) for v in row] for row in rows], dtype=dtype)
+
+
+def winograd_matrices(
+    m: int, r: int, dtype=np.float32
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(A^T, G, B^T) for F(m, r) as numpy arrays.
+
+    Shapes: A^T is (m, l), G is (l, r), B^T is (l, l) with l = m + r - 1.
+    """
+    at, g, bt = _cook_toom_fractions(m, r)
+    return _to_numpy(at, dtype), _to_numpy(g, dtype), _to_numpy(bt, dtype)
+
+
+def winograd_matrices_exact(m: int, r: int):
+    """(A^T, G, B^T) as nested Fraction tuples (exact)."""
+    return _cook_toom_fractions(m, r)
+
+
+def tile_size(m: int, r: int) -> int:
+    """l = m + r - 1, the systolic-array dimension in the paper."""
+    return m + r - 1
+
+
+def num_tiles(spatial: int, m: int) -> int:
+    """ceil(spatial / m): tiles along one image dimension (overlap r - 1)."""
+    return -(-spatial // m)
+
+
+def transform_filter(g: np.ndarray, m: int, r: int) -> np.ndarray:
+    """U = G g G^T for a single (r, r) filter -> (l, l)."""
+    _, G, _ = winograd_matrices(m, r, dtype=np.float64)
+    return (G @ g.astype(np.float64) @ G.T).astype(g.dtype)
+
+
+def transform_filters(g: np.ndarray, m: int, r: int) -> np.ndarray:
+    """U for a (K, C, r, r) filter bank -> (K, C, l, l)."""
+    _, G, _ = winograd_matrices(m, r, dtype=np.float64)
+    u = np.einsum("ij,kcjl,ml->kcim", G, g.astype(np.float64), G)
+    return u.astype(g.dtype)

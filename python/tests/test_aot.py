@@ -1,0 +1,122 @@
+"""AOT artifact pipeline tests: manifest schema, HLO text well-formedness,
+weight binaries, and executable-by-jax round trips for small artifacts."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_to_hlo_text_roundtrip():
+    """Lowered HLO text contains an ENTRY computation and parameters."""
+
+    def fn(x, y):
+        return (jnp.dot(x, y),)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    assert "parameter(1)" in text
+
+
+def test_manifest_schema():
+    man = _manifest()
+    assert man["schema"] == aot.SCHEMA_VERSION
+    arts = man["artifacts"]
+    for required in (
+        "quickstart",
+        "vgg_tiny_b1",
+        "vgg_tiny_b4",
+        "vgg_tiny_sparse_b1",
+        "vgg16_conv5",
+        "layer_m2",
+        "layer_m4",
+        "layer_m6",
+        "fc",
+    ):
+        assert required in arts, required
+    for name, a in arts.items():
+        assert os.path.exists(os.path.join(ART_DIR, a["hlo"])), name
+        assert a["outputs"], name
+        for inp in a["inputs"]:
+            assert inp["dtype"] == "float32", (name, inp)
+            if "data" in inp:
+                binpath = os.path.join(ART_DIR, inp["data"])
+                assert os.path.exists(binpath), (name, inp)
+                n = np.prod(inp["shape"]) * 4
+                assert os.path.getsize(binpath) == n, (name, inp)
+
+
+def test_hlo_text_is_valid_hlo():
+    man = _manifest()
+    for name, a in man["artifacts"].items():
+        with open(os.path.join(ART_DIR, a["hlo"])) as f:
+            head = f.read(4096)
+        assert head.startswith("HloModule"), name
+        assert "ENTRY" in head or "ENTRY" in open(
+            os.path.join(ART_DIR, a["hlo"])
+        ).read(), name
+
+
+def test_quickstart_weights_match_model():
+    """The quickstart .bin weight reproduces the layer output jax-side."""
+    man = _manifest()
+    a = man["artifacts"]["quickstart"]
+    meta = a["meta"]
+    u_entry = next(i for i in a["inputs"] if i["name"] == "u")
+    u = np.fromfile(
+        os.path.join(ART_DIR, u_entry["data"]), np.float32
+    ).reshape(u_entry["shape"])
+    g_meta = meta["g_spatial"]
+    g = np.fromfile(
+        os.path.join(ART_DIR, g_meta["file"]), np.float32
+    ).reshape(g_meta["shape"])
+    # U must be the Winograd transform of the spatial weights it rode with.
+    want = np.asarray(M.filter_transform(jnp.asarray(g), meta["m"], meta["r"]))
+    np.testing.assert_allclose(u, want, rtol=1e-5, atol=1e-6)
+
+
+def test_artifact_input_ordering_request_first():
+    """Request-time inputs come before baked weights (runtime contract)."""
+    man = _manifest()
+    for name, a in man["artifacts"].items():
+        seen_weight = False
+        for inp in a["inputs"]:
+            if "data" in inp:
+                seen_weight = True
+            else:
+                assert not seen_weight, f"{name}: request input after weight"
+
+
+def test_vgg_tiny_output_shape():
+    man = _manifest()
+    a = man["artifacts"]["vgg_tiny_b1"]
+    assert a["outputs"][0]["shape"] == [10]
+    a4 = man["artifacts"]["vgg_tiny_b4"]
+    assert a4["outputs"][0]["shape"] == [4, 10]
+
+
+def test_sparse_artifact_meta():
+    man = _manifest()
+    a = man["artifacts"]["vgg_tiny_sparse_b1"]
+    assert a["meta"]["sparsity"] == pytest.approx(0.8)
+    assert a["meta"]["block"] == 4
+    # Layer 0 (3 input channels) cannot be block-sparse.
+    assert 0 not in a["meta"]["sparse_layers"]

@@ -1,0 +1,70 @@
+"""Fused megakernel vs the staged pipeline and direct convolution."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    batched_matmul,
+    filter_transform,
+    input_transform,
+    inverse_transform,
+)
+from compile.kernels import ref
+from compile.kernels.fused import fused_conv_layer, fused_winograd_conv2d
+
+RNG = np.random.default_rng(77)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([2, 4]),
+    c=st.integers(1, 5),
+    k=st.integers(1, 6),
+    h=st.integers(7, 16),
+    w=st.integers(7, 16),
+)
+def test_fused_equals_direct_conv(m, c, k, h, w):
+    x = _rand(c, h, w)
+    wts = _rand(k, c, 3, 3)
+    u = filter_transform(wts, m, 3)
+    got = fused_winograd_conv2d(x, u, m, 3)
+    want = ref.direct_conv2d(x, wts)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_fused_equals_staged():
+    m, r = 2, 3
+    x = _rand(4, 12, 12)
+    wts = _rand(8, 4, 3, 3)
+    u = filter_transform(wts, m, r)
+    fused = fused_winograd_conv2d(x, u, m, r)
+    v = input_transform(x, m, r)
+    staged = inverse_transform(batched_matmul(u, v), m, r, 10, 10)
+    np.testing.assert_allclose(fused, staged, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_layer_same_padding_relu():
+    m, r = 2, 3
+    x = _rand(3, 9, 9)
+    wts = _rand(5, 3, 3, 3)
+    u = filter_transform(wts, m, r)
+    y = fused_conv_layer(x, u, m, r)
+    assert y.shape == (5, 9, 9)
+    assert float(y.min()) >= 0.0  # ReLU
+    pad = 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    want = jnp.maximum(ref.direct_conv2d(xp, wts), 0.0)
+    np.testing.assert_allclose(y, want, rtol=2e-3, atol=2e-3)
+
+
+def test_fused_rejects_mismatched_weights():
+    x = _rand(3, 8, 8)
+    u = _rand(16, 4, 5)  # C mismatch
+    with pytest.raises(AssertionError):
+        fused_winograd_conv2d(x, u, 2, 3)

@@ -1,0 +1,65 @@
+"""Guard rails on the AOT HLO-text interchange format.
+
+The pinned xla_extension (0.5.1) parses HLO text with two sharp edges this
+suite pins down:
+
+1. large constants elided as ``constant({...})`` PARSE as zeros — the
+   printer must be configured to print them in full;
+2. jax's newer instruction metadata (``source_end_line``) is rejected —
+   metadata must be off.
+"""
+
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_constants_printed_in_full():
+    const = np.linspace(-3.0, 17.5, 64, dtype=np.float32).reshape(8, 8)
+
+    def fn(x):
+        return (x + jnp.asarray(const),)
+
+    text = to_hlo_text(jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)))
+    assert "{...}" not in text
+    # The constant's values must literally appear (17.5 is exact in f32).
+    assert "17.5" in text
+
+
+def test_no_metadata_attributes():
+    def fn(x):
+        return (x * 2.0,)
+
+    text = to_hlo_text(jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+
+
+def test_all_artifacts_free_of_elided_constants():
+    if not os.path.exists(os.path.join(ART_DIR, "manifest.json")):
+        pytest.skip("artifacts not built")
+    files = glob.glob(os.path.join(ART_DIR, "*.hlo.txt"))
+    assert files, "no HLO artifacts found"
+    for f in files:
+        text = open(f).read()
+        assert "{...}" not in text, f
+        assert "source_end_line" not in text, f
+        assert text.startswith("HloModule"), f
+
+
+def test_winograd_matrices_appear_in_layer_artifact():
+    """The transform matrices must be baked as full constants (the bug
+    class this guards: B^T parsed as zeros made every conv output 0)."""
+    if not os.path.exists(os.path.join(ART_DIR, "manifest.json")):
+        pytest.skip("artifacts not built")
+    text = open(os.path.join(ART_DIR, "quickstart.hlo.txt")).read()
+    # F(2,3) B^T contains -1 entries; a full constant print includes them.
+    assert "-1" in text

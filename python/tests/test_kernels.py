@@ -1,0 +1,200 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and m; every kernel is compared elementwise
+against its ref.py oracle, and the full pipeline against direct
+convolution (eq. 1 of the paper).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    batched_matmul,
+)
+from compile.kernels.matmul import batched_matmul_blocked
+from compile.kernels import (
+    block_sparse_matmul,
+    filter_transform,
+    input_transform,
+    inverse_transform,
+    prune_winograd_weights,
+)
+from compile.kernels import ref
+from compile.winograd import tile_size
+
+RNG = np.random.default_rng(123)
+
+
+def _rand(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Individual kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([2, 4]),
+    c=st.integers(1, 6),
+    h=st.integers(5, 17),
+    w=st.integers(5, 17),
+)
+def test_input_transform_matches_ref(m, c, h, w):
+    x = _rand(c, h, w)
+    got = input_transform(x, m, 3)
+    want = ref.input_transform_ref(x, m, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 6]),
+    k=st.integers(1, 8),
+    c=st.integers(1, 8),
+)
+def test_filter_transform_matches_ref(m, k, c):
+    w = _rand(k, c, 3, 3)
+    got = filter_transform(w, m, 3)
+    want = ref.filter_transform_ref(w, m, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([16, 36]),
+    k=st.integers(1, 40),
+    c=st.integers(1, 40),
+    b=st.integers(1, 50),
+)
+def test_batched_matmul_matches_ref(t, k, c, b):
+    u = _rand(t, k, c)
+    v = _rand(t, c, b)
+    got = batched_matmul(u, v)
+    want = ref.batched_matmul_ref(u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_batched_matmul_blocked_accumulation():
+    """C larger than the block forces multi-step in-place accumulation
+    in the grid-blocked (TPU-shaped) variant; it must agree with both the
+    oracle and the single-invocation fast path."""
+    u = _rand(16, 64, 96)
+    v = _rand(16, 96, 70)
+    got = batched_matmul_blocked(u, v, block=(32, 32, 32))
+    want = ref.batched_matmul_ref(u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    fast = batched_matmul(u, v)
+    np.testing.assert_allclose(got, fast, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sparsity=st.floats(0.0, 0.95),
+    k=st.sampled_from([8, 16]),
+    c=st.sampled_from([8, 16]),
+    b=st.integers(1, 30),
+)
+def test_block_sparse_matmul_matches_ref(sparsity, k, c, b):
+    t = 16
+    u = np.asarray(_rand(t, k, c))
+    v = _rand(t, c, b)
+    pu, mask = prune_winograd_weights(u, sparsity, 4)
+    got = block_sparse_matmul(jnp.asarray(u), v, jnp.asarray(mask), 4)
+    want = ref.block_masked_matmul_ref(jnp.asarray(u), v, jnp.asarray(mask), 4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # Masked-matmul on original U == dense matmul on pruned U.
+    want2 = ref.batched_matmul_ref(jnp.asarray(pu), v)
+    np.testing.assert_allclose(got, want2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([2, 4]),
+    k=st.integers(1, 8),
+    oh=st.integers(2, 14),
+    ow=st.integers(2, 14),
+)
+def test_inverse_transform_matches_ref(m, k, oh, ow):
+    from compile.winograd import num_tiles
+
+    l = tile_size(m, 3)
+    nt = num_tiles(oh, m) * num_tiles(ow, m)
+    mm = _rand(l * l, k, nt)
+    got = inverse_transform(mm, m, 3, oh, ow)
+    want = ref.inverse_transform_ref(mm, m, 3, oh, ow)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline vs direct convolution (eq. 1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 6]),
+    c=st.integers(1, 5),
+    k=st.integers(1, 5),
+    h=st.integers(7, 20),
+    w=st.integers(7, 20),
+)
+def test_winograd_pipeline_equals_direct_conv(m, c, k, h, w):
+    x = _rand(c, h, w)
+    wts = _rand(k, c, 3, 3)
+    v = input_transform(x, m, 3)
+    u = filter_transform(wts, m, 3)
+    mm = batched_matmul(u, v)
+    y = inverse_transform(mm, m, 3, h - 2, w - 2)
+    want = ref.direct_conv2d(x, wts)
+    np.testing.assert_allclose(y, want, rtol=1e-3, atol=1e-3)
+
+
+def test_pipeline_f23_exact_small():
+    """Non-random regression with exact expected values (integer inputs)."""
+    x = jnp.arange(2 * 6 * 6, dtype=jnp.float32).reshape(2, 6, 6)
+    w = jnp.ones((3, 2, 3, 3), jnp.float32)
+    v = input_transform(x, 2, 3)
+    u = filter_transform(w, 2, 3)
+    y = inverse_transform(batched_matmul(u, v), 2, 3, 4, 4)
+    want = ref.direct_conv2d(x, w)
+    np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-4)
+
+
+def test_dtype_preserved():
+    x = _rand(2, 8, 8)
+    got = input_transform(x, 2, 3)
+    assert got.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Pruning helpers
+# ---------------------------------------------------------------------------
+
+
+def test_prune_sparsity_level():
+    u = np.asarray(_rand(16, 32, 32))
+    for s in (0.0, 0.25, 0.6, 0.9):
+        _, mask = prune_winograd_weights(u, s, 4)
+        got = 1.0 - mask.sum() / mask.size
+        assert abs(got - s) < 0.01, (s, got)
+
+
+def test_prune_keeps_largest_blocks():
+    u = np.asarray(_rand(16, 8, 8))
+    pu, mask = prune_winograd_weights(u, 0.5, 4)
+    blocks = np.abs(u.reshape(16, 2, 4, 2, 4)).sum(axis=(2, 4))
+    kept = blocks[mask]
+    dropped = blocks[~mask]
+    assert kept.min() >= dropped.max() - 1e-6
+
+
+def test_prune_rejects_bad_sparsity():
+    u = np.asarray(_rand(16, 8, 8))
+    with pytest.raises(ValueError):
+        prune_winograd_weights(u, 1.0, 4)
+    with pytest.raises(ValueError):
+        prune_winograd_weights(u, -0.1, 4)

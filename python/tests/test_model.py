@@ -1,0 +1,157 @@
+"""L2 model tests: Winograd conv layers vs direct conv; network shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+def _direct_same(x, g):
+    """SAME-padded direct conv oracle."""
+    pad = (g.shape[-1] - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    return ref.direct_conv2d(xp, g)
+
+
+@pytest.mark.parametrize("m", [2, 4])
+def test_winograd_conv2d_same_padding(m):
+    x = _rand(4, 10, 10)
+    g = _rand(6, 4, 3, 3)
+    u = M.filter_transform(g, m, 3)
+    y = M.winograd_conv2d(x, u, m, 3)
+    assert y.shape == (6, 10, 10)
+    np.testing.assert_allclose(y, _direct_same(x, g), rtol=1e-3, atol=1e-3)
+
+
+def test_winograd_conv2d_sparse_zero_mask_blocks():
+    """A fully-dense mask reproduces the dense layer; a fully-pruned mask
+    yields exactly zero output (pre-activation)."""
+    m = 2
+    x = _rand(8, 8, 8)
+    g = _rand(8, 8, 3, 3)
+    u = M.filter_transform(g, m, 3)
+    ones = jnp.ones((16, 2, 2), bool)
+    dense_y = M.winograd_conv2d(x, u, m, 3)
+    sparse_y = M.winograd_conv2d_sparse(x, u, ones, m, 3, 4)
+    np.testing.assert_allclose(sparse_y, dense_y, rtol=1e-4, atol=1e-4)
+    zeros = jnp.zeros((16, 2, 2), bool)
+    zero_y = M.winograd_conv2d_sparse(x, u, zeros, m, 3, 4)
+    np.testing.assert_allclose(zero_y, jnp.zeros_like(zero_y), atol=1e-6)
+
+
+def test_maxpool_shapes_and_values():
+    x = jnp.asarray(np.arange(16, dtype=np.float32).reshape(1, 4, 4))
+    y = M.maxpool2(x)
+    assert y.shape == (1, 2, 2)
+    np.testing.assert_allclose(np.asarray(y)[0], [[5, 7], [13, 15]])
+
+
+def test_relu():
+    x = jnp.asarray([-1.0, 0.0, 2.0])
+    np.testing.assert_allclose(M.relu(x), [0.0, 0.0, 2.0])
+
+
+def test_dense():
+    x = jnp.ones((3,))
+    w = jnp.eye(3)
+    b = jnp.asarray([1.0, 2.0, 3.0])
+    np.testing.assert_allclose(M.dense(x, w, b), [2.0, 3.0, 4.0])
+
+
+def test_vgg16_config_matches_paper():
+    """13 conv layers, 5 stages, 224 input, 1000 classes (paper §6.1)."""
+    cfg = M.VGG16
+    assert len(cfg.conv_specs()) == 13
+    assert cfg.input_hw == 224
+    assert cfg.fc[-1] == 1000
+    assert cfg.final_hw() == 7
+    assert cfg.flat_features() == 512 * 7 * 7
+
+
+def test_vgg_tiny_forward_shapes():
+    cfg = M.VGG_TINY
+    params = M.init_params(cfg, 2)
+    args = [jnp.asarray(params[n]) for n in M.runtime_param_names(cfg)]
+    x = _rand(3, 32, 32)
+    logits = M.forward(cfg, x, args, 2)
+    assert logits.shape == (cfg.fc[-1],)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_vgg_tiny_forward_deterministic():
+    cfg = M.VGG_TINY
+    params = M.init_params(cfg, 2, seed=0)
+    params2 = M.init_params(cfg, 2, seed=0)
+    for n in M.runtime_param_names(cfg):
+        np.testing.assert_array_equal(params[n], params2[n])
+
+
+def test_forward_matches_direct_conv_network():
+    """Whole VGG-Tiny vs a direct-conv replica — end-to-end L2 oracle."""
+    cfg = M.VGG_TINY
+    m = 2
+    params = M.init_params(cfg, m)
+    args = [jnp.asarray(params[n]) for n in M.runtime_param_names(cfg)]
+    x = _rand(3, 32, 32)
+    got = M.forward(cfg, x, args, m)
+
+    h = x
+    ci = 0
+    for stage in cfg.stages:
+        for _ in stage:
+            g = jnp.asarray(params[f"conv{ci}_g"])
+            h = M.relu(_direct_same(h, g))
+            ci += 1
+        h = M.maxpool2(h)
+    h = h.reshape(-1)
+    for i in range(len(cfg.fc)):
+        h = M.dense(
+            h,
+            jnp.asarray(params[f"fc{i}_w"]),
+            jnp.asarray(params[f"fc{i}_b"]),
+        )
+        if i != len(cfg.fc) - 1:
+            h = M.relu(h)
+    np.testing.assert_allclose(got, h, rtol=2e-2, atol=2e-2)
+
+
+def test_forward_sparse_low_sparsity_close_to_dense():
+    """At 0% pruning the sparse forward equals the dense forward."""
+    cfg = M.VGG_TINY
+    m = 2
+    params = M.init_params(cfg, m)
+    args = [jnp.asarray(params[n]) for n in M.runtime_param_names(cfg)]
+    n_conv = len(cfg.conv_specs())
+    masks = []
+    for i, spec in enumerate(cfg.conv_specs()):
+        if spec.in_ch % 4 == 0 and spec.out_ch % 4 == 0:
+            l2 = 16
+            masks.append(jnp.ones((l2, spec.out_ch // 4, spec.in_ch // 4), bool))
+        else:
+            masks.append(None)
+    x = _rand(3, 32, 32)
+    dense_logits = M.forward(cfg, x, args, m)
+    sparse_logits = M.forward_sparse(cfg, x, args, masks, m)
+    np.testing.assert_allclose(sparse_logits, dense_logits, rtol=1e-3, atol=1e-3)
+
+
+def test_batched_forward_vmap_consistent():
+    """vmap'd batch forward (the b4 artifact) == per-image forward."""
+    cfg = M.VGG_TINY
+    m = 2
+    params = M.init_params(cfg, m)
+    args = [jnp.asarray(params[n]) for n in M.runtime_param_names(cfg)]
+    xb = _rand(2, 3, 32, 32)
+    batched = jax.vmap(lambda x: M.forward(cfg, x, args, m))(xb)
+    for i in range(2):
+        single = M.forward(cfg, xb[i], args, m)
+        np.testing.assert_allclose(batched[i], single, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,106 @@
+"""Tests for the exact Cook-Toom Winograd matrix generator."""
+
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from compile.winograd import (
+    interpolation_points,
+    num_tiles,
+    tile_size,
+    transform_filter,
+    transform_filters,
+    winograd_matrices,
+    winograd_matrices_exact,
+)
+from compile.kernels.ref import winograd_conv1d_ref
+
+RNG = np.random.default_rng(42)
+SUPPORTED = [(2, 3), (3, 3), (4, 3), (6, 3), (2, 5), (4, 5)]
+
+
+@pytest.mark.parametrize("m,r", SUPPORTED)
+def test_shapes(m, r):
+    at, g, bt = winograd_matrices(m, r)
+    l = tile_size(m, r)
+    assert at.shape == (m, l)
+    assert g.shape == (l, r)
+    assert bt.shape == (l, l)
+
+
+@pytest.mark.parametrize("m,r", SUPPORTED)
+def test_1d_correlation_identity(m, r):
+    """y = A^T[(Gg) * (B^T d)] equals direct correlation, 100 random trials."""
+    for _ in range(100):
+        d = RNG.standard_normal(m + r - 1)
+        g = RNG.standard_normal(r)
+        y = winograd_conv1d_ref(d, g, m)
+        want = np.array([np.dot(g, d[j : j + r]) for j in range(m)])
+        np.testing.assert_allclose(y, want, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("m,r", SUPPORTED)
+def test_exact_identity_rational(m, r):
+    """The identity holds *exactly* in rational arithmetic."""
+    at, g, bt = winograd_matrices_exact(m, r)
+    l = m + r - 1
+    # Symbolic check on a basis: for each (filter-delta, input-delta) pair
+    # the reconstructed output must match direct correlation exactly.
+    for fi in range(r):
+        gg = [Fraction(1 if i == fi else 0) for i in range(r)]
+        hg = [sum(g[i][j] * gg[j] for j in range(r)) for i in range(l)]
+        for di in range(l):
+            dd = [Fraction(1 if i == di else 0) for i in range(l)]
+            jd = [sum(bt[i][j] * dd[j] for j in range(l)) for i in range(l)]
+            c = [hg[i] * jd[i] for i in range(l)]
+            y = [sum(at[j][i] * c[i] for i in range(l)) for j in range(m)]
+            for j in range(m):
+                want = Fraction(1) if (di - j == fi and 0 <= di - j < r) else Fraction(0)
+                assert y[j] == want, (m, r, fi, di, j, y[j])
+
+
+def test_f23_matches_paper_structure():
+    """F(2,3): B^T entries in {0, +-1}; transform is adder-only (paper §4.1)."""
+    at, g, bt = winograd_matrices(2, 3)
+    assert set(np.unique(bt)).issubset({-1.0, 0.0, 1.0})
+    assert set(np.unique(at)).issubset({-1.0, 0.0, 1.0})
+    # G has the paper's 1/2 entries.
+    assert set(np.unique(np.abs(g))).issubset({0.0, 0.5, 1.0})
+
+
+def test_multiplication_counts():
+    """F(m, r) uses m + r - 1 multiplies vs m * r for direct (paper §2.2)."""
+    for m, r in SUPPORTED:
+        l = tile_size(m, r)
+        assert l < m * r or (m == 1 or r == 1)
+
+
+def test_interpolation_points_distinct():
+    pts = interpolation_points(12)
+    assert len(set(pts)) == len(pts)
+
+
+def test_interpolation_points_exhausted():
+    with pytest.raises(ValueError):
+        interpolation_points(99)
+
+
+def test_num_tiles():
+    assert num_tiles(8, 2) == 4
+    assert num_tiles(9, 2) == 5
+    assert num_tiles(1, 2) == 1
+    assert num_tiles(224, 2) == 112  # VGG conv1 (paper Table 1)
+
+
+def test_transform_filter_single_vs_bank():
+    g = RNG.standard_normal((4, 3, 3, 3)).astype(np.float32)
+    bank = transform_filters(g, 2, 3)
+    for k in range(4):
+        for c in range(3):
+            single = transform_filter(g[k, c], 2, 3)
+            np.testing.assert_allclose(bank[k, c], single, rtol=1e-6)
+
+
+def test_invalid_mr():
+    with pytest.raises(ValueError):
+        winograd_matrices(0, 3)

@@ -1,0 +1,58 @@
+//! Bench/repro for Fig. 6: relative data-movement energy per memory
+//! hierarchy level (Sze et al. CICC'17 as cited by the paper), plus a
+//! measured-traffic demo: the same matmul's energy under three layouts.
+//!
+//!   cargo bench --bench fig6
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::memory::{AccessCounter, EnergyTable, Level};
+use swcnn::systolic::cluster::{BlockMatrix, Cluster};
+use swcnn::util::Rng;
+
+fn main() {
+    let t = EnergyTable::default();
+    let rows: Vec<Vec<String>> = t
+        .figure6_rows()
+        .iter()
+        .map(|(n, e)| {
+            let bar = "#".repeat(((e.log10() + 1.0) * 8.0).max(1.0) as usize);
+            vec![n.to_string(), format!("{e:.1}x"), bar]
+        })
+        .collect();
+    print_table(
+        "Fig. 6: data movement energy vs hierarchy (log bar)",
+        &["level", "energy", ""],
+        &rows,
+    );
+
+    // Measured: a 32^3 matmul with FIFO sharing vs without (every block
+    // refetched from local memory) — why the cluster FIFOs matter.
+    let mut rng = Rng::new(4);
+    let a = rng.gaussian_vec(32 * 32);
+    let b = rng.gaussian_vec(32 * 32);
+    let mut cl = Cluster::new(4);
+    let stats = time_it(2, 10, || {
+        let mut c2 = Cluster::new(4);
+        std::hint::black_box(c2.matmul(
+            &BlockMatrix::new(&a, 32, 32, 4),
+            &BlockMatrix::new(&b, 32, 32, 4),
+        ));
+    });
+    let _ = cl.matmul(
+        &BlockMatrix::new(&a, 32, 32, 4),
+        &BlockMatrix::new(&b, 32, 32, 4),
+    );
+    let words_per_block = 16u64;
+    let mut shared = AccessCounter::default();
+    shared.record(Level::Local, (cl.stats.a_fetches + cl.stats.b_fetches) * words_per_block);
+    shared.record(Level::Fifo, cl.stats.fifo_reads * words_per_block);
+    let mut unshared = AccessCounter::default();
+    unshared.record(Level::Local, cl.stats.fifo_reads * words_per_block);
+    println!(
+        "\n32x32x32 matmul data-movement energy: shared FIFOs {:.0} units vs {:.0} without sharing ({:.2}x saved); sim {:.2} ms/run",
+        shared.energy(&t),
+        unshared.energy(&t),
+        unshared.energy(&t) / shared.energy(&t),
+        stats.mean * 1e3,
+    );
+}

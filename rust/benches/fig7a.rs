@@ -1,0 +1,42 @@
+//! Bench/repro for Fig. 7(a): energy-consumption estimation of VGG16
+//! Winograd convolution as a function of m (the analytical model of
+//! §5.1.3 with the Fig. 6 energy table).
+//!
+//!   cargo bench --bench fig7a
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::memory::EnergyTable;
+use swcnn::model::energy_vs_m;
+use swcnn::nn::vgg16;
+
+fn main() {
+    let net = vgg16();
+    let table = EnergyTable::default();
+    let stats = time_it(3, 20, || {
+        std::hint::black_box(energy_vs_m(&net, &[2, 3, 4, 6], &table));
+    });
+    let curve = energy_vs_m(&net, &[2, 3, 4, 6], &table);
+    let e_min = curve.iter().map(|&(_, e)| e).fold(f64::INFINITY, f64::min);
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .map(|&(m, e)| {
+            let rel = e / e_min;
+            vec![
+                m.to_string(),
+                format!("{e:.3e}"),
+                format!("{rel:.3}"),
+                "#".repeat((rel * 24.0) as usize),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 7(a): VGG16 energy vs m (normalized to the minimum)",
+        &["m", "energy (MAC units)", "rel", ""],
+        &rows,
+    );
+    println!(
+        "\npaper shape: small m consumes less energy; m=4 can edge out m=2\n\
+         (the paper picked m=2 for hardware simplicity).  sweep: {:.1} ms",
+        stats.mean * 1e3
+    );
+}

@@ -1,0 +1,120 @@
+//! Hot-path microbenchmarks for the §Perf optimization loop:
+//! the detailed PE simulation, the closed-form timing model, Z-Morton
+//! transforms, BCOO compression, and (when artifacts exist) PJRT
+//! execution latency for the per-layer and end-to-end executables.
+//!
+//!   cargo bench --bench hotpath
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::sparse::{synthetic_sparse_matrix, Bcoo};
+use swcnn::systolic::cluster::{BlockMatrix, Cluster};
+use swcnn::systolic::BlockTiming;
+use swcnn::util::{eng, Rng};
+use swcnn::zmorton;
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(1);
+
+    // Detailed cluster simulation, 64^3 dense.
+    let a = rng.gaussian_vec(64 * 64);
+    let b = rng.gaussian_vec(64 * 64);
+    let s = time_it(2, 10, || {
+        let mut cl = Cluster::new(4);
+        std::hint::black_box(cl.matmul(
+            &BlockMatrix::new(&a, 64, 64, 4),
+            &BlockMatrix::new(&b, 64, 64, 4),
+        ));
+    });
+    let macs = BlockTiming::new(4).dense_macs(64, 64, 64) as f64;
+    rows.push(vec![
+        "cluster sim 64^3 dense".into(),
+        format!("{:.3} ms", s.mean * 1e3),
+        format!("{} MAC/s simulated", eng(macs / s.mean)),
+    ]);
+
+    // Sparse cluster simulation at 90%.
+    let bs = synthetic_sparse_matrix(&mut rng, 64, 64, 4, 0.9);
+    let bcoo = Bcoo::compress(&bs, 64, 64, 4);
+    let s = time_it(2, 10, || {
+        let mut cl = Cluster::new(4);
+        std::hint::black_box(cl.matmul_sparse(&BlockMatrix::new(&a, 64, 64, 4), &bcoo));
+    });
+    rows.push(vec![
+        "cluster sim 64^3 sparse90".into(),
+        format!("{:.3} ms", s.mean * 1e3),
+        String::new(),
+    ]);
+
+    // Closed-form timing model (the sweep hot path).
+    let t = BlockTiming::new(4);
+    let s = time_it(10, 50, || {
+        std::hint::black_box(t.sparse_matmul_cycles(512, &bcoo));
+    });
+    rows.push(vec![
+        "timing model sparse walk".into(),
+        format!("{:.1} µs", s.mean * 1e6),
+        String::new(),
+    ]);
+
+    // Z-Morton encode/decode throughput.
+    let s = time_it(2, 20, || {
+        let mut acc = 0u64;
+        for i in 0..1_000_000u32 {
+            acc = acc.wrapping_add(zmorton::encode(i, i ^ 0xAAAA));
+        }
+        std::hint::black_box(acc);
+    });
+    rows.push(vec![
+        "zmorton encode x1e6".into(),
+        format!("{:.2} ms", s.mean * 1e3),
+        format!("{} enc/s", eng(1e6 / s.mean)),
+    ]);
+
+    // BCOO compression of a VGG-scale weight matrix.
+    let big = synthetic_sparse_matrix(&mut rng, 512, 512, 4, 0.8);
+    let s = time_it(2, 10, || {
+        std::hint::black_box(Bcoo::compress(&big, 512, 512, 4));
+    });
+    rows.push(vec![
+        "BCOO compress 512x512".into(),
+        format!("{:.2} ms", s.mean * 1e3),
+        String::new(),
+    ]);
+
+    // PJRT execution latency (needs artifacts).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use swcnn::runtime::Runtime;
+        let mut rt = Runtime::new("artifacts").expect("runtime");
+        for name in ["quickstart", "vgg_tiny_b1", "vgg_tiny_b4", "vgg16_conv5"] {
+            let model = rt.load(name).expect(name);
+            let n_in: usize = model
+                .spec
+                .request_inputs()
+                .next()
+                .map(|i| i.elements())
+                .unwrap_or(0);
+            let x = Rng::new(7).gaussian_vec(n_in);
+            let s = time_it(3, 20, || {
+                std::hint::black_box(model.run(&[x.clone()]).expect("run"));
+            });
+            let per_img = match name {
+                "vgg_tiny_b4" => s.mean / 4.0,
+                _ => s.mean,
+            };
+            rows.push(vec![
+                format!("pjrt {name}"),
+                format!("{:.3} ms", s.mean * 1e3),
+                format!("{:.3} ms/img", per_img * 1e3),
+            ]);
+        }
+    } else {
+        rows.push(vec![
+            "pjrt artifacts".into(),
+            "skipped".into(),
+            "run `make artifacts`".into(),
+        ]);
+    }
+
+    print_table("hot paths", &["path", "time", "notes"], &rows);
+}

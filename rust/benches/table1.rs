@@ -1,0 +1,50 @@
+//! Bench/repro for Table 1: Winograd neuron & weight counts per VGG16
+//! stage at m = 2, printed next to the paper's numbers.
+//!
+//!   cargo bench --bench table1
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::model::table1;
+use swcnn::nn::vgg16;
+
+// Paper Table 1 rows: (label, neurons, weights).
+const PAPER: &[(&str, u64, u64)] = &[
+    ("Conv1 (x2)", 12_845_056, 65_536),
+    ("Conv2 (x3)", 6_422_528, 262_144),
+    ("Conv3 (x4)", 3_211_264, 1_048_576),
+    ("Conv4 (x4)", 1_605_632, 4_194_304),
+    ("Conv5 (x4)", 401_408, 4_194_304),
+    ("Conv6", 131_072, 4_194_304),
+];
+
+fn main() {
+    let net = vgg16();
+    let stats = time_it(3, 20, || {
+        std::hint::black_box(table1(&net, 2));
+    });
+    let rows = table1(&net, 2);
+
+    let mut out = Vec::new();
+    for &(label, pn, pw) in PAPER {
+        // Find our row with the same weight volume & closest neuron count.
+        let ours = rows
+            .iter()
+            .filter(|r| r.weights == pw)
+            .min_by_key(|r| r.neurons.abs_diff(pn));
+        let (on, ow) = ours.map(|r| (r.neurons, r.weights)).unwrap_or((0, 0));
+        out.push(vec![
+            label.to_string(),
+            pn.to_string(),
+            on.to_string(),
+            pw.to_string(),
+            ow.to_string(),
+            if pn == on && pw == ow { "exact" } else { "≈" }.to_string(),
+        ]);
+    }
+    print_table(
+        "Table 1 reproduction (m=2)",
+        &["stage", "paper neurons", "ours", "paper weights", "ours", "match"],
+        &out,
+    );
+    println!("\nmodel evaluation: {:.1} µs/run (n={})", stats.mean * 1e6, stats.n);
+}

@@ -1,0 +1,60 @@
+//! Bench/repro for Table 3: resource usage of the paper configuration
+//! under the calibrated cost model, vs the paper's synthesis numbers.
+//!
+//!   cargo bench --bench table3
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::resources::{estimate, paper_configuration, CostModel, XCVU095};
+
+fn main() {
+    let stats = time_it(10, 100, || {
+        std::hint::black_box(paper_configuration());
+    });
+    let u = paper_configuration();
+    let (lu, fu, bu, du) = u.utilization(&XCVU095);
+
+    let rows = vec![
+        vec![
+            "LUTs".into(),
+            "241,202".into(),
+            u.luts.to_string(),
+            XCVU095.luts.to_string(),
+            format!("{:.1}%", lu * 100.0),
+        ],
+        vec![
+            "FF".into(),
+            "634,136".into(),
+            u.ffs.to_string(),
+            XCVU095.ffs.to_string(),
+            format!("{:.1}%", fu * 100.0),
+        ],
+        vec![
+            "BRAM".into(),
+            "1,480".into(),
+            u.brams.to_string(),
+            XCVU095.brams.to_string(),
+            format!("{:.1}%", bu * 100.0),
+        ],
+        vec![
+            "DSP".into(),
+            "512 + 256".into(),
+            format!("{} + {}", u.dsp_arith, u.dsp_transform),
+            XCVU095.dsps.to_string(),
+            format!("{:.0}%", du * 100.0),
+        ],
+    ];
+    print_table(
+        "Table 3 reproduction (XCVU095)",
+        &["resource", "paper", "ours (model)", "available", "pct"],
+        &rows,
+    );
+
+    // Ablation: dense-only design drops the decompressors.
+    let dense = estimate(&CostModel::default(), 4, 8, 16, false);
+    println!(
+        "\nablation: removing sparse decompressors saves {} LUTs / {} FFs",
+        u.luts - dense.luts,
+        u.ffs - dense.ffs
+    );
+    println!("cost-model evaluation: {:.2} µs/run", stats.mean * 1e6);
+}

@@ -1,0 +1,70 @@
+//! Tiny benchmarking harness (the offline crate set has no criterion).
+//!
+//! Benches (`rust/benches/*.rs`, `harness = false`) use `time_it` for
+//! wall-clock measurement and the table printers to emit the same rows the
+//! paper's tables/figures report.
+
+use crate::util::Stats;
+use std::time::Instant;
+
+/// Measure `f` over `iters` timed runs after `warmup` discarded ones.
+/// Returns per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Render a padded table row.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:<w$}", w = w))
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Print a titled table with a header rule.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    println!("\n=== {title} ===");
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", row(&head, &widths));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"));
+    for r in rows {
+        println!("{}", row(r, &widths));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts() {
+        let mut n = 0u64;
+        let stats = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.n, 5);
+        assert!(stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn row_padding() {
+        let r = row(&["a".into(), "bb".into()], &[3, 4]);
+        assert_eq!(r, "a   | bb  ");
+    }
+}

@@ -1,0 +1,110 @@
+//! Dynamic batching policy.
+//!
+//! The AOT step emits one executable per batch size (e.g. b1 and b4 for
+//! VGG-Tiny).  Given the pending queue depth, the batcher greedily packs
+//! requests into the largest executables first — the standard dynamic-
+//! batching move that keeps the "DSP array" (here: the XLA executable)
+//! full, mirroring how the paper's 3-D extension keeps all 8 clusters fed.
+
+use std::time::Duration;
+
+/// Batching policy configuration.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// Available executable batch sizes, e.g. [4, 1].  Must contain 1.
+    sizes: Vec<usize>,
+    /// How long the worker may wait to accumulate a fuller batch.
+    pub window: Duration,
+}
+
+/// One planned executable launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(mut sizes: Vec<usize>, window: Duration) -> Self {
+        assert!(sizes.contains(&1), "batch size 1 is required as fallback");
+        sizes.sort_unstable_by(|a, b| b.cmp(a)); // descending
+        sizes.dedup();
+        Self { sizes, window }
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.sizes[0]
+    }
+
+    /// Pack `pending` requests into executable launches (greedy, largest
+    /// first).  Total planned == pending.
+    pub fn plan(&self, pending: usize) -> Vec<BatchPlan> {
+        let mut remaining = pending;
+        let mut plans = Vec::new();
+        for &s in &self.sizes {
+            while remaining >= s {
+                plans.push(BatchPlan { batch_size: s });
+                remaining -= s;
+            }
+        }
+        debug_assert_eq!(remaining, 0);
+        plans
+    }
+
+    /// Should the worker wait for more requests?  Yes while the queue
+    /// cannot fill the largest executable and the window hasn't expired.
+    pub fn should_wait(&self, pending: usize, waited: Duration) -> bool {
+        pending > 0 && pending < self.max_batch() && waited < self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(vec![1, 4], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn plan_packs_greedy() {
+        let b = batcher();
+        assert_eq!(b.plan(0).len(), 0);
+        assert_eq!(b.plan(1), vec![BatchPlan { batch_size: 1 }]);
+        assert_eq!(b.plan(4), vec![BatchPlan { batch_size: 4 }]);
+        assert_eq!(
+            b.plan(6),
+            vec![
+                BatchPlan { batch_size: 4 },
+                BatchPlan { batch_size: 1 },
+                BatchPlan { batch_size: 1 }
+            ]
+        );
+        assert_eq!(b.plan(9).iter().map(|p| p.batch_size).sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn sizes_sorted_descending_deduped() {
+        let b = Batcher::new(vec![1, 4, 4, 2], Duration::ZERO);
+        assert_eq!(b.sizes(), &[4, 2, 1]);
+        assert_eq!(b.max_batch(), 4);
+    }
+
+    #[test]
+    fn wait_logic() {
+        let b = batcher();
+        assert!(!b.should_wait(0, Duration::ZERO));
+        assert!(b.should_wait(2, Duration::from_micros(100)));
+        assert!(!b.should_wait(2, Duration::from_millis(5)));
+        assert!(!b.should_wait(4, Duration::ZERO));
+    }
+
+    #[test]
+    #[should_panic]
+    fn requires_unit_batch() {
+        Batcher::new(vec![2, 4], Duration::ZERO);
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving metrics: request counts, batch-size histogram, and latency
+//! percentiles over a bounded reservoir.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    /// batch_hist[s] = number of launches with batch size s.
+    batch_hist: Vec<u64>,
+    /// Request latencies (seconds), bounded reservoir.
+    latencies: Vec<f64>,
+    reservoir: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new(16, 4096)
+    }
+}
+
+impl Metrics {
+    pub fn new(max_batch: usize, reservoir: usize) -> Self {
+        Self {
+            requests: 0,
+            batches: 0,
+            batch_hist: vec![0; max_batch + 1],
+            latencies: Vec::with_capacity(reservoir),
+            reservoir,
+        }
+    }
+
+    pub fn record_batch(&mut self, batch_size: usize) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        if batch_size < self.batch_hist.len() {
+            self.batch_hist[batch_size] += 1;
+        }
+    }
+
+    pub fn record_latency(&mut self, lat: Duration) {
+        if self.latencies.len() < self.reservoir {
+            self.latencies.push(lat.as_secs_f64());
+        }
+    }
+
+    pub fn batch_histogram(&self) -> &[u64] {
+        &self.batch_hist
+    }
+
+    /// Mean requests per launch — batching effectiveness.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> Option<f64> {
+        if self.latencies.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Some(v[idx.min(v.len() - 1)])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} p50={:?} p99={:?}",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.latency_percentile(50.0),
+            self.latency_percentile(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new(4, 16);
+        m.record_batch(4);
+        m.record_batch(1);
+        m.record_batch(1);
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.batches, 3);
+        assert!((m.mean_batch() - 2.0).abs() < 1e-12);
+        assert_eq!(m.batch_histogram()[4], 1);
+        assert_eq!(m.batch_histogram()[1], 2);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record_latency(Duration::from_millis(i));
+        }
+        let p50 = m.latency_percentile(50.0).unwrap();
+        assert!((0.045..0.056).contains(&p50), "p50 {p50}");
+        let p99 = m.latency_percentile(99.0).unwrap();
+        assert!(p99 >= 0.098, "p99 {p99}");
+        assert!(Metrics::default().latency_percentile(50.0).is_none());
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let mut m = Metrics::new(4, 8);
+        for _ in 0..100 {
+            m.record_latency(Duration::from_millis(1));
+        }
+        assert!(m.latency_percentile(99.0).is_some());
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: the inference server that drives the PJRT artifacts.
+//!
+//! The paper's contribution is the accelerator architecture, so the
+//! coordinator is the serving shell around it: a request queue, a dynamic
+//! batcher that picks the largest available batched executable
+//! (vgg_tiny_b4 / vgg_tiny_b1), a worker thread owning the PJRT runtime
+//! (python never runs here), and latency/throughput metrics.
+//!
+//! Thread model: std::thread + mpsc (the offline crate set has no tokio);
+//! one worker owns the `Runtime`, callers hold cloneable handles.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPlan, Batcher};
+pub use metrics::Metrics;
+pub use server::{InferenceServer, ServerConfig};

@@ -1,0 +1,274 @@
+//! The inference server: a worker thread owning the PJRT runtime, fed by a
+//! request channel, batching dynamically over the emitted executables.
+//!
+//! The `xla` crate's handles are `!Send` (Rc-based), so the worker thread
+//! constructs the `Runtime` itself; the caller only ever touches plain
+//! channels and `Vec<f32>` payloads.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use crate::runtime::{LoadedModel, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifact_dir: PathBuf,
+    /// Artifact family name, e.g. "vgg_tiny" — the server looks for
+    /// `<family>_b<N>` executables in the manifest.
+    pub family: String,
+    /// Batch-accumulation window.
+    pub window: Duration,
+}
+
+impl ServerConfig {
+    pub fn new(artifact_dir: impl Into<PathBuf>, family: &str) -> Self {
+        Self {
+            artifact_dir: artifact_dir.into(),
+            family: family.to_string(),
+            window: Duration::from_millis(2),
+        }
+    }
+}
+
+enum Msg {
+    Infer {
+        image: Vec<f32>,
+        resp: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Info the worker reports back once the artifacts are compiled.
+struct Ready {
+    input_elems: usize,
+    output_elems: usize,
+}
+
+/// Handle to a running inference server.
+pub struct InferenceServer {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    input_elems: usize,
+    output_elems: usize,
+}
+
+impl InferenceServer {
+    /// Start the worker: it compiles the artifacts, reports readiness,
+    /// then serves until the handle is dropped.
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
+        let metrics = Arc::new(Mutex::new(Metrics::new(16, 4096)));
+        let metrics_worker = metrics.clone();
+
+        let worker = std::thread::spawn(move || {
+            match setup(&cfg) {
+                Ok((models, sizes, input_elems, output_elems)) => {
+                    let batcher = Batcher::new(sizes.clone(), cfg.window);
+                    let _ = ready_tx.send(Ok(Ready {
+                        input_elems,
+                        output_elems,
+                    }));
+                    worker_loop(rx, models, sizes, batcher, metrics_worker, input_elems);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        });
+
+        let ready = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+        Ok(Self {
+            tx,
+            worker: Some(worker),
+            metrics,
+            input_elems: ready.input_elems,
+            output_elems: ready.output_elems,
+        })
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.input_elems
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.output_elems
+    }
+
+    /// Enqueue one image; returns a receiver for the logits.
+    pub fn infer_async(&self, image: Vec<f32>) -> mpsc::Receiver<Result<Vec<f32>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Infer {
+            image,
+            resp: resp_tx,
+        });
+        resp_rx
+    }
+
+    /// Blocking single-image inference.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_async(image)
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+type Models = Vec<Arc<LoadedModel>>;
+
+/// Build the runtime and compile all `<family>_b<N>` artifacts (worker
+/// thread only — PJRT handles never cross threads).
+fn setup(cfg: &ServerConfig) -> Result<(Models, Vec<usize>, usize, usize)> {
+    let mut runtime = Runtime::new(&cfg.artifact_dir)?;
+    let mut sizes: Vec<usize> = runtime
+        .manifest
+        .artifacts
+        .keys()
+        .filter_map(|name| {
+            name.strip_prefix(&format!("{}_b", cfg.family))
+                .and_then(|s| s.parse::<usize>().ok())
+        })
+        .collect();
+    sizes.sort_unstable();
+    if !sizes.contains(&1) {
+        return Err(anyhow!(
+            "no {}_b1 artifact in manifest (have batch sizes {:?})",
+            cfg.family,
+            sizes
+        ));
+    }
+    let models: Models = sizes
+        .iter()
+        .map(|&s| runtime.load(&format!("{}_b{}", cfg.family, s)))
+        .collect::<Result<_>>()?;
+    let b1 = &models[0];
+    let input_elems = b1
+        .spec
+        .request_inputs()
+        .next()
+        .ok_or_else(|| anyhow!("b1 artifact has no request input"))?
+        .elements();
+    let output_elems = b1.spec.output_shapes[0].iter().product();
+    Ok((models, sizes, input_elems, output_elems))
+}
+
+struct Pending {
+    image: Vec<f32>,
+    resp: mpsc::Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+fn worker_loop(
+    rx: mpsc::Receiver<Msg>,
+    models: Models,
+    sizes: Vec<usize>,
+    batcher: Batcher,
+    metrics: Arc<Mutex<Metrics>>,
+    input_elems: usize,
+) {
+    let mut queue: Vec<Pending> = Vec::new();
+    let mut open = true;
+    while open || !queue.is_empty() {
+        // Drain or wait according to the batching window.
+        let wait_start = Instant::now();
+        loop {
+            let timeout = if queue.is_empty() {
+                Duration::from_millis(50)
+            } else {
+                batcher.window.saturating_sub(wait_start.elapsed())
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Infer { image, resp }) => {
+                    if image.len() != input_elems {
+                        let _ = resp.send(Err(anyhow!(
+                            "input has {} elements, expected {input_elems}",
+                            image.len()
+                        )));
+                        continue;
+                    }
+                    queue.push(Pending {
+                        image,
+                        resp,
+                        enqueued: Instant::now(),
+                    });
+                    if !batcher.should_wait(queue.len(), wait_start.elapsed()) {
+                        break;
+                    }
+                }
+                Ok(Msg::Shutdown) => {
+                    open = false;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if !queue.is_empty() || !open {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if queue.is_empty() {
+            continue;
+        }
+        // Launch the planned batches.
+        for plan in batcher.plan(queue.len()) {
+            let items: Vec<Pending> = queue.drain(..plan.batch_size).collect();
+            let idx = sizes
+                .iter()
+                .position(|&x| x == plan.batch_size)
+                .expect("planned size exists");
+            let model = &models[idx];
+            let result = if plan.batch_size == 1 {
+                model.run(std::slice::from_ref(&items[0].image))
+            } else {
+                let mut stacked = Vec::with_capacity(plan.batch_size * input_elems);
+                for it in &items {
+                    stacked.extend_from_slice(&it.image);
+                }
+                model.run(&[stacked])
+            };
+            // Lock can only be poisoned if a caller thread panicked while
+            // reading metrics; serving must survive that.
+            let mut m = match metrics.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            m.record_batch(plan.batch_size);
+            match result {
+                Ok(outs) => {
+                    let flat = &outs[0];
+                    let per = flat.len() / plan.batch_size;
+                    for (i, it) in items.iter().enumerate() {
+                        m.record_latency(it.enqueued.elapsed());
+                        let _ = it.resp.send(Ok(flat[i * per..(i + 1) * per].to_vec()));
+                    }
+                }
+                Err(e) => {
+                    for it in &items {
+                        let _ = it.resp.send(Err(anyhow!("execute failed: {e}")));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! swcnn — Sparse Winograd CNNs on small-scale systolic arrays.
+//!
+//! A rust + JAX + Pallas reproduction of Shi et al., *"Sparse Winograd
+//! Convolutional neural networks on small-scale systolic arrays"* (2018).
+//!
+//! Three layers (see DESIGN.md):
+//! - **L1/L2 (build time, python)** — Pallas kernels + JAX VGG models,
+//!   AOT-lowered to HLO text artifacts.
+//! - **L3 (this crate)** — the paper's system: a cycle-level simulator of
+//!   the systolic-array accelerator (`systolic`, `scheduler`,
+//!   `accelerator`), its memory layout (`zmorton`) and sparse format
+//!   (`sparse`), the analytical model (`model`), the FPGA resource model
+//!   (`resources`), and a serving coordinator (`coordinator`) that
+//!   executes the AOT artifacts through PJRT (`runtime`).
+
+pub mod accelerator;
+pub mod bench;
+pub mod coordinator;
+pub mod memory;
+pub mod model;
+pub mod nn;
+pub mod quant;
+pub mod resources;
+pub mod runtime;
+pub mod scheduler;
+pub mod sparse;
+pub mod systolic;
+pub mod tensor;
+pub mod util;
+pub mod winograd;
+pub mod zmorton;

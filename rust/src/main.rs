@@ -1,0 +1,265 @@
+//! swcnn CLI — drive the simulator, the analytical model, and the server.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//!
+//!   swcnn simulate [--net vgg16|vgg_tiny] [--m 2] [--sparsity 0.9]
+//!   swcnn sweep    [--net vgg16] [--ms 2,4,6] [--sparsities 0.6,0.7,0.8,0.9]
+//!   swcnn report   [--net vgg16]          # tables 1-3 + fig 6
+//!   swcnn serve    [--artifacts artifacts] [--family vgg_tiny] [--requests 64]
+
+use anyhow::{anyhow, bail, Result};
+use swcnn::accelerator::{latency_sweep, simulate_dense, simulate_dense_with_fc, simulate_sparse, JOULES_PER_UNIT};
+use swcnn::bench::print_table;
+use swcnn::coordinator::{InferenceServer, ServerConfig};
+use swcnn::memory::EnergyTable;
+use swcnn::model::table1;
+use swcnn::nn::{vgg16, vgg_tiny, Network};
+use swcnn::resources::{paper_configuration, XCVU095};
+use swcnn::scheduler::AcceleratorConfig;
+use swcnn::util::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {a:?}"))?;
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get(key, &default.to_string()).parse()?)
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.get(key, &default.to_string()).parse()?)
+    }
+
+    fn list_usize(&self, key: &str, default: &str) -> Result<Vec<usize>> {
+        self.get(key, default)
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("{key}: {e}")))
+            .collect()
+    }
+
+    fn list_f64(&self, key: &str, default: &str) -> Result<Vec<f64>> {
+        self.get(key, default)
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("{key}: {e}")))
+            .collect()
+    }
+}
+
+fn net_by_name(name: &str) -> Result<Network> {
+    match name {
+        "vgg16" => Ok(vgg16()),
+        "vgg_tiny" => Ok(vgg_tiny()),
+        _ => bail!("unknown net {name:?} (vgg16 | vgg_tiny)"),
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "swcnn — sparse Winograd CNN accelerator (simulator + PJRT server)\n\
+         \n\
+         usage:\n\
+           swcnn simulate [--net vgg16] [--m 2] [--sparsity 0.9] [--fc 1 --batch 8]\n\
+           swcnn sweep    [--net vgg16] [--ms 2,4,6] [--sparsities 0.6,0.7,0.8,0.9]\n\
+           swcnn report   [--net vgg16]\n\
+           swcnn serve    [--artifacts artifacts] [--family vgg_tiny] [--requests 64]"
+    );
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = net_by_name(&args.get("net", "vgg16"))?;
+    let m = args.usize("m", 2)?;
+    let cfg = AcceleratorConfig::paper().with_m(m);
+    let table = EnergyTable::default();
+    let sparsity = args.f64("sparsity", 0.0)?;
+    let with_fc = args.get("fc", "0") == "1";
+    let rep = if sparsity > 0.0 {
+        simulate_sparse(&net, &cfg, &table, sparsity, 7)
+    } else if with_fc {
+        simulate_dense_with_fc(&net, &cfg, &table, args.usize("batch", 1)?)
+    } else {
+        simulate_dense(&net, &cfg, &table)
+    };
+    let rows: Vec<Vec<String>> = rep
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.to_string(),
+                format!("{}x{}x{}", l.plan.dims.0, l.plan.dims.1, l.plan.dims.2),
+                l.cycles.to_string(),
+                format!("{:.3}", l.seconds * 1e3),
+                format!("{:.2}", l.plan.occupancy),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "{} m={} sparsity={:.0}%",
+            rep.net,
+            rep.m,
+            sparsity * 100.0
+        ),
+        &["layer", "KxCxB", "cycles", "ms", "occupancy"],
+        &rows,
+    );
+    println!(
+        "\ntotal: {:.3} ms | {:.1} effective Gops/s | {:.1} Gops/s/W",
+        rep.total_seconds * 1e3,
+        rep.gops(),
+        rep.gops_per_watt(JOULES_PER_UNIT)
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let net = net_by_name(&args.get("net", "vgg16"))?;
+    let ms = args.list_usize("ms", "2,4,6")?;
+    let sparsities = args.list_f64("sparsities", "0.6,0.7,0.8,0.9")?;
+    let cfg = AcceleratorConfig::paper();
+    let rows = latency_sweep(&net, &cfg, &EnergyTable::default(), &ms, &sparsities);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|&(m, p, s)| {
+            vec![
+                m.to_string(),
+                if p == 0.0 {
+                    "dense".into()
+                } else {
+                    format!("{:.0}%", p * 100.0)
+                },
+                format!("{:.3}", s * 1e3),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Fig. 7(b): {} latency sweep", net.name),
+        &["m", "sparsity", "latency (ms)"],
+        &table_rows,
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let net = net_by_name(&args.get("net", "vgg16"))?;
+
+    // Table 1.
+    let rows: Vec<Vec<String>> = table1(&net, 2)
+        .iter()
+        .map(|s| {
+            vec![
+                format!("stage {} (x{})", s.stage, s.layers),
+                s.neurons.to_string(),
+                s.weights.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 1: Winograd neurons / weights per stage (m=2)",
+        &["stage", "# neurons", "# weights"],
+        &rows,
+    );
+
+    // Fig 6.
+    let t = EnergyTable::default();
+    let rows: Vec<Vec<String>> = t
+        .figure6_rows()
+        .iter()
+        .map(|(n, e)| vec![n.to_string(), format!("{e:.1}x")])
+        .collect();
+    print_table("Fig. 6: relative data-movement energy", &["level", "energy"], &rows);
+
+    // Table 3.
+    let u = paper_configuration();
+    let (lu, fu, bu, du) = u.utilization(&XCVU095);
+    let rows = vec![
+        vec!["LUTs".into(), u.luts.to_string(), XCVU095.luts.to_string(), format!("{:.1}%", lu * 100.0)],
+        vec!["FF".into(), u.ffs.to_string(), XCVU095.ffs.to_string(), format!("{:.1}%", fu * 100.0)],
+        vec!["BRAM".into(), u.brams.to_string(), XCVU095.brams.to_string(), format!("{:.1}%", bu * 100.0)],
+        vec![
+            "DSP".into(),
+            format!("{} (arith) + {} (wino)", u.dsp_arith, u.dsp_transform),
+            XCVU095.dsps.to_string(),
+            format!("{:.0}%", du * 100.0),
+        ],
+    ];
+    print_table("Table 3: resource usage (model)", &["resource", "used", "available", "pct"], &rows);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts");
+    let family = args.get("family", "vgg_tiny");
+    let n_requests = args.usize("requests", 64)?;
+    let cfg = ServerConfig::new(dir, &family);
+    println!("starting server (family={family}) ...");
+    let server = InferenceServer::start(cfg)?;
+    let elems = server.input_elements();
+    let mut rng = Rng::new(42);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n_requests)
+        .map(|_| server.infer_async(rng.gaussian_vec(elems)))
+        .collect();
+    let mut ok = 0;
+    for p in pending {
+        let logits = p.recv().map_err(|_| anyhow!("worker gone"))??;
+        assert_eq!(logits.len(), server.output_elements());
+        ok += 1;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{n_requests} ok in {:.2}s -> {:.1} req/s",
+        dt,
+        n_requests as f64 / dt
+    );
+    println!("metrics: {}", server.metrics.lock().unwrap().summary());
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Memory-hierarchy energy/traffic model (paper §5.1.3, Fig. 6).
+//!
+//! The paper's energy analysis uses per-access unit energies from Sze et
+//! al. (CICC'17): data movement costs grow from ~1x (register/FIFO next to
+//! the PE) through a few x (on-chip buffer/BRAM) to orders of magnitude
+//! (external DRAM), all relative to the cost of a MAC.  We normalize to a
+//! 16-bit fixed-point MAC = 1.0 energy unit and expose the table both for
+//! the analytical model (E_tot, §5.1.3) and for the simulator's measured
+//! access counters.
+
+/// Levels of the modelled hierarchy (Fig. 6 x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Level {
+    /// PE-internal register / neighbouring shift register.
+    Register,
+    /// Shared circular FIFO inside a cluster.
+    Fifo,
+    /// On-chip buffer (BRAM) — the paper's "local memory".
+    Local,
+    /// External DRAM.
+    External,
+}
+
+/// Unit energies, normalized to one MAC == 1.0.
+///
+/// Values follow the relative ordering of Sze et al. Fig. 6 as cited by
+/// the paper: register ~1x, small on-chip buffers ~2x, larger on-chip
+/// ~6x, DRAM ~200x.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyTable {
+    pub e_mac: f64,
+    pub e_add: f64,
+    pub e_register: f64,
+    pub e_fifo: f64,
+    pub e_local: f64,
+    pub e_external: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        Self {
+            e_mac: 1.0,
+            e_add: 0.25,
+            e_register: 1.0,
+            e_fifo: 2.0,
+            e_local: 6.0,
+            e_external: 200.0,
+        }
+    }
+}
+
+impl EnergyTable {
+    pub fn access(&self, level: Level) -> f64 {
+        match level {
+            Level::Register => self.e_register,
+            Level::Fifo => self.e_fifo,
+            Level::Local => self.e_local,
+            Level::External => self.e_external,
+        }
+    }
+
+    /// The Fig. 6 bar chart rows: (level name, relative energy).
+    pub fn figure6_rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("MAC (ref)", self.e_mac),
+            ("Register/Shift-reg", self.e_register),
+            ("Cluster FIFO", self.e_fifo),
+            ("On-chip buffer (BRAM)", self.e_local),
+            ("External DRAM", self.e_external),
+        ]
+    }
+}
+
+/// Word-granular access counters, incremented by the simulator and priced
+/// by an `EnergyTable`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccessCounter {
+    pub register: u64,
+    pub fifo: u64,
+    pub local: u64,
+    pub external: u64,
+    pub macs: u64,
+    pub adds: u64,
+}
+
+impl AccessCounter {
+    pub fn record(&mut self, level: Level, words: u64) {
+        match level {
+            Level::Register => self.register += words,
+            Level::Fifo => self.fifo += words,
+            Level::Local => self.local += words,
+            Level::External => self.external += words,
+        }
+    }
+
+    /// Total energy in MAC-equivalents under a table.
+    pub fn energy(&self, t: &EnergyTable) -> f64 {
+        self.register as f64 * t.e_register
+            + self.fifo as f64 * t.e_fifo
+            + self.local as f64 * t.e_local
+            + self.external as f64 * t.e_external
+            + self.macs as f64 * t.e_mac
+            + self.adds as f64 * t.e_add
+    }
+
+    pub fn merge(&mut self, other: &AccessCounter) {
+        self.register += other.register;
+        self.fifo += other.fifo;
+        self.local += other.local;
+        self.external += other.external;
+        self.macs += other.macs;
+        self.adds += other.adds;
+    }
+
+    /// Total data movement in words (excludes arithmetic).
+    pub fn movement_words(&self) -> u64 {
+        self.register + self.fifo + self.local + self.external
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_ordering_matches_fig6() {
+        let t = EnergyTable::default();
+        assert!(t.e_register <= t.e_fifo);
+        assert!(t.e_fifo < t.e_local);
+        assert!(t.e_local < t.e_external);
+        // DRAM is "orders of magnitude" above arithmetic (paper §5.1.3).
+        assert!(t.e_external / t.e_mac >= 100.0);
+    }
+
+    #[test]
+    fn access_pricing() {
+        let t = EnergyTable::default();
+        let mut c = AccessCounter::default();
+        c.record(Level::External, 10);
+        c.record(Level::Local, 10);
+        c.macs = 5;
+        let e = c.energy(&t);
+        assert!((e - (10.0 * 200.0 + 10.0 * 6.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_counters() {
+        let mut a = AccessCounter {
+            register: 1,
+            fifo: 2,
+            local: 3,
+            external: 4,
+            macs: 5,
+            adds: 6,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.external, 8);
+        assert_eq!(a.adds, 12);
+        assert_eq!(a.movement_words(), 2 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn figure6_rows_complete() {
+        let rows = EnergyTable::default().figure6_rows();
+        assert_eq!(rows.len(), 5);
+        // Monotone non-decreasing energies up the hierarchy.
+        for w in rows.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Network descriptors: the layer shapes the accelerator schedules.
+//!
+//! VGG16 (paper §6.1, Table 1) plus the reduced VGG-Tiny used by the
+//! end-to-end PJRT driver.  Mirrors `python/compile/model.py` — the same
+//! stage structure produces both the HLO artifacts and the simulator's
+//! workload description.
+
+/// One convolutional layer (3x3, stride 1, SAME padding in VGG).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvLayer {
+    pub name: &'static str,
+    /// VGG stage this layer belongs to (1-based, Table 1 grouping).
+    pub stage: usize,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    /// Input spatial size (H = W).
+    pub hw: usize,
+    pub r: usize,
+}
+
+impl ConvLayer {
+    /// Output spatial size (SAME padding, stride 1).
+    pub fn out_hw(&self) -> usize {
+        self.hw
+    }
+
+    /// MACs of the direct (spatial) convolution — eq. (1).
+    pub fn direct_macs(&self) -> u64 {
+        (self.out_ch * self.in_ch * self.hw * self.hw * self.r * self.r) as u64
+    }
+
+    /// Operation count used for Gops/s reporting (2 ops per MAC).
+    pub fn direct_ops(&self) -> u64 {
+        2 * self.direct_macs()
+    }
+}
+
+/// A fully-connected layer (paper §4.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FcLayer {
+    pub name: &'static str,
+    pub in_f: usize,
+    pub out_f: usize,
+}
+
+impl FcLayer {
+    pub fn macs(&self) -> u64 {
+        (self.in_f * self.out_f) as u64
+    }
+}
+
+/// A full network: conv layers (with implicit ReLU), pools after stages,
+/// then FC layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub convs: Vec<ConvLayer>,
+    pub fcs: Vec<FcLayer>,
+}
+
+impl Network {
+    /// Total direct-convolution MACs (the denominator of speedups).
+    pub fn total_conv_macs(&self) -> u64 {
+        self.convs.iter().map(|c| c.direct_macs()).sum()
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        2 * (self.total_conv_macs() + self.fcs.iter().map(|f| f.macs()).sum::<u64>())
+    }
+}
+
+/// VGG16 with 224x224x3 input — the paper's workload.
+pub fn vgg16() -> Network {
+    let convs = vec![
+        ConvLayer { name: "conv1_1", stage: 1, in_ch: 3, out_ch: 64, hw: 224, r: 3 },
+        ConvLayer { name: "conv1_2", stage: 1, in_ch: 64, out_ch: 64, hw: 224, r: 3 },
+        ConvLayer { name: "conv2_1", stage: 2, in_ch: 64, out_ch: 128, hw: 112, r: 3 },
+        ConvLayer { name: "conv2_2", stage: 2, in_ch: 128, out_ch: 128, hw: 112, r: 3 },
+        ConvLayer { name: "conv3_1", stage: 3, in_ch: 128, out_ch: 256, hw: 56, r: 3 },
+        ConvLayer { name: "conv3_2", stage: 3, in_ch: 256, out_ch: 256, hw: 56, r: 3 },
+        ConvLayer { name: "conv3_3", stage: 3, in_ch: 256, out_ch: 256, hw: 56, r: 3 },
+        ConvLayer { name: "conv4_1", stage: 4, in_ch: 256, out_ch: 512, hw: 28, r: 3 },
+        ConvLayer { name: "conv4_2", stage: 4, in_ch: 512, out_ch: 512, hw: 28, r: 3 },
+        ConvLayer { name: "conv4_3", stage: 4, in_ch: 512, out_ch: 512, hw: 28, r: 3 },
+        ConvLayer { name: "conv5_1", stage: 5, in_ch: 512, out_ch: 512, hw: 14, r: 3 },
+        ConvLayer { name: "conv5_2", stage: 5, in_ch: 512, out_ch: 512, hw: 14, r: 3 },
+        ConvLayer { name: "conv5_3", stage: 5, in_ch: 512, out_ch: 512, hw: 14, r: 3 },
+    ];
+    let fcs = vec![
+        FcLayer { name: "fc6", in_f: 512 * 7 * 7, out_f: 4096 },
+        FcLayer { name: "fc7", in_f: 4096, out_f: 4096 },
+        FcLayer { name: "fc8", in_f: 4096, out_f: 1000 },
+    ];
+    Network {
+        name: "vgg16",
+        input_hw: 224,
+        input_ch: 3,
+        convs,
+        fcs,
+    }
+}
+
+/// The reduced VGG used by the end-to-end CPU driver (must match
+/// `python/compile/model.py::VGG_TINY`).
+pub fn vgg_tiny() -> Network {
+    let convs = vec![
+        ConvLayer { name: "conv0", stage: 1, in_ch: 3, out_ch: 16, hw: 32, r: 3 },
+        ConvLayer { name: "conv1", stage: 1, in_ch: 16, out_ch: 16, hw: 32, r: 3 },
+        ConvLayer { name: "conv2", stage: 2, in_ch: 16, out_ch: 32, hw: 16, r: 3 },
+        ConvLayer { name: "conv3", stage: 2, in_ch: 32, out_ch: 32, hw: 16, r: 3 },
+        ConvLayer { name: "conv4", stage: 3, in_ch: 32, out_ch: 64, hw: 8, r: 3 },
+    ];
+    let fcs = vec![
+        FcLayer { name: "fc0", in_f: 64 * 4 * 4, out_f: 128 },
+        FcLayer { name: "fc1", in_f: 128, out_f: 10 },
+    ];
+    Network {
+        name: "vgg_tiny",
+        input_hw: 32,
+        input_ch: 3,
+        convs,
+        fcs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_structure() {
+        let net = vgg16();
+        assert_eq!(net.convs.len(), 13);
+        assert_eq!(net.fcs.len(), 3);
+        assert_eq!(net.convs[0].hw, 224);
+        assert_eq!(net.convs[12].hw, 14);
+        assert_eq!(net.fcs[2].out_f, 1000);
+    }
+
+    #[test]
+    fn vgg16_total_macs_ballpark() {
+        // VGG16 convolutions are ~15.3 GMACs for 224x224 input.
+        let macs = vgg16().total_conv_macs();
+        assert!(
+            (14.0e9..16.0e9).contains(&(macs as f64)),
+            "got {macs}"
+        );
+    }
+
+    #[test]
+    fn stage_spatial_halving() {
+        let net = vgg16();
+        for w in net.convs.windows(2) {
+            if w[1].stage == w[0].stage {
+                assert_eq!(w[1].hw, w[0].hw);
+            } else {
+                assert_eq!(w[1].hw, w[0].hw / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_tiny_matches_python_config() {
+        let net = vgg_tiny();
+        assert_eq!(net.convs.len(), 5);
+        assert_eq!(net.fcs[0].in_f, 1024);
+        assert_eq!(net.fcs[1].out_f, 10);
+    }
+}

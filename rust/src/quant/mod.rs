@@ -1,0 +1,218 @@
+//! Fixed-point quantization model (paper Table 2's 8-16 bit fixed rows).
+//!
+//! The paper's datapath is 8/16-bit fixed point; 8-bit mode packs two
+//! multiplies into one DSP48 slice, doubling effective throughput (the
+//! 460.8 vs 230.4 Gops/s rows).  This module provides:
+//!
+//! - symmetric per-tensor linear quantization Q(bits) with round-to-
+//!   nearest, used to quantify the accuracy cost of the fixed datapath,
+//! - quantized direct & Winograd convolution references (the Winograd
+//!   transform *dilates the dynamic range* — its intermediate values need
+//!   wider accumulators, which is why the paper keeps 16-bit inside the
+//!   arrays),
+//! - the DSP packing model used by the Table 2 bench.
+
+use crate::tensor::Tensor;
+use crate::winograd;
+
+/// Symmetric linear quantizer: values are mapped to
+/// `round(x / scale)` clamped to `[-(2^(bits-1) - 1), 2^(bits-1) - 1]`.
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub scale: f32,
+}
+
+impl Quantizer {
+    /// Calibrate the scale from the max-abs of a tensor (per-tensor).
+    pub fn calibrate(bits: u32, data: &[f32]) -> Self {
+        assert!((2..=32).contains(&bits));
+        let max_abs = data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        let scale = if max_abs == 0.0 { 1.0 } else { max_abs / qmax };
+        Self { bits, scale }
+    }
+
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize one value to its integer code.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i64 {
+        let q = (x / self.scale).round() as i64;
+        q.clamp(-self.qmax(), self.qmax())
+    }
+
+    /// Quantize-dequantize (the "fake quantization" view of the datapath).
+    #[inline]
+    pub fn qdq(&self, x: f32) -> f32 {
+        self.quantize(x) as f32 * self.scale
+    }
+
+    pub fn qdq_tensor(&self, t: &Tensor) -> Tensor {
+        Tensor::from_vec(
+            t.shape(),
+            t.data().iter().map(|&x| self.qdq(x)).collect(),
+        )
+    }
+
+    /// Worst-case quantization error (half a step).
+    pub fn step(&self) -> f32 {
+        self.scale
+    }
+}
+
+/// Quantized direct convolution: inputs and weights quantized to `bits`,
+/// accumulation exact (integer accumulators in hardware).
+pub fn direct_conv2d_quant(x: &Tensor, w: &Tensor, bits: u32) -> Tensor {
+    let qx = Quantizer::calibrate(bits, x.data());
+    let qw = Quantizer::calibrate(bits, w.data());
+    winograd::direct_conv2d(&qx.qdq_tensor(x), &qw.qdq_tensor(w))
+}
+
+/// Quantized Winograd convolution: quantize the *transformed* operands
+/// (what the systolic arrays actually see).  The U/V dynamic-range
+/// dilation makes this strictly harder than quantizing the spatial form.
+pub fn winograd_conv2d_quant(
+    x: &Tensor,
+    w: &Tensor,
+    m: usize,
+    bits: u32,
+) -> Tensor {
+    let qx = Quantizer::calibrate(bits, x.data());
+    let qw = Quantizer::calibrate(bits, w.data());
+    winograd::winograd_conv2d(&qx.qdq_tensor(x), &qw.qdq_tensor(w), m)
+}
+
+/// DSP-packing model: MACs per DSP slice per cycle at a given width.
+/// 8-bit packs two multiplies per DSP48 (the paper's 2x throughput row);
+/// 16-bit is one; wider splits across slices.
+pub fn macs_per_dsp(bits: u32) -> f64 {
+    match bits {
+        0..=8 => 2.0,
+        9..=18 => 1.0,
+        _ => 0.5,
+    }
+}
+
+/// Effective Gops/s for `dsps` MAC DSPs at `freq_mhz`, given datapath
+/// width and the Winograd arithmetic gain (direct MACs per Winograd MAC).
+pub fn effective_gops(dsps: usize, freq_mhz: f64, bits: u32, winograd_gain: f64) -> f64 {
+    dsps as f64 * freq_mhz * 1e6 * macs_per_dsp(bits) * 2.0 * winograd_gain / 1e9
+}
+
+/// The F(m, r) arithmetic gain: direct multiplies / Winograd multiplies
+/// per output tile = m^2 r^2 / l^2 (2.25x for F(2,3)).
+pub fn winograd_gain(m: usize, r: usize) -> f64 {
+    let l = winograd::tile_size(m, r) as f64;
+    (m * m * r * r) as f64 / (l * l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, rng.gaussian_vec(n))
+    }
+
+    #[test]
+    fn quantizer_roundtrip_exact_on_grid() {
+        let q = Quantizer { bits: 8, scale: 0.5 };
+        for i in -127..=127 {
+            let x = i as f32 * 0.5;
+            assert_eq!(q.quantize(x), i as i64);
+            assert_eq!(q.qdq(x), x);
+        }
+    }
+
+    #[test]
+    fn quantizer_clamps() {
+        let q = Quantizer { bits: 8, scale: 1.0 };
+        assert_eq!(q.quantize(1e9), 127);
+        assert_eq!(q.quantize(-1e9), -127);
+    }
+
+    #[test]
+    fn calibration_covers_range() {
+        let mut rng = Rng::new(71);
+        let data = rng.gaussian_vec(1000);
+        let q = Quantizer::calibrate(8, &data);
+        let max_abs = data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert!(q.qdq(max_abs).abs() <= max_abs + q.step());
+        // Error bounded by half a step everywhere.
+        for &x in &data {
+            assert!((q.qdq(x) - x).abs() <= 0.5 * q.step() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_tensor_calibration() {
+        let q = Quantizer::calibrate(8, &[0.0; 4]);
+        assert_eq!(q.qdq(0.0), 0.0);
+    }
+
+    #[test]
+    fn sixteen_bit_winograd_close_to_float() {
+        let mut rng = Rng::new(72);
+        let x = rand_tensor(&mut rng, &[3, 10, 10]);
+        let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+        let exact = winograd::winograd_conv2d(&x, &w, 2);
+        let q16 = winograd_conv2d_quant(&x, &w, 2, 16);
+        let rel =
+            q16.max_abs_diff(&exact) / exact.max_abs().max(1e-6);
+        assert!(rel < 2e-3, "16-bit relative error {rel}");
+    }
+
+    #[test]
+    fn eight_bit_error_larger_but_bounded() {
+        let mut rng = Rng::new(73);
+        let x = rand_tensor(&mut rng, &[3, 10, 10]);
+        let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+        let exact = winograd::winograd_conv2d(&x, &w, 2);
+        let q8 = winograd_conv2d_quant(&x, &w, 2, 8);
+        let q16 = winograd_conv2d_quant(&x, &w, 2, 16);
+        let rel8 = q8.max_abs_diff(&exact) / exact.max_abs();
+        let rel16 = q16.max_abs_diff(&exact) / exact.max_abs();
+        assert!(rel8 > rel16, "8-bit must be noisier than 16-bit");
+        assert!(rel8 < 0.1, "8-bit relative error {rel8} implausibly large");
+    }
+
+    #[test]
+    fn winograd_quant_matches_direct_quant_shape() {
+        let mut rng = Rng::new(74);
+        let x = rand_tensor(&mut rng, &[2, 8, 8]);
+        let w = rand_tensor(&mut rng, &[2, 2, 3, 3]);
+        let a = direct_conv2d_quant(&x, &w, 8);
+        let b = winograd_conv2d_quant(&x, &w, 2, 8);
+        assert_eq!(a.shape(), b.shape());
+        // Same quantized inputs -> results close (transform noise only).
+        assert!(a.allclose(&b, 5e-2, 5e-2));
+    }
+
+    #[test]
+    fn dsp_packing_table2() {
+        assert_eq!(macs_per_dsp(8), 2.0);
+        assert_eq!(macs_per_dsp(16), 1.0);
+        assert_eq!(macs_per_dsp(32), 0.5);
+        // Paper: 512 DSPs @150 MHz, 16-bit, 2.25x Winograd gain
+        // -> 512 * 150e6 * 2 * 2.25 = 345.6 Gops/s effective ceiling;
+        // the paper reports 230.4 measured (their pipeline overheads).
+        let g = effective_gops(512, 150.0, 16, winograd_gain(2, 3));
+        assert!((g - 345.6).abs() < 1e-6, "got {g}");
+        assert_eq!(
+            effective_gops(512, 150.0, 8, winograd_gain(2, 3)),
+            2.0 * g
+        );
+    }
+
+    #[test]
+    fn winograd_gain_values() {
+        assert!((winograd_gain(2, 3) - 2.25).abs() < 1e-12);
+        assert!((winograd_gain(4, 3) - 4.0).abs() < 1e-12);
+        assert!((winograd_gain(6, 3) - 5.0625).abs() < 1e-12);
+    }
+}

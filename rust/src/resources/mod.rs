@@ -1,0 +1,202 @@
+//! FPGA resource cost model — reproduces Table 3's accounting.
+//!
+//! The paper's design on the Xilinx Virtex UltraScale XCVU095:
+//! 8 clusters x 4 arrays x 16 PEs = 512 DSPs for arithmetic plus
+//! 16 transform arrays x 16 PEs = 256 DSPs for the Winograd transform —
+//! all 768 DSPs of the device.  LUT/FF/BRAM are modelled with per-component
+//! costs calibrated against the paper's synthesis numbers (this is a
+//! *model*, not synthesis — see DESIGN.md §2's substitution table).
+
+/// Per-component resource costs (calibrated to Table 3).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// LUTs per MAC-mode PE (datapath + control).
+    pub lut_per_pe: u32,
+    /// FFs per PE (pipeline regs + accumulator).
+    pub ff_per_pe: u32,
+    /// LUTs per FIFO (shift-register based circular FIFO).
+    pub lut_per_fifo: u32,
+    pub ff_per_fifo: u32,
+    /// LUTs per BCOO decompressor.
+    pub lut_per_decompressor: u32,
+    pub ff_per_decompressor: u32,
+    /// BRAMs per cluster operand buffer set.
+    pub bram_per_cluster: u32,
+    /// BRAMs for the global feature-map/weight buffers per 64 KiB bank.
+    pub bram_global: u32,
+    /// Fixed control overhead (address translation LUTs of Fig. 2a, FSMs).
+    pub lut_fixed: u32,
+    pub ff_fixed: u32,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Calibration targets (Table 3): 241,202 LUT / 634,136 FF /
+        // 1,480 BRAM / 768 DSP for the full 8-cluster + 16-array design.
+        Self {
+            lut_per_pe: 220,
+            ff_per_pe: 700,
+            lut_per_fifo: 900,
+            ff_per_fifo: 1500,
+            lut_per_decompressor: 1200,
+            ff_per_decompressor: 800,
+            bram_per_cluster: 96,
+            bram_global: 712,
+            lut_fixed: 14000,
+            ff_fixed: 30000,
+        }
+    }
+}
+
+/// Device capacities — XCVU095 (Table 3 "Available" row, [16]).
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u32,
+    pub ffs: u32,
+    pub brams: u32,
+    pub dsps: u32,
+}
+
+pub const XCVU095: Device = Device {
+    name: "XCVU095",
+    luts: 537_600,
+    ffs: 1_057_200,
+    brams: 1_728,
+    dsps: 768,
+};
+
+/// One accelerator configuration's resource demand.
+#[derive(Debug, Clone, Copy)]
+pub struct Usage {
+    pub luts: u32,
+    pub ffs: u32,
+    pub brams: u32,
+    pub dsp_arith: u32,
+    pub dsp_transform: u32,
+}
+
+impl Usage {
+    pub fn dsps(&self) -> u32 {
+        self.dsp_arith + self.dsp_transform
+    }
+
+    pub fn fits(&self, dev: &Device) -> bool {
+        self.luts <= dev.luts
+            && self.ffs <= dev.ffs
+            && self.brams <= dev.brams
+            && self.dsps() <= dev.dsps
+    }
+
+    /// Table 3 percentage row.
+    pub fn utilization(&self, dev: &Device) -> (f64, f64, f64, f64) {
+        (
+            self.luts as f64 / dev.luts as f64,
+            self.ffs as f64 / dev.ffs as f64,
+            self.brams as f64 / dev.brams as f64,
+            self.dsps() as f64 / dev.dsps as f64,
+        )
+    }
+}
+
+/// Estimate resources for a configuration.
+///
+/// `clusters` MAC clusters (4 arrays of l x l each), `transform_arrays`
+/// unified arrays dedicated to the Winograd transforms, `sparse` adds the
+/// per-weight-FIFO decompressors of §4.2's sparse variant.
+pub fn estimate(
+    model: &CostModel,
+    l: usize,
+    clusters: usize,
+    transform_arrays: usize,
+    sparse: bool,
+) -> Usage {
+    let pes_arith = (clusters * 4 * l * l) as u32;
+    let pes_transform = (transform_arrays * l * l) as u32;
+    let pes = pes_arith + pes_transform;
+    // FIFOs: per cluster, 2 A-streams + 2 B-streams (shared, Fig. 4) plus
+    // one output stream per array.
+    let fifos = (clusters * (4 + 4)) as u32;
+    let decompressors = if sparse { (clusters * 2) as u32 } else { 0 };
+
+    Usage {
+        luts: model.lut_fixed
+            + pes * model.lut_per_pe
+            + fifos * model.lut_per_fifo
+            + decompressors * model.lut_per_decompressor,
+        ffs: model.ff_fixed
+            + pes * model.ff_per_pe
+            + fifos * model.ff_per_fifo
+            + decompressors * model.ff_per_decompressor,
+        brams: model.bram_global + (clusters as u32) * model.bram_per_cluster,
+        dsp_arith: pes_arith,
+        dsp_transform: pes_transform,
+    }
+}
+
+/// The paper's shipped configuration: l = 4, 8 clusters, 16 transform
+/// arrays, sparse decompressors included.
+pub fn paper_configuration() -> Usage {
+    estimate(&CostModel::default(), 4, 8, 16, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dsp_split_exact() {
+        let u = paper_configuration();
+        // Table 3: 512 (arith.) + 256 (wino.) = 768 = 100% of the device.
+        assert_eq!(u.dsp_arith, 512);
+        assert_eq!(u.dsp_transform, 256);
+        assert_eq!(u.dsps(), XCVU095.dsps);
+    }
+
+    #[test]
+    fn calibration_close_to_table3() {
+        let u = paper_configuration();
+        // Within 15% of the synthesis numbers (it's a model, not vivado).
+        let lut_err = (u.luts as f64 - 241_202.0).abs() / 241_202.0;
+        let ff_err = (u.ffs as f64 - 634_136.0).abs() / 634_136.0;
+        let bram_err = (u.brams as f64 - 1_480.0).abs() / 1_480.0;
+        assert!(lut_err < 0.15, "LUT {} vs 241,202", u.luts);
+        assert!(ff_err < 0.15, "FF {} vs 634,136", u.ffs);
+        assert!(bram_err < 0.15, "BRAM {} vs 1,480", u.brams);
+    }
+
+    #[test]
+    fn fits_device() {
+        let u = paper_configuration();
+        assert!(u.fits(&XCVU095));
+        let (lu, fu, bu, du) = u.utilization(&XCVU095);
+        assert!(lu < 1.0 && fu < 1.0 && bu < 1.0);
+        assert!((du - 1.0).abs() < 1e-9, "DSPs must be 100% used");
+    }
+
+    #[test]
+    fn sparse_costs_more_logic() {
+        let m = CostModel::default();
+        let dense = estimate(&m, 4, 8, 16, false);
+        let sparse = estimate(&m, 4, 8, 16, true);
+        assert!(sparse.luts > dense.luts);
+        assert!(sparse.ffs > dense.ffs);
+        assert_eq!(sparse.dsps(), dense.dsps());
+    }
+
+    #[test]
+    fn oversized_config_rejected() {
+        let m = CostModel::default();
+        let u = estimate(&m, 8, 16, 32, true);
+        assert!(!u.fits(&XCVU095), "16 l=8 clusters cannot fit");
+    }
+
+    #[test]
+    fn scaling_with_clusters() {
+        let m = CostModel::default();
+        let u4 = estimate(&m, 4, 4, 16, false);
+        let u8 = estimate(&m, 4, 8, 16, false);
+        assert_eq!(u8.dsp_arith, 2 * u4.dsp_arith);
+        assert!(u8.luts > u4.luts);
+    }
+}

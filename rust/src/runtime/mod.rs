@@ -1,0 +1,347 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This wraps the `xla` crate (PJRT C API) exactly as the working
+//! reference does: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! The interchange format is HLO **text** (not serialized protos): jax ≥
+//! 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.  See `python/compile/aot.py`.
+//!
+//! Weight tensors ship as raw little-endian `.bin` files next to the HLO;
+//! they are loaded once at startup and appended to every request's
+//! argument list (the manifest's "request inputs first, weights after"
+//! contract).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One input slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `Some(file)` when the input is a baked weight shipped as `.bin`.
+    pub data_file: Option<String>,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub inputs: Vec<InputSpec>,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// The request-time (non-weight) inputs, in positional order.
+    pub fn request_inputs(&self) -> impl Iterator<Item = &InputSpec> {
+        self.inputs.iter().filter(|i| i.data_file.is_none())
+    }
+
+    pub fn n_request_inputs(&self) -> usize {
+        self.request_inputs().count()
+    }
+}
+
+/// The artifact manifest (artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+pub const SUPPORTED_SCHEMA: usize = 2;
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let schema = root
+            .req("schema")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("schema must be a number"))?;
+        if schema != SUPPORTED_SCHEMA {
+            bail!("manifest schema {schema} != supported {SUPPORTED_SCHEMA}");
+        }
+        let mut artifacts = HashMap::new();
+        for (name, a) in root
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts must be an object"))?
+        {
+            let mut inputs = Vec::new();
+            for inp in a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs must be an array"))?
+            {
+                let dtype = inp.req("dtype")?.as_str().unwrap_or("?");
+                if dtype != "float32" {
+                    bail!("{name}: only float32 inputs supported, got {dtype}");
+                }
+                inputs.push(InputSpec {
+                    name: inp
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("input name"))?
+                        .to_string(),
+                    shape: inp
+                        .req("shape")?
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("input shape"))?,
+                    data_file: inp.get("data").and_then(|d| d.as_str()).map(String::from),
+                });
+            }
+            let output_shapes = a
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(|o| {
+                    o.req("shape")?
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("output shape"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    hlo_file: a
+                        .req("hlo")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("hlo file"))?
+                        .to_string(),
+                    inputs,
+                    output_shapes,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+/// Read a raw little-endian f32 `.bin` file.
+pub fn read_f32_bin(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!(
+            "{path:?}: {} bytes, expected {} ({} f32)",
+            bytes.len(),
+            expect_elems * 4,
+            expect_elems
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// A compiled artifact: PJRT executable + its cached weight literals.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+}
+
+impl LoadedModel {
+    /// Execute with request-time inputs (flat f32 per input, in manifest
+    /// order).  Returns the flat f32 outputs.
+    pub fn run(&self, request_inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let n_req = self.spec.n_request_inputs();
+        if request_inputs.len() != n_req {
+            bail!(
+                "{}: got {} request inputs, expected {n_req}",
+                self.spec.name,
+                request_inputs.len()
+            );
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.spec.inputs.len());
+        let mut req_iter = request_inputs.iter();
+        let mut w_iter = self.weights.iter();
+        for spec in &self.spec.inputs {
+            if spec.data_file.is_some() {
+                // Weight literals are cached; clone is a host copy.
+                let w = w_iter.next().expect("weight literal");
+                args.push(clone_literal(w)?);
+            } else {
+                let data = req_iter.next().expect("request input");
+                if data.len() != spec.elements() {
+                    bail!(
+                        "{}: input {} has {} elements, expected {}",
+                        self.spec.name,
+                        spec.name,
+                        data.len(),
+                        spec.elements()
+                    );
+                }
+                args.push(literal_from_f32(data, &spec.shape)?);
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = out.to_tuple()?;
+        let mut flats = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            flats.push(lit.to_vec::<f32>()?);
+        }
+        Ok(flats)
+    }
+}
+
+fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    // The xla crate's Literal is not Clone; round-trip through host data.
+    let shape = lit.array_shape()?;
+    let data = lit.to_vec::<f32>()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    models: HashMap<String, Arc<LoadedModel>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest (no compilation yet).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            models: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) artifact and load its weights.
+    pub fn load(&mut self, name: &str) -> Result<Arc<LoadedModel>> {
+        if let Some(m) = self.models.get(name) {
+            return Ok(m.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let hlo_path = self.manifest.dir.join(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let mut weights = Vec::new();
+        for inp in &spec.inputs {
+            if let Some(file) = &inp.data_file {
+                let data = read_f32_bin(&self.manifest.dir.join(file), inp.elements())?;
+                weights.push(literal_from_f32(&data, &inp.shape)?);
+            }
+        }
+        let model = Arc::new(LoadedModel { spec, exe, weights });
+        self.models.insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Manifest-only tests run without artifacts; execution tests live in
+    // rust/tests/ (they need `make artifacts` first).
+
+    #[test]
+    fn read_f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("swcnn_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_bin(&path, 3).unwrap(), data);
+        assert!(read_f32_bin(&path, 4).is_err());
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let dir = std::env::temp_dir().join("swcnn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"schema": 2, "artifacts": {
+                "a": {"hlo": "a.hlo.txt",
+                       "inputs": [{"name": "x", "shape": [2,2], "dtype": "float32"},
+                                  {"name": "w", "shape": [4], "dtype": "float32", "data": "a__w.bin"}],
+                       "outputs": [{"shape": [2], "dtype": "float32"}],
+                       "meta": {"m": 2}}}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let a = man.get("a").unwrap();
+        assert_eq!(a.n_request_inputs(), 1);
+        assert_eq!(a.inputs[1].data_file.as_deref(), Some("a__w.bin"));
+        assert_eq!(a.output_shapes, vec![vec![2]]);
+        assert_eq!(a.meta.get("m").unwrap().as_usize(), Some(2));
+        assert!(man.get("missing").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_wrong_schema() {
+        let dir = std::env::temp_dir().join("swcnn_manifest_schema");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"schema": 999, "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_non_f32() {
+        let dir = std::env::temp_dir().join("swcnn_manifest_dtype");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"schema": 2, "artifacts": {
+                "a": {"hlo": "a.hlo.txt",
+                       "inputs": [{"name": "x", "shape": [2], "dtype": "int8"}],
+                       "outputs": [{"shape": [2], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! Block-based sparse coordinate format — BCOO (paper §3.3, Fig. 2b).
+//!
+//! Pruned Winograd weights are stored block-granular: only l x l blocks
+//! containing nonzeros are kept.  Five vectors describe the matrix:
+//!
+//! - `bn` — block number (the Z-Morton physical id) of each stored block,
+//! - `bi` — start index into `ai`/`aj`/`an` for each stored block (with a
+//!          trailing sentinel, so block s spans `bi[s]..bi[s+1]`),
+//! - `ai` — row of each nonzero *within its block*,
+//! - `aj` — column of each nonzero within its block,
+//! - `an` — the nonzero values.
+//!
+//! Compressed blocks are still fetched in the order determined by the
+//! Z-Morton layout, which is why `bn` is sorted by physical block id.
+
+use crate::util::Rng;
+use crate::zmorton;
+
+/// A BCOO-compressed block-sparse matrix of logical size rows x cols with
+/// square `block`-sized blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bcoo {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    pub bn: Vec<u64>,
+    pub bi: Vec<usize>,
+    pub ai: Vec<u8>,
+    pub aj: Vec<u8>,
+    pub an: Vec<f32>,
+}
+
+impl Bcoo {
+    /// Compress a dense row-major matrix.  Blocks that are entirely zero
+    /// are dropped; everything else is stored coordinate-wise.
+    pub fn compress(mat: &[f32], rows: usize, cols: usize, block: usize) -> Self {
+        assert_eq!(rows % block, 0, "rows {rows} % block {block}");
+        assert_eq!(cols % block, 0, "cols {cols} % block {block}");
+        assert!(block <= 256, "AI/AJ are u8 block-local coordinates");
+        assert_eq!(mat.len(), rows * cols);
+        let (br, bc) = (rows / block, cols / block);
+
+        // Walk blocks in physical (Z-Morton) order: sort logical ids by z.
+        let mut order: Vec<(u64, usize, usize)> = (0..br)
+            .flat_map(|rb| (0..bc).map(move |cb| (zmorton::encode(rb as u32, cb as u32), rb, cb)))
+            .collect();
+        order.sort_unstable_by_key(|&(z, _, _)| z);
+
+        let mut bn = Vec::new();
+        let mut bi = vec![0usize];
+        let (mut ai, mut aj, mut an) = (Vec::new(), Vec::new(), Vec::new());
+        for (z, rb, cb) in order {
+            let mut any = false;
+            for i in 0..block {
+                for j in 0..block {
+                    let v = mat[(rb * block + i) * cols + cb * block + j];
+                    if v != 0.0 {
+                        ai.push(i as u8);
+                        aj.push(j as u8);
+                        an.push(v);
+                        any = true;
+                    }
+                }
+            }
+            if any {
+                bn.push(z);
+                bi.push(an.len());
+            }
+        }
+        Bcoo {
+            rows,
+            cols,
+            block,
+            bn,
+            bi,
+            ai,
+            aj,
+            an,
+        }
+    }
+
+    /// Decompress back to a dense row-major matrix.
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let bc = self.cols / self.block;
+        for (s, &z) in self.bn.iter().enumerate() {
+            let (rb, cb) = zmorton::decode(z);
+            let (rb, cb) = (rb as usize, cb as usize);
+            debug_assert!(rb < self.rows / self.block && cb < bc);
+            for idx in self.bi[s]..self.bi[s + 1] {
+                let (i, j) = (self.ai[idx] as usize, self.aj[idx] as usize);
+                out[(rb * self.block + i) * self.cols + cb * self.block + j] =
+                    self.an[idx];
+            }
+        }
+        out
+    }
+
+    /// Number of stored (nonzero-containing) blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.bn.len()
+    }
+
+    /// Total logical block count.
+    pub fn n_blocks_total(&self) -> usize {
+        (self.rows / self.block) * (self.cols / self.block)
+    }
+
+    /// Number of stored nonzero values.
+    pub fn nnz(&self) -> usize {
+        self.an.len()
+    }
+
+    /// Fraction of blocks dropped (the paper's sparsity knob).
+    pub fn block_sparsity(&self) -> f64 {
+        1.0 - self.n_blocks() as f64 / self.n_blocks_total() as f64
+    }
+
+    /// Does physical block `z` exist (binary search over sorted bn)?
+    pub fn has_block(&self, z: u64) -> bool {
+        self.bn.binary_search(&z).is_ok()
+    }
+
+    /// The nonzeros of physical block `z`: (ai, aj, an) triplets.
+    pub fn block_entries(&self, z: u64) -> Option<BlockEntries<'_>> {
+        let s = self.bn.binary_search(&z).ok()?;
+        let range = self.bi[s]..self.bi[s + 1];
+        Some(BlockEntries {
+            ai: &self.ai[range.clone()],
+            aj: &self.aj[range.clone()],
+            an: &self.an[range],
+        })
+    }
+
+    /// Expand physical block `z` to a dense block-sized tile (the FIFO
+    /// decompressor of paper §4.2's sparse cluster).
+    pub fn expand_block(&self, z: u64) -> Option<Vec<f32>> {
+        let e = self.block_entries(z)?;
+        let mut tile = vec![0.0f32; self.block * self.block];
+        for k in 0..e.an.len() {
+            tile[e.ai[k] as usize * self.block + e.aj[k] as usize] = e.an[k];
+        }
+        Some(tile)
+    }
+
+    /// Storage cost in bytes (values f32 + u8 coords + block directory),
+    /// used by the memory-traffic model.
+    pub fn storage_bytes(&self) -> usize {
+        self.an.len() * 4
+            + self.ai.len()
+            + self.aj.len()
+            + self.bn.len() * 8
+            + self.bi.len() * 8
+    }
+}
+
+/// Borrowed view of one block's nonzeros.
+pub struct BlockEntries<'a> {
+    pub ai: &'a [u8],
+    pub aj: &'a [u8],
+    pub an: &'a [f32],
+}
+
+/// Magnitude-prune a dense matrix to a target *block* sparsity: rank blocks
+/// by L1 norm and zero out the smallest fraction.  Mirrors
+/// `prune_winograd_weights` on the python side.
+pub fn prune_blocks(
+    mat: &mut [f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    sparsity: f64,
+) {
+    assert!((0.0..1.0).contains(&sparsity));
+    let (br, bc) = (rows / block, cols / block);
+    let mut scores: Vec<(f64, usize, usize)> = Vec::with_capacity(br * bc);
+    for rb in 0..br {
+        for cb in 0..bc {
+            let mut s = 0.0f64;
+            for i in 0..block {
+                for j in 0..block {
+                    s += mat[(rb * block + i) * cols + cb * block + j].abs() as f64;
+                }
+            }
+            scores.push((s, rb, cb));
+        }
+    }
+    scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n_prune = (sparsity * scores.len() as f64).round() as usize;
+    for &(_, rb, cb) in scores.iter().take(n_prune) {
+        for i in 0..block {
+            for j in 0..block {
+                mat[(rb * block + i) * cols + cb * block + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Generate a synthetic pruned Winograd weight matrix (K x C at `sparsity`)
+/// — the stand-in for reference [2]'s pruned VGG weights (DESIGN.md §2).
+pub fn synthetic_sparse_matrix(
+    rng: &mut Rng,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    sparsity: f64,
+) -> Vec<f32> {
+    let mut mat = rng.gaussian_vec(rows * cols);
+    prune_blocks(&mut mat, rows, cols, block, sparsity);
+    mat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_fixture() -> (Vec<f32>, usize, usize) {
+        // 8x8 with two nonzero 4x4 blocks: logical (0,0) and (1,1).
+        let (rows, cols) = (8, 8);
+        let mut mat = vec![0.0f32; rows * cols];
+        mat[0] = 1.0; // block (0,0) @ (0,0)
+        mat[1 * cols + 2] = 2.0; // block (0,0) @ (1,2)
+        mat[5 * cols + 6] = 3.0; // block (1,1) @ (1,2)
+        (mat, rows, cols)
+    }
+
+    #[test]
+    fn compress_roundtrip() {
+        let (mat, rows, cols) = dense_fixture();
+        let bcoo = Bcoo::compress(&mat, rows, cols, 4);
+        assert_eq!(bcoo.decompress(), mat);
+    }
+
+    #[test]
+    fn only_nonzero_blocks_stored() {
+        let (mat, rows, cols) = dense_fixture();
+        let bcoo = Bcoo::compress(&mat, rows, cols, 4);
+        assert_eq!(bcoo.n_blocks(), 2);
+        assert_eq!(bcoo.n_blocks_total(), 4);
+        assert_eq!(bcoo.nnz(), 3);
+        assert!((bcoo.block_sparsity() - 0.5).abs() < 1e-12);
+        // Physical ids: block (0,0) -> 0, block (1,1) -> 3.
+        assert_eq!(bcoo.bn, vec![0, 3]);
+    }
+
+    #[test]
+    fn paper_example_block_b5() {
+        // Fig. 2(b): B5 is a 4x4 tile with nonzeros at (0,0), (1,2), (3,1).
+        // Put such a block at the logical position whose z-index is 5:
+        // decode(5) = (row 1, col 1)? encode(1,1)=3; we need z=5 ->
+        // decode(5) = (0b0?) — compute: 5 = 0b101 -> col bits (even)=0b11=
+        // wait: col = compact(5)= bits0,2 -> 1,1 -> 3; row = compact(5>>1)=
+        // bits of 2 -> 0b0.. = 0? 5>>1=2, even bits of 2 = 0 -> row 0? No:
+        // 2 = 0b10, bit0=0, bit2=0 -> 0... row=compact(2): bit1 of z is
+        // row bit0: (2>>1)&1 = 1 -> row = 1? Use decode() directly.
+        let (rb, cb) = zmorton::decode(5);
+        let block = 4;
+        let rows = 16;
+        let cols = 16;
+        let mut mat = vec![0.0f32; rows * cols];
+        let base = (rb as usize * block, cb as usize * block);
+        mat[(base.0 + 0) * cols + base.1 + 0] = 10.0; // b00
+        mat[(base.0 + 1) * cols + base.1 + 2] = 11.0; // b12
+        mat[(base.0 + 3) * cols + base.1 + 1] = 12.0; // b31
+        let bcoo = Bcoo::compress(&mat, rows, cols, block);
+        assert_eq!(bcoo.bn, vec![5]);
+        let e = bcoo.block_entries(5).unwrap();
+        assert_eq!(e.ai, &[0, 1, 3]);
+        assert_eq!(e.aj, &[0, 2, 1]);
+        assert_eq!(e.an, &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn expand_block_matches_dense() {
+        let (mat, rows, cols) = dense_fixture();
+        let bcoo = Bcoo::compress(&mat, rows, cols, 4);
+        let tile = bcoo.expand_block(0).unwrap();
+        assert_eq!(tile[0], 1.0);
+        assert_eq!(tile[1 * 4 + 2], 2.0);
+        assert!(bcoo.expand_block(1).is_none()); // zero block dropped
+        assert!(bcoo.expand_block(2).is_none());
+    }
+
+    #[test]
+    fn bn_sorted_by_physical_order() {
+        let mut rng = Rng::new(8);
+        let mat = synthetic_sparse_matrix(&mut rng, 32, 32, 4, 0.5);
+        let bcoo = Bcoo::compress(&mat, 32, 32, 4);
+        let mut sorted = bcoo.bn.clone();
+        sorted.sort_unstable();
+        assert_eq!(bcoo.bn, sorted, "fetch order must follow Z-Morton");
+    }
+
+    #[test]
+    fn prune_hits_target_sparsity() {
+        let mut rng = Rng::new(9);
+        for target in [0.0, 0.25, 0.6, 0.9] {
+            let mat = synthetic_sparse_matrix(&mut rng, 64, 64, 4, target);
+            let bcoo = Bcoo::compress(&mat, 64, 64, 4);
+            assert!(
+                (bcoo.block_sparsity() - target).abs() < 0.02,
+                "target {target} got {}",
+                bcoo.block_sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_sparsities() {
+        let mut rng = Rng::new(10);
+        for sparsity in [0.1, 0.5, 0.9] {
+            let mat = synthetic_sparse_matrix(&mut rng, 16, 32, 4, sparsity);
+            let bcoo = Bcoo::compress(&mat, 16, 32, 4);
+            assert_eq!(bcoo.decompress(), mat, "sparsity {sparsity}");
+        }
+    }
+
+    #[test]
+    fn storage_beats_dense_at_high_sparsity() {
+        let mut rng = Rng::new(11);
+        let mat = synthetic_sparse_matrix(&mut rng, 64, 64, 4, 0.9);
+        let bcoo = Bcoo::compress(&mat, 64, 64, 4);
+        assert!(bcoo.storage_bytes() < 64 * 64 * 4);
+    }
+
+    #[test]
+    fn fully_empty_matrix() {
+        let mat = vec![0.0f32; 64];
+        let bcoo = Bcoo::compress(&mat, 8, 8, 4);
+        assert_eq!(bcoo.n_blocks(), 0);
+        assert_eq!(bcoo.nnz(), 0);
+        assert_eq!(bcoo.decompress(), mat);
+    }
+}

@@ -1,0 +1,376 @@
+//! One l x l systolic array with explicit PE-level dataflow.
+//!
+//! The detailed tick simulation exists to *prove* the dataflow: tests show
+//! the skewed wavefront reproduces dense matmul and the adder-only
+//! transform pass reproduces B^T d B.  Layer-scale sweeps use the
+//! closed-form `timing` model, which is validated against this simulation.
+
+/// Operating mode of the unified array (paper §4.1: "unified small-scale
+/// systolic arrays for both Winograd transform and matrix multiplications").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Output-stationary multiply-accumulate (block matmul).
+    Mac,
+    /// Adder-only Winograd transform pass (stationary control matrix).
+    Transform,
+}
+
+/// Operation counters for one array.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ArrayStats {
+    /// Clock ticks consumed (detailed simulation ticks).
+    pub cycles: u64,
+    /// Multiply-accumulate operations executed (DSP work).
+    pub macs: u64,
+    /// Additions/subtractions executed by transform-mode PEs.
+    pub adds: u64,
+    /// Pass-through moves in transform mode (zero entries).
+    pub passes: u64,
+    /// C-block spills (results leaving the array).
+    pub spills: u64,
+}
+
+/// One processing element: pipeline registers + the output-stationary
+/// accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+struct Pe {
+    a_reg: f32,
+    b_reg: f32,
+    a_valid: bool,
+    b_valid: bool,
+    acc: f32,
+}
+
+/// An l x l systolic array.
+#[derive(Debug, Clone)]
+pub struct SystolicArray {
+    l: usize,
+    pes: Vec<Pe>,
+    pub stats: ArrayStats,
+}
+
+impl SystolicArray {
+    pub fn new(l: usize) -> Self {
+        assert!(l >= 2, "array dimension must be >= 2");
+        Self {
+            l,
+            pes: vec![Pe::default(); l * l],
+            stats: ArrayStats::default(),
+        }
+    }
+
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * self.l + j
+    }
+
+    /// Reset accumulators (start of a new C block), keeping statistics.
+    pub fn clear_acc(&mut self) {
+        for pe in &mut self.pes {
+            pe.acc = 0.0;
+        }
+    }
+
+    /// Current accumulator contents as a row-major l x l block.
+    pub fn acc(&self) -> Vec<f32> {
+        self.pes.iter().map(|p| p.acc).collect()
+    }
+
+    /// Stream one A (l x l, row-major) and one B block through the array in
+    /// MAC mode, accumulating into the resident C block.
+    ///
+    /// Skewed wavefront: A row i enters the west edge of row i at tick i;
+    /// B column j enters the north edge of column j at tick j.  PE(i, j)
+    /// sees a[i][k] and b[k][j] simultaneously at tick i + j + k, so the
+    /// full product finishes after 3l - 2 ticks.
+    pub fn mac_block(&mut self, a: &[f32], b: &[f32]) {
+        let l = self.l;
+        assert_eq!(a.len(), l * l);
+        assert_eq!(b.len(), l * l);
+        let ticks = 3 * l - 2;
+        for t in 0..ticks {
+            // Shift east/south from the far corner back to the edges so a
+            // single in-place pass is order-safe.
+            for i in (0..l).rev() {
+                for j in (0..l).rev() {
+                    let (a_in, a_ok) = if j == 0 {
+                        // West edge: A[i][t - i] while in window.
+                        if t >= i && t < i + l {
+                            (a[i * l + (t - i)], true)
+                        } else {
+                            (0.0, false)
+                        }
+                    } else {
+                        let left = self.pes[self.idx(i, j - 1)];
+                        (left.a_reg, left.a_valid)
+                    };
+                    let (b_in, b_ok) = if i == 0 {
+                        // North edge: B[t - j][j] while in window.
+                        if t >= j && t < j + l {
+                            (b[(t - j) * l + j], true)
+                        } else {
+                            (0.0, false)
+                        }
+                    } else {
+                        let up = self.pes[self.idx(i - 1, j)];
+                        (up.b_reg, up.b_valid)
+                    };
+                    let idx = self.idx(i, j);
+                    let pe = &mut self.pes[idx];
+                    pe.a_reg = a_in;
+                    pe.a_valid = a_ok;
+                    pe.b_reg = b_in;
+                    pe.b_valid = b_ok;
+                    if a_ok && b_ok {
+                        pe.acc += a_in * b_in;
+                        self.stats.macs += 1;
+                    }
+                }
+            }
+            self.stats.cycles += 1;
+        }
+        // Invalidate pipeline registers between blocks.
+        for pe in &mut self.pes {
+            pe.a_valid = false;
+            pe.b_valid = false;
+        }
+    }
+
+    /// Functionally identical to `mac_block` with identical statistics,
+    /// but computed as a straight triple loop instead of the PE-level
+    /// wavefront — the fast path for layer-scale simulation.  Equality
+    /// with the detailed path is asserted in tests (and the cycle model
+    /// is closed-form anyway).
+    pub fn mac_block_fast(&mut self, a: &[f32], b: &[f32]) {
+        let l = self.l;
+        debug_assert_eq!(a.len(), l * l);
+        debug_assert_eq!(b.len(), l * l);
+        for i in 0..l {
+            let arow = &a[i * l..(i + 1) * l];
+            for (k, &aik) in arow.iter().enumerate() {
+                let brow = &b[k * l..(k + 1) * l];
+                let base = i * l;
+                for j in 0..l {
+                    self.pes[base + j].acc += aik * brow[j];
+                }
+            }
+        }
+        self.stats.cycles += (3 * l - 2) as u64;
+        self.stats.macs += (l * l * l) as u64;
+    }
+
+    /// Spill the resident C block (results stream out over l ticks on the
+    /// orthogonal edge — §4.2 "the results ... are spilled out").
+    pub fn spill(&mut self) -> Vec<f32> {
+        let out = self.acc();
+        self.clear_acc();
+        self.stats.cycles += self.l as u64;
+        self.stats.spills += 1;
+        out
+    }
+
+    /// One adder-only transform pass: computes (D^T · S)^T = S^T · D for a
+    /// stationary control matrix S, using only add/sub/shift per entry
+    /// class (paper §4.1: the value of elements of B "is just used to
+    /// control the adder").
+    ///
+    /// Entry classes: 0 -> pass-through; ±1 -> add/sub; ±2^k -> shift+add.
+    /// (F(2,3) uses only 0/±1; larger tiles add power-of-two shifts.)
+    pub fn transform_pass(&mut self, d: &[f32], s: &[f32]) -> Vec<f32> {
+        let l = self.l;
+        assert_eq!(d.len(), l * l);
+        assert_eq!(s.len(), l * l);
+        // Functional result: out = S^T · D  (out[i][j] = sum_k S[k][i] D[k][j]).
+        let mut out = vec![0.0f32; l * l];
+        for i in 0..l {
+            for j in 0..l {
+                let mut acc = 0.0f32;
+                for k in 0..l {
+                    let c = s[k * l + i];
+                    if c == 0.0 {
+                        self.stats.passes += 1;
+                        continue;
+                    }
+                    acc += c * d[k * l + j];
+                    // Cost model: ±1 is one adder op; any other (power-of-
+                    // two in the Cook-Toom family) is shift + add.
+                    self.stats.adds += if c == 1.0 || c == -1.0 { 1 } else { 2 };
+                }
+                out[i * l + j] = acc;
+            }
+        }
+        // Streaming cost: the tile takes 2l - 1 ticks to traverse the array.
+        self.stats.cycles += (2 * l - 1) as u64;
+        out
+    }
+
+    /// Full 2-D Winograd transform on this array: two chained passes
+    /// (Fig. 3 iterations ① and ②):  pass1 = (D^T B)^T = B^T D, then
+    /// pass2 = (pass1^T B)^T = B^T D B ... computed as S^T·D twice with
+    /// S = B.  Returns B^T · D · B.
+    pub fn winograd_transform(&mut self, d: &[f32], b: &[f32]) -> Vec<f32> {
+        let l = self.l;
+        // transform_pass(d, b) = B^T · D (treating d as D).
+        let p1 = self.transform_pass(d, b);
+        // Want (B^T D) B = (B^T (B^T D)^T)^T: feed the transpose back in —
+        // this is the paper's "feeds back to systolic arrays as new D^T".
+        let mut p1t = vec![0.0f32; l * l];
+        for i in 0..l {
+            for j in 0..l {
+                p1t[j * l + i] = p1[i * l + j];
+            }
+        }
+        let p2 = self.transform_pass(&p1t, b);
+        // p2 = B^T · (B^T D)^T = B^T D^T B ... transpose to get B^T D B?
+        // p2[i][j] = sum_k B[k][i] p1t[k][j] = sum_k B[k][i] p1[j][k]
+        //          = sum_k B[k][i] (B^T D)[j][k] -> p2 = (B^T D B)^T ... so
+        // transpose the output stream (the shift-register scatter of Fig 3).
+        let mut out = vec![0.0f32; l * l];
+        for i in 0..l {
+            for j in 0..l {
+                out[j * l + i] = p2[i * l + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+    use crate::winograd;
+
+    fn rand_block(rng: &mut Rng, l: usize) -> Vec<f32> {
+        rng.gaussian_vec(l * l)
+    }
+
+    fn dense_matmul(a: &[f32], b: &[f32], l: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; l * l];
+        for i in 0..l {
+            for k in 0..l {
+                for j in 0..l {
+                    c[i * l + j] += a[i * l + k] * b[k * l + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn mac_block_equals_matmul() {
+        let mut rng = Rng::new(21);
+        for l in [2usize, 4, 6, 8] {
+            let mut arr = SystolicArray::new(l);
+            let a = rand_block(&mut rng, l);
+            let b = rand_block(&mut rng, l);
+            arr.mac_block(&a, &b);
+            let want = dense_matmul(&a, &b, l);
+            let got = arr.acc();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "l={l}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn mac_accumulates_across_blocks() {
+        // C += A0*B0 + A1*B1 without spilling — §4.2's resident partials.
+        let mut rng = Rng::new(22);
+        let l = 4;
+        let mut arr = SystolicArray::new(l);
+        let (a0, b0) = (rand_block(&mut rng, l), rand_block(&mut rng, l));
+        let (a1, b1) = (rand_block(&mut rng, l), rand_block(&mut rng, l));
+        arr.mac_block(&a0, &b0);
+        arr.mac_block(&a1, &b1);
+        let mut want = dense_matmul(&a0, &b0, l);
+        for (w, x) in want.iter_mut().zip(dense_matmul(&a1, &b1, l)) {
+            *w += x;
+        }
+        for (g, w) in arr.acc().iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mac_cycle_count() {
+        let l = 4;
+        let mut arr = SystolicArray::new(l);
+        let a = vec![1.0; l * l];
+        let b = vec![1.0; l * l];
+        arr.mac_block(&a, &b);
+        assert_eq!(arr.stats.cycles, (3 * l - 2) as u64);
+        assert_eq!(arr.stats.macs, (l * l * l) as u64);
+        let _ = arr.spill();
+        assert_eq!(arr.stats.cycles, (3 * l - 2 + l) as u64);
+        assert_eq!(arr.stats.spills, 1);
+    }
+
+    #[test]
+    fn spill_clears_accumulators() {
+        let l = 4;
+        let mut arr = SystolicArray::new(l);
+        arr.mac_block(&vec![1.0; 16], &vec![1.0; 16]);
+        let c = arr.spill();
+        assert!(c.iter().all(|&x| (x - 4.0).abs() < 1e-6));
+        assert!(arr.acc().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn transform_pass_is_adder_only_for_f23() {
+        let mut rng = Rng::new(23);
+        let (_, _, bt) = winograd::matrices(2, 3);
+        let b = bt.transpose2(); // stationary matrix is B, not B^T
+        let l = 4;
+        let mut arr = SystolicArray::new(l);
+        let d = rand_block(&mut rng, l);
+        let _ = arr.transform_pass(&d, b.data());
+        assert_eq!(arr.stats.macs, 0, "transform must use no multipliers");
+        assert!(arr.stats.adds > 0);
+    }
+
+    #[test]
+    fn winograd_transform_equals_btdb() {
+        let mut rng = Rng::new(24);
+        for (m, r) in [(2usize, 3usize), (4, 3), (6, 3)] {
+            let l = winograd::tile_size(m, r);
+            let (_, _, bt) = winograd::matrices(m, r);
+            let b = bt.transpose2();
+            let mut arr = SystolicArray::new(l);
+            let d_vec = rand_block(&mut rng, l);
+            let got = arr.winograd_transform(&d_vec, b.data());
+            let d = Tensor::from_vec(&[l, l], d_vec);
+            let want = bt.matmul(&d).matmul(&b);
+            for (g, w) in got.iter().zip(want.data()) {
+                assert!((g - w).abs() < 1e-4, "F({m},{r}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_add_count_tracks_nnz() {
+        // adds per pass = l * sum over used entries; zero entries pass.
+        let l = 4;
+        let (_, _, bt) = winograd::matrices(2, 3);
+        let b = bt.transpose2();
+        let mut arr = SystolicArray::new(l);
+        let d = vec![1.0; l * l];
+        let _ = arr.transform_pass(&d, b.data());
+        let (nnz_b, _) = winograd::nnz_counts(2, 3);
+        // Each output column j consumes nnz(B[:, i]) adds per (i, j) pair:
+        // total = l * nnz(B) for ±1 entries (F(2,3) has only ±1).
+        assert_eq!(arr.stats.adds, (l * nnz_b) as u64);
+        assert_eq!(arr.stats.passes, (l * (l * l - nnz_b)) as u64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_arrays() {
+        SystolicArray::new(1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Shared circular FIFOs built from shift registers (paper §4.2).
+//!
+//! Each cluster owns a set of circular FIFOs that buffer operand blocks
+//! fetched from the memory hierarchy.  A block entering a FIFO counts one
+//! memory fetch; every array that consumes it afterwards is a FIFO read —
+//! the "sharing of circular FIFOs reduces the memory bandwidth requirement
+//! by 4 folds".  For the sparse cluster, a FIFO is paired with a
+//! decompressor that expands BCOO blocks in place (§3.3).
+
+use std::rc::Rc;
+
+/// A circular FIFO holding fixed-size operand blocks, with fetch/read
+/// accounting for the bandwidth model.
+///
+/// Blocks are reference-counted: serving a resident block is a pointer
+/// clone, not a data copy (the hot loop of the whole simulator —
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct CircularFifo {
+    capacity: usize,
+    slots: Vec<(u64, Rc<Vec<f32>>)>, // (block id, data), newest last
+    pub fetches: u64,                // blocks brought in from memory
+    pub reads: u64,                  // blocks served to systolic arrays
+    pub hits: u64,                   // reads served without a new fetch
+}
+
+impl CircularFifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            capacity,
+            slots: Vec::with_capacity(capacity),
+            fetches: 0,
+            reads: 0,
+            hits: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Serve block `id`; `load` materializes it on a miss (one memory
+    /// fetch).  Returns a shared handle to the block data.
+    pub fn read_block<F>(&mut self, id: u64, load: F) -> Rc<Vec<f32>>
+    where
+        F: FnOnce() -> Vec<f32>,
+    {
+        self.reads += 1;
+        if let Some(pos) = self.slots.iter().position(|(bid, _)| *bid == id) {
+            self.hits += 1;
+            return self.slots[pos].1.clone();
+        }
+        let data = Rc::new(load());
+        self.fetches += 1;
+        if self.slots.len() == self.capacity {
+            self.slots.remove(0); // circular: oldest block rotates out
+        }
+        self.slots.push((id, data.clone()));
+        data
+    }
+
+    /// Bandwidth amplification factor: reads served per memory fetch.
+    pub fn sharing_factor(&self) -> f64 {
+        if self.fetches == 0 {
+            0.0
+        } else {
+            self.reads as f64 / self.fetches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut f = CircularFifo::new(2);
+        let a = f.read_block(7, || vec![1.0, 2.0]);
+        assert_eq!(*a, vec![1.0, 2.0]);
+        assert_eq!((f.fetches, f.reads, f.hits), (1, 1, 0));
+        let b = f.read_block(7, || panic!("must hit"));
+        assert_eq!(*b, vec![1.0, 2.0]);
+        assert_eq!((f.fetches, f.reads, f.hits), (1, 2, 1));
+    }
+
+    #[test]
+    fn eviction_is_fifo_order() {
+        let mut f = CircularFifo::new(2);
+        f.read_block(1, || vec![1.0]);
+        f.read_block(2, || vec![2.0]);
+        f.read_block(3, || vec![3.0]); // evicts 1
+        assert_eq!(f.len(), 2);
+        let mut evicted_reloaded = false;
+        f.read_block(1, || {
+            evicted_reloaded = true;
+            vec![1.0]
+        });
+        assert!(evicted_reloaded);
+    }
+
+    #[test]
+    fn sharing_factor() {
+        let mut f = CircularFifo::new(4);
+        f.read_block(1, || vec![0.0]);
+        for _ in 0..3 {
+            f.read_block(1, || unreachable!());
+        }
+        assert!((f.sharing_factor() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fifo_factor_zero() {
+        let f = CircularFifo::new(1);
+        assert_eq!(f.sharing_factor(), 0.0);
+    }
+}

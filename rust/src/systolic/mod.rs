@@ -1,0 +1,26 @@
+//! Cycle-level simulator of the paper's small-scale systolic arrays.
+//!
+//! This is the substrate substitution for the paper's FPGA RTL (DESIGN.md
+//! §2): an l x l grid of processing elements with explicit skewed-wavefront
+//! dataflow, unified for two operating modes exactly as §4.1-4.2 describe:
+//!
+//! - **MAC mode** — output-stationary block matrix multiplication; partial
+//!   sums stay resident in the array across accumulation iterations and are
+//!   spilled only when a C-block completes.
+//! - **Transform mode** — the Winograd transform's adder-only passes: the
+//!   stationary matrix entries (0 / ±1 / ±2^k) control add, subtract, shift
+//!   or pass-through; no DSP multipliers are consumed.
+//!
+//! `cluster` composes four arrays with shared circular FIFOs (§4.2) and the
+//! sparse-weight decompressors (§3.3); `timing` holds the validated
+//! closed-form cycle model used for full-network sweeps.
+
+pub mod array;
+pub mod cluster;
+pub mod fifo;
+pub mod timing;
+
+pub use array::{ArrayStats, Mode, SystolicArray};
+pub use cluster::{Cluster, ClusterStats};
+pub use fifo::CircularFifo;
+pub use timing::BlockTiming;

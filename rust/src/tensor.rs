@@ -1,0 +1,275 @@
+//! A small row-major dense tensor over `f32`.
+//!
+//! This is the numeric substrate the cycle-level simulator and the CPU
+//! reference implementations share.  It is intentionally minimal: the heavy
+//! numerics on the request path run inside the PJRT executable; the tensor
+//! type here exists for oracles, the simulator's functional model, and test
+//! data plumbing.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    #[inline]
+    fn index2(&self, i: usize, j: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 2);
+        i * self.shape[1] + j
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[self.index2(i, j)]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let idx = self.index2(i, j);
+        self.data[idx] = v;
+    }
+
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(i * self.shape[1] + j) * self.shape[2] + k]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 3);
+        let idx = (i * self.shape[1] + j) * self.shape[2] + k;
+        self.data[idx] = v;
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        self.data[((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 4);
+        let idx =
+            ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d;
+        self.data[idx] = v;
+    }
+
+    /// Dense 2-D matrix multiply: (m, k) x (k, n) -> (m, n).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        // ikj loop order: streams rhs rows, writes each out row once per k.
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = &rhs.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * rrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Largest absolute elementwise difference.
+    pub fn max_abs_diff(&self, rhs: &Tensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+
+    /// Relative-tolerance comparison mirroring numpy.allclose semantics.
+    pub fn allclose(&self, rhs: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == rhs.shape
+            && self.data.iter().zip(&rhs.data).all(|(a, b)| {
+                (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let eye = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matmul(&eye), a);
+        assert_eq!(eye.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_rectangular_shapes() {
+        let a = Tensor::zeros(&[3, 5]);
+        let b = Tensor::zeros(&[5, 7]);
+        assert_eq!(a.matmul(&b).shape(), &[3, 7]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose2().transpose2(), a);
+        assert_eq!(a.transpose2().at2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn add_scale() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        assert_eq!(a.add(&b).data(), &[4.0, 6.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 100.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 100.0 + 1e-4]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::from_vec(&[2], vec![1.1, 100.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn indexers() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 5.0);
+        assert_eq!(t.at3(1, 2, 3), 5.0);
+        let mut t4 = Tensor::zeros(&[2, 2, 2, 2]);
+        t4.set4(1, 0, 1, 0, 7.0);
+        assert_eq!(t4.at4(1, 0, 1, 0), 7.0);
+    }
+}

@@ -1,0 +1,414 @@
+//! Winograd convolution: exact Cook-Toom transform generation, CPU
+//! reference transforms, and the tiling arithmetic used across the stack.
+//!
+//! Mirrors `python/compile/winograd.py` exactly (same interpolation points,
+//! same construction) so the rust simulator, the PJRT artifacts, and the
+//! analytical model all share one algebra.  See paper §2.2.
+
+pub mod rational;
+
+use crate::tensor::Tensor;
+use rational::Rat;
+
+/// The canonical finite interpolation points (0, ±1, ±2, ±1/2, ...).
+/// Must match `_CANONICAL_POINTS` in python/compile/winograd.py.
+fn canonical_points(n: usize) -> Vec<Rat> {
+    let pts = [
+        Rat::int(0),
+        Rat::int(1),
+        Rat::int(-1),
+        Rat::int(2),
+        Rat::int(-2),
+        Rat::new(1, 2),
+        Rat::new(-1, 2),
+        Rat::int(3),
+        Rat::int(-3),
+        Rat::new(1, 3),
+        Rat::new(-1, 3),
+        Rat::int(4),
+        Rat::int(-4),
+    ];
+    assert!(
+        n <= pts.len(),
+        "F(m, r) needs {n} interpolation points; only {} defined",
+        pts.len()
+    );
+    pts[..n].to_vec()
+}
+
+/// Tile size l = m + r - 1 — also the systolic-array dimension (paper §4).
+pub fn tile_size(m: usize, r: usize) -> usize {
+    m + r - 1
+}
+
+/// ceil(spatial / m): number of overlapping tiles along one dimension.
+pub fn num_tiles(spatial: usize, m: usize) -> usize {
+    spatial.div_ceil(m)
+}
+
+/// Multiply polynomials in ascending-coefficient form.
+fn poly_mul(p: &[Rat], q: &[Rat]) -> Vec<Rat> {
+    let mut out = vec![Rat::ZERO; p.len() + q.len() - 1];
+    for (i, &a) in p.iter().enumerate() {
+        for (j, &b) in q.iter().enumerate() {
+            out[i + j] = out[i + j] + a * b;
+        }
+    }
+    out
+}
+
+/// Coefficients of prod_k (x - roots[k]).
+fn poly_from_roots(roots: &[Rat]) -> Vec<Rat> {
+    let mut poly = vec![Rat::ONE];
+    for &rt in roots {
+        poly = poly_mul(&poly, &[-rt, Rat::ONE]);
+    }
+    poly
+}
+
+/// The exact (A^T, G, B^T) triple for F(m, r) in rational arithmetic.
+///
+/// Shapes: A^T (m x l), G (l x r), B^T (l x l), l = m + r - 1.
+pub fn matrices_exact(m: usize, r: usize) -> (Vec<Vec<Rat>>, Vec<Vec<Rat>>, Vec<Vec<Rat>>) {
+    assert!(m >= 1 && r >= 1, "m and r must be positive");
+    let alpha = m + r - 1;
+    let pts = canonical_points(alpha - 1);
+
+    // A^T: column i (finite point) = [p_i^0 .. p_i^(m-1)]; last column e_{m-1}.
+    let mut at = vec![vec![Rat::ZERO; alpha]; m];
+    for (j, row) in at.iter_mut().enumerate() {
+        for (i, cell) in row.iter_mut().enumerate() {
+            *cell = if i < alpha - 1 {
+                pts[i].pow(j as u32)
+            } else if j == m - 1 {
+                Rat::ONE
+            } else {
+                Rat::ZERO
+            };
+        }
+    }
+
+    // G: row i = [p_i^0 .. p_i^(r-1)] / N_i, N_i = prod_{k!=i}(p_i - p_k);
+    // last row e_{r-1}.
+    let mut g = vec![vec![Rat::ZERO; r]; alpha];
+    for i in 0..alpha - 1 {
+        let mut n_i = Rat::ONE;
+        for k in 0..alpha - 1 {
+            if k != i {
+                n_i = n_i * (pts[i] - pts[k]);
+            }
+        }
+        for j in 0..r {
+            g[i][j] = pts[i].pow(j as u32) / n_i;
+        }
+    }
+    g[alpha - 1][r - 1] = Rat::ONE;
+
+    // B^T: row i = coefficients of prod_{k!=i}(x - p_k); last row = full
+    // modulus polynomial prod_k (x - p_k).
+    let mut bt = vec![vec![Rat::ZERO; alpha]; alpha];
+    for i in 0..alpha - 1 {
+        let roots: Vec<Rat> = (0..alpha - 1)
+            .filter(|&k| k != i)
+            .map(|k| pts[k])
+            .collect();
+        let coeffs = poly_from_roots(&roots);
+        for (j, &c) in coeffs.iter().enumerate() {
+            bt[i][j] = c;
+        }
+    }
+    let full = poly_from_roots(&pts);
+    for (j, &c) in full.iter().enumerate() {
+        bt[alpha - 1][j] = c;
+    }
+
+    (at, g, bt)
+}
+
+fn to_tensor(rows: &[Vec<Rat>]) -> Tensor {
+    let m = rows.len();
+    let n = rows[0].len();
+    let mut data = Vec::with_capacity(m * n);
+    for row in rows {
+        data.extend(row.iter().map(|x| x.to_f32()));
+    }
+    Tensor::from_vec(&[m, n], data)
+}
+
+/// (A^T, G, B^T) for F(m, r) as f32 tensors.
+pub fn matrices(m: usize, r: usize) -> (Tensor, Tensor, Tensor) {
+    let (at, g, bt) = matrices_exact(m, r);
+    (to_tensor(&at), to_tensor(&g), to_tensor(&bt))
+}
+
+/// Counts of nonzeros in B and A — the paper's nnz(·) of eq. (9)/(10),
+/// used by the analytical model for the transform addition counts.
+pub fn nnz_counts(m: usize, r: usize) -> (usize, usize) {
+    let (at, _, bt) = matrices_exact(m, r);
+    let nnz_b = bt
+        .iter()
+        .flat_map(|row| row.iter())
+        .filter(|x| !x.is_zero())
+        .count();
+    let nnz_a = at
+        .iter()
+        .flat_map(|row| row.iter())
+        .filter(|x| !x.is_zero())
+        .count();
+    (nnz_b, nnz_a)
+}
+
+// ---------------------------------------------------------------------------
+// CPU reference transforms (oracles for the systolic simulator)
+// ---------------------------------------------------------------------------
+
+/// V = B^T d B for one (l, l) tile.
+pub fn input_transform_tile(d: &Tensor, m: usize, r: usize) -> Tensor {
+    let (_, _, bt) = matrices(m, r);
+    bt.matmul(d).matmul(&bt.transpose2())
+}
+
+/// U = G g G^T for one (r, r) filter.
+pub fn filter_transform_tile(g_f: &Tensor, m: usize, r: usize) -> Tensor {
+    let (_, g, _) = matrices(m, r);
+    g.matmul(g_f).matmul(&g.transpose2())
+}
+
+/// Y = A^T t A for one (l, l) product tile -> (m, m).
+pub fn inverse_transform_tile(t: &Tensor, m: usize, r: usize) -> Tensor {
+    let (at, _, _) = matrices(m, r);
+    at.matmul(t).matmul(&at.transpose2())
+}
+
+/// Direct spatial convolution (paper eq. 1): x (C, H, W), w (K, C, r, r)
+/// -> (K, H - r + 1, W - r + 1).  Stride 1, VALID.
+pub fn direct_conv2d(x: &Tensor, w: &Tensor) -> Tensor {
+    let (c, h, ww) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (k, c2, r, r2) = (
+        w.shape()[0],
+        w.shape()[1],
+        w.shape()[2],
+        w.shape()[3],
+    );
+    assert_eq!(c, c2);
+    assert_eq!(r, r2);
+    let (oh, ow) = (h - r + 1, ww - r + 1);
+    let mut out = Tensor::zeros(&[k, oh, ow]);
+    for kk in 0..k {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut acc = 0.0f32;
+                for cc in 0..c {
+                    for p in 0..r {
+                        for q in 0..r {
+                            acc += w.at4(kk, cc, p, q) * x.at3(cc, i + p, j + q);
+                        }
+                    }
+                }
+                out.set3(kk, i, j, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Full dense Winograd convolution on CPU (tile-by-tile), the functional
+/// oracle for the systolic pipeline.  Zero-pads to whole tiles like the
+/// Pallas kernels.
+pub fn winograd_conv2d(x: &Tensor, w: &Tensor, m: usize) -> Tensor {
+    let r = w.shape()[3];
+    let l = tile_size(m, r);
+    let (c, h, ww) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let k = w.shape()[0];
+    let (oh, ow) = (h - r + 1, ww - r + 1);
+    let (nty, ntx) = (num_tiles(oh, m), num_tiles(ow, m));
+
+    // Pre-transform all filters.
+    let mut u = Vec::with_capacity(k * c);
+    for kk in 0..k {
+        for cc in 0..c {
+            let mut gt = Tensor::zeros(&[r, r]);
+            for p in 0..r {
+                for q in 0..r {
+                    gt.set2(p, q, w.at4(kk, cc, p, q));
+                }
+            }
+            u.push(filter_transform_tile(&gt, m, r));
+        }
+    }
+
+    let mut out = Tensor::zeros(&[k, oh, ow]);
+    for ty in 0..nty {
+        for tx in 0..ntx {
+            // Gather input tiles for every channel (zero-padded at edges).
+            let mut v = Vec::with_capacity(c);
+            for cc in 0..c {
+                let mut d = Tensor::zeros(&[l, l]);
+                for i in 0..l {
+                    for j in 0..l {
+                        let (y, xx) = (ty * m + i, tx * m + j);
+                        if y < h && xx < ww {
+                            d.set2(i, j, x.at3(cc, y, xx));
+                        }
+                    }
+                }
+                v.push(input_transform_tile(&d, m, r));
+            }
+            for kk in 0..k {
+                // Elementwise accumulate over channels, then inverse once —
+                // the amortization of eq. (5).
+                let mut acc = Tensor::zeros(&[l, l]);
+                for cc in 0..c {
+                    for i in 0..l {
+                        for j in 0..l {
+                            let val = acc.at2(i, j)
+                                + u[kk * c + cc].at2(i, j) * v[cc].at2(i, j);
+                            acc.set2(i, j, val);
+                        }
+                    }
+                }
+                let y_tile = inverse_transform_tile(&acc, m, r);
+                for i in 0..m {
+                    for j in 0..m {
+                        let (y, xx) = (ty * m + i, tx * m + j);
+                        if y < oh && xx < ow {
+                            out.set3(kk, y, xx, y_tile.at2(i, j));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, rng.gaussian_vec(n))
+    }
+
+    #[test]
+    fn f23_matches_paper_up_to_point_signs() {
+        // Paper §2.2: B^T entries ∈ {0, ±1}; A^T ∈ {0, ±1}; G ∈ {0, ±1/2, 1}.
+        let (at, g, bt) = matrices(2, 3);
+        for &v in bt.data() {
+            assert!([-1.0, 0.0, 1.0].contains(&v), "BT entry {v}");
+        }
+        for &v in at.data() {
+            assert!([-1.0, 0.0, 1.0].contains(&v), "AT entry {v}");
+        }
+        for &v in g.data() {
+            assert!(
+                [-1.0, -0.5, 0.0, 0.5, 1.0].contains(&v),
+                "G entry {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn one_d_identity_all_supported() {
+        // y = A^T[(Gg) ⊙ (B^T d)] == direct correlation, exactly (rational).
+        for &(m, r) in &[(2usize, 3usize), (3, 3), (4, 3), (6, 3), (2, 5), (4, 5)] {
+            let (at, g, bt) = matrices_exact(m, r);
+            let l = m + r - 1;
+            // Delta-basis check: exact equality for every (filter, input) pair.
+            for fi in 0..r {
+                for di in 0..l {
+                    let hg: Vec<Rat> = (0..l).map(|i| g[i][fi]).collect();
+                    let jd: Vec<Rat> = (0..l).map(|i| bt[i][di]).collect();
+                    for j in 0..m {
+                        let mut y = Rat::ZERO;
+                        for i in 0..l {
+                            y = y + at[j][i] * hg[i] * jd[i];
+                        }
+                        let want = if di >= j && di - j == fi {
+                            Rat::ONE
+                        } else {
+                            Rat::ZERO
+                        };
+                        assert_eq!(y, want, "F({m},{r}) fi={fi} di={di} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_equals_direct_conv_f23() {
+        let mut rng = Rng::new(1);
+        let x = rand_tensor(&mut rng, &[3, 8, 10]);
+        let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+        let direct = direct_conv2d(&x, &w);
+        let wino = winograd_conv2d(&x, &w, 2);
+        assert!(
+            direct.allclose(&wino, 1e-4, 1e-4),
+            "max diff {}",
+            direct.max_abs_diff(&wino)
+        );
+    }
+
+    #[test]
+    fn winograd_equals_direct_conv_f43_f63() {
+        let mut rng = Rng::new(2);
+        let x = rand_tensor(&mut rng, &[2, 11, 13]);
+        let w = rand_tensor(&mut rng, &[3, 2, 3, 3]);
+        let direct = direct_conv2d(&x, &w);
+        for m in [4, 6] {
+            let wino = winograd_conv2d(&x, &w, m);
+            assert!(
+                direct.allclose(&wino, 1e-3, 1e-3),
+                "m={m} max diff {}",
+                direct.max_abs_diff(&wino)
+            );
+        }
+    }
+
+    #[test]
+    fn nnz_counts_f23() {
+        // F(2,3): B^T has 8 nonzeros, A^T has 6 (paper's matrices).
+        let (nnz_b, nnz_a) = nnz_counts(2, 3);
+        assert_eq!(nnz_b, 8);
+        assert_eq!(nnz_a, 6);
+    }
+
+    #[test]
+    fn tile_math() {
+        assert_eq!(tile_size(2, 3), 4); // the paper's l = 4
+        assert_eq!(tile_size(4, 3), 6);
+        assert_eq!(num_tiles(224, 2), 112);
+        assert_eq!(num_tiles(7, 2), 4);
+    }
+
+    #[test]
+    fn transform_tile_shapes() {
+        let d = Tensor::zeros(&[4, 4]);
+        assert_eq!(input_transform_tile(&d, 2, 3).shape(), &[4, 4]);
+        let g = Tensor::zeros(&[3, 3]);
+        assert_eq!(filter_transform_tile(&g, 2, 3).shape(), &[4, 4]);
+        let t = Tensor::zeros(&[4, 4]);
+        assert_eq!(inverse_transform_tile(&t, 2, 3).shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn matrices_match_python_f23() {
+        // Regression against the python generator's output (same points).
+        let (at, g, bt) = matrices(2, 3);
+        assert_eq!(at.data(), &[1., 1., 1., 0., 0., 1., -1., 1.]);
+        assert_eq!(
+            g.data(),
+            &[-1., 0., 0., 0.5, 0.5, 0.5, 0.5, -0.5, 0.5, 0., 0., 1.]
+        );
+        assert_eq!(
+            bt.data(),
+            &[
+                -1., 0., 1., 0., 0., 1., 1., 0., 0., -1., 1., 0., 0., -1., 0.,
+                1.
+            ]
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Z-Morton recursive memory layout (paper §3.2, Fig. 2a).
+//!
+//! Matrices are partitioned into l x l blocks; the *physical* block address
+//! is obtained by interleaving the bits of the logical (row, col) block
+//! coordinates — in the paper this translation is "easily implemented with
+//! LUTs in FPGAs".  The same layout drives the unrolled schedule of the
+//! divide-and-conquer matrix multiplication (Algorithm 1): walking physical
+//! addresses in order visits blocks in exactly the recursion's order, which
+//! is what gives the cache/BRAM-friendly locality.
+
+/// Interleave the bits of (row, col) into a Z-Morton index.
+/// Bit 0 of `col` becomes bit 0 of the result (column-minor, matching the
+/// C0/C4/C8/C12 walk of paper §4.2).
+#[inline]
+pub fn encode(row: u32, col: u32) -> u64 {
+    spread(col) | (spread(row) << 1)
+}
+
+/// Invert `encode`.
+#[inline]
+pub fn decode(z: u64) -> (u32, u32) {
+    (compact(z >> 1), compact(z))
+}
+
+/// Spread the 32 bits of x into the even bit positions of a u64.
+#[inline]
+fn spread(x: u32) -> u64 {
+    let mut x = x as u64;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    x
+}
+
+/// Gather the even bit positions of z back into a u32.
+#[inline]
+fn compact(z: u64) -> u32 {
+    let mut x = z & 0x5555_5555_5555_5555;
+    x = (x | (x >> 1)) & 0x3333_3333_3333_3333;
+    x = (x | (x >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x >> 4)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x >> 16)) & 0x0000_0000_FFFF_FFFF;
+    x as u32
+}
+
+/// Copy a row-major matrix into Z-Morton block order.
+///
+/// `mat` is (rows, cols) row-major with rows/cols multiples of `block`;
+/// output is a vector of length rows*cols where block z holds the block's
+/// elements row-major.  This is the "unrolled memory access order" the
+/// paper uses instead of running the recursion at run time.
+pub fn to_zmorton_blocks(mat: &[f32], rows: usize, cols: usize, block: usize) -> Vec<f32> {
+    assert_eq!(rows % block, 0, "rows {rows} % block {block}");
+    assert_eq!(cols % block, 0, "cols {cols} % block {block}");
+    let (br, bc) = (rows / block, cols / block);
+    let n_blocks = br * bc;
+    let bsz = block * block;
+    let mut out = vec![0.0f32; rows * cols];
+    for rb in 0..br {
+        for cb in 0..bc {
+            let z = encode(rb as u32, cb as u32) as usize;
+            assert!(z < n_blocks || br != bc, "non-square layouts use padding");
+            let dst = &mut out[z * bsz..(z + 1) * bsz];
+            for i in 0..block {
+                for j in 0..block {
+                    dst[i * block + j] = mat[(rb * block + i) * cols + cb * block + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Invert `to_zmorton_blocks`.
+pub fn from_zmorton_blocks(
+    z_data: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+) -> Vec<f32> {
+    let (br, bc) = (rows / block, cols / block);
+    let bsz = block * block;
+    let mut out = vec![0.0f32; rows * cols];
+    for rb in 0..br {
+        for cb in 0..bc {
+            let z = encode(rb as u32, cb as u32) as usize;
+            let src = &z_data[z * bsz..(z + 1) * bsz];
+            for i in 0..block {
+                for j in 0..block {
+                    out[(rb * block + i) * cols + cb * block + j] = src[i * block + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One step of the unrolled Algorithm-1 schedule: multiply A-block (i, k)
+/// by B-block (k, j), accumulate into C-block (i, j).  Block ids are the
+/// *physical* (Z-Morton) addresses the FIFOs stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatmulStep {
+    pub a_block: u64,
+    pub b_block: u64,
+    pub c_block: u64,
+}
+
+/// Unroll the divide-and-conquer matmul (Algorithm 1) for an n x n block
+/// grid (n a power of two).  The emitted order is the depth-first recursion
+/// order — identical to walking C-blocks in Z order with the k-loop
+/// innermost pairs interleaved, which is what §4.2's C0 += A0*B0 + A1*B2
+/// sequence spells out for n = 2.
+pub fn schedule(n_blocks: usize) -> Vec<MatmulStep> {
+    assert!(n_blocks.is_power_of_two(), "block grid must be 2^k");
+    let mut out = Vec::with_capacity(n_blocks * n_blocks * n_blocks);
+    rec_schedule(0, 0, 0, n_blocks, &mut out);
+    out
+}
+
+fn rec_schedule(ri: usize, ci: usize, ki: usize, n: usize, out: &mut Vec<MatmulStep>) {
+    if n == 1 {
+        out.push(MatmulStep {
+            a_block: encode(ri as u32, ki as u32),
+            b_block: encode(ki as u32, ci as u32),
+            c_block: encode(ri as u32, ci as u32),
+        });
+        return;
+    }
+    let h = n / 2;
+    // The recursion of Algorithm 1: each quadrant of C gets two recursive
+    // products; visit them C11, C12, C21, C22 with both k-halves in turn.
+    for (dr, dc) in [(0, 0), (0, h), (h, 0), (h, h)] {
+        for dk in [0, h] {
+            rec_schedule(ri + dr, ci + dc, ki + dk, h, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn encode_known_values() {
+        // Fig. 2(a): logical (row, col) -> physical by bit interleaving.
+        assert_eq!(encode(0, 0), 0);
+        assert_eq!(encode(0, 1), 1);
+        assert_eq!(encode(1, 0), 2);
+        assert_eq!(encode(1, 1), 3);
+        assert_eq!(encode(0, 2), 4);
+        assert_eq!(encode(2, 0), 8);
+        assert_eq!(encode(3, 3), 15);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let r = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            let c = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            assert_eq!(decode(encode(r, c)), (r, c));
+        }
+    }
+
+    #[test]
+    fn encode_bijective_on_grid() {
+        let mut seen = HashSet::new();
+        for r in 0..64u32 {
+            for c in 0..64u32 {
+                assert!(seen.insert(encode(r, c)));
+            }
+        }
+        // Square grid: indices are exactly 0..n^2.
+        assert_eq!(seen.len(), 4096);
+        assert!(seen.iter().all(|&z| z < 4096));
+    }
+
+    #[test]
+    fn zmorton_blocks_roundtrip() {
+        let mut rng = Rng::new(6);
+        let (rows, cols, block) = (16, 16, 4);
+        let mat = rng.gaussian_vec(rows * cols);
+        let z = to_zmorton_blocks(&mat, rows, cols, block);
+        let back = from_zmorton_blocks(&z, rows, cols, block);
+        assert_eq!(mat, back);
+    }
+
+    #[test]
+    fn zmorton_block_placement() {
+        // An 8x8 matrix of 4x4 blocks: block (1,0) lands at physical 2.
+        let (rows, cols, block) = (8, 8, 4);
+        let mut mat = vec![0.0f32; rows * cols];
+        // Tag element (4, 0) — top-left of logical block (1, 0).
+        mat[4 * cols] = 7.0;
+        let z = to_zmorton_blocks(&mat, rows, cols, block);
+        assert_eq!(z[2 * 16], 7.0);
+    }
+
+    #[test]
+    fn schedule_covers_every_triple_once() {
+        for n in [1usize, 2, 4, 8] {
+            let s = schedule(n);
+            assert_eq!(s.len(), n * n * n);
+            let mut seen = HashSet::new();
+            for step in &s {
+                let (ri, ki) = decode(step.a_block);
+                let (ki2, ci) = decode(step.b_block);
+                let (ri2, ci2) = decode(step.c_block);
+                assert_eq!(ki, ki2, "A/B k mismatch");
+                assert_eq!(ri, ri2, "A/C row mismatch");
+                assert_eq!(ci, ci2, "B/C col mismatch");
+                assert!(seen.insert((ri, ci, ki)), "duplicate triple");
+            }
+            assert_eq!(seen.len(), n * n * n);
+        }
+    }
+
+    #[test]
+    fn schedule_matches_paper_example() {
+        // §4.2 for a 4x4 block grid: C0 += A0*B0 + A1*B2 first, i.e. the
+        // first two steps multiply physical A-blocks 0,1 with B-blocks 0,2
+        // into C-block 0.
+        let s = schedule(4);
+        assert_eq!(
+            s[0],
+            MatmulStep {
+                a_block: 0,
+                b_block: 0,
+                c_block: 0
+            }
+        );
+        assert_eq!(
+            s[1],
+            MatmulStep {
+                a_block: 1,
+                b_block: 2,
+                c_block: 0
+            }
+        );
+        // C1 is next in the paper's Z-walk of the NW quadrant.
+        assert_eq!(s[2].c_block, 1);
+        assert_eq!(s[3].c_block, 1);
+    }
+
+    #[test]
+    fn schedule_k_contiguous_per_c_block() {
+        // Within the unrolled order, both k-halves of a C-block quadrant
+        // are adjacent — this adjacency is what lets partial sums stay
+        // resident in the systolic array (paper §4.2 iterations 1-2).
+        let s = schedule(8);
+        let mut i = 0;
+        while i < s.len() {
+            // Runs of equal c_block have length >= 2 (n >= 2).
+            let c = s[i].c_block;
+            let mut run = 0;
+            while i < s.len() && s[i].c_block == c {
+                run += 1;
+                i += 1;
+            }
+            assert!(run >= 2, "c-block {c} run {run}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn schedule_rejects_non_power_of_two() {
+        schedule(3);
+    }
+}

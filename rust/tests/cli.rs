@@ -1,0 +1,66 @@
+//! CLI integration tests: run the built `swcnn` binary end-to-end.
+
+use std::process::Command;
+
+fn swcnn(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_swcnn"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn swcnn");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn cli_report_prints_tables() {
+    let (ok, text) = swcnn(&["report"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Table 1"));
+    assert!(text.contains("12845056"));
+    assert!(text.contains("Table 3"));
+    assert!(text.contains("512 (arith) + 256 (wino)"));
+    assert!(text.contains("Fig. 6"));
+}
+
+#[test]
+fn cli_simulate_dense_and_sparse() {
+    let (ok, text) = swcnn(&["simulate", "--net", "vgg16"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("conv5_3"));
+    assert!(text.contains("Gops/s"));
+
+    let (ok, sparse) = swcnn(&["simulate", "--net", "vgg16", "--sparsity", "0.9"]);
+    assert!(ok, "{sparse}");
+    // Sparse occupancy must show up below 1.
+    assert!(sparse.contains("0.2") || sparse.contains("0.1"), "{sparse}");
+}
+
+#[test]
+fn cli_sweep() {
+    let (ok, text) = swcnn(&["sweep", "--net", "vgg_tiny", "--ms", "2", "--sparsities", "0.9"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("dense"));
+    assert!(text.contains("90%"));
+}
+
+#[test]
+fn cli_rejects_unknown() {
+    let (ok, text) = swcnn(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+    let (ok2, text2) = swcnn(&["simulate", "--net", "alexnet"]);
+    assert!(!ok2);
+    assert!(text2.contains("unknown net"));
+}
+
+#[test]
+fn cli_help() {
+    let (ok, text) = swcnn(&["help"]);
+    assert!(ok);
+    assert!(text.contains("usage"));
+}

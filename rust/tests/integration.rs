@@ -1,0 +1,249 @@
+//! Integration tests across the runtime + coordinator + simulator.
+//!
+//! PJRT tests need `make artifacts` first; they are skipped (with a
+//! loud message) when artifacts/ is absent so `cargo test` stays usable
+//! in a fresh checkout.
+
+use swcnn::coordinator::{InferenceServer, ServerConfig};
+use swcnn::runtime::{read_f32_bin, Runtime};
+use swcnn::tensor::Tensor;
+use swcnn::util::Rng;
+use swcnn::winograd::direct_conv2d;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn quickstart_matches_direct_conv() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let model = rt.load("quickstart").unwrap();
+    let meta = &model.spec.meta;
+    let (c, k, h, w) = (
+        meta.req("C").unwrap().as_usize().unwrap(),
+        meta.req("K").unwrap().as_usize().unwrap(),
+        meta.req("H").unwrap().as_usize().unwrap(),
+        meta.req("W").unwrap().as_usize().unwrap(),
+    );
+    let mut rng = Rng::new(17);
+    let x = rng.gaussian_vec(c * h * w);
+    let y = Tensor::from_vec(&[k, h, w], model.run(&[x.clone()]).unwrap()[0].clone());
+
+    let g_meta = meta.req("g_spatial").unwrap();
+    let g = read_f32_bin(
+        &dir.join(g_meta.req("file").unwrap().as_str().unwrap()),
+        k * c * 9,
+    )
+    .unwrap();
+    let g = Tensor::from_vec(&[k, c, 3, 3], g);
+    let mut xp = Tensor::zeros(&[c, h + 2, w + 2]);
+    for cc in 0..c {
+        for i in 0..h {
+            for j in 0..w {
+                xp.set3(cc, i + 1, j + 1, x[(cc * h + i) * w + j]);
+            }
+        }
+    }
+    let mut want = direct_conv2d(&xp, &g);
+    for v in want.data_mut() {
+        *v = v.max(0.0);
+    }
+    let diff = y.max_abs_diff(&want);
+    assert!(diff < 1e-3, "pjrt vs direct conv: {diff}");
+}
+
+#[test]
+fn vgg_tiny_b1_finite_and_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let model = rt.load("vgg_tiny_b1").unwrap();
+    let mut rng = Rng::new(23);
+    let x = rng.gaussian_vec(3 * 32 * 32);
+    let y1 = model.run(&[x.clone()]).unwrap();
+    let y2 = model.run(&[x]).unwrap();
+    assert_eq!(y1[0].len(), 10);
+    assert!(y1[0].iter().all(|v| v.is_finite()));
+    assert_eq!(y1[0], y2[0], "execution must be deterministic");
+}
+
+#[test]
+fn vgg_tiny_batch_matches_single() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let b1 = rt.load("vgg_tiny_b1").unwrap();
+    let b4 = rt.load("vgg_tiny_b4").unwrap();
+    let mut rng = Rng::new(29);
+    let imgs: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+    let mut stacked = Vec::new();
+    for img in &imgs {
+        stacked.extend_from_slice(img);
+    }
+    let batched = b4.run(&[stacked]).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        let single = b1.run(&[img.clone()]).unwrap();
+        let b = &batched[0][i * 10..(i + 1) * 10];
+        for (s, bb) in single[0].iter().zip(b) {
+            assert!((s - bb).abs() < 1e-4, "img {i}: {s} vs {bb}");
+        }
+    }
+}
+
+#[test]
+fn sparse_artifact_runs_and_differs_from_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let dense = rt.load("vgg_tiny_b1").unwrap();
+    let sparse = rt.load("vgg_tiny_sparse_b1").unwrap();
+    assert!((sparse.spec.meta.req("sparsity").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+    let mut rng = Rng::new(31);
+    let x = rng.gaussian_vec(3 * 32 * 32);
+    let yd = dense.run(&[x.clone()]).unwrap();
+    let ys = sparse.run(&[x]).unwrap();
+    assert!(ys[0].iter().all(|v| v.is_finite()));
+    // 80% of weight blocks pruned -> logits must differ.
+    let diff: f32 = yd[0]
+        .iter()
+        .zip(&ys[0])
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "pruning 80% of weights changed nothing?");
+}
+
+#[test]
+fn m_sweep_artifacts_agree_with_each_other() {
+    // The same layer lowered at m = 2/4/6 must compute the same function.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let m2 = rt.load("layer_m2").unwrap();
+    let m4 = rt.load("layer_m4").unwrap();
+    let m6 = rt.load("layer_m6").unwrap();
+    let mut rng = Rng::new(37);
+    let x = rng.gaussian_vec(32 * 16 * 16);
+    let y2 = m2.run(&[x.clone()]).unwrap();
+    let y4 = m4.run(&[x.clone()]).unwrap();
+    let y6 = m6.run(&[x]).unwrap();
+    let max_diff = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    };
+    assert!(max_diff(&y2[0], &y4[0]) < 1e-2, "m2 vs m4");
+    assert!(max_diff(&y2[0], &y6[0]) < 1e-2, "m2 vs m6");
+}
+
+#[test]
+fn fc_artifact_matches_cpu() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let fc = rt.load("fc").unwrap();
+    let w = read_f32_bin(&dir.join("fc__w.bin"), 512 * 128).unwrap();
+    let b = read_f32_bin(&dir.join("fc__b.bin"), 128).unwrap();
+    let mut rng = Rng::new(41);
+    let x = rng.gaussian_vec(512);
+    let y = fc.run(&[x.clone()]).unwrap();
+    for j in 0..128 {
+        let mut acc = b[j];
+        for i in 0..512 {
+            acc += x[i] * w[i * 128 + j];
+        }
+        let want = acc.max(0.0);
+        assert!((y[0][j] - want).abs() < 1e-3, "fc[{j}]: {} vs {want}", y[0][j]);
+    }
+}
+
+#[test]
+fn server_end_to_end_with_batching() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = InferenceServer::start(ServerConfig::new(dir, "vgg_tiny")).unwrap();
+    let mut rng = Rng::new(43);
+    let elems = server.input_elements();
+
+    // Fire a burst to exercise the batcher, then check every response.
+    let imgs: Vec<Vec<f32>> = (0..10).map(|_| rng.gaussian_vec(elems)).collect();
+    let rxs: Vec<_> = imgs
+        .iter()
+        .map(|img| server.infer_async(img.clone()))
+        .collect();
+    let burst: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    // Solo reference for each image.
+    for (img, got) in imgs.iter().zip(&burst) {
+        let solo = server.infer(img.clone()).unwrap();
+        for (a, b) in solo.iter().zip(got) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+    let m = server.metrics.lock().unwrap();
+    assert!(m.requests >= 20);
+    assert!(m.batches >= 2);
+}
+
+#[test]
+fn server_rejects_wrong_input_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = InferenceServer::start(ServerConfig::new(dir, "vgg_tiny")).unwrap();
+    let res = server.infer(vec![0.0; 7]);
+    assert!(res.is_err());
+}
+
+#[test]
+fn runtime_missing_artifact_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.load("does_not_exist").is_err());
+}
+
+#[test]
+fn fused_artifact_matches_staged() {
+    // The fused megakernel artifact shares quickstart's weights; the two
+    // executables must compute the same function.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let staged = rt.load("quickstart").unwrap();
+    let Ok(fused) = rt.load("quickstart_fused") else {
+        eprintln!("SKIP: quickstart_fused not in manifest (rebuild artifacts)");
+        return;
+    };
+    let mut rng = Rng::new(47);
+    let x = rng.gaussian_vec(8 * 16 * 16);
+    let ys = staged.run(&[x.clone()]).unwrap();
+    let yf = fused.run(&[x]).unwrap();
+    let diff = ys[0]
+        .iter()
+        .zip(&yf[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff < 1e-3, "fused vs staged: {diff}");
+}
+
+#[test]
+fn vgg16_conv5_layer_executes_at_paper_scale() {
+    // The real VGG16 conv5 shape (512x512 @ 14x14) through PJRT — the
+    // paper's heaviest per-layer matmul family.  Before the §Perf no-grid
+    // kernel rewrite this took ~53 s; it must now be interactive.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let model = rt.load("vgg16_conv5").unwrap();
+    let mut rng = Rng::new(53);
+    let x = rng.gaussian_vec(512 * 14 * 14);
+    let t0 = std::time::Instant::now();
+    let y = model.run(&[x]).unwrap();
+    let dt = t0.elapsed();
+    assert_eq!(y[0].len(), 512 * 14 * 14);
+    assert!(y[0].iter().all(|v| v.is_finite()));
+    assert!(y[0].iter().any(|&v| v > 0.0), "ReLU output all zero");
+    assert!(
+        dt.as_secs_f64() < 5.0,
+        "conv5 execution took {dt:?} — no-grid kernel regression?"
+    );
+}

@@ -1,0 +1,252 @@
+//! Randomized property tests (seeded xoshiro — the offline crate set has
+//! no proptest).  Each property runs many random cases; failures print
+//! the seed/case so they reproduce deterministically.
+
+use swcnn::sparse::{prune_blocks, synthetic_sparse_matrix, Bcoo};
+use swcnn::systolic::cluster::{BlockMatrix, Cluster};
+use swcnn::systolic::{BlockTiming, SystolicArray};
+use swcnn::tensor::Tensor;
+use swcnn::util::Rng;
+use swcnn::winograd;
+use swcnn::zmorton;
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, rng.gaussian_vec(n))
+}
+
+#[test]
+fn prop_winograd_equals_direct_conv_random_shapes() {
+    let mut rng = Rng::new(1001);
+    for case in 0..40 {
+        let m = [2, 3, 4, 6][rng.next_below(4)];
+        let c = 1 + rng.next_below(5);
+        let k = 1 + rng.next_below(5);
+        let h = 7 + rng.next_below(12);
+        let w = 7 + rng.next_below(12);
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let direct = winograd::direct_conv2d(&x, &wt);
+        let wino = winograd::winograd_conv2d(&x, &wt, m);
+        assert!(
+            direct.allclose(&wino, 2e-3, 2e-3),
+            "case {case}: m={m} C={c} K={k} {h}x{w}, diff {}",
+            direct.max_abs_diff(&wino)
+        );
+    }
+}
+
+#[test]
+fn prop_cluster_matmul_equals_reference_random_dims() {
+    let mut rng = Rng::new(1002);
+    for case in 0..30 {
+        let m = 1 + rng.next_below(40);
+        let k = 1 + rng.next_below(40);
+        let n = 1 + rng.next_below(40);
+        let a = rng.gaussian_vec(m * k);
+        let b = rng.gaussian_vec(k * n);
+        let mut cl = Cluster::new(4);
+        let c = cl.matmul(
+            &BlockMatrix::new(&a, m, k, 4),
+            &BlockMatrix::new(&b, k, n, 4),
+        );
+        // Reference.
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                assert!(
+                    (c[i * n + j] - acc).abs() < 1e-3 * acc.abs().max(1.0),
+                    "case {case} ({m},{k},{n}) at ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_cluster_equals_dense_on_decompressed() {
+    let mut rng = Rng::new(1003);
+    for case in 0..20 {
+        let m = 4 * (1 + rng.next_below(6));
+        let k = 4 * (1 + rng.next_below(6));
+        let n = 4 * (1 + rng.next_below(6));
+        let sparsity = rng.next_f64() * 0.95;
+        let a = rng.gaussian_vec(m * k);
+        let b = synthetic_sparse_matrix(&mut rng, k, n, 4, sparsity);
+        let bcoo = Bcoo::compress(&b, k, n, 4);
+        let mut cl_s = Cluster::new(4);
+        let got = cl_s.matmul_sparse(&BlockMatrix::new(&a, m, k, 4), &bcoo);
+        let dense = bcoo.decompress();
+        assert_eq!(dense, b, "case {case}: BCOO roundtrip");
+        let mut cl_d = Cluster::new(4);
+        let want = cl_d.matmul(
+            &BlockMatrix::new(&a, m, k, 4),
+            &BlockMatrix::new(&dense, k, n, 4),
+        );
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-3 * w.abs().max(1.0),
+                "case {case} elem {i}: {g} vs {w} (sparsity {sparsity:.2})"
+            );
+        }
+        // Cycle invariant: sparse path never slower than dense.
+        assert!(cl_s.stats.cycles <= cl_d.stats.cycles, "case {case}");
+    }
+}
+
+#[test]
+fn prop_timing_model_equals_simulation_random() {
+    let mut rng = Rng::new(1004);
+    let t = BlockTiming::new(4);
+    for case in 0..20 {
+        let m = 4 * (1 + rng.next_below(8));
+        let k = 4 * (1 + rng.next_below(8));
+        let n = 4 * (1 + rng.next_below(8));
+        let a = rng.gaussian_vec(m * k);
+        let b = rng.gaussian_vec(k * n);
+        let mut cl = Cluster::new(4);
+        let _ = cl.matmul(
+            &BlockMatrix::new(&a, m, k, 4),
+            &BlockMatrix::new(&b, k, n, 4),
+        );
+        assert_eq!(
+            t.dense_matmul_cycles(m, k, n),
+            cl.stats.cycles,
+            "case {case} ({m},{k},{n})"
+        );
+        let sparsity = rng.next_f64() * 0.9;
+        let bs = synthetic_sparse_matrix(&mut rng, k, n, 4, sparsity);
+        let bcoo = Bcoo::compress(&bs, k, n, 4);
+        let mut cl_s = Cluster::new(4);
+        let _ = cl_s.matmul_sparse(&BlockMatrix::new(&a, m, k, 4), &bcoo);
+        assert_eq!(
+            t.sparse_matmul_cycles(m, &bcoo),
+            cl_s.stats.cycles,
+            "case {case} sparse ({m},{k},{n}) p={sparsity:.2}"
+        );
+    }
+}
+
+#[test]
+fn prop_zmorton_schedule_covers_and_is_bijective() {
+    let mut rng = Rng::new(1005);
+    for _ in 0..200 {
+        let r = (rng.next_u64() & 0xFFFF) as u32;
+        let c = (rng.next_u64() & 0xFFFF) as u32;
+        assert_eq!(zmorton::decode(zmorton::encode(r, c)), (r, c));
+    }
+    for n in [2usize, 4, 8, 16] {
+        let s = zmorton::schedule(n);
+        let mut seen = std::collections::HashSet::new();
+        for step in &s {
+            let (ri, ki) = zmorton::decode(step.a_block);
+            let (_, ci) = zmorton::decode(step.b_block);
+            assert!(seen.insert((ri, ci, ki)));
+        }
+        assert_eq!(seen.len(), n * n * n);
+    }
+}
+
+#[test]
+fn prop_bcoo_roundtrip_random() {
+    let mut rng = Rng::new(1006);
+    for case in 0..50 {
+        let rows = 4 * (1 + rng.next_below(16));
+        let cols = 4 * (1 + rng.next_below(16));
+        let sparsity = rng.next_f64() * 0.99;
+        let mut mat = rng.gaussian_vec(rows * cols);
+        prune_blocks(&mut mat, rows, cols, 4, sparsity);
+        let bcoo = Bcoo::compress(&mat, rows, cols, 4);
+        assert_eq!(bcoo.decompress(), mat, "case {case}");
+        // nnz preserved.
+        let nnz_dense = mat.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(bcoo.nnz(), nnz_dense, "case {case}");
+        // Directory sorted (Z-Morton fetch order).
+        assert!(bcoo.bn.windows(2).all(|w| w[0] < w[1]), "case {case}");
+    }
+}
+
+#[test]
+fn prop_transform_mode_never_multiplies() {
+    let mut rng = Rng::new(1007);
+    for (m, r) in [(2usize, 3usize), (4, 3), (6, 3)] {
+        let l = winograd::tile_size(m, r);
+        let (_, _, bt) = winograd::matrices(m, r);
+        let b = bt.transpose2();
+        let mut arr = SystolicArray::new(l);
+        for _ in 0..10 {
+            let d = rng.gaussian_vec(l * l);
+            let _ = arr.winograd_transform(&d, b.data());
+        }
+        assert_eq!(arr.stats.macs, 0, "F({m},{r})");
+        assert!(arr.stats.adds > 0);
+    }
+}
+
+#[test]
+fn prop_exact_rational_identity_fuzz() {
+    // Random rational tiles through the exact generator: the 2-D identity
+    // A^T[(G g G^T) ⊙ (B^T d B)]A == direct 2-D correlation, at f64.
+    let mut rng = Rng::new(1008);
+    for &(m, r) in &[(2usize, 3usize), (4, 3)] {
+        let l = m + r - 1;
+        for _ in 0..20 {
+            let d = rand_tensor(&mut rng, &[1, l, l]);
+            let g = rand_tensor(&mut rng, &[1, 1, r, r]);
+            let direct = winograd::direct_conv2d(&d, &g);
+            let wino = winograd::winograd_conv2d(&d, &g, m);
+            assert!(
+                direct.allclose(&wino, 1e-4, 1e-4),
+                "F({m},{r}) diff {}",
+                direct.max_abs_diff(&wino)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use swcnn::util::json::Json;
+    let mut rng = Rng::new(1009);
+    // Generate random JSON trees, print, reparse, compare.
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 1e6).round() / 8.0),
+            3 => Json::Str(format!("s{}", rng.next_below(1000))),
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..100 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_quantizer_error_bound() {
+    use swcnn::quant::Quantizer;
+    let mut rng = Rng::new(1010);
+    for _ in 0..20 {
+        let bits = 4 + rng.next_below(12) as u32;
+        let data = rng.gaussian_vec(500);
+        let q = Quantizer::calibrate(bits, &data);
+        for &x in &data {
+            assert!(
+                (q.qdq(x) - x).abs() <= 0.5 * q.step() + 1e-6,
+                "bits={bits}"
+            );
+        }
+    }
+}
