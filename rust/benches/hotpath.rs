@@ -1,22 +1,169 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop:
-//! the detailed PE simulation, the closed-form timing model, Z-Morton
+//! the precomputed-plan Winograd engine vs the seed per-tile oracle, the
+//! detailed PE simulation, the closed-form timing model, Z-Morton
 //! transforms, BCOO compression, and (when artifacts exist) PJRT
 //! execution latency for the per-layer and end-to-end executables.
 //!
 //!   cargo bench --bench hotpath
+//!
+//! Besides the human-readable table, every measurement is written to
+//! `BENCH_hotpath.json` (in the bench working directory) so the perf
+//! trajectory is machine-trackable across PRs.
 
 use swcnn::bench::{print_table, time_it};
 use swcnn::sparse::{synthetic_sparse_matrix, Bcoo};
 use swcnn::systolic::cluster::{BlockMatrix, Cluster};
 use swcnn::systolic::BlockTiming;
-use swcnn::util::{eng, Rng};
-use swcnn::zmorton;
+use swcnn::tensor::Tensor;
+use swcnn::util::json::Json;
+use swcnn::util::{eng, Rng, Stats};
+use swcnn::winograd::{direct_conv2d, winograd_conv2d_reference, WinogradPlan};
+
+/// One recorded measurement: (name, stats, human note).
+struct Record {
+    name: String,
+    stats: Stats,
+    note: String,
+}
+
+fn record(records: &mut Vec<Record>, name: &str, stats: Stats, note: String) {
+    records.push(Record {
+        name: name.to_string(),
+        stats,
+        note,
+    });
+}
+
+fn write_json(records: &[Record], extras: &[(String, f64)]) {
+    use std::collections::BTreeMap;
+    let results: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(r.name.clone())),
+                ("mean_s".to_string(), Json::Num(r.stats.mean)),
+                ("median_s".to_string(), Json::Num(r.stats.median)),
+                ("min_s".to_string(), Json::Num(r.stats.min)),
+                ("max_s".to_string(), Json::Num(r.stats.max)),
+                ("std_dev_s".to_string(), Json::Num(r.stats.std_dev)),
+                ("iters".to_string(), Json::Num(r.stats.n as f64)),
+                ("note".to_string(), Json::Str(r.note.clone())),
+            ]))
+        })
+        .collect();
+    let mut top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("hotpath".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("results".to_string(), Json::Arr(results)),
+    ]);
+    for (k, v) in extras {
+        top.insert(k.clone(), Json::Num(*v));
+    }
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let mut extras = Vec::new();
     let mut rng = Rng::new(1);
 
-    // Detailed cluster simulation, 64^3 dense.
+    // ------------------------------------------------------------------
+    // Plan engine vs the seed per-tile oracle: a VGG-sized layer,
+    // C=64, K=64, 56x56 input, F(4,3).  The oracle regenerates the
+    // rational transform matrices per tile/channel and allocates per
+    // iteration; the plan caches both — this gap is the PR's headline.
+    // ------------------------------------------------------------------
+    let (c, k, hw, m) = (64usize, 64usize, 56usize, 4usize);
+    let x = Tensor::from_vec(&[c, hw, hw], rng.gaussian_vec(c * hw * hw));
+    let w = Tensor::from_vec(&[k, c, 3, 3], rng.gaussian_vec(k * c * 9));
+
+    let s_naive = time_it(0, 2, || {
+        std::hint::black_box(winograd_conv2d_reference(&x, &w, m));
+    });
+    record(
+        &mut records,
+        "wino_naive_f43_c64k64_56",
+        s_naive,
+        "seed per-tile oracle".into(),
+    );
+    rows.push(vec![
+        "winograd naive F(4,3) 64c/64k 56²".into(),
+        format!("{:.1} ms", s_naive.mean * 1e3),
+        "regenerates transforms per tile".into(),
+    ]);
+
+    let mut plan1 = WinogradPlan::new(m, 3).with_threads(1);
+    let s_plan1 = time_it(1, 5, || {
+        std::hint::black_box(plan1.conv2d(&x, &w));
+    });
+    record(
+        &mut records,
+        "wino_plan_1thread_f43_c64k64_56",
+        s_plan1,
+        "plan engine, single worker".into(),
+    );
+    rows.push(vec![
+        "winograd plan (1 thread)".into(),
+        format!("{:.2} ms", s_plan1.mean * 1e3),
+        format!("{:.1}x vs naive", s_naive.mean / s_plan1.mean),
+    ]);
+
+    let mut plan = WinogradPlan::new(m, 3);
+    let s_plan = time_it(1, 5, || {
+        std::hint::black_box(plan.conv2d(&x, &w));
+    });
+    record(
+        &mut records,
+        "wino_plan_f43_c64k64_56",
+        s_plan,
+        format!("plan engine, {} workers", plan.threads()),
+    );
+    rows.push(vec![
+        format!("winograd plan ({} threads)", plan.threads()),
+        format!("{:.2} ms", s_plan.mean * 1e3),
+        format!("{:.1}x vs naive", s_naive.mean / s_plan.mean),
+    ]);
+
+    let bank = plan.transform_filters(&w);
+    let s_bank = time_it(1, 5, || {
+        std::hint::black_box(plan.conv2d_with_filters(&x, &bank));
+    });
+    record(
+        &mut records,
+        "wino_plan_bank_f43_c64k64_56",
+        s_bank,
+        "pre-transformed filter bank (serving steady state)".into(),
+    );
+    rows.push(vec![
+        "winograd plan + filter bank".into(),
+        format!("{:.2} ms", s_bank.mean * 1e3),
+        format!("{:.1}x vs naive", s_naive.mean / s_bank.mean),
+    ]);
+
+    // Correctness gate: a fast-but-wrong engine must fail the bench.
+    let got = plan.conv2d(&x, &w);
+    let want = direct_conv2d(&x, &w);
+    assert!(
+        got.allclose(&want, 1e-4, 1e-4),
+        "plan engine disagrees with direct conv: max diff {}",
+        got.max_abs_diff(&want)
+    );
+    let speedup = s_naive.mean / s_plan.mean;
+    extras.push(("plan_speedup_vs_naive".into(), speedup));
+    rows.push(vec![
+        "plan vs naive speedup".into(),
+        format!("{speedup:.1}x"),
+        "allclose(direct, rtol 1e-4) verified".into(),
+    ]);
+
+    // ------------------------------------------------------------------
+    // Simulator hot paths.
+    // ------------------------------------------------------------------
     let a = rng.gaussian_vec(64 * 64);
     let b = rng.gaussian_vec(64 * 64);
     let s = time_it(2, 10, || {
@@ -26,6 +173,7 @@ fn main() {
             &BlockMatrix::new(&b, 64, 64, 4),
         ));
     });
+    record(&mut records, "cluster_dense_64", s, "fast functional path".into());
     let macs = BlockTiming::new(4).dense_macs(64, 64, 64) as f64;
     rows.push(vec![
         "cluster sim 64^3 dense".into(),
@@ -40,6 +188,7 @@ fn main() {
         let mut cl = Cluster::new(4);
         std::hint::black_box(cl.matmul_sparse(&BlockMatrix::new(&a, 64, 64, 4), &bcoo));
     });
+    record(&mut records, "cluster_sparse90_64", s, String::new());
     rows.push(vec![
         "cluster sim 64^3 sparse90".into(),
         format!("{:.3} ms", s.mean * 1e3),
@@ -51,6 +200,7 @@ fn main() {
     let s = time_it(10, 50, || {
         std::hint::black_box(t.sparse_matmul_cycles(512, &bcoo));
     });
+    record(&mut records, "timing_model_sparse_walk", s, String::new());
     rows.push(vec![
         "timing model sparse walk".into(),
         format!("{:.1} µs", s.mean * 1e6),
@@ -61,10 +211,11 @@ fn main() {
     let s = time_it(2, 20, || {
         let mut acc = 0u64;
         for i in 0..1_000_000u32 {
-            acc = acc.wrapping_add(zmorton::encode(i, i ^ 0xAAAA));
+            acc = acc.wrapping_add(swcnn::zmorton::encode(i, i ^ 0xAAAA));
         }
         std::hint::black_box(acc);
     });
+    record(&mut records, "zmorton_encode_1e6", s, String::new());
     rows.push(vec![
         "zmorton encode x1e6".into(),
         format!("{:.2} ms", s.mean * 1e3),
@@ -76,14 +227,17 @@ fn main() {
     let s = time_it(2, 10, || {
         std::hint::black_box(Bcoo::compress(&big, 512, 512, 4));
     });
+    record(&mut records, "bcoo_compress_512", s, String::new());
     rows.push(vec![
         "BCOO compress 512x512".into(),
         format!("{:.2} ms", s.mean * 1e3),
         String::new(),
     ]);
 
-    // PJRT execution latency (needs artifacts).
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // PJRT execution latency (needs the `pjrt` feature AND artifacts;
+    // without the feature the stub runtime refuses to compile artifacts,
+    // so entering this block would panic and lose the whole report).
+    if cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists() {
         use swcnn::runtime::Runtime;
         let mut rt = Runtime::new("artifacts").expect("runtime");
         for name in ["quickstart", "vgg_tiny_b1", "vgg_tiny_b4", "vgg16_conv5"] {
@@ -94,10 +248,11 @@ fn main() {
                 .next()
                 .map(|i| i.elements())
                 .unwrap_or(0);
-            let x = Rng::new(7).gaussian_vec(n_in);
+            let xin = Rng::new(7).gaussian_vec(n_in);
             let s = time_it(3, 20, || {
-                std::hint::black_box(model.run(&[x.clone()]).expect("run"));
+                std::hint::black_box(model.run(&[xin.clone()]).expect("run"));
             });
+            record(&mut records, &format!("pjrt_{name}"), s, String::new());
             let per_img = match name {
                 "vgg_tiny_b4" => s.mean / 4.0,
                 _ => s.mean,
@@ -112,9 +267,10 @@ fn main() {
         rows.push(vec![
             "pjrt artifacts".into(),
             "skipped".into(),
-            "run `make artifacts`".into(),
+            "needs --features pjrt and `make artifacts`".into(),
         ]);
     }
 
     print_table("hot paths", &["path", "time", "notes"], &rows);
+    write_json(&records, &extras);
 }

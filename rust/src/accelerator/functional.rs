@@ -22,7 +22,7 @@ use crate::sparse::Bcoo;
 use crate::systolic::cluster::{BlockMatrix, Cluster};
 use crate::systolic::SystolicArray;
 use crate::tensor::Tensor;
-use crate::winograd::{matrices, num_tiles, tile_size};
+use crate::winograd::{num_tiles, WinogradPlan};
 
 /// Statistics of one functional layer run.
 #[derive(Debug, Clone, Copy, Default)]
@@ -50,9 +50,12 @@ pub fn conv2d_dense(
     m: usize,
 ) -> (Tensor, FunctionalStats) {
     let r = w.shape()[3];
-    let l = tile_size(m, r);
-    let u = transform_filters(w, m, r);
-    let (v, nty, ntx, mut stats) = input_stage(x, m, r);
+    // One plan per layer run: the transform constants are generated once
+    // and shared by the filter, input, and inverse stages.
+    let plan = WinogradPlan::new(m, r);
+    let l = plan.l();
+    let u = transform_filters_with(&plan, w);
+    let (v, nty, ntx, mut stats) = input_stage(&plan, x);
     let (c_ch, k) = (x.shape()[0], w.shape()[0]);
     let n_tiles = nty * ntx;
 
@@ -71,7 +74,16 @@ pub fn conv2d_dense(
         mm[t * k * n_tiles..(t + 1) * k * n_tiles].copy_from_slice(&prod);
     }
 
-    let y = inverse_stage(&mm, m, r, k, nty, ntx, x.shape()[1] - r + 1, x.shape()[2] - r + 1, &mut stats);
+    let y = inverse_stage(
+        &plan,
+        &mm,
+        k,
+        nty,
+        ntx,
+        x.shape()[1] - r + 1,
+        x.shape()[2] - r + 1,
+        &mut stats,
+    );
     (y, stats)
 }
 
@@ -87,9 +99,10 @@ pub fn conv2d_sparse(
     r: usize,
     k: usize,
 ) -> (Tensor, FunctionalStats) {
-    let l = tile_size(m, r);
+    let plan = WinogradPlan::new(m, r);
+    let l = plan.l();
     assert_eq!(u_bcoo.len(), l * l, "one BCOO directory per coordinate");
-    let (v, nty, ntx, mut stats) = input_stage(x, m, r);
+    let (v, nty, ntx, mut stats) = input_stage(&plan, x);
     let c_ch = x.shape()[0];
     let n_tiles = nty * ntx;
 
@@ -121,30 +134,30 @@ pub fn conv2d_sparse(
     }
 
     let (h, w_in) = (x.shape()[1], x.shape()[2]);
-    let y = inverse_stage(&mm, m, r, k, nty, ntx, h - r + 1, w_in - r + 1, &mut stats);
+    let y = inverse_stage(&plan, &mm, k, nty, ntx, h - r + 1, w_in - r + 1, &mut stats);
     (y, stats)
 }
 
 /// Pre-transform spatial filters to the matrix form (l*l, K, C), flattened.
 /// (Offline in the paper; uses the exact transform matrices.)
 pub fn transform_filters(w: &Tensor, m: usize, r: usize) -> Vec<f32> {
-    let l = tile_size(m, r);
+    transform_filters_with(&WinogradPlan::new(m, r), w)
+}
+
+/// Same, reusing an existing plan's cached transforms: U = G g G^T per
+/// (k, c) via the plan's [`crate::winograd::FilterBank`], scattered to the
+/// coordinate-major (l*l, K, C) layout the cluster matmuls consume.
+pub fn transform_filters_with(plan: &WinogradPlan, w: &Tensor) -> Vec<f32> {
+    let l = plan.l();
     let (k, c) = (w.shape()[0], w.shape()[1]);
-    let (_, g, _) = matrices(m, r);
-    let gt = g.transpose2();
+    let bank = plan.transform_filters(w);
     let mut u = vec![0.0f32; l * l * k * c];
     for kk in 0..k {
         for cc in 0..c {
-            let mut f = Tensor::zeros(&[r, r]);
-            for p in 0..r {
-                for q in 0..r {
-                    f.set2(p, q, w.at4(kk, cc, p, q));
-                }
-            }
-            let ut = g.matmul(&f).matmul(&gt); // (l, l)
+            let tile = bank.tile(kk, cc);
             for i in 0..l {
                 for j in 0..l {
-                    u[((i * l + j) * k + kk) * c + cc] = ut.at2(i, j);
+                    u[((i * l + j) * k + kk) * c + cc] = tile[i * l + j];
                 }
             }
         }
@@ -160,9 +173,10 @@ pub fn transform_and_prune_filters(
     r: usize,
     sparsity: f64,
 ) -> Vec<Bcoo> {
-    let l = tile_size(m, r);
+    let plan = WinogradPlan::new(m, r);
+    let l = plan.l();
     let (k, c) = (w.shape()[0], w.shape()[1]);
-    let u = transform_filters(w, m, r);
+    let u = transform_filters_with(&plan, w);
     let pad = |x: usize| x.div_ceil(l) * l;
     let (cp, kp) = (pad(c), pad(k));
     (0..l * l)
@@ -181,39 +195,42 @@ pub fn transform_and_prune_filters(
 }
 
 /// Stage 1: adder-only input transforms on the systolic arrays; returns
-/// the matrix-form V (l*l, C, n_tiles) flattened + tile grid dims.
+/// the matrix-form V (l*l, C, n_tiles) flattened + tile grid dims.  The
+/// stationary matrix B comes straight from the plan's cached constants.
 fn input_stage(
+    plan: &WinogradPlan,
     x: &Tensor,
-    m: usize,
-    r: usize,
 ) -> (Vec<f32>, usize, usize, FunctionalStats) {
-    let l = tile_size(m, r);
+    let (m, l) = (plan.m(), plan.l());
+    let r = plan.r();
     let (c_ch, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     let (oh, ow) = (h - r + 1, w_in - r + 1);
     let (nty, ntx) = (num_tiles(oh, m), num_tiles(ow, m));
     let n_tiles = nty * ntx;
-    let (_, _, bt) = matrices(m, r);
-    let b_mat = bt.transpose2();
+    let b_mat = plan.b();
 
     let mut stats = FunctionalStats::default();
     let mut arr = SystolicArray::new(l);
     let mut v = vec![0.0f32; l * l * c_ch * n_tiles];
     let mut d = vec![0.0f32; l * l];
     for cc in 0..c_ch {
+        let plane = x.plane3(cc);
         for ty in 0..nty {
+            let y0 = ty * m;
+            let nrows = (h - y0).min(l);
             for tx in 0..ntx {
-                // Gather the overlapping tile (zero-padded at the edges).
-                for i in 0..l {
-                    for j in 0..l {
-                        let (y, xx) = (ty * m + i, tx * m + j);
-                        d[i * l + j] = if y < h && xx < w_in {
-                            x.at3(cc, y, xx)
-                        } else {
-                            0.0
-                        };
-                    }
+                let x0 = tx * m;
+                let ncols = (w_in - x0).min(l);
+                // Gather the overlapping tile into the zero-padded staging
+                // buffer (rows are contiguous copies).
+                if nrows < l || ncols < l {
+                    d.fill(0.0);
                 }
-                let vt = arr.winograd_transform(&d, b_mat.data());
+                for i in 0..nrows {
+                    d[i * l..i * l + ncols]
+                        .copy_from_slice(&plane[(y0 + i) * w_in + x0..][..ncols]);
+                }
+                let vt = arr.winograd_transform(&d, b_mat);
                 let b_idx = ty * ntx + tx;
                 for i in 0..l {
                     for j in 0..l {
@@ -230,12 +247,12 @@ fn input_stage(
     (v, nty, ntx, stats)
 }
 
-/// Stage 3: inverse transforms (A^T M A) + scatter to feature maps.
+/// Stage 3: inverse transforms (A^T M A) + scatter to feature maps.  The
+/// rectangular stationary matrix A is the plan's cached (l x m) slice.
 #[allow(clippy::too_many_arguments)]
 fn inverse_stage(
+    plan: &WinogradPlan,
     mm: &[f32],
-    m: usize,
-    r: usize,
     k: usize,
     nty: usize,
     ntx: usize,
@@ -243,10 +260,9 @@ fn inverse_stage(
     ow: usize,
     stats: &mut FunctionalStats,
 ) -> Tensor {
-    let l = tile_size(m, r);
+    let (m, l) = (plan.m(), plan.l());
     let n_tiles = nty * ntx;
-    let (at, _, _) = matrices(m, r);
-    let a_mat = at.transpose2(); // (l, m)
+    let a_mat = plan.a(); // (l, m) row-major
     let mut arr = SystolicArray::new(l);
     let mut out = Tensor::zeros(&[k, oh, ow]);
     let mut tile = vec![0.0f32; l * l];
@@ -263,7 +279,7 @@ fn inverse_stage(
                 // Inverse via two adder passes with the rectangular A:
                 // functionally A^T t A; the array result is computed with
                 // the same pass primitive (padded to l with zero rows).
-                let y_t = inverse_tile(&mut arr, &tile, &a_mat, l, m);
+                let y_t = inverse_tile(&mut arr, &tile, a_mat, l, m);
                 for i in 0..m {
                     for j in 0..m {
                         let (y, xx) = (ty * m + i, tx * m + j);
@@ -285,16 +301,14 @@ fn inverse_stage(
 fn inverse_tile(
     arr: &mut SystolicArray,
     t: &[f32],
-    a_mat: &Tensor, // (l, m)
+    a_mat: &[f32], // (l, m) row-major
     l: usize,
     m: usize,
 ) -> Vec<f32> {
     // Pad A to l x l with zero columns; the extra outputs are discarded.
     let mut a_pad = vec![0.0f32; l * l];
     for i in 0..l {
-        for j in 0..m {
-            a_pad[i * l + j] = a_mat.at2(i, j);
-        }
+        a_pad[i * l..i * l + m].copy_from_slice(&a_mat[i * m..(i + 1) * m]);
     }
     let full = arr.winograd_transform(t, &a_pad); // (l x l), top-left m x m valid
     let mut out = vec![0.0f32; m * m];
@@ -381,7 +395,8 @@ mod tests {
         assert!(stats.skipped_steps > 0, "50% pruning must skip steps");
 
         // Reference: rebuild the pruned U and run the plain matmul path.
-        let (v, nty, ntx, _) = super::input_stage(&x, m, 3);
+        let plan = WinogradPlan::new(m, 3);
+        let (v, nty, ntx, _) = super::input_stage(&plan, &x);
         let n_tiles = nty * ntx;
         let mut mm = vec![0.0f32; l * l * k * n_tiles];
         for t in 0..l * l {
@@ -399,7 +414,7 @@ mod tests {
             }
         }
         let mut st = FunctionalStats::default();
-        let want = super::inverse_stage(&mm, m, 3, k, nty, ntx, 6, 6, &mut st);
+        let want = super::inverse_stage(&plan, &mm, k, nty, ntx, 6, 6, &mut st);
         assert!(
             ys.allclose(&want, 1e-3, 1e-3),
             "max diff {}",

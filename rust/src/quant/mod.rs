@@ -74,15 +74,32 @@ pub fn direct_conv2d_quant(x: &Tensor, w: &Tensor, bits: u32) -> Tensor {
 /// Quantized Winograd convolution: quantize the *transformed* operands
 /// (what the systolic arrays actually see).  The U/V dynamic-range
 /// dilation makes this strictly harder than quantizing the spatial form.
+///
+/// Builds a one-shot [`winograd::WinogradPlan`]; sweeps quantizing many
+/// layers at the same F(m, r) should hold a plan and call
+/// [`winograd_conv2d_quant_with_plan`].
 pub fn winograd_conv2d_quant(
     x: &Tensor,
     w: &Tensor,
     m: usize,
     bits: u32,
 ) -> Tensor {
+    let mut plan = winograd::WinogradPlan::new(m, w.shape()[3]);
+    winograd_conv2d_quant_with_plan(&mut plan, x, w, bits)
+}
+
+/// Plan-reusing variant of [`winograd_conv2d_quant`]: the transform
+/// constants and scratch come from the caller's plan, so repeated calls
+/// (bit-width sweeps, per-layer calibration) pay no per-call setup.
+pub fn winograd_conv2d_quant_with_plan(
+    plan: &mut winograd::WinogradPlan,
+    x: &Tensor,
+    w: &Tensor,
+    bits: u32,
+) -> Tensor {
     let qx = Quantizer::calibrate(bits, x.data());
     let qw = Quantizer::calibrate(bits, w.data());
-    winograd::winograd_conv2d(&qx.qdq_tensor(x), &qw.qdq_tensor(w), m)
+    plan.conv2d(&qx.qdq_tensor(x), &qw.qdq_tensor(w))
 }
 
 /// DSP-packing model: MACs per DSP slice per cycle at a given width.
@@ -179,6 +196,19 @@ mod tests {
         let rel16 = q16.max_abs_diff(&exact) / exact.max_abs();
         assert!(rel8 > rel16, "8-bit must be noisier than 16-bit");
         assert!(rel8 < 0.1, "8-bit relative error {rel8} implausibly large");
+    }
+
+    #[test]
+    fn plan_reuse_matches_one_shot_quant() {
+        let mut rng = Rng::new(75);
+        let x = rand_tensor(&mut rng, &[2, 9, 9]);
+        let w = rand_tensor(&mut rng, &[3, 2, 3, 3]);
+        let mut plan = winograd::WinogradPlan::new(4, 3);
+        for bits in [8u32, 16] {
+            let a = winograd_conv2d_quant_with_plan(&mut plan, &x, &w, bits);
+            let b = winograd_conv2d_quant(&x, &w, 4, bits);
+            assert_eq!(a, b, "bits={bits}: plan reuse must be exact");
+        }
     }
 
     #[test]

@@ -17,7 +17,6 @@ use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 /// One input slot of an artifact.
 #[derive(Debug, Clone)]
@@ -160,121 +159,192 @@ pub fn read_f32_bin(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// A compiled artifact: PJRT executable + its cached weight literals.
-pub struct LoadedModel {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    weights: Vec<xla::Literal>,
+/// Execution backend: PJRT through the `xla` crate when the `pjrt`
+/// feature is enabled; otherwise an offline stub that parses manifests
+/// and loads weight binaries but refuses to execute.  The offline crate
+/// set does not ship `xla`, so the stub is the default (see README).
+#[cfg(feature = "pjrt")]
+mod exec {
+    use super::{read_f32_bin, ArtifactSpec, Manifest};
+    use anyhow::{bail, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    /// A compiled artifact: PJRT executable + its cached weight literals.
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+        weights: Vec<xla::Literal>,
+    }
+
+    impl LoadedModel {
+        /// Execute with request-time inputs (flat f32 per input, in
+        /// manifest order).  Returns the flat f32 outputs.
+        pub fn run(&self, request_inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let n_req = self.spec.n_request_inputs();
+            if request_inputs.len() != n_req {
+                bail!(
+                    "{}: got {} request inputs, expected {n_req}",
+                    self.spec.name,
+                    request_inputs.len()
+                );
+            }
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(self.spec.inputs.len());
+            let mut req_iter = request_inputs.iter();
+            let mut w_iter = self.weights.iter();
+            for spec in &self.spec.inputs {
+                if spec.data_file.is_some() {
+                    // Weight literals are cached; clone is a host copy.
+                    let w = w_iter.next().expect("weight literal");
+                    args.push(clone_literal(w)?);
+                } else {
+                    let data = req_iter.next().expect("request input");
+                    if data.len() != spec.elements() {
+                        bail!(
+                            "{}: input {} has {} elements, expected {}",
+                            self.spec.name,
+                            spec.name,
+                            data.len(),
+                            spec.elements()
+                        );
+                    }
+                    args.push(literal_from_f32(data, &spec.shape)?);
+                }
+            }
+            let result = self.exe.execute::<xla::Literal>(&args)?;
+            let out = result[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            let tuple = out.to_tuple()?;
+            let mut flats = Vec::with_capacity(tuple.len());
+            for lit in tuple {
+                flats.push(lit.to_vec::<f32>()?);
+            }
+            Ok(flats)
+        }
+    }
+
+    fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+        // The xla crate's Literal is not Clone; round-trip through host data.
+        let shape = lit.array_shape()?;
+        let data = lit.to_vec::<f32>()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+    }
+
+    /// The PJRT runtime: one CPU client, many compiled artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        models: HashMap<String, Arc<LoadedModel>>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client and parse the manifest (no
+        /// compilation yet).
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self {
+                client,
+                manifest,
+                models: HashMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch the cached) artifact and load its weights.
+        pub fn load(&mut self, name: &str) -> Result<Arc<LoadedModel>> {
+            if let Some(m) = self.models.get(name) {
+                return Ok(m.clone());
+            }
+            let spec = self.manifest.get(name)?.clone();
+            let hlo_path = self.manifest.dir.join(&spec.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(&hlo_path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let mut weights = Vec::new();
+            for inp in &spec.inputs {
+                if let Some(file) = &inp.data_file {
+                    let data =
+                        read_f32_bin(&self.manifest.dir.join(file), inp.elements())?;
+                    weights.push(literal_from_f32(&data, &inp.shape)?);
+                }
+            }
+            let model = Arc::new(LoadedModel { spec, exe, weights });
+            self.models.insert(name.to_string(), model.clone());
+            Ok(model)
+        }
+
+        pub fn loaded_names(&self) -> Vec<&str> {
+            self.models.keys().map(|s| s.as_str()).collect()
+        }
+    }
 }
 
-impl LoadedModel {
-    /// Execute with request-time inputs (flat f32 per input, in manifest
-    /// order).  Returns the flat f32 outputs.
-    pub fn run(&self, request_inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let n_req = self.spec.n_request_inputs();
-        if request_inputs.len() != n_req {
+#[cfg(not(feature = "pjrt"))]
+mod exec {
+    use super::{ArtifactSpec, Manifest};
+    use anyhow::{bail, Result};
+    use std::path::Path;
+    use std::sync::Arc;
+
+    /// Stub model: carries the parsed spec, cannot execute.
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
+    }
+
+    impl LoadedModel {
+        pub fn run(&self, _request_inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
             bail!(
-                "{}: got {} request inputs, expected {n_req}",
-                self.spec.name,
-                request_inputs.len()
+                "{}: built without the `pjrt` feature; PJRT execution is \
+                 unavailable in the offline crate set",
+                self.spec.name
             );
         }
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.spec.inputs.len());
-        let mut req_iter = request_inputs.iter();
-        let mut w_iter = self.weights.iter();
-        for spec in &self.spec.inputs {
-            if spec.data_file.is_some() {
-                // Weight literals are cached; clone is a host copy.
-                let w = w_iter.next().expect("weight literal");
-                args.push(clone_literal(w)?);
-            } else {
-                let data = req_iter.next().expect("request input");
-                if data.len() != spec.elements() {
-                    bail!(
-                        "{}: input {} has {} elements, expected {}",
-                        self.spec.name,
-                        spec.name,
-                        data.len(),
-                        spec.elements()
-                    );
-                }
-                args.push(literal_from_f32(data, &spec.shape)?);
-            }
+    }
+
+    /// Stub runtime: manifest parsing works, compilation does not (so
+    /// nothing is ever loaded and `loaded_names` is always empty).
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(Self { manifest })
         }
-        let result = self.exe.execute::<xla::Literal>(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let tuple = out.to_tuple()?;
-        let mut flats = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            flats.push(lit.to_vec::<f32>()?);
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `pjrt` feature)".to_string()
         }
-        Ok(flats)
-    }
-}
 
-fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
-fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
-    // The xla crate's Literal is not Clone; round-trip through host data.
-    let shape = lit.array_shape()?;
-    let data = lit.to_vec::<f32>()?;
-    let dims: Vec<i64> = shape.dims().to_vec();
-    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
-}
-
-/// The PJRT runtime: one CPU client, many compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    models: HashMap<String, Arc<LoadedModel>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and parse the manifest (no compilation yet).
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            manifest,
-            models: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached) artifact and load its weights.
-    pub fn load(&mut self, name: &str) -> Result<Arc<LoadedModel>> {
-        if let Some(m) = self.models.get(name) {
-            return Ok(m.clone());
+        pub fn load(&mut self, name: &str) -> Result<Arc<LoadedModel>> {
+            // Resolve the spec first so a missing artifact reports as
+            // such; an existing one fails with the feature-gate message.
+            let spec = self.manifest.get(name)?;
+            bail!(
+                "cannot compile artifact {:?}: built without the `pjrt` feature",
+                spec.name
+            );
         }
-        let spec = self.manifest.get(name)?.clone();
-        let hlo_path = self.manifest.dir.join(&spec.hlo_file);
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let mut weights = Vec::new();
-        for inp in &spec.inputs {
-            if let Some(file) = &inp.data_file {
-                let data = read_f32_bin(&self.manifest.dir.join(file), inp.elements())?;
-                weights.push(literal_from_f32(&data, &inp.shape)?);
-            }
-        }
-        let model = Arc::new(LoadedModel { spec, exe, weights });
-        self.models.insert(name.to_string(), model.clone());
-        Ok(model)
-    }
 
-    pub fn loaded_names(&self) -> Vec<&str> {
-        self.models.keys().map(|s| s.as_str()).collect()
+        pub fn loaded_names(&self) -> Vec<&str> {
+            Vec::new()
+        }
     }
 }
+
+pub use exec::{LoadedModel, Runtime};
 
 #[cfg(test)]
 mod tests {

@@ -135,12 +135,27 @@ impl Bcoo {
     /// Expand physical block `z` to a dense block-sized tile (the FIFO
     /// decompressor of paper §4.2's sparse cluster).
     pub fn expand_block(&self, z: u64) -> Option<Vec<f32>> {
-        let e = self.block_entries(z)?;
         let mut tile = vec![0.0f32; self.block * self.block];
-        for k in 0..e.an.len() {
-            tile[e.ai[k] as usize * self.block + e.aj[k] as usize] = e.an[k];
+        if self.expand_block_into(z, &mut tile) {
+            Some(tile)
+        } else {
+            None
         }
-        Some(tile)
+    }
+
+    /// Decompress physical block `z` into caller scratch (`out` must be
+    /// zeroed, `block * block` elements).  Returns false when the block
+    /// was pruned.  This is the allocation-free decompressor the cluster
+    /// FIFOs use on the hot path.
+    pub fn expand_block_into(&self, z: u64, out: &mut [f32]) -> bool {
+        debug_assert_eq!(out.len(), self.block * self.block);
+        let Some(e) = self.block_entries(z) else {
+            return false;
+        };
+        for k in 0..e.an.len() {
+            out[e.ai[k] as usize * self.block + e.aj[k] as usize] = e.an[k];
+        }
+        true
     }
 
     /// Storage cost in bytes (values f32 + u8 coords + block directory),

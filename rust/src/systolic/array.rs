@@ -324,12 +324,13 @@ mod tests {
     #[test]
     fn transform_pass_is_adder_only_for_f23() {
         let mut rng = Rng::new(23);
-        let (_, _, bt) = winograd::matrices(2, 3);
-        let b = bt.transpose2(); // stationary matrix is B, not B^T
+        // The stationary matrix is B (not B^T), straight from the plan's
+        // cached constants — the same slice the execution engine uses.
+        let plan = winograd::WinogradPlan::new(2, 3);
         let l = 4;
         let mut arr = SystolicArray::new(l);
         let d = rand_block(&mut rng, l);
-        let _ = arr.transform_pass(&d, b.data());
+        let _ = arr.transform_pass(&d, plan.b());
         assert_eq!(arr.stats.macs, 0, "transform must use no multipliers");
         assert!(arr.stats.adds > 0);
     }
@@ -339,13 +340,13 @@ mod tests {
         let mut rng = Rng::new(24);
         for (m, r) in [(2usize, 3usize), (4, 3), (6, 3)] {
             let l = winograd::tile_size(m, r);
+            let plan = winograd::WinogradPlan::new(m, r);
             let (_, _, bt) = winograd::matrices(m, r);
-            let b = bt.transpose2();
             let mut arr = SystolicArray::new(l);
             let d_vec = rand_block(&mut rng, l);
-            let got = arr.winograd_transform(&d_vec, b.data());
+            let got = arr.winograd_transform(&d_vec, plan.b());
             let d = Tensor::from_vec(&[l, l], d_vec);
-            let want = bt.matmul(&d).matmul(&b);
+            let want = bt.matmul(&d).matmul(&bt.transpose2());
             for (g, w) in got.iter().zip(want.data()) {
                 assert!((g - w).abs() < 1e-4, "F({m},{r}): {g} vs {w}");
             }
@@ -356,11 +357,10 @@ mod tests {
     fn transform_add_count_tracks_nnz() {
         // adds per pass = l * sum over used entries; zero entries pass.
         let l = 4;
-        let (_, _, bt) = winograd::matrices(2, 3);
-        let b = bt.transpose2();
+        let plan = winograd::WinogradPlan::new(2, 3);
         let mut arr = SystolicArray::new(l);
         let d = vec![1.0; l * l];
-        let _ = arr.transform_pass(&d, b.data());
+        let _ = arr.transform_pass(&d, plan.b());
         let (nnz_b, _) = winograd::nnz_counts(2, 3);
         // Each output column j consumes nnz(B[:, i]) adds per (i, j) pair:
         // total = l * nnz(B) for ±1 entries (F(2,3) has only ±1).

@@ -44,23 +44,31 @@ impl<'a> BlockMatrix<'a> {
     }
 
     /// Materialize block (rb, cb), zero-padded outside the matrix.
+    ///
+    /// Allocates; the hot paths use [`BlockMatrix::get_into`] with FIFO-
+    /// recycled scratch instead.
     pub fn get(&self, rb: usize, cb: usize) -> Vec<f32> {
-        let l = self.block;
-        let mut out = vec![0.0f32; l * l];
-        for i in 0..l {
-            let r = rb * l + i;
-            if r >= self.rows {
-                break;
-            }
-            for j in 0..l {
-                let c = cb * l + j;
-                if c >= self.cols {
-                    break;
-                }
-                out[i * l + j] = self.data[r * self.cols + c];
-            }
-        }
+        let mut out = vec![0.0f32; self.block * self.block];
+        self.get_into(rb, cb, &mut out);
         out
+    }
+
+    /// Copy block (rb, cb) into caller scratch (`out` must be zeroed,
+    /// `block * block` elements); rows are copied as contiguous slices.
+    /// Blocks outside the matrix stay all-zero (ragged-edge padding).
+    pub fn get_into(&self, rb: usize, cb: usize, out: &mut [f32]) {
+        let l = self.block;
+        debug_assert_eq!(out.len(), l * l);
+        let (r0, c0) = (rb * l, cb * l);
+        if r0 >= self.rows || c0 >= self.cols {
+            return;
+        }
+        let nrows = (self.rows - r0).min(l);
+        let ncols = (self.cols - c0).min(l);
+        for i in 0..nrows {
+            let src = &self.data[(r0 + i) * self.cols + c0..][..ncols];
+            out[i * l..i * l + ncols].copy_from_slice(src);
+        }
     }
 }
 
@@ -182,6 +190,7 @@ impl Cluster {
         assert_eq!(a.block, self.l);
         assert_eq!(b.block, self.l);
         let l = self.l;
+        let sz = l * l;
         let (rb, tb, sb) = (a.block_rows(), a.block_cols(), b.block_cols());
         let (rq, sq) = (rb.div_ceil(2), sb.div_ceil(2));
         let mut c = vec![0.0f32; a.rows * b.cols];
@@ -204,31 +213,32 @@ impl Cluster {
                     // Each fetched block serves two arrays: the second
                     // consumer's read hits the resident FIFO slot — this
                     // is the §4.2 bandwidth sharing, and the accounting
-                    // (reads vs fetches) measures it.
-                    let a_top = self
-                        .a_fifo
-                        .read_block(pack(pos[NW].0, k), || a.get(pos[NW].0, k));
+                    // (reads vs fetches) measures it.  Misses fill FIFO-
+                    // recycled scratch: no per-block allocation.
+                    let a_top = self.a_fifo.read_block_with(pack(pos[NW].0, k), sz, |buf| {
+                        a.get_into(pos[NW].0, k, buf)
+                    });
                     let _ = self
                         .a_fifo
-                        .read_block(pack(pos[NW].0, k), || unreachable!());
-                    let a_bot = self
-                        .a_fifo
-                        .read_block(pack(pos[SW].0, k), || a.get(pos[SW].0, k));
+                        .read_block_with(pack(pos[NW].0, k), sz, |_| unreachable!());
+                    let a_bot = self.a_fifo.read_block_with(pack(pos[SW].0, k), sz, |buf| {
+                        a.get_into(pos[SW].0, k, buf)
+                    });
                     let _ = self
                         .a_fifo
-                        .read_block(pack(pos[SW].0, k), || unreachable!());
-                    let b_left = self
-                        .b_fifo
-                        .read_block(pack(k, pos[NW].1), || b.get(k, pos[NW].1));
+                        .read_block_with(pack(pos[SW].0, k), sz, |_| unreachable!());
+                    let b_left = self.b_fifo.read_block_with(pack(k, pos[NW].1), sz, |buf| {
+                        b.get_into(k, pos[NW].1, buf)
+                    });
                     let _ = self
                         .b_fifo
-                        .read_block(pack(k, pos[NW].1), || unreachable!());
-                    let b_right = self
-                        .b_fifo
-                        .read_block(pack(k, pos[NE].1), || b.get(k, pos[NE].1));
+                        .read_block_with(pack(k, pos[NW].1), sz, |_| unreachable!());
+                    let b_right = self.b_fifo.read_block_with(pack(k, pos[NE].1), sz, |buf| {
+                        b.get_into(k, pos[NE].1, buf)
+                    });
                     let _ = self
                         .b_fifo
-                        .read_block(pack(k, pos[NE].1), || unreachable!());
+                        .read_block_with(pack(k, pos[NE].1), sz, |_| unreachable!());
                     self.mac(NW, &a_top, &b_left);
                     self.mac(NE, &a_top, &b_right);
                     self.mac(SW, &a_bot, &b_left);
@@ -255,6 +265,7 @@ impl Cluster {
         assert_eq!(a.cols, b.rows, "inner dims");
         assert_eq!(b.block, self.l);
         let l = self.l;
+        let sz = l * l;
         let (rb, tb, sb) = (
             a.block_rows(),
             a.block_cols(),
@@ -291,28 +302,28 @@ impl Cluster {
                     // halves" in sparse mode (§4.2): each side reads its A
                     // block independently; sharing only happens when both
                     // weight columns survived pruning.
-                    let a_top = self
-                        .a_fifo
-                        .read_block(pack(pos[NW].0, k), || a.get(pos[NW].0, k));
-                    let a_bot = self
-                        .a_fifo
-                        .read_block(pack(pos[SW].0, k), || a.get(pos[SW].0, k));
+                    let a_top = self.a_fifo.read_block_with(pack(pos[NW].0, k), sz, |buf| {
+                        a.get_into(pos[NW].0, k, buf)
+                    });
+                    let a_bot = self.a_fifo.read_block_with(pack(pos[SW].0, k), sz, |buf| {
+                        a.get_into(pos[SW].0, k, buf)
+                    });
                     if left_present && right_present {
                         let _ = self
                             .a_fifo
-                            .read_block(pack(pos[NW].0, k), || unreachable!());
+                            .read_block_with(pack(pos[NW].0, k), sz, |_| unreachable!());
                         let _ = self
                             .a_fifo
-                            .read_block(pack(pos[SW].0, k), || unreachable!());
+                            .read_block_with(pack(pos[SW].0, k), sz, |_| unreachable!());
                     }
                     if left_present {
-                        // Decompressor expands the BCOO block into the FIFO;
-                        // the block stays shared by the NW/SW array pair
-                        // (the paper's B2 example).
-                        let b_left = self
-                            .b_fifo
-                            .read_block(zl, || b.expand_block(zl).unwrap());
-                        let _ = self.b_fifo.read_block(zl, || unreachable!());
+                        // Decompressor expands the BCOO block straight into
+                        // FIFO-recycled scratch; the block stays shared by
+                        // the NW/SW array pair (the paper's B2 example).
+                        let b_left = self.b_fifo.read_block_with(zl, sz, |buf| {
+                            assert!(b.expand_block_into(zl, buf))
+                        });
+                        let _ = self.b_fifo.read_block_with(zl, sz, |_| unreachable!());
                         self.mac(NW, &a_top, &b_left);
                         self.mac(SW, &a_bot, &b_left);
                         self.stats.array_steps_executed += 2;
@@ -320,10 +331,10 @@ impl Cluster {
                         self.stats.array_steps_skipped += 2;
                     }
                     if right_present {
-                        let b_right = self
-                            .b_fifo
-                            .read_block(zr, || b.expand_block(zr).unwrap());
-                        let _ = self.b_fifo.read_block(zr, || unreachable!());
+                        let b_right = self.b_fifo.read_block_with(zr, sz, |buf| {
+                            assert!(b.expand_block_into(zr, buf))
+                        });
+                        let _ = self.b_fifo.read_block_with(zr, sz, |_| unreachable!());
                         self.mac(NE, &a_top, &b_right);
                         self.mac(SE, &a_bot, &b_right);
                         self.stats.array_steps_executed += 2;
@@ -505,6 +516,19 @@ mod tests {
             &BlockMatrix::new(&b, k, n, 4),
         );
         assert_close(&c, &dense_matmul(&a, &b, m, k, n), 1e-3);
+    }
+
+    #[test]
+    fn get_into_matches_get_and_keeps_padding() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32 + 1.0).collect();
+        let bm = BlockMatrix::new(&data, 2, 3, 4);
+        let mut scratch = vec![0.0f32; 16];
+        bm.get_into(0, 0, &mut scratch);
+        assert_eq!(scratch, bm.get(0, 0));
+        // Out-of-range block leaves the zeroed scratch untouched.
+        scratch.fill(0.0);
+        bm.get_into(5, 5, &mut scratch);
+        assert!(scratch.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -19,6 +19,10 @@ use std::rc::Rc;
 pub struct CircularFifo {
     capacity: usize,
     slots: Vec<(u64, Rc<Vec<f32>>)>, // (block id, data), newest last
+    /// Evicted block buffers reclaimed for reuse: once every consumer has
+    /// dropped its handle, the allocation is recycled instead of freed, so
+    /// the steady-state fetch path performs zero heap allocations.
+    free: Vec<Vec<f32>>,
     pub fetches: u64,                // blocks brought in from memory
     pub reads: u64,                  // blocks served to systolic arrays
     pub hits: u64,                   // reads served without a new fetch
@@ -30,6 +34,7 @@ impl CircularFifo {
         Self {
             capacity,
             slots: Vec::with_capacity(capacity),
+            free: Vec::new(),
             fetches: 0,
             reads: 0,
             hits: 0,
@@ -50,6 +55,9 @@ impl CircularFifo {
 
     /// Serve block `id`; `load` materializes it on a miss (one memory
     /// fetch).  Returns a shared handle to the block data.
+    ///
+    /// Allocates the block on every miss; the hot paths use
+    /// [`CircularFifo::read_block_with`], which recycles evicted buffers.
     pub fn read_block<F>(&mut self, id: u64, load: F) -> Rc<Vec<f32>>
     where
         F: FnOnce() -> Vec<f32>,
@@ -59,10 +67,40 @@ impl CircularFifo {
             self.hits += 1;
             return self.slots[pos].1.clone();
         }
-        let data = Rc::new(load());
+        self.insert(id, load())
+    }
+
+    /// Serve block `id`; on a miss, `fill` writes the block into a
+    /// zeroed buffer of `elems` elements drawn from the recycled free
+    /// list — zero heap allocations in steady state (the caller must
+    /// drop its handles before the block rotates out for the buffer to
+    /// be reclaimed).
+    pub fn read_block_with<F>(&mut self, id: u64, elems: usize, fill: F) -> Rc<Vec<f32>>
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        self.reads += 1;
+        if let Some(pos) = self.slots.iter().position(|(bid, _)| *bid == id) {
+            self.hits += 1;
+            return self.slots[pos].1.clone();
+        }
+        let mut buf = self.free.pop().unwrap_or_default();
+        buf.clear();
+        buf.resize(elems, 0.0);
+        fill(&mut buf);
+        self.insert(id, buf)
+    }
+
+    fn insert(&mut self, id: u64, buf: Vec<f32>) -> Rc<Vec<f32>> {
+        let data = Rc::new(buf);
         self.fetches += 1;
         if self.slots.len() == self.capacity {
-            self.slots.remove(0); // circular: oldest block rotates out
+            // Circular: the oldest block rotates out.  If no array still
+            // holds it, reclaim the allocation.
+            let (_, old) = self.slots.remove(0);
+            if let Ok(b) = Rc::try_unwrap(old) {
+                self.free.push(b);
+            }
         }
         self.slots.push((id, data.clone()));
         data
@@ -106,6 +144,22 @@ mod tests {
             vec![1.0]
         });
         assert!(evicted_reloaded);
+    }
+
+    #[test]
+    fn read_block_with_recycles_buffers() {
+        let mut f = CircularFifo::new(1);
+        let a = f.read_block_with(1, 4, |buf| buf[0] = 1.0);
+        assert_eq!(*a, vec![1.0, 0.0, 0.0, 0.0]);
+        drop(a); // release the handle so eviction can reclaim
+        let b = f.read_block_with(2, 4, |buf| buf[3] = 2.0);
+        // Block 1 rotated out and its buffer was reclaimed; the new block
+        // must still arrive zeroed.
+        assert_eq!(*b, vec![0.0, 0.0, 0.0, 2.0]);
+        assert_eq!((f.fetches, f.reads, f.hits), (2, 2, 0));
+        let c = f.read_block_with(2, 4, |_| unreachable!());
+        assert_eq!(*b, *c);
+        assert_eq!(f.hits, 1);
     }
 
     #[test]

@@ -73,6 +73,27 @@ impl Tensor {
         self
     }
 
+    /// Set every element to `v` (scratch reuse on the hot path).
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Row `i` of a 2-D tensor as a contiguous slice.
+    #[inline]
+    pub fn row2(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let n = self.shape[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    /// Plane `c` of a 3-D (C, H, W) tensor as a contiguous (H*W) slice.
+    #[inline]
+    pub fn plane3(&self, c: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 3);
+        let sz = self.shape[1] * self.shape[2];
+        &self.data[c * sz..(c + 1) * sz]
+    }
+
     #[inline]
     fn index2(&self, i: usize, j: usize) -> usize {
         debug_assert_eq!(self.shape.len(), 2);
@@ -261,6 +282,16 @@ mod tests {
         assert!(a.allclose(&b, 1e-5, 1e-5));
         let c = Tensor::from_vec(&[2], vec![1.1, 100.0]);
         assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fill_and_slices() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row2(1), &[4., 5., 6.]);
+        t.fill(0.5);
+        assert!(t.data().iter().all(|&x| x == 0.5));
+        let p = Tensor::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(p.plane3(1), &[4., 5., 6., 7.]);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! same construction) so the rust simulator, the PJRT artifacts, and the
 //! analytical model all share one algebra.  See paper §2.2.
 
+pub mod plan;
 pub mod rational;
+
+pub use plan::{FilterBank, WinogradPlan};
 
 use crate::tensor::Tensor;
 use rational::Rat;
@@ -212,10 +215,22 @@ pub fn direct_conv2d(x: &Tensor, w: &Tensor) -> Tensor {
     out
 }
 
-/// Full dense Winograd convolution on CPU (tile-by-tile), the functional
-/// oracle for the systolic pipeline.  Zero-pads to whole tiles like the
-/// Pallas kernels.
+/// Full dense Winograd convolution on CPU.  Thin wrapper over
+/// [`WinogradPlan`]: builds the plan once and runs the fused,
+/// allocation-free (per tile) engine.  For repeated calls with the same
+/// F(m, r), construct a [`WinogradPlan`] directly and reuse it (and
+/// [`WinogradPlan::transform_filters`] for weight reuse).
 pub fn winograd_conv2d(x: &Tensor, w: &Tensor, m: usize) -> Tensor {
+    let mut plan = WinogradPlan::new(m, w.shape()[3]);
+    plan.conv2d(x, w)
+}
+
+/// The seed tile-by-tile oracle, kept as the bench baseline and a
+/// cross-check for the plan engine.  Deliberately naive: it calls the
+/// per-tile transform helpers (which regenerate the rational transform
+/// matrices on every call) and allocates fresh tensors per tile —
+/// measuring it against [`WinogradPlan`] quantifies what the plan saves.
+pub fn winograd_conv2d_reference(x: &Tensor, w: &Tensor, m: usize) -> Tensor {
     let r = w.shape()[3];
     let l = tile_size(m, r);
     let (c, h, ww) = (x.shape()[0], x.shape()[1], x.shape()[2]);
@@ -364,6 +379,22 @@ mod tests {
                 direct.allclose(&wino, 1e-3, 1e-3),
                 "m={m} max diff {}",
                 direct.max_abs_diff(&wino)
+            );
+        }
+    }
+
+    #[test]
+    fn reference_oracle_matches_plan_engine() {
+        let mut rng = Rng::new(3);
+        let x = rand_tensor(&mut rng, &[3, 9, 14]);
+        let w = rand_tensor(&mut rng, &[2, 3, 3, 3]);
+        for m in [2usize, 4] {
+            let fast = winograd_conv2d(&x, &w, m);
+            let slow = winograd_conv2d_reference(&x, &w, m);
+            assert!(
+                fast.allclose(&slow, 1e-3, 1e-3),
+                "m={m} max diff {}",
+                fast.max_abs_diff(&slow)
             );
         }
     }

@@ -8,6 +8,7 @@ use swcnn::systolic::{BlockTiming, SystolicArray};
 use swcnn::tensor::Tensor;
 use swcnn::util::Rng;
 use swcnn::winograd;
+use swcnn::winograd::WinogradPlan;
 use swcnn::zmorton;
 
 fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
@@ -33,6 +34,81 @@ fn prop_winograd_equals_direct_conv_random_shapes() {
             "case {case}: m={m} C={c} K={k} {h}x{w}, diff {}",
             direct.max_abs_diff(&wino)
         );
+    }
+}
+
+#[test]
+fn prop_plan_conv2d_matches_direct_nonaligned() {
+    // The plan engine against the direct-convolution oracle for every
+    // supported tile size, on spatial sizes chosen to exercise the
+    // zero-padded edge-tile path (outputs not multiples of m).
+    let mut rng = Rng::new(1011);
+    for &m in &[2usize, 4, 6] {
+        let mut plan = WinogradPlan::new(m, 3);
+        for case in 0..10 {
+            let c = 1 + rng.next_below(4);
+            let k = 1 + rng.next_below(4);
+            // h, w in [7, 19): rarely tile-aligned for any m.
+            let h = 7 + rng.next_below(12);
+            let w = 7 + rng.next_below(12);
+            let x = rand_tensor(&mut rng, &[c, h, w]);
+            let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+            let got = plan.conv2d(&x, &wt);
+            let want = winograd::direct_conv2d(&x, &wt);
+            assert!(
+                got.allclose(&want, 2e-3, 2e-3),
+                "case {case}: F({m},3) C={c} K={k} {h}x{w}, diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_threaded_bit_identical_to_single() {
+    // Tile sharding must not change the floating-point accumulation
+    // order per output element: any worker count is bit-identical.
+    let mut rng = Rng::new(1012);
+    for case in 0..6 {
+        let m = [2usize, 4, 6][rng.next_below(3)];
+        let c = 1 + rng.next_below(6);
+        let k = 1 + rng.next_below(9);
+        let h = 8 + rng.next_below(17);
+        let w = 8 + rng.next_below(17);
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let mut single = WinogradPlan::new(m, 3).with_threads(1);
+        let want = single.conv2d(&x, &wt);
+        for threads in [2usize, 5] {
+            let mut multi = WinogradPlan::new(m, 3).with_threads(threads);
+            let got = multi.conv2d(&x, &wt);
+            assert_eq!(
+                got, want,
+                "case {case}: F({m},3) C={c} K={k} {h}x{w} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_filter_bank_reuse_exact() {
+    // transform_filters once + conv2d_with_filters repeatedly must equal
+    // the one-shot path exactly (the serving steady state).
+    let mut rng = Rng::new(1013);
+    let mut plan = WinogradPlan::new(4, 3);
+    for case in 0..5 {
+        let c = 1 + rng.next_below(5);
+        let k = 1 + rng.next_below(5);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let bank = plan.transform_filters(&wt);
+        for _ in 0..3 {
+            let h = 7 + rng.next_below(10);
+            let w = 7 + rng.next_below(10);
+            let x = rand_tensor(&mut rng, &[c, h, w]);
+            let got = plan.conv2d_with_filters(&x, &bank);
+            let want = plan.conv2d(&x, &wt);
+            assert_eq!(got, want, "case {case}: bank reuse must be exact");
+        }
     }
 }
 

@@ -1,0 +1,127 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline crate set has no registry access, so this vendored shim
+//! provides exactly the surface `swcnn` uses: `Error`, `Result<T>`, the
+//! `anyhow!` / `bail!` macros, and the `Context` extension trait.  Errors
+//! are message-only (context is folded into the message eagerly) — enough
+//! for a CLI and test suite, without the real crate's backtrace machinery.
+
+use std::fmt;
+
+/// A message-carrying error.  Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// conversion below cannot overlap with the identity `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer, anyhow-style ("context: cause").
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to the error branch of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/3f9a")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e: Error = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert!(e.to_string().starts_with("step 2: "));
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+}
