@@ -1,23 +1,61 @@
 //! The paper's headline: sparse Winograd weights cut VGG16 inference
-//! latency by up to ~5x at 90% block sparsity (Fig. 7b).  Runs the
-//! cycle-level simulator, then cross-checks the sparse numerics on the
-//! PJRT artifact.
+//! latency by up to ~5x at 90% block sparsity (Fig. 7b).  Measures the
+//! CPU fast path (`conv2d_sparse_with_filters` behind a `ConvExecutor`),
+//! runs the cycle-level simulator, then cross-checks the sparse numerics
+//! on the PJRT artifact.
 //!
 //!   make artifacts && cargo run --release --example sparse_speedup
 
 use anyhow::Result;
 use swcnn::accelerator::{simulate_dense, simulate_sparse};
-use swcnn::bench::print_table;
+use swcnn::bench::{print_table, time_it};
+use swcnn::executor::{ConvExecutor, ExecPolicy};
 use swcnn::memory::EnergyTable;
 use swcnn::nn::vgg16;
 use swcnn::runtime::Runtime;
 use swcnn::scheduler::AcceleratorConfig;
+use swcnn::tensor::Tensor;
 use swcnn::util::Rng;
 
 fn main() -> Result<()> {
     let cfg = AcceleratorConfig::paper();
     let table = EnergyTable::default();
     let net = vgg16();
+
+    // CPU fast path first: one VGG-ish layer (C=64, K=64, 56², F(4,3))
+    // through the executor pipeline — the same pruned banks the
+    // simulator's directories describe, measured wall-clock.
+    let mut rng = Rng::new(3);
+    let (c, k, hw) = (64usize, 64usize, 56usize);
+    let x = Tensor::from_vec(&[c, hw, hw], rng.gaussian_vec(c * hw * hw));
+    let w = Tensor::from_vec(&[k, c, 3, 3], rng.gaussian_vec(k * c * 9));
+    let mut dense_ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4));
+    let s_dense = time_it(1, 3, || {
+        std::hint::black_box(dense_ex.conv2d(&x));
+    });
+    let mut fast_rows = vec![vec![
+        "dense".to_string(),
+        "dense".to_string(),
+        format!("{:.2}", s_dense.mean * 1e3),
+        "1.00x".to_string(),
+    ]];
+    for p in [0.5, 0.7, 0.9] {
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(4, p));
+        let s = time_it(1, 3, || {
+            std::hint::black_box(ex.conv2d(&x));
+        });
+        fast_rows.push(vec![
+            format!("{:.0}%", p * 100.0),
+            ex.backend_name().to_string(),
+            format!("{:.2}", s.mean * 1e3),
+            format!("{:.2}x", s_dense.mean / s.mean),
+        ]);
+    }
+    print_table(
+        "CPU fast path, conv4-ish layer (64c/64k 56², F(4,3)): ConvExecutor sweep",
+        &["sparsity", "backend", "time (ms)", "speedup"],
+        &fast_rows,
+    );
 
     let dense = simulate_dense(&net, &cfg, &table);
     let mut rows = vec![vec![

@@ -8,7 +8,11 @@
 //!
 //! Besides the human-readable table, every measurement is written to
 //! `BENCH_hotpath.json` (in the bench working directory) so the perf
-//! trajectory is machine-trackable across PRs.
+//! trajectory is machine-trackable across PRs.  The sparse-vs-dense
+//! sweep (block sparsity 0 / 0.5 / 0.7 / 0.9 on the VGG-ish layer) is
+//! additionally written to `BENCH_sparse.json` with bit-identity gates
+//! (sparsity 0.0 == dense plan; every row == dense run of the
+//! decompressed pruned weights).
 
 use swcnn::bench::{print_table, time_it};
 use swcnn::sparse::{synthetic_sparse_matrix, Bcoo};
@@ -62,6 +66,55 @@ fn write_json(records: &[Record], extras: &[(String, f64)]) {
     let path = "BENCH_hotpath.json";
     match std::fs::write(path, Json::Obj(top).to_string()) {
         Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// The sparse-vs-dense sweep gate: one row per block sparsity on the
+/// VGG-ish layer, plus the headline ratios, in machine-readable form.
+fn write_sparse_json(
+    sweep: &[(f64, f64, f64)],
+    dense_mean_s: f64,
+    speedup_at_09: f64,
+    overhead_at_00: f64,
+) {
+    use std::collections::BTreeMap;
+    let results: Vec<Json> = sweep
+        .iter()
+        .map(|&(target, measured, mean_s)| {
+            Json::Obj(BTreeMap::from([
+                (
+                    "name".to_string(),
+                    Json::Str(format!(
+                        "wino_sparse{:02}_f43_c64k64_56",
+                        (target * 100.0).round() as u32
+                    )),
+                ),
+                ("target_sparsity".to_string(), Json::Num(target)),
+                ("block_sparsity".to_string(), Json::Num(measured)),
+                ("mean_s".to_string(), Json::Num(mean_s)),
+                (
+                    "speedup_vs_dense".to_string(),
+                    Json::Num(dense_mean_s / mean_s),
+                ),
+            ]))
+        })
+        .collect();
+    let top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("sparse".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("layer".to_string(), Json::Str("f43_c64k64_56".to_string())),
+        ("dense_mean_s".to_string(), Json::Num(dense_mean_s)),
+        ("results".to_string(), Json::Arr(results)),
+        ("sparse_speedup_at_0_9".to_string(), Json::Num(speedup_at_09)),
+        (
+            "sparse_overhead_at_0_0".to_string(),
+            Json::Num(overhead_at_00),
+        ),
+    ]);
+    let path = "BENCH_sparse.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
@@ -160,6 +213,58 @@ fn main() {
         format!("{speedup:.1}x"),
         "allclose(direct, rtol 1e-4) verified".into(),
     ]);
+
+    // ------------------------------------------------------------------
+    // Sparse transform-domain sweep on the same VGG-ish layer: block
+    // sparsity 0 / 0.5 / 0.7 / 0.9 through `conv2d_sparse_with_filters`,
+    // against the dense filter-bank baseline measured above.  Emits
+    // BENCH_sparse.json (the acceptance gate of the sparse pipeline PR).
+    // ------------------------------------------------------------------
+    let mut sparse_rows: Vec<(f64, f64, f64)> = Vec::new(); // (target, measured, mean_s)
+    for sp in [0.0f64, 0.5, 0.7, 0.9] {
+        let sbank = plan.transform_filters_sparse(&w, sp);
+        let s_sp = time_it(1, 5, || {
+            std::hint::black_box(plan.conv2d_sparse_with_filters(&x, &sbank));
+        });
+        record(
+            &mut records,
+            &format!("wino_sparse{:02}_f43_c64k64_56", (sp * 100.0).round() as u32),
+            s_sp,
+            format!("sparse plan, block sparsity {sp:.1}"),
+        );
+        // Correctness gates: 0.0 must be bit-identical to the dense plan;
+        // every sparsity must equal a dense run of the decompressed
+        // pruned weights bit-for-bit.
+        let ys = plan.conv2d_sparse_with_filters(&x, &sbank);
+        if sp == 0.0 {
+            let yd = plan.conv2d_with_filters(&x, &bank);
+            assert_eq!(ys, yd, "sparsity 0.0 must be bit-identical to dense");
+        }
+        let yp = plan.conv2d_with_filters(&x, &sbank.to_dense_bank());
+        assert_eq!(ys, yp, "sparse vs decompressed-dense at {sp}");
+        sparse_rows.push((sp, sbank.block_sparsity(), s_sp.mean));
+        rows.push(vec![
+            format!("winograd sparse p={sp:.1}"),
+            format!("{:.2} ms", s_sp.mean * 1e3),
+            format!("{:.2}x vs dense bank", s_bank.mean / s_sp.mean),
+        ]);
+    }
+    let sparse90_speedup = s_bank.mean / sparse_rows[3].2;
+    let sparse0_overhead = sparse_rows[0].2 / s_bank.mean;
+    extras.push(("sparse_speedup_at_0_9".into(), sparse90_speedup));
+    extras.push(("sparse_overhead_at_0_0".into(), sparse0_overhead));
+    write_sparse_json(&sparse_rows, s_bank.mean, sparse90_speedup, sparse0_overhead);
+    // Regression gates (slightly looser than the PR acceptance targets of
+    // 2x / 1.10x to absorb shared-runner noise, but tight enough that a
+    // real sparse-path regression fails the bench):
+    assert!(
+        sparse90_speedup >= 1.5,
+        "sparse at 0.9 must beat the dense bank (got {sparse90_speedup:.2}x, want >= 2x)"
+    );
+    assert!(
+        sparse0_overhead <= 1.35,
+        "sparse at 0.0 overhead {sparse0_overhead:.2}x vs dense (want within 10%)"
+    );
 
     // ------------------------------------------------------------------
     // Simulator hot paths.

@@ -22,7 +22,7 @@ use crate::sparse::Bcoo;
 use crate::systolic::cluster::{BlockMatrix, Cluster};
 use crate::systolic::SystolicArray;
 use crate::tensor::Tensor;
-use crate::winograd::{num_tiles, WinogradPlan};
+use crate::winograd::{num_tiles, SparseFilterBank, WinogradPlan};
 
 /// Statistics of one functional layer run.
 #[derive(Debug, Clone, Copy, Default)]
@@ -121,14 +121,15 @@ pub fn conv2d_sparse(
         let prod_t = cluster.matmul_sparse(
             &BlockMatrix::new(&vtt, n_tiles, c_ch, l),
             &u_bcoo[t],
-        ); // (n_tiles x K)
+        ); // (n_tiles x kp), kp = K zero-padded to block multiples
         stats.matmul_cycles += cluster.stats.cycles;
         stats.macs += cluster.total_macs();
         stats.skipped_steps += cluster.stats.array_steps_skipped;
+        let kp = u_bcoo[t].cols;
         let dst = &mut mm[t * k * n_tiles..(t + 1) * k * n_tiles];
         for b in 0..n_tiles {
             for kk in 0..k {
-                dst[kk * n_tiles + b] = prod_t[b * k + kk];
+                dst[kk * n_tiles + b] = prod_t[b * kp + kk];
             }
         }
     }
@@ -165,33 +166,32 @@ pub fn transform_filters_with(plan: &WinogradPlan, w: &Tensor) -> Vec<f32> {
     u
 }
 
-/// Build one coordinate's U^T (C x K) BCOO directory set from spatial
-/// weights, pruning whole blocks at `sparsity` (synthetic [2] stand-in).
+/// Build the per-coordinate U^T (C x K) BCOO directory set from spatial
+/// weights, pruning whole blocks at `sparsity` (synthetic stand-in for
+/// reference 2's pruned VGG).  Thin wrapper over
+/// [`WinogradPlan::transform_filters_sparse`] — the CPU plan engine and
+/// the cluster simulation consume the *same* pruned directories, so their
+/// numerics and skip statistics stay comparable.
 pub fn transform_and_prune_filters(
     w: &Tensor,
     m: usize,
     r: usize,
     sparsity: f64,
 ) -> Vec<Bcoo> {
-    let plan = WinogradPlan::new(m, r);
-    let l = plan.l();
-    let (k, c) = (w.shape()[0], w.shape()[1]);
-    let u = transform_filters_with(&plan, w);
-    let pad = |x: usize| x.div_ceil(l) * l;
-    let (cp, kp) = (pad(c), pad(k));
-    (0..l * l)
-        .map(|t| {
-            // U_t is (K x C); store U_t^T (C x K) zero-padded to blocks.
-            let mut ut_t = vec![0.0f32; cp * kp];
-            for kk in 0..k {
-                for cc in 0..c {
-                    ut_t[cc * kp + kk] = u[(t * k + kk) * c + cc];
-                }
-            }
-            crate::sparse::prune_blocks(&mut ut_t, cp, kp, l, sparsity);
-            Bcoo::compress(&ut_t, cp, kp, l)
-        })
-        .collect()
+    WinogradPlan::new(m, r)
+        .transform_filters_sparse(w, sparsity)
+        .into_coords()
+}
+
+/// Sparse layer run straight from a [`SparseFilterBank`] (the executor
+/// pipeline's canonical pruned-weight representation).
+pub fn conv2d_sparse_bank(
+    x: &Tensor,
+    bank: &SparseFilterBank,
+    m: usize,
+    r: usize,
+) -> (Tensor, FunctionalStats) {
+    conv2d_sparse(x, bank.coords(), m, r, bank.k)
 }
 
 /// Stage 1: adder-only input transforms on the systolic arrays; returns
@@ -420,6 +420,48 @@ mod tests {
             "max diff {}",
             ys.max_abs_diff(&want)
         );
+    }
+
+    #[test]
+    fn functional_sparse_matches_plan_sparse_engine() {
+        // The cluster simulation and the CPU plan engine consume the same
+        // SparseFilterBank: their outputs must agree to f32 tolerance.
+        let mut rng = Rng::new(66);
+        let (c, k, m) = (8usize, 8usize, 2usize);
+        let x = rand_tensor(&mut rng, &[c, 10, 10]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let mut plan = WinogradPlan::new(m, 3);
+        let bank = plan.transform_filters_sparse(&wt, 0.5);
+        let (ys, stats) = conv2d_sparse_bank(&x, &bank, m, 3);
+        assert!(stats.skipped_steps > 0, "pruning must skip steps");
+        let want = plan.conv2d_sparse_with_filters(&x, &bank);
+        assert!(
+            ys.allclose(&want, 1e-3, 1e-3),
+            "max diff {}",
+            ys.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn functional_sparse_handles_non_block_multiple_k() {
+        // K = 6 pads to kp = 8 on l = 4 blocks; the (n_tiles x kp)
+        // cluster product must be consumed with the padded stride.
+        let mut rng = Rng::new(67);
+        let (c, k, m) = (8usize, 6usize, 2usize);
+        let x = rand_tensor(&mut rng, &[c, 8, 8]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let mut plan = WinogradPlan::new(m, 3);
+        let bank = plan.transform_filters_sparse(&wt, 0.0);
+        assert_eq!(bank.kp, 8);
+        let (ys, _) = conv2d_sparse_bank(&x, &bank, m, 3);
+        let (yd, _) = conv2d_dense(&x, &wt, m);
+        assert!(
+            ys.allclose(&yd, 1e-3, 1e-3),
+            "max diff {}",
+            ys.max_abs_diff(&yd)
+        );
+        let want = plan.conv2d_sparse_with_filters(&x, &bank);
+        assert!(ys.allclose(&want, 1e-3, 1e-3));
     }
 
     #[test]

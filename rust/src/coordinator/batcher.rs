@@ -31,6 +31,13 @@ impl Batcher {
         Self { sizes, window }
     }
 
+    /// A policy over every batch size `1..=max` — the native
+    /// `ConvExecutor` engine can run any batch, so the planner packs the
+    /// whole queue into as few launches as possible.
+    pub fn contiguous(max: usize, window: Duration) -> Self {
+        Self::new((1..=max.max(1)).collect(), window)
+    }
+
     pub fn sizes(&self) -> &[usize] {
         &self.sizes
     }
@@ -106,5 +113,18 @@ mod tests {
     #[should_panic]
     fn requires_unit_batch() {
         Batcher::new(vec![2, 4], Duration::ZERO);
+    }
+
+    #[test]
+    fn contiguous_packs_tightly() {
+        let b = Batcher::contiguous(8, Duration::ZERO);
+        assert_eq!(b.max_batch(), 8);
+        // Any queue depth up to max is one launch; larger splits greedily.
+        assert_eq!(b.plan(5), vec![BatchPlan { batch_size: 5 }]);
+        assert_eq!(
+            b.plan(11),
+            vec![BatchPlan { batch_size: 8 }, BatchPlan { batch_size: 3 }]
+        );
+        assert_eq!(Batcher::contiguous(0, Duration::ZERO).max_batch(), 1);
     }
 }

@@ -7,7 +7,7 @@ use std::time::Duration;
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
-    /// batch_hist[s] = number of launches with batch size s.
+    /// `batch_hist[s]` = number of launches with batch size s.
     batch_hist: Vec<u64>,
     /// Request latencies (seconds), bounded reservoir.
     latencies: Vec<f64>,

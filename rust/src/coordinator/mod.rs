@@ -1,13 +1,17 @@
-//! L3 coordinator: the inference server that drives the PJRT artifacts.
+//! L3 coordinator: the inference server behind the dynamic batcher.
 //!
 //! The paper's contribution is the accelerator architecture, so the
 //! coordinator is the serving shell around it: a request queue, a dynamic
-//! batcher that picks the largest available batched executable
-//! (vgg_tiny_b4 / vgg_tiny_b1), a worker thread owning the PJRT runtime
-//! (python never runs here), and latency/throughput metrics.
+//! batcher, a worker thread owning the execution engine, and
+//! latency/throughput metrics.  Two engines plug in behind the same
+//! worker: the PJRT runtime driving the AOT artifacts (vgg_tiny_b4 /
+//! vgg_tiny_b1 picked per batch), and the native
+//! [`crate::executor::NetworkExecutor`] serving whole pruned networks
+//! with per-layer cached sparse filter banks — the transform-domain
+//! sparse pipeline's serving path.
 //!
 //! Thread model: std::thread + mpsc (the offline crate set has no tokio);
-//! one worker owns the `Runtime`, callers hold cloneable handles.
+//! one worker owns the engine, callers hold cloneable handles.
 
 pub mod batcher;
 pub mod metrics;
@@ -15,4 +19,4 @@ pub mod server;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use metrics::Metrics;
-pub use server::{InferenceServer, ServerConfig};
+pub use server::{InferenceServer, NativeServerConfig, ServerConfig};

@@ -1,12 +1,21 @@
-//! The inference server: a worker thread owning the PJRT runtime, fed by a
-//! request channel, batching dynamically over the emitted executables.
+//! The inference server: a worker thread owning an execution engine, fed
+//! by a request channel, batching dynamically.
 //!
-//! The `xla` crate's handles are `!Send` (Rc-based), so the worker thread
-//! constructs the `Runtime` itself; the caller only ever touches plain
-//! channels and `Vec<f32>` payloads.
+//! Two engines sit behind the same batching worker:
+//!
+//! - **PJRT** — the AOT HLO executables (one per batch size).  The `xla`
+//!   crate's handles are `!Send` (Rc-based), so the worker thread
+//!   constructs the `Runtime` itself; the caller only ever touches plain
+//!   channels and `Vec<f32>` payloads.
+//! - **Native** — a [`NetworkExecutor`] running a whole pruned network on
+//!   the CPU plan engines, with per-layer cached (sparse) filter banks.
+//!   This is the transform-domain sparse pipeline's serving path and
+//!   works without the `pjrt` feature or artifacts.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use crate::executor::{ExecPolicy, NetworkExecutor};
+use crate::nn::Network;
 use crate::runtime::{LoadedModel, Runtime};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
@@ -32,6 +41,33 @@ impl ServerConfig {
             artifact_dir: artifact_dir.into(),
             family: family.to_string(),
             window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Configuration for the native (in-process `ConvExecutor`) serving path.
+#[derive(Debug, Clone)]
+pub struct NativeServerConfig {
+    pub net: Network,
+    /// Per-layer backend selection (pruning knob, bit width, F(m, r)).
+    pub policy: ExecPolicy,
+    /// Seed for the synthetic weight set.
+    pub seed: u64,
+    /// Batch-accumulation window.
+    pub window: Duration,
+    /// Largest batch one launch may run (the native engine accepts any
+    /// size up to this).
+    pub max_batch: usize,
+}
+
+impl NativeServerConfig {
+    pub fn new(net: Network, policy: ExecPolicy) -> Self {
+        Self {
+            net,
+            policy,
+            seed: 7,
+            window: Duration::from_millis(2),
+            max_batch: 4,
         }
     }
 }
@@ -76,12 +112,48 @@ impl InferenceServer {
                         input_elems,
                         output_elems,
                     }));
-                    worker_loop(rx, models, sizes, batcher, metrics_worker, input_elems);
+                    let engine = Engine::Pjrt { models, sizes };
+                    worker_loop(rx, engine, batcher, metrics_worker, input_elems);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                 }
             }
+        });
+
+        let ready = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+        Ok(Self {
+            tx,
+            worker: Some(worker),
+            metrics,
+            input_elems: ready.input_elems,
+            output_elems: ready.output_elems,
+        })
+    }
+
+    /// Start the native serving path: the worker builds a
+    /// [`NetworkExecutor`] (per-layer `ConvExecutor`s with cached pruned
+    /// filter banks) and serves whole-network inference through the same
+    /// dynamic batcher — no PJRT feature or artifacts required.
+    pub fn start_native(cfg: NativeServerConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
+        let metrics = Arc::new(Mutex::new(Metrics::new(cfg.max_batch.max(16), 4096)));
+        let metrics_worker = metrics.clone();
+
+        let worker = std::thread::spawn(move || {
+            let exec = NetworkExecutor::synthetic(cfg.net, cfg.policy, cfg.seed);
+            let input_elems = exec.input_elements();
+            let output_elems = exec.output_elements();
+            let batcher = Batcher::contiguous(cfg.max_batch, cfg.window);
+            let _ = ready_tx.send(Ok(Ready {
+                input_elems,
+                output_elems,
+            }));
+            let engine = Engine::Native(Box::new(exec));
+            worker_loop(rx, engine, batcher, metrics_worker, input_elems);
         });
 
         let ready = ready_rx
@@ -133,6 +205,47 @@ impl Drop for InferenceServer {
 
 type Models = Vec<Arc<LoadedModel>>;
 
+/// The execution engine behind the batching worker: compiled PJRT
+/// executables (one per batch size) or the native `NetworkExecutor`
+/// running whole pruned networks on the CPU plan engines.
+enum Engine {
+    Pjrt { models: Models, sizes: Vec<usize> },
+    Native(Box<NetworkExecutor>),
+}
+
+impl Engine {
+    /// Run one planned batch; returns one output vector per image.
+    fn run_batch(&mut self, images: &[&Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Engine::Pjrt { models, sizes } => {
+                let idx = sizes
+                    .iter()
+                    .position(|&s| s == images.len())
+                    .ok_or_else(|| anyhow!("no executable for batch size {}", images.len()))?;
+                let model = &models[idx];
+                let outs = if images.len() == 1 {
+                    // Single-image launches pass the owned request buffer
+                    // straight through — no copy on the common path.
+                    model.run(std::slice::from_ref(images[0]))?
+                } else {
+                    let mut stacked =
+                        Vec::with_capacity(images.iter().map(|im| im.len()).sum());
+                    for im in images {
+                        stacked.extend_from_slice(im);
+                    }
+                    model.run(&[stacked])?
+                };
+                let flat = &outs[0];
+                let per = flat.len() / images.len();
+                Ok((0..images.len())
+                    .map(|i| flat[i * per..(i + 1) * per].to_vec())
+                    .collect())
+            }
+            Engine::Native(exec) => images.iter().map(|im| Ok(exec.forward(im))).collect(),
+        }
+    }
+}
+
 /// Build the runtime and compile all `<family>_b<N>` artifacts (worker
 /// thread only — PJRT handles never cross threads).
 fn setup(cfg: &ServerConfig) -> Result<(Models, Vec<usize>, usize, usize)> {
@@ -177,8 +290,7 @@ struct Pending {
 
 fn worker_loop(
     rx: mpsc::Receiver<Msg>,
-    models: Models,
-    sizes: Vec<usize>,
+    mut engine: Engine,
     batcher: Batcher,
     metrics: Arc<Mutex<Metrics>>,
     input_elems: usize,
@@ -233,20 +345,8 @@ fn worker_loop(
         // Launch the planned batches.
         for plan in batcher.plan(queue.len()) {
             let items: Vec<Pending> = queue.drain(..plan.batch_size).collect();
-            let idx = sizes
-                .iter()
-                .position(|&x| x == plan.batch_size)
-                .expect("planned size exists");
-            let model = &models[idx];
-            let result = if plan.batch_size == 1 {
-                model.run(std::slice::from_ref(&items[0].image))
-            } else {
-                let mut stacked = Vec::with_capacity(plan.batch_size * input_elems);
-                for it in &items {
-                    stacked.extend_from_slice(&it.image);
-                }
-                model.run(&[stacked])
-            };
+            let images: Vec<&Vec<f32>> = items.iter().map(|it| &it.image).collect();
+            let result = engine.run_batch(&images);
             // Lock can only be poisoned if a caller thread panicked while
             // reading metrics; serving must survive that.
             let mut m = match metrics.lock() {
@@ -256,11 +356,9 @@ fn worker_loop(
             m.record_batch(plan.batch_size);
             match result {
                 Ok(outs) => {
-                    let flat = &outs[0];
-                    let per = flat.len() / plan.batch_size;
-                    for (i, it) in items.iter().enumerate() {
+                    for (it, out) in items.iter().zip(outs) {
                         m.record_latency(it.enqueued.elapsed());
-                        let _ = it.resp.send(Ok(flat[i * per..(i + 1) * per].to_vec()));
+                        let _ = it.resp.send(Ok(out));
                     }
                 }
                 Err(e) => {
@@ -270,5 +368,62 @@ fn worker_loop(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::vgg_tiny;
+    use crate::util::Rng;
+
+    fn native_cfg(sparsity: f64) -> NativeServerConfig {
+        NativeServerConfig::new(vgg_tiny(), ExecPolicy::sparse(2, sparsity))
+    }
+
+    #[test]
+    fn native_server_serves_sparse_vgg_tiny() {
+        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        assert_eq!(server.input_elements(), 3 * 32 * 32);
+        assert_eq!(server.output_elements(), 10);
+        let mut rng = Rng::new(9);
+        // A burst of async requests exercises the dynamic batching path.
+        let rxs: Vec<_> = (0..5)
+            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .collect();
+        for rx in rxs {
+            let y = rx.recv().expect("response").expect("inference");
+            assert_eq!(y.len(), 10);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let m = match server.metrics.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        assert_eq!(m.requests, 5);
+        assert!(m.batches <= 5);
+        assert!(m.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn native_server_rejects_bad_input_size() {
+        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        let err = server.infer(vec![0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn native_server_is_deterministic() {
+        // Same synthetic seed + same image -> identical logits, within a
+        // server (cached banks) and across servers (deterministic build).
+        let mut rng = Rng::new(11);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let s1 = InferenceServer::start_native(native_cfg(0.5)).expect("start");
+        let a = s1.infer(image.clone()).expect("infer");
+        let b = s1.infer(image.clone()).expect("infer");
+        assert_eq!(a, b, "within-server determinism");
+        let s2 = InferenceServer::start_native(native_cfg(0.5)).expect("start");
+        let c = s2.infer(image).expect("infer");
+        assert_eq!(a, c, "across-server determinism");
     }
 }

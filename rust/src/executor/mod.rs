@@ -1,0 +1,408 @@
+//! `ConvExecutor` — one execution abstraction from pruned BCOO filters to
+//! the serving path.
+//!
+//! Every consumer of convolution in the crate used to pick its own weight
+//! representation: the plan engine had dense [`FilterBank`]s, the
+//! functional simulator its own per-coordinate BCOO directories, quant a
+//! third path.  `ConvExecutor` unifies them: weights are prepared **once**
+//! (transformed via `G`, optionally block-pruned per Winograd coordinate
+//! and/or fake-quantized) and every `conv2d` call reuses the cached bank —
+//! the serving steady state.  The backend is selected per layer by the
+//! [`ExecPolicy`]'s target sparsity and bit width.
+//!
+//! [`NetworkExecutor`] composes per-layer executors with the `nn` layer
+//! ops (SAME padding, ReLU, stage pooling, FC head) into a full forward
+//! pass — the engine behind the coordinator's native serving path.
+
+use crate::nn::{self, Network};
+use crate::quant::{quantize_sparse_bank, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use crate::winograd::{tile_size, FilterBank, SparseFilterBank, WinogradPlan};
+
+/// Per-layer execution policy: which F(m, r) to run, how hard to prune,
+/// and whether to quantize the datapath.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPolicy {
+    /// Winograd output tile size m.
+    pub m: usize,
+    /// Target block sparsity for pruning, in `[0, 1)`.  Pruning is always
+    /// honored; the threshold below only picks the execution backend.
+    pub sparsity: f64,
+    /// Layers whose target sparsity reaches this threshold run the sparse
+    /// transform-domain path; below it the (pruned) dense bank is cheaper
+    /// to stream.
+    pub sparse_threshold: f64,
+    /// `Some(bits)` quantizes inputs per call and weights at prepare time.
+    pub bits: Option<u32>,
+}
+
+impl ExecPolicy {
+    /// Dense float execution at F(m, 3).
+    pub fn dense(m: usize) -> Self {
+        Self {
+            m,
+            sparsity: 0.0,
+            sparse_threshold: 0.5,
+            bits: None,
+        }
+    }
+
+    /// Pruned execution at the given block sparsity.
+    pub fn sparse(m: usize, sparsity: f64) -> Self {
+        Self {
+            sparsity,
+            ..Self::dense(m)
+        }
+    }
+
+    /// Quantize the datapath to `bits`.
+    pub fn with_bits(self, bits: u32) -> Self {
+        Self {
+            bits: Some(bits),
+            ..self
+        }
+    }
+
+    /// Does this policy select the sparse backend?
+    pub fn wants_sparse(&self) -> bool {
+        self.sparsity >= self.sparse_threshold
+    }
+}
+
+/// The prepared weights of one conv layer.
+enum Backend {
+    Dense(FilterBank),
+    Sparse(SparseFilterBank),
+    QuantDense { bank: FilterBank, bits: u32 },
+    QuantSparse { bank: SparseFilterBank, bits: u32 },
+}
+
+/// One conv layer, ready to serve: a plan plus its prepared weight bank.
+pub struct ConvExecutor {
+    plan: WinogradPlan,
+    backend: Backend,
+}
+
+impl ConvExecutor {
+    /// Prepare one layer: transform (and prune / quantize) the spatial
+    /// weights (K, C, r, r) once.  Every `conv2d` call reuses the bank.
+    pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Self {
+        assert_eq!(w.shape().len(), 4, "weights must be (K, C, r, r)");
+        let r = w.shape()[3];
+        let plan = WinogradPlan::new(policy.m, r);
+        // Pruning and quantization are always honored (quantization acts
+        // on the *transform-domain* values — what the arrays see); the
+        // threshold only selects whether the prepared weights execute on
+        // the block-skipping sparse loop or as a dense bank.  Crossing
+        // the threshold therefore never changes the numerics contract.
+        let sparse_bank = || {
+            let bank = plan.transform_filters_sparse(w, policy.sparsity);
+            match policy.bits {
+                Some(bits) => quantize_sparse_bank(&bank, bits).0,
+                None => bank,
+            }
+        };
+        let backend = match (policy.wants_sparse(), policy.bits) {
+            (true, None) => Backend::Sparse(sparse_bank()),
+            (true, Some(bits)) => Backend::QuantSparse {
+                bank: sparse_bank(),
+                bits,
+            },
+            (false, None) if policy.sparsity == 0.0 => {
+                Backend::Dense(plan.transform_filters(w))
+            }
+            (false, None) => Backend::Dense(sparse_bank().to_dense_bank()),
+            (false, Some(bits)) => Backend::QuantDense {
+                bank: sparse_bank().to_dense_bank(),
+                bits,
+            },
+        };
+        Self { plan, backend }
+    }
+
+    /// Which backend the policy selected for this layer.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Dense(_) => "dense",
+            Backend::Sparse(_) => "sparse",
+            Backend::QuantDense { .. } => "quant-dense",
+            Backend::QuantSparse { .. } => "quant-sparse",
+        }
+    }
+
+    /// Measured block sparsity of the prepared weights (0.0 when dense).
+    pub fn block_sparsity(&self) -> f64 {
+        match &self.backend {
+            Backend::Sparse(bank) | Backend::QuantSparse { bank, .. } => bank.block_sparsity(),
+            _ => 0.0,
+        }
+    }
+
+    /// Run the layer: x (C, H, W) -> (K, H - r + 1, W - r + 1).
+    pub fn conv2d(&mut self, x: &Tensor) -> Tensor {
+        match &self.backend {
+            Backend::Dense(bank) => self.plan.conv2d_with_filters(x, bank),
+            Backend::Sparse(bank) => self.plan.conv2d_sparse_with_filters(x, bank),
+            Backend::QuantDense { bank, bits } => {
+                let qx = Quantizer::calibrate(*bits, x.data()).qdq_tensor(x);
+                self.plan.conv2d_with_filters(&qx, bank)
+            }
+            Backend::QuantSparse { bank, bits } => {
+                let qx = Quantizer::calibrate(*bits, x.data()).qdq_tensor(x);
+                self.plan.conv2d_sparse_with_filters(&qx, bank)
+            }
+        }
+    }
+}
+
+/// A whole pruned network behind per-layer cached filter banks: the
+/// native serving engine.
+pub struct NetworkExecutor {
+    net: Network,
+    convs: Vec<ConvExecutor>,
+    /// FC weight matrices, (out_f x in_f) row-major.
+    fcs: Vec<Tensor>,
+}
+
+impl NetworkExecutor {
+    /// Build from deterministic synthetic weights (He-scaled gaussians —
+    /// the stand-in for reference \[2\]'s pruned VGG weights, matching
+    /// the simulator's synthetic directories).  The first layer stays
+    /// dense when its channel count is below the block size, mirroring
+    /// the artifacts.
+    pub fn synthetic(net: Network, policy: ExecPolicy, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut convs = Vec::with_capacity(net.convs.len());
+        for layer in &net.convs {
+            let fan_in = layer.in_ch * layer.r * layer.r;
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            let data: Vec<f32> = rng
+                .gaussian_vec(layer.out_ch * fan_in)
+                .iter()
+                .map(|v| v * scale)
+                .collect();
+            let w = Tensor::from_vec(&[layer.out_ch, layer.in_ch, layer.r, layer.r], data);
+            let lp = if layer.in_ch < tile_size(policy.m, layer.r) {
+                ExecPolicy {
+                    sparsity: 0.0,
+                    ..policy
+                }
+            } else {
+                policy
+            };
+            convs.push(ConvExecutor::prepare(&w, &lp));
+        }
+        let fcs = net
+            .fcs
+            .iter()
+            .map(|fc| {
+                let scale = (2.0 / fc.in_f as f64).sqrt() as f32;
+                let data: Vec<f32> = rng
+                    .gaussian_vec(fc.out_f * fc.in_f)
+                    .iter()
+                    .map(|v| v * scale)
+                    .collect();
+                Tensor::from_vec(&[fc.out_f, fc.in_f], data)
+            })
+            .collect();
+        Self { net, convs, fcs }
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.net.input_ch * self.net.input_hw * self.net.input_hw
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.net.fcs.last().map(|f| f.out_f).unwrap_or(0)
+    }
+
+    /// Per-layer backend names (executor selection, for reporting).
+    pub fn conv_backends(&self) -> Vec<&'static str> {
+        self.convs.iter().map(|c| c.backend_name()).collect()
+    }
+
+    /// Full forward pass: flat (C * H * W) image -> logits.
+    ///
+    /// conv (SAME, via the per-layer executor) + ReLU per layer, 2x2 max
+    /// pool after each stage, then the FC head (ReLU between, raw logits
+    /// out).  Deterministic for a given build (the plan engines are
+    /// bit-identical across worker counts).
+    pub fn forward(&mut self, image: &[f32]) -> Vec<f32> {
+        assert_eq!(
+            image.len(),
+            self.input_elements(),
+            "image has {} elements, expected {}",
+            image.len(),
+            self.input_elements()
+        );
+        let hw = self.net.input_hw;
+        let mut x = Tensor::from_vec(&[self.net.input_ch, hw, hw], image.to_vec());
+        for i in 0..self.convs.len() {
+            let r = self.net.convs[i].r;
+            let padded = nn::pad_same(&x, r / 2);
+            x = self.convs[i].conv2d(&padded);
+            nn::relu_inplace(&mut x);
+            if self.net.pool_after(i) {
+                x = nn::maxpool2(&x);
+            }
+        }
+        let mut a = x.into_vec();
+        let n_fc = self.fcs.len();
+        for (j, wm) in self.fcs.iter().enumerate() {
+            let (of, inf) = (wm.shape()[0], wm.shape()[1]);
+            assert_eq!(a.len(), inf, "fc{j}: input volume mismatch");
+            let wd = wm.data();
+            let mut y = vec![0.0f32; of];
+            for (o, yo) in y.iter_mut().enumerate() {
+                let row = &wd[o * inf..(o + 1) * inf];
+                let mut acc = 0.0f32;
+                for (&wv, &av) in row.iter().zip(&a) {
+                    acc += wv * av;
+                }
+                *yo = acc;
+            }
+            if j + 1 < n_fc {
+                for v in &mut y {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            a = y;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::vgg_tiny;
+    use crate::winograd::direct_conv2d;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, rng.gaussian_vec(n))
+    }
+
+    #[test]
+    fn dense_executor_matches_direct_conv() {
+        let mut rng = Rng::new(401);
+        let x = rand_tensor(&mut rng, &[3, 10, 12]);
+        let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4));
+        assert_eq!(ex.backend_name(), "dense");
+        let got = ex.conv2d(&x);
+        let want = direct_conv2d(&x, &w);
+        assert!(
+            got.allclose(&want, 1e-3, 1e-3),
+            "max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn backend_selection_by_policy() {
+        let mut rng = Rng::new(402);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let cases = [
+            (ExecPolicy::dense(2), "dense"),
+            (ExecPolicy::sparse(2, 0.7), "sparse"),
+            (ExecPolicy::sparse(2, 0.2), "dense"), // below threshold
+            (ExecPolicy::dense(2).with_bits(8), "quant-dense"),
+            (ExecPolicy::sparse(2, 0.7).with_bits(8), "quant-sparse"),
+        ];
+        for (policy, want) in cases {
+            let ex = ConvExecutor::prepare(&w, &policy);
+            assert_eq!(ex.backend_name(), want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_executor_equals_plan_sparse_path() {
+        let mut rng = Rng::new(403);
+        let x = rand_tensor(&mut rng, &[8, 9, 9]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let policy = ExecPolicy::sparse(2, 0.5);
+        let mut ex = ConvExecutor::prepare(&w, &policy);
+        assert!(ex.block_sparsity() > 0.3);
+        let got = ex.conv2d(&x);
+        let mut plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.5);
+        let want = plan.conv2d_sparse_with_filters(&x, &bank);
+        assert_eq!(got, want, "executor must be the plan sparse path");
+    }
+
+    #[test]
+    fn sub_threshold_sparsity_still_prunes() {
+        // Below the backend threshold the weights are still pruned at the
+        // target sparsity — only the execution path is dense.
+        let mut rng = Rng::new(405);
+        let x = rand_tensor(&mut rng, &[8, 9, 9]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.3));
+        assert_eq!(ex.backend_name(), "dense");
+        let got = ex.conv2d(&x);
+        let mut plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.3);
+        let want = plan.conv2d_with_filters(&x, &bank.to_dense_bank());
+        assert_eq!(got, want, "dense backend must run the pruned weights");
+    }
+
+    #[test]
+    fn quant_executors_close_to_float() {
+        let mut rng = Rng::new(404);
+        let x = rand_tensor(&mut rng, &[8, 10, 10]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        for policy in [
+            ExecPolicy::dense(2).with_bits(16),
+            ExecPolicy::sparse(2, 0.5).with_bits(16),
+        ] {
+            let float_policy = ExecPolicy {
+                bits: None,
+                ..policy
+            };
+            let got = ConvExecutor::prepare(&w, &policy).conv2d(&x);
+            let want = ConvExecutor::prepare(&w, &float_policy).conv2d(&x);
+            let rel = got.max_abs_diff(&want) / want.max_abs().max(1e-6);
+            assert!(rel < 1e-2, "{policy:?}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn network_executor_runs_vgg_tiny_end_to_end() {
+        let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.7), 5);
+        assert_eq!(exec.input_elements(), 3 * 32 * 32);
+        assert_eq!(exec.output_elements(), 10);
+        // conv0 has 3 input channels (< l = 4): stays dense like the
+        // artifacts; the rest run sparse.
+        let backends = exec.conv_backends();
+        assert_eq!(backends[0], "dense");
+        assert!(backends[1..].iter().all(|&b| b == "sparse"), "{backends:?}");
+        let mut rng = Rng::new(6);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let logits = exec.forward(&image);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Deterministic across calls (cached banks, bit-identical plans).
+        assert_eq!(logits, exec.forward(&image));
+    }
+
+    #[test]
+    fn network_executor_sparsity_changes_outputs_not_shapes() {
+        let mut rng = Rng::new(407);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let mut dense = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::dense(2), 5);
+        let mut sparse = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.9), 5);
+        let yd = dense.forward(&image);
+        let ys = sparse.forward(&image);
+        assert_eq!(yd.len(), ys.len());
+        assert!(ys.iter().all(|v| v.is_finite()));
+        assert_ne!(yd, ys, "90% pruning must change the logits");
+    }
+}

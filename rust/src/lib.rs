@@ -16,6 +16,7 @@
 pub mod accelerator;
 pub mod bench;
 pub mod coordinator;
+pub mod executor;
 pub mod memory;
 pub mod model;
 pub mod nn;

@@ -4,6 +4,12 @@
 //! end-to-end PJRT driver.  Mirrors `python/compile/model.py` — the same
 //! stage structure produces both the HLO artifacts and the simulator's
 //! workload description.
+//!
+//! Also hosts the layer *operations* the native serving path composes
+//! around [`crate::executor::ConvExecutor`]: SAME padding, ReLU, and the
+//! 2x2 stage pooling (VGG pools after the last conv of every stage).
+
+use crate::tensor::Tensor;
 
 /// One convolutional layer (3x3, stride 1, SAME padding in VGG).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -69,6 +75,67 @@ impl Network {
     pub fn total_ops(&self) -> u64 {
         2 * (self.total_conv_macs() + self.fcs.iter().map(|f| f.macs()).sum::<u64>())
     }
+
+    /// Does a 2x2 max pool follow conv layer `i`?  VGG pools after the
+    /// last conv of every stage (including the final stage, feeding the
+    /// FC head).
+    pub fn pool_after(&self, i: usize) -> bool {
+        match self.convs.get(i + 1) {
+            Some(next) => next.stage != self.convs[i].stage,
+            None => true,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer operations (the native serving path's glue around ConvExecutor)
+// ---------------------------------------------------------------------------
+
+/// Zero-pad a (C, H, W) feature map by `p` on every spatial side — VGG's
+/// SAME padding for its 3x3 / stride-1 convolutions is `p = 1`.
+pub fn pad_same(x: &Tensor, p: usize) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (hp, wp) = (h + 2 * p, w + 2 * p);
+    let mut out = Tensor::zeros(&[c, hp, wp]);
+    let od = out.data_mut();
+    let xd = x.data();
+    for cc in 0..c {
+        for i in 0..h {
+            let src = &xd[(cc * h + i) * w..][..w];
+            od[(cc * hp + i + p) * wp + p..][..w].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 2x2 max pooling with stride 2 (floor semantics — VGG spatial sizes are
+/// even at every pool).
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for cc in 0..c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let m = x
+                    .at3(cc, 2 * i, 2 * j)
+                    .max(x.at3(cc, 2 * i, 2 * j + 1))
+                    .max(x.at3(cc, 2 * i + 1, 2 * j))
+                    .max(x.at3(cc, 2 * i + 1, 2 * j + 1));
+                out.set3(cc, i, j, m);
+            }
+        }
+    }
+    out
 }
 
 /// VGG16 with 224x224x3 input — the paper's workload.
@@ -167,5 +234,46 @@ mod tests {
         assert_eq!(net.convs.len(), 5);
         assert_eq!(net.fcs[0].in_f, 1024);
         assert_eq!(net.fcs[1].out_f, 10);
+    }
+
+    #[test]
+    fn pool_after_matches_fc_input_sizes() {
+        // Following pool_after through the stages must land exactly on
+        // the FC head's expected input volume, for both networks.
+        for net in [vgg16(), vgg_tiny()] {
+            let mut hw = net.input_hw;
+            let mut ch = net.input_ch;
+            for (i, conv) in net.convs.iter().enumerate() {
+                assert_eq!(conv.in_ch, ch, "{}: {}", net.name, conv.name);
+                assert_eq!(conv.hw, hw, "{}: {}", net.name, conv.name);
+                ch = conv.out_ch;
+                if net.pool_after(i) {
+                    hw /= 2;
+                }
+            }
+            assert_eq!(net.fcs[0].in_f, ch * hw * hw, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn pad_same_places_and_zeroes() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = pad_same(&x, 1);
+        assert_eq!(p.shape(), &[1, 4, 4]);
+        assert_eq!(p.at3(0, 0, 0), 0.0);
+        assert_eq!(p.at3(0, 1, 1), 1.0);
+        assert_eq!(p.at3(0, 2, 2), 4.0);
+        assert_eq!(p.at3(0, 3, 3), 0.0);
+        assert_eq!(p.data().iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn relu_and_maxpool() {
+        let mut x = Tensor::from_vec(&[1, 2, 2], vec![-1.0, 2.0, 3.0, -4.0]);
+        relu_inplace(&mut x);
+        assert_eq!(x.data(), &[0.0, 2.0, 3.0, 0.0]);
+        let y = maxpool2(&x);
+        assert_eq!(y.shape(), &[1, 1, 1]);
+        assert_eq!(y.at3(0, 0, 0), 3.0);
     }
 }

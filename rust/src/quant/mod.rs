@@ -102,6 +102,37 @@ pub fn winograd_conv2d_quant_with_plan(
     plan.conv2d(&qx.qdq_tensor(x), &qw.qdq_tensor(w))
 }
 
+/// Calibrate one symmetric quantizer over a sparse bank's stored
+/// transform-domain values and return the fake-quantized bank (what the
+/// int8 weight FIFOs would hold, per §3.3's pruned directories) plus the
+/// quantizer.  One-time cost; cache the bank for the serving steady state.
+pub fn quantize_sparse_bank(
+    bank: &winograd::SparseFilterBank,
+    bits: u32,
+) -> (winograd::SparseFilterBank, Quantizer) {
+    let vals: Vec<f32> = bank
+        .coords()
+        .iter()
+        .flat_map(|b| b.an.iter().copied())
+        .collect();
+    let q = Quantizer::calibrate(bits, &vals);
+    (bank.map_values(|v| q.qdq(v)), q)
+}
+
+/// Quantized **sparse** Winograd convolution — the int8 variant of the
+/// transform-domain sparse path: the input is quantized per call, the
+/// pruned weights arrive pre-quantized via [`quantize_sparse_bank`], and
+/// the fused loop still skips every pruned block.
+pub fn winograd_conv2d_quant_sparse_with_plan(
+    plan: &mut winograd::WinogradPlan,
+    x: &Tensor,
+    qbank: &winograd::SparseFilterBank,
+    bits: u32,
+) -> Tensor {
+    let qx = Quantizer::calibrate(bits, x.data());
+    plan.conv2d_sparse_with_filters(&qx.qdq_tensor(x), qbank)
+}
+
 /// DSP-packing model: MACs per DSP slice per cycle at a given width.
 /// 8-bit packs two multiplies per DSP48 (the paper's 2x throughput row);
 /// 16-bit is one; wider splits across slices.
@@ -209,6 +240,43 @@ mod tests {
             let b = winograd_conv2d_quant(&x, &w, 4, bits);
             assert_eq!(a, b, "bits={bits}: plan reuse must be exact");
         }
+    }
+
+    #[test]
+    fn sixteen_bit_sparse_close_to_float_sparse() {
+        // Quantized sparse path vs the float sparse path on the same
+        // pruned bank: only quantization noise separates them, and the
+        // pruned-block skipping is identical.
+        let mut rng = Rng::new(76);
+        let x = rand_tensor(&mut rng, &[8, 10, 10]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let mut plan = winograd::WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.5);
+        let exact = plan.conv2d_sparse_with_filters(&x, &bank);
+        let (qbank, q) = quantize_sparse_bank(&bank, 16);
+        assert_eq!(qbank.nnz(), bank.nnz(), "directory must be unchanged");
+        assert!(q.step() > 0.0);
+        let q16 = winograd_conv2d_quant_sparse_with_plan(&mut plan, &x, &qbank, 16);
+        let rel = q16.max_abs_diff(&exact) / exact.max_abs().max(1e-6);
+        assert!(rel < 5e-3, "16-bit sparse relative error {rel}");
+    }
+
+    #[test]
+    fn eight_bit_sparse_noisier_than_sixteen() {
+        let mut rng = Rng::new(77);
+        let x = rand_tensor(&mut rng, &[8, 10, 10]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let mut plan = winograd::WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.5);
+        let exact = plan.conv2d_sparse_with_filters(&x, &bank);
+        let (qb16, _) = quantize_sparse_bank(&bank, 16);
+        let (qb8, _) = quantize_sparse_bank(&bank, 8);
+        let e16 = winograd_conv2d_quant_sparse_with_plan(&mut plan, &x, &qb16, 16)
+            .max_abs_diff(&exact);
+        let e8 = winograd_conv2d_quant_sparse_with_plan(&mut plan, &x, &qb8, 8)
+            .max_abs_diff(&exact);
+        assert!(e8 > e16, "8-bit must be noisier ({e8} vs {e16})");
+        assert!(e8 / exact.max_abs() < 0.2, "8-bit sparse error implausible");
     }
 
     #[test]

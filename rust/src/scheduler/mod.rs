@@ -19,7 +19,7 @@ use crate::model::LayerModel;
 use crate::nn::ConvLayer;
 use crate::sparse::Bcoo;
 use crate::systolic::BlockTiming;
-use crate::winograd::{num_tiles, tile_size};
+use crate::winograd::{num_tiles, tile_size, SparseFilterBank};
 
 /// Hardware configuration the scheduler targets.
 #[derive(Debug, Clone, Copy)]
@@ -195,6 +195,20 @@ pub fn schedule_sparse(
     }
 }
 
+/// Schedule one layer straight from a [`SparseFilterBank`] — the same
+/// per-coordinate directories the plan engine executes and the cluster
+/// simulation streams, so the analytical plan, the CPU numerics, and the
+/// simulated hardware all describe one weight set.
+pub fn schedule_sparse_bank(
+    layer: &ConvLayer,
+    cfg: &AcceleratorConfig,
+    bank: &SparseFilterBank,
+) -> LayerPlan {
+    assert_eq!(bank.l, cfg.l(), "bank block size != accelerator tile size");
+    let dirs: Vec<Option<&Bcoo>> = bank.coords().iter().map(Some).collect();
+    schedule_sparse(layer, cfg, &dirs)
+}
+
 /// Memory-access accounting for one layer (feeds the energy model with
 /// *measured-style* counts that mirror §5.1.3's assumptions: transformed
 /// maps live in local memory, weights stream from external memory).
@@ -287,6 +301,32 @@ mod tests {
             "90% sparsity matmul speedup only {speedup:.2}"
         );
         assert!(sparse.occupancy < 0.35);
+    }
+
+    #[test]
+    fn sparse_bank_schedule_matches_directories() {
+        use crate::tensor::Tensor;
+        use crate::winograd::WinogradPlan;
+        let cfg = AcceleratorConfig::paper();
+        let layer = ConvLayer {
+            name: "t",
+            stage: 1,
+            in_ch: 16,
+            out_ch: 16,
+            hw: 8,
+            r: 3,
+        };
+        let mut rng = Rng::new(52);
+        let w = Tensor::from_vec(&[16, 16, 3, 3], rng.gaussian_vec(16 * 16 * 9));
+        let plan = WinogradPlan::new(cfg.m, cfg.r);
+        let bank = plan.transform_filters_sparse(&w, 0.7);
+        let via_bank = schedule_sparse_bank(&layer, &cfg, &bank);
+        let dirs: Vec<Option<&Bcoo>> = bank.coords().iter().map(Some).collect();
+        let via_dirs = schedule_sparse(&layer, &cfg, &dirs);
+        assert_eq!(via_bank.matmul_cycles, via_dirs.matmul_cycles);
+        assert!(via_bank.occupancy < 0.6, "70% pruning must cut occupancy");
+        let dense = schedule_dense(&layer, &cfg);
+        assert!(via_bank.matmul_cycles < dense.matmul_cycles);
     }
 
     #[test]

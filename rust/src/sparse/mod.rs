@@ -134,6 +134,10 @@ impl Bcoo {
 
     /// Expand physical block `z` to a dense block-sized tile (the FIFO
     /// decompressor of paper §4.2's sparse cluster).
+    #[deprecated(
+        since = "0.1.0",
+        note = "allocates per call; use `expand_block_into` with recycled scratch"
+    )]
     pub fn expand_block(&self, z: u64) -> Option<Vec<f32>> {
         let mut tile = vec![0.0f32; self.block * self.block];
         if self.expand_block_into(z, &mut tile) {
@@ -286,14 +290,31 @@ mod tests {
     }
 
     #[test]
-    fn expand_block_matches_dense() {
+    fn expand_block_into_matches_dense() {
+        let (mat, rows, cols) = dense_fixture();
+        let bcoo = Bcoo::compress(&mat, rows, cols, 4);
+        let mut tile = vec![0.0f32; 16];
+        assert!(bcoo.expand_block_into(0, &mut tile));
+        assert_eq!(tile[0], 1.0);
+        assert_eq!(tile[1 * 4 + 2], 2.0);
+        tile.fill(0.0);
+        assert!(!bcoo.expand_block_into(1, &mut tile)); // zero block dropped
+        assert!(!bcoo.expand_block_into(2, &mut tile));
+        assert!(tile.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_expand_block_still_correct() {
+        // The allocating form stays as a thin wrapper for external users;
+        // internal hot paths all use `expand_block_into`.
         let (mat, rows, cols) = dense_fixture();
         let bcoo = Bcoo::compress(&mat, rows, cols, 4);
         let tile = bcoo.expand_block(0).unwrap();
-        assert_eq!(tile[0], 1.0);
-        assert_eq!(tile[1 * 4 + 2], 2.0);
-        assert!(bcoo.expand_block(1).is_none()); // zero block dropped
-        assert!(bcoo.expand_block(2).is_none());
+        let mut scratch = vec![0.0f32; 16];
+        assert!(bcoo.expand_block_into(0, &mut scratch));
+        assert_eq!(tile, scratch);
+        assert!(bcoo.expand_block(1).is_none());
     }
 
     #[test]

@@ -85,7 +85,7 @@ impl SystolicArray {
     ///
     /// Skewed wavefront: A row i enters the west edge of row i at tick i;
     /// B column j enters the north edge of column j at tick j.  PE(i, j)
-    /// sees a[i][k] and b[k][j] simultaneously at tick i + j + k, so the
+    /// sees `a[i][k]` and `b[k][j]` simultaneously at tick i + j + k, so the
     /// full product finishes after 3l - 2 ticks.
     pub fn mac_block(&mut self, a: &[f32], b: &[f32]) {
         let l = self.l;

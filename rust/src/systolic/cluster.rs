@@ -47,6 +47,10 @@ impl<'a> BlockMatrix<'a> {
     ///
     /// Allocates; the hot paths use [`BlockMatrix::get_into`] with FIFO-
     /// recycled scratch instead.
+    #[deprecated(
+        since = "0.1.0",
+        note = "allocates per call; use `get_into` with recycled scratch"
+    )]
     pub fn get(&self, rb: usize, cb: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; self.block * self.block];
         self.get_into(rb, cb, &mut out);
@@ -519,11 +523,14 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn get_into_matches_get_and_keeps_padding() {
         let data: Vec<f32> = (0..6).map(|i| i as f32 + 1.0).collect();
         let bm = BlockMatrix::new(&data, 2, 3, 4);
         let mut scratch = vec![0.0f32; 16];
         bm.get_into(0, 0, &mut scratch);
+        // The deprecated allocating form stays as a wrapper; it must keep
+        // agreeing with the `_into` hot path.
         assert_eq!(scratch, bm.get(0, 0));
         // Out-of-range block leaves the zeroed scratch untouched.
         scratch.fill(0.0);
@@ -537,7 +544,8 @@ mod tests {
         let bm = BlockMatrix::new(&data, 2, 3, 4);
         assert_eq!(bm.block_rows(), 1);
         assert_eq!(bm.block_cols(), 1);
-        let blk = bm.get(0, 0);
+        let mut blk = vec![0.0f32; 16];
+        bm.get_into(0, 0, &mut blk);
         assert_eq!(blk.iter().filter(|&&x| x != 0.0).count(), 6);
         assert_eq!(blk[3], 0.0); // padded column
     }

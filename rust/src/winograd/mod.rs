@@ -8,7 +8,7 @@
 pub mod plan;
 pub mod rational;
 
-pub use plan::{FilterBank, WinogradPlan};
+pub use plan::{FilterBank, SparseFilterBank, WinogradPlan};
 
 use crate::tensor::Tensor;
 use rational::Rat;
@@ -60,7 +60,7 @@ fn poly_mul(p: &[Rat], q: &[Rat]) -> Vec<Rat> {
     out
 }
 
-/// Coefficients of prod_k (x - roots[k]).
+/// Coefficients of `prod_k (x - roots[k])`.
 fn poly_from_roots(roots: &[Rat]) -> Vec<Rat> {
     let mut poly = vec![Rat::ONE];
     for &rt in roots {

@@ -25,12 +25,26 @@
 //!
 //! `transform_filters` returns a [`FilterBank`] so weights transform once
 //! and are reused across calls (the serving steady state).
+//!
+//! The sparse transform-domain pipeline lives here too: a
+//! [`SparseFilterBank`] holds one BCOO directory per Winograd coordinate
+//! (filters transformed once via `G`, pruned per tile-position with
+//! [`crate::sparse::prune_blocks`], blocks stored in Z-Morton order —
+//! exactly the representation the cluster simulator streams), and
+//! `conv2d_sparse_with_filters` runs the fused loop over **stored blocks
+//! only**, skipping pruned weight blocks entirely.  Both paths are
+//! allocation-free in steady state and bit-identical across worker
+//! counts; at block sparsity 0.0 the sparse path is bit-identical to the
+//! dense plan (the per-output-element accumulation order is the same
+//! ascending-channel walk).
 
 #![allow(clippy::too_many_arguments)]
 
 use super::{matrices_exact, num_tiles, tile_size};
+use crate::sparse::{prune_blocks, Bcoo};
 use crate::tensor::Tensor;
 use crate::winograd::rational::Rat;
+use crate::zmorton;
 
 /// Flatten a rational matrix to row-major f32.
 fn flatten(rows: &[Vec<Rat>]) -> Vec<f32> {
@@ -132,9 +146,14 @@ impl TileScratch {
 /// Plan-owned buffers reused across `conv2d` calls.
 #[derive(Default)]
 struct PlanScratch {
-    /// Transformed input, laid out [tile][channel][l*l] so tile-row bands
-    /// are contiguous (disjoint worker slices in the input stage).
+    /// Transformed input, laid out `[tile][channel][l*l]` so tile-row
+    /// bands are contiguous (disjoint worker slices in the input stage).
     v: Vec<f32>,
+    /// Coordinate-major transpose of `v` — `[coord][channel][tile]` — the
+    /// operand layout of the per-coordinate block-sparse matmuls.
+    vt: Vec<f32>,
+    /// Transform-domain products, `[coord][out_channel][tile]`.
+    mm: Vec<f32>,
     workers: Vec<TileScratch>,
 }
 
@@ -150,7 +169,7 @@ impl PlanScratch {
 }
 
 /// Spatial filters transformed to the Winograd domain, laid out
-/// [k][c][l*l] for the channel-accumulate inner loop.
+/// `[k][c][l*l]` for the channel-accumulate inner loop.
 pub struct FilterBank {
     pub k: usize,
     pub c: usize,
@@ -168,6 +187,107 @@ impl FilterBank {
 
     pub fn data(&self) -> &[f32] {
         &self.u
+    }
+}
+
+/// Spatial filters transformed to the Winograd domain and **block-pruned
+/// per tile-position** (paper §3.3): one [`Bcoo`] directory per Winograd
+/// coordinate `(ξ, ν)`, each holding that coordinate's `U^T` — the
+/// `(C x K)` slice, zero-padded to `(cp x kp)` block multiples — with the
+/// surviving `l x l` blocks stored in Z-Morton order.
+///
+/// This is the *single* pruned-weight representation of the stack: the
+/// plan's fused sparse loop, the functional cluster simulation, and the
+/// analytical scheduler all consume the same directories, so their
+/// numerics and skip counts stay comparable.
+#[derive(Clone)]
+pub struct SparseFilterBank {
+    pub k: usize,
+    pub c: usize,
+    pub l: usize,
+    /// `k`/`c` rounded up to block (`l`) multiples — the padded BCOO dims.
+    pub kp: usize,
+    pub cp: usize,
+    /// The block sparsity the bank was pruned at (the paper's knob).
+    pub target_sparsity: f64,
+    coords: Vec<Bcoo>,
+}
+
+impl SparseFilterBank {
+    /// The per-coordinate BCOO directories, indexed `ξ * l + ν`.
+    pub fn coords(&self) -> &[Bcoo] {
+        &self.coords
+    }
+
+    /// One coordinate's directory.
+    pub fn coord(&self, t: usize) -> &Bcoo {
+        &self.coords[t]
+    }
+
+    /// Consume the bank into its raw directories (the functional
+    /// simulator's input format).
+    pub fn into_coords(self) -> Vec<Bcoo> {
+        self.coords
+    }
+
+    /// Stored nonzero values across all coordinates.
+    pub fn nnz(&self) -> usize {
+        self.coords.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Measured mean block sparsity over the coordinate directories.
+    pub fn block_sparsity(&self) -> f64 {
+        if self.coords.is_empty() {
+            return 0.0;
+        }
+        self.coords.iter().map(|b| b.block_sparsity()).sum::<f64>() / self.coords.len() as f64
+    }
+
+    /// A copy with every stored value mapped through `f` — the hook the
+    /// quantized datapath uses (directory and block layout unchanged).
+    pub fn map_values(&self, f: impl Fn(f32) -> f32) -> SparseFilterBank {
+        let coords = self
+            .coords
+            .iter()
+            .map(|b| {
+                let mut b2 = b.clone();
+                for v in &mut b2.an {
+                    *v = f(*v);
+                }
+                b2
+            })
+            .collect();
+        SparseFilterBank {
+            k: self.k,
+            c: self.c,
+            l: self.l,
+            kp: self.kp,
+            cp: self.cp,
+            target_sparsity: self.target_sparsity,
+            coords,
+        }
+    }
+
+    /// Decompress to the dense [`FilterBank`] of the *pruned* weights —
+    /// the oracle for the sparse path: a dense run with this bank must
+    /// match the sparse run exactly.
+    pub fn to_dense_bank(&self) -> FilterBank {
+        let sz = self.l * self.l;
+        let mut u = vec![0.0f32; self.k * self.c * sz];
+        for (t, bcoo) in self.coords.iter().enumerate() {
+            let dense = bcoo.decompress();
+            for cc in 0..self.c {
+                for kk in 0..self.k {
+                    u[(kk * self.c + cc) * sz + t] = dense[cc * self.kp + kk];
+                }
+            }
+        }
+        FilterBank {
+            k: self.k,
+            c: self.c,
+            l: self.l,
+            u,
+        }
     }
 }
 
@@ -288,6 +408,44 @@ impl WinogradPlan {
         FilterBank { k, c, l, u }
     }
 
+    /// Transform spatial filters (K, C, r, r) once via `G`, then prune
+    /// whole `l x l` blocks **per Winograd coordinate** at the target
+    /// block sparsity and compress each coordinate's `U^T` to BCOO
+    /// (Z-Morton block order).  One-time cost per weight set; reuse the
+    /// returned bank across `conv2d_sparse_with_filters` calls.
+    pub fn transform_filters_sparse(&self, w: &Tensor, sparsity: f64) -> SparseFilterBank {
+        let l = self.consts.l;
+        let sz = l * l;
+        let bank = self.transform_filters(w);
+        let (k, c) = (bank.k, bank.c);
+        let pad = |x: usize| x.div_ceil(l) * l;
+        let (kp, cp) = (pad(k), pad(c));
+        let mut coords = Vec::with_capacity(sz);
+        let mut ut_t = vec![0.0f32; cp * kp];
+        for t in 0..sz {
+            // Coordinate t's U_t is (K x C); store U_t^T (C x K) zero-
+            // padded to blocks — the orientation the cluster's sparse B
+            // operand uses (weights skip, feature maps stream).
+            ut_t.fill(0.0);
+            for kk in 0..k {
+                for cc in 0..c {
+                    ut_t[cc * kp + kk] = bank.u[(kk * c + cc) * sz + t];
+                }
+            }
+            prune_blocks(&mut ut_t, cp, kp, l, sparsity);
+            coords.push(Bcoo::compress(&ut_t, cp, kp, l));
+        }
+        SparseFilterBank {
+            k,
+            c,
+            l,
+            kp,
+            cp,
+            target_sparsity: sparsity,
+            coords,
+        }
+    }
+
     /// Full dense Winograd convolution: x (C, H, W), w (K, C, r, r) ->
     /// (K, H - r + 1, W - r + 1).  Stride 1, VALID; edge tiles are
     /// zero-padded exactly like the Pallas kernels.
@@ -317,41 +475,12 @@ impl WinogradPlan {
         let n_a = threads.min(nty).max(1);
         let n_b = threads.min(k).max(1);
         scratch.ensure_workers(n_a.max(n_b), l, m);
-        let PlanScratch { v, workers } = scratch;
+        let PlanScratch { v, workers, .. } = scratch;
         let xd = x.data();
 
         // Stage 1: gather + B^T d B per (tile, channel), sharded by tile
         // row.  Each worker owns a contiguous band of `v`.
-        if n_a == 1 {
-            input_stage_rows(consts, &mut workers[0], xd, c, h, w_in, 0, nty, ntx, v);
-        } else {
-            std::thread::scope(|s| {
-                let mut rest: &mut [f32] = v;
-                let mut ty0 = 0;
-                for (wi, ws) in workers[..n_a].iter_mut().enumerate() {
-                    let rows = nty / n_a + usize::from(wi < nty % n_a);
-                    let (chunk, tail) =
-                        std::mem::take(&mut rest).split_at_mut(rows * ntx * c * sz);
-                    rest = tail;
-                    let start = ty0;
-                    ty0 += rows;
-                    s.spawn(move || {
-                        input_stage_rows(
-                            consts,
-                            ws,
-                            xd,
-                            c,
-                            h,
-                            w_in,
-                            start,
-                            start + rows,
-                            ntx,
-                            chunk,
-                        );
-                    });
-                }
-            });
-        }
+        run_input_stage(consts, workers, xd, c, h, w_in, nty, ntx, v, n_a);
 
         // Stage 2 + 3: channel-accumulate and inverse-transform per
         // (output channel, tile), sharded by output channel.  Workers
@@ -405,10 +534,289 @@ impl WinogradPlan {
         }
         out
     }
+
+    /// One-shot sparse convolution: transform + prune the weights, then
+    /// run the fused sparse loop.  Sweeps should build the bank once with
+    /// [`WinogradPlan::transform_filters_sparse`] and call
+    /// [`WinogradPlan::conv2d_sparse_with_filters`] directly.
+    pub fn conv2d_sparse(&mut self, x: &Tensor, w: &Tensor, sparsity: f64) -> Tensor {
+        let bank = self.transform_filters_sparse(w, sparsity);
+        self.conv2d_sparse_with_filters(x, &bank)
+    }
+
+    /// Sparse transform-domain convolution with a pre-pruned filter bank:
+    /// the fused loop iterates **only the stored (non-zero) weight
+    /// blocks** of each coordinate directory, in Z-Morton order.
+    ///
+    /// Stage 1 is the dense input transform; stage 2 transposes each
+    /// coordinate's V slice to `(C x tiles)` and streams the BCOO blocks
+    /// against it (one axpy per stored nonzero, vectorized over tiles);
+    /// stage 3 gathers the coordinate vector per (output channel, tile)
+    /// and inverse-transforms exactly like the dense engine.  All scratch
+    /// is plan-owned (zero steady-state allocations), and because every
+    /// coordinate is processed whole by one worker and the per-output
+    /// accumulation walks channels in ascending order — the same order as
+    /// the dense loop — results are bit-identical across worker counts
+    /// and, at block sparsity 0.0, bit-identical to `conv2d_with_filters`.
+    pub fn conv2d_sparse_with_filters(&mut self, x: &Tensor, bank: &SparseFilterBank) -> Tensor {
+        let threads = self.threads;
+        let consts = &self.consts;
+        let scratch = &mut self.scratch;
+        let (m, r, l) = (consts.m, consts.r, consts.l);
+        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
+        let (c, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        assert_eq!(bank.c, c, "sparse filter bank channel mismatch");
+        assert_eq!(bank.l, l, "sparse filter bank tile-size mismatch");
+        assert!(h >= r && w_in >= r, "input smaller than the filter");
+        let k = bank.k;
+        let (oh, ow) = (h - r + 1, w_in - r + 1);
+        let (nty, ntx) = (num_tiles(oh, m), num_tiles(ow, m));
+        let sz = l * l;
+        let n_tiles = nty * ntx;
+
+        scratch.v.resize(n_tiles * c * sz, 0.0);
+        scratch.vt.resize(sz * c * n_tiles, 0.0);
+        scratch.mm.resize(sz * k * n_tiles, 0.0);
+        let n_a = threads.min(nty).max(1);
+        let n_c = threads.min(sz).max(1);
+        let n_b = threads.min(k).max(1);
+        scratch.ensure_workers(n_a.max(n_b), l, m);
+        let PlanScratch { v, vt, mm, workers } = scratch;
+        let xd = x.data();
+
+        // Stage 1: identical to the dense engine.
+        run_input_stage(consts, workers, xd, c, h, w_in, nty, ntx, v, n_a);
+
+        // Stage 2: per-coordinate transpose + block-sparse matmul,
+        // sharded by coordinate.  Each worker owns contiguous `vt`/`mm`
+        // coordinate bands; pruned blocks are never visited.
+        let v_ro: &[f32] = v;
+        if n_c == 1 {
+            coord_stage_ts(bank, v_ro, vt, mm, 0, sz, c, k, n_tiles);
+        } else {
+            std::thread::scope(|s| {
+                let mut vt_rest: &mut [f32] = vt;
+                let mut mm_rest: &mut [f32] = mm;
+                let mut t0 = 0;
+                for wi in 0..n_c {
+                    let ts = sz / n_c + usize::from(wi < sz % n_c);
+                    let (vt_chunk, vt_tail) =
+                        std::mem::take(&mut vt_rest).split_at_mut(ts * c * n_tiles);
+                    vt_rest = vt_tail;
+                    let (mm_chunk, mm_tail) =
+                        std::mem::take(&mut mm_rest).split_at_mut(ts * k * n_tiles);
+                    mm_rest = mm_tail;
+                    let start = t0;
+                    t0 += ts;
+                    s.spawn(move || {
+                        coord_stage_ts(
+                            bank,
+                            v_ro,
+                            vt_chunk,
+                            mm_chunk,
+                            start,
+                            start + ts,
+                            c,
+                            k,
+                            n_tiles,
+                        );
+                    });
+                }
+            });
+        }
+
+        // Stage 3: gather the coordinate vector per (output channel,
+        // tile) and inverse-transform, sharded by output channel.
+        let mut out = Tensor::zeros(&[k, oh, ow]);
+        let mm_ro: &[f32] = mm;
+        if n_b == 1 {
+            inverse_stage_ks(
+                consts,
+                &mut workers[0],
+                mm_ro,
+                out.data_mut(),
+                0,
+                k,
+                k,
+                nty,
+                ntx,
+                oh,
+                ow,
+            );
+        } else {
+            let out_data = out.data_mut();
+            std::thread::scope(|s| {
+                let mut rest: &mut [f32] = out_data;
+                let mut k0 = 0;
+                for (wi, ws) in workers[..n_b].iter_mut().enumerate() {
+                    let ks = k / n_b + usize::from(wi < k % n_b);
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(ks * oh * ow);
+                    rest = tail;
+                    let start = k0;
+                    k0 += ks;
+                    s.spawn(move || {
+                        inverse_stage_ks(
+                            consts,
+                            ws,
+                            mm_ro,
+                            chunk,
+                            start,
+                            start + ks,
+                            k,
+                            nty,
+                            ntx,
+                            oh,
+                            ow,
+                        );
+                    });
+                }
+            });
+        }
+        out
+    }
 }
 
-/// Stage 1 worker: transform tile rows [ty0, ty1) into the caller's `v`
-/// band (layout [tile][channel][l*l], tile-major within the band).
+/// Run the (dense) input stage over `n_a` workers, each owning a
+/// contiguous tile-row band of `v`.
+fn run_input_stage(
+    consts: &PlanConsts,
+    workers: &mut [TileScratch],
+    xd: &[f32],
+    c: usize,
+    h: usize,
+    w_in: usize,
+    nty: usize,
+    ntx: usize,
+    v: &mut [f32],
+    n_a: usize,
+) {
+    let sz = consts.l * consts.l;
+    if n_a == 1 {
+        input_stage_rows(consts, &mut workers[0], xd, c, h, w_in, 0, nty, ntx, v);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = v;
+        let mut ty0 = 0;
+        for (wi, ws) in workers[..n_a].iter_mut().enumerate() {
+            let rows = nty / n_a + usize::from(wi < nty % n_a);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * ntx * c * sz);
+            rest = tail;
+            let start = ty0;
+            ty0 += rows;
+            s.spawn(move || {
+                input_stage_rows(consts, ws, xd, c, h, w_in, start, start + rows, ntx, chunk);
+            });
+        }
+    });
+}
+
+/// Stage 2 worker of the sparse path: for coordinates `[t0, t1)`,
+/// transpose the plan-layout `v` into the coordinate-major band `vt`
+/// (`[t - t0][channel][tile]`), then accumulate `M_t = U_t · V_t` by
+/// streaming the stored BCOO blocks of each coordinate directory in
+/// Z-Morton order — one tiles-length axpy per stored nonzero.  Entries
+/// land in ascending-channel order per output row, so the accumulation
+/// order per output element matches the dense engine exactly.
+fn coord_stage_ts(
+    bank: &SparseFilterBank,
+    v: &[f32],
+    vt: &mut [f32],
+    mm: &mut [f32],
+    t0: usize,
+    t1: usize,
+    c: usize,
+    k: usize,
+    n_tiles: usize,
+) {
+    let l = bank.l;
+    let sz = l * l;
+    // Transpose this band: vt[(t - t0, cc, b)] = v[(b, cc, t)].  Writes
+    // are contiguous tile runs; the strided reads of one (channel, tile)
+    // source line are reused across the band's consecutive coordinates.
+    for cc in 0..c {
+        for t in t0..t1 {
+            let dst = &mut vt[((t - t0) * c + cc) * n_tiles..][..n_tiles];
+            for (b, d) in dst.iter_mut().enumerate() {
+                *d = v[(b * c + cc) * sz + t];
+            }
+        }
+    }
+    mm.fill(0.0);
+    for t in t0..t1 {
+        let vt_t = &vt[(t - t0) * c * n_tiles..][..c * n_tiles];
+        let mm_t = &mut mm[(t - t0) * k * n_tiles..][..k * n_tiles];
+        let bcoo = bank.coord(t);
+        for (s, &z) in bcoo.bn.iter().enumerate() {
+            let (rb, cb) = zmorton::decode(z);
+            let (r0, c0) = (rb as usize * l, cb as usize * l);
+            for idx in bcoo.bi[s]..bcoo.bi[s + 1] {
+                // U^T orientation: block row = input channel, col = output
+                // channel; entries in the zero-padded margin cannot exist
+                // (their values are exactly 0), so the guards are free.
+                let cc = r0 + bcoo.ai[idx] as usize;
+                let kk = c0 + bcoo.aj[idx] as usize;
+                if cc >= c || kk >= k {
+                    continue;
+                }
+                let val = bcoo.an[idx];
+                let row = &vt_t[cc * n_tiles..(cc + 1) * n_tiles];
+                let out = &mut mm_t[kk * n_tiles..(kk + 1) * n_tiles];
+                for (o, &x1) in out.iter_mut().zip(row) {
+                    *o += val * x1;
+                }
+            }
+        }
+    }
+}
+
+/// Stage 3 worker of the sparse path: for output channels `[k0, k1)`,
+/// gather each tile's coordinate vector from the `[coord][k][tile]`
+/// products, inverse-transform (`A^T t A`), and scatter into the caller's
+/// output band (`out` starts at channel `k0`).
+fn inverse_stage_ks(
+    consts: &PlanConsts,
+    ws: &mut TileScratch,
+    mm: &[f32],
+    out: &mut [f32],
+    k0: usize,
+    k1: usize,
+    k: usize,
+    nty: usize,
+    ntx: usize,
+    oh: usize,
+    ow: usize,
+) {
+    let (m, l) = (consts.m, consts.l);
+    let sz = l * l;
+    let n_tiles = nty * ntx;
+    for kk in k0..k1 {
+        let out_k = &mut out[(kk - k0) * oh * ow..][..oh * ow];
+        for ty in 0..nty {
+            let y0 = ty * m;
+            let nrows = (oh - y0).min(m);
+            for tx in 0..ntx {
+                let x0 = tx * m;
+                let ncols = (ow - x0).min(m);
+                let tile = ty * ntx + tx;
+                for t in 0..sz {
+                    ws.acc[t] = mm[(t * k + kk) * n_tiles + tile];
+                }
+                // Y = (A^T t) A -> (m, m), then scatter the valid window —
+                // identical arithmetic to the dense output stage.
+                matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
+                matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
+                for i in 0..nrows {
+                    out_k[(y0 + i) * ow + x0..][..ncols]
+                        .copy_from_slice(&ws.y[i * m..i * m + ncols]);
+                }
+            }
+        }
+    }
+}
+
+/// Stage 1 worker: transform tile rows `[ty0, ty1)` into the caller's `v`
+/// band (layout `[tile][channel][l*l]`, tile-major within the band).
 fn input_stage_rows(
     consts: &PlanConsts,
     ws: &mut TileScratch,
@@ -449,7 +857,7 @@ fn input_stage_rows(
     }
 }
 
-/// Stage 2+3 worker: for output channels [k0, k1), accumulate
+/// Stage 2+3 worker: for output channels `[k0, k1)`, accumulate
 /// U_k ⊙ V over channels per tile, inverse-transform, and scatter into
 /// the caller's output band (`out` starts at channel k0).
 fn output_stage_ks(
@@ -600,6 +1008,66 @@ mod tests {
             assert_eq!(plan.a(), at.transpose2().data());
             assert_eq!(plan.g_t(), g.transpose2().data());
         }
+    }
+
+    // The sparse-vs-dense bit-identity, decompressed-oracle, and threaded
+    // determinism properties are covered by the randomized suite in
+    // rust/tests/properties.rs (prop_sparse_plan_*); the tests here cover
+    // the bank construction/reuse surface only.
+
+    #[test]
+    fn sparse_one_shot_matches_bank_reuse() {
+        let mut rng = Rng::new(313);
+        let x = rand_tensor(&mut rng, &[4, 10, 10]);
+        let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
+        let mut plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.5);
+        let a = plan.conv2d_sparse_with_filters(&x, &bank);
+        let b = plan.conv2d_sparse(&x, &w, 0.5);
+        assert_eq!(a, b, "bank reuse must be exact");
+    }
+
+    #[test]
+    fn sparse_bank_directories_in_zmorton_order() {
+        let mut rng = Rng::new(314);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.5);
+        assert_eq!(bank.coords().len(), 16);
+        for bcoo in bank.coords() {
+            assert!(
+                bcoo.bn.windows(2).all(|p| p[0] < p[1]),
+                "block directory must be Z-Morton sorted"
+            );
+            assert_eq!(bcoo.rows, bank.cp);
+            assert_eq!(bcoo.cols, bank.kp);
+        }
+        // The measured sparsity tracks the knob.
+        assert!((bank.block_sparsity() - 0.5).abs() < 0.15);
+        assert_eq!(bank.target_sparsity, 0.5);
+    }
+
+    #[test]
+    fn sparse_map_values_identity_roundtrip() {
+        let mut rng = Rng::new(315);
+        let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
+        let plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.25);
+        let same = bank.map_values(|v| v);
+        assert_eq!(bank.nnz(), same.nnz());
+        for (a, b) in bank.coords().iter().zip(same.coords()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn sparse_to_dense_bank_zero_sparsity_equals_transform() {
+        let mut rng = Rng::new(316);
+        let w = rand_tensor(&mut rng, &[3, 5, 3, 3]);
+        let plan = WinogradPlan::new(4, 3);
+        let dense = plan.transform_filters(&w);
+        let back = plan.transform_filters_sparse(&w, 0.0).to_dense_bank();
+        assert_eq!(dense.data(), back.data());
     }
 
     #[test]

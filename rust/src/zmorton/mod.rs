@@ -168,6 +168,60 @@ mod tests {
     }
 
     #[test]
+    fn prop_encode_monotone_per_axis() {
+        // Property: with one coordinate fixed, the physical address is
+        // strictly monotone in the other — the fetch order walks logical
+        // rows/columns in order within each quadrant.
+        let mut rng = Rng::new(12);
+        for _ in 0..2_000 {
+            let r = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            let c = (rng.next_u64() & 0x7FFF_FFFF) as u32;
+            assert!(encode(r, c) < encode(r, c + 1), "col monotone at ({r},{c})");
+            let r2 = (rng.next_u64() & 0x7FFF_FFFF) as u32;
+            let c2 = (rng.next_u64() & 0xFFFF_FFFF) as u32;
+            assert!(encode(r2, c2) < encode(r2 + 1, c2), "row monotone at ({r2},{c2})");
+        }
+    }
+
+    #[test]
+    fn prop_encode_dominance_monotone() {
+        // Property: Z-Morton preserves blockwise dominance — if a block is
+        // at or below-right of another (both coordinates >=, not equal),
+        // its physical id is strictly larger.  The interleaved halves live
+        // on disjoint bit positions, so z = spread(c) + 2*spread(r) and
+        // each term is monotone.  This is the block-order monotonicity the
+        // BCOO directory relies on: sorting by z keeps each block column's
+        // rows (the per-output-channel accumulation order) ascending.
+        let mut rng = Rng::new(13);
+        for case in 0..2_000 {
+            let r1 = (rng.next_u64() & 0xFFFF) as u32;
+            let c1 = (rng.next_u64() & 0xFFFF) as u32;
+            let dr = (rng.next_u64() & 0xFF) as u32;
+            let dc = (rng.next_u64() & 0xFF) as u32;
+            if dr == 0 && dc == 0 {
+                continue;
+            }
+            assert!(
+                encode(r1, c1) < encode(r1 + dr, c1 + dc),
+                "case {case}: ({r1},{c1}) vs ({},{})",
+                r1 + dr,
+                c1 + dc
+            );
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_edge_values() {
+        for v in [0u32, 1, 2, 0xFFFF, 0x1_0000, 0x7FFF_FFFF, u32::MAX] {
+            for w in [0u32, 1, 0xFFFF, u32::MAX] {
+                assert_eq!(decode(encode(v, w)), (v, w));
+                assert_eq!(decode(encode(w, v)), (w, v));
+            }
+        }
+        assert_eq!(encode(u32::MAX, u32::MAX), u64::MAX);
+    }
+
+    #[test]
     fn encode_bijective_on_grid() {
         let mut seen = HashSet::new();
         for r in 0..64u32 {

@@ -247,3 +247,41 @@ fn vgg16_conv5_layer_executes_at_paper_scale() {
         "conv5 execution took {dt:?} — no-grid kernel regression?"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Native serving path (no artifacts needed): the transform-domain sparse
+// pipeline end-to-end — ConvExecutor banks -> NetworkExecutor -> batcher.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_server_end_to_end_sparse_pipeline() {
+    use swcnn::coordinator::NativeServerConfig;
+    use swcnn::executor::ExecPolicy;
+    use swcnn::nn::vgg_tiny;
+
+    let cfg = NativeServerConfig::new(vgg_tiny(), ExecPolicy::sparse(2, 0.8));
+    let server = InferenceServer::start_native(cfg).unwrap();
+    let mut rng = Rng::new(44);
+    let elems = server.input_elements();
+    assert_eq!(elems, 3 * 32 * 32);
+
+    // Burst to exercise batching, then solo re-runs must be identical
+    // (the native engine is deterministic regardless of batch packing).
+    let imgs: Vec<Vec<f32>> = (0..6).map(|_| rng.gaussian_vec(elems)).collect();
+    let rxs: Vec<_> = imgs
+        .iter()
+        .map(|img| server.infer_async(img.clone()))
+        .collect();
+    let burst: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    for (img, got) in imgs.iter().zip(&burst) {
+        assert_eq!(got.len(), server.output_elements());
+        assert!(got.iter().all(|v| v.is_finite()));
+        let solo = server.infer(img.clone()).unwrap();
+        assert_eq!(&solo, got, "batched vs solo must be bit-identical");
+    }
+    let m = server.metrics.lock().unwrap();
+    assert!(m.requests >= 12);
+}

@@ -113,6 +113,81 @@ fn prop_plan_filter_bank_reuse_exact() {
 }
 
 #[test]
+fn prop_sparse_plan_zero_sparsity_bit_identical_to_dense() {
+    // The fused sparse loop at block sparsity 0.0 must be bit-identical
+    // to the dense plan for every tile size, including non-tile-aligned
+    // shapes — the per-output accumulation order is the same.
+    let mut rng = Rng::new(1014);
+    for &m in &[2usize, 4, 6] {
+        let mut plan = WinogradPlan::new(m, 3);
+        for case in 0..8 {
+            let c = 1 + rng.next_below(6);
+            let k = 1 + rng.next_below(6);
+            let h = 7 + rng.next_below(12);
+            let w = 7 + rng.next_below(12);
+            let x = rand_tensor(&mut rng, &[c, h, w]);
+            let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+            let sbank = plan.transform_filters_sparse(&wt, 0.0);
+            let dbank = plan.transform_filters(&wt);
+            let ys = plan.conv2d_sparse_with_filters(&x, &sbank);
+            let yd = plan.conv2d_with_filters(&x, &dbank);
+            assert_eq!(ys, yd, "case {case}: F({m},3) C={c} K={k} {h}x{w}");
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_plan_matches_decompressed_dense_run() {
+    // At any sparsity, the sparse loop equals a dense run of the
+    // decompressed pruned bank (same values, same summation order).
+    let mut rng = Rng::new(1015);
+    for case in 0..12 {
+        let m = [2usize, 4][rng.next_below(2)];
+        let c = 1 + rng.next_below(9);
+        let k = 1 + rng.next_below(9);
+        let h = 7 + rng.next_below(10);
+        let w = 7 + rng.next_below(10);
+        let sparsity = rng.next_f64() * 0.9;
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let mut plan = WinogradPlan::new(m, 3);
+        let sbank = plan.transform_filters_sparse(&wt, sparsity);
+        let ys = plan.conv2d_sparse_with_filters(&x, &sbank);
+        let yd = plan.conv2d_with_filters(&x, &sbank.to_dense_bank());
+        assert_eq!(
+            ys, yd,
+            "case {case}: F({m},3) C={c} K={k} {h}x{w} p={sparsity:.2}"
+        );
+    }
+}
+
+#[test]
+fn prop_sparse_plan_threaded_bit_identical() {
+    let mut rng = Rng::new(1016);
+    for case in 0..6 {
+        let m = [2usize, 4, 6][rng.next_below(3)];
+        let c = 1 + rng.next_below(6);
+        let k = 1 + rng.next_below(9);
+        let h = 8 + rng.next_below(17);
+        let w = 8 + rng.next_below(17);
+        let sparsity = rng.next_f64() * 0.8;
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        let mut single = WinogradPlan::new(m, 3).with_threads(1);
+        let bank = single.transform_filters_sparse(&wt, sparsity);
+        let want = single.conv2d_sparse_with_filters(&x, &bank);
+        for threads in [2usize, 5] {
+            let mut multi = WinogradPlan::new(m, 3).with_threads(threads);
+            let got = multi.conv2d_sparse_with_filters(&x, &bank);
+            assert_eq!(
+                got, want,
+                "case {case}: F({m},3) C={c} K={k} {h}x{w} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_cluster_matmul_equals_reference_random_dims() {
     let mut rng = Rng::new(1002);
     for case in 0..30 {
