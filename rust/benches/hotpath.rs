@@ -267,6 +267,53 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
+    // Batched sparse launch on the same layer: one fused batch-4 call
+    // decodes every stored weight block once and streams it against all
+    // four images' tiles (the serving path's amortization).  Gated on
+    // per-image bit-identity with the single-image engine.
+    // ------------------------------------------------------------------
+    {
+        let sbank = plan.transform_filters_sparse(&w, 0.7);
+        let single_mean = sparse_rows
+            .iter()
+            .find(|row| row.0 == 0.7)
+            .expect("0.7 row in the sparsity sweep")
+            .2;
+        let n = 4usize;
+        let xb = Tensor::from_vec(&[n, c, hw, hw], rng.gaussian_vec(n * c * hw * hw));
+        let s_b4 = time_it(1, 5, || {
+            std::hint::black_box(plan.conv2d_sparse_with_filters_batch(&xb, &sbank));
+        });
+        let yb = plan.conv2d_sparse_with_filters_batch(&xb, &sbank);
+        let per = yb.len() / n;
+        for i in 0..n {
+            let xi = Tensor::from_vec(
+                &[c, hw, hw],
+                xb.data()[i * c * hw * hw..(i + 1) * c * hw * hw].to_vec(),
+            );
+            let want = plan.conv2d_sparse_with_filters(&xi, &sbank);
+            assert_eq!(
+                &yb.data()[i * per..(i + 1) * per],
+                want.data(),
+                "batched image {i} must be bit-identical to the single-image engine"
+            );
+        }
+        let per_image_speedup = single_mean / (s_b4.mean / n as f64);
+        record(
+            &mut records,
+            "wino_sparse70_batch4_f43_c64k64_56",
+            s_b4,
+            format!("fused batch-4 launch, {per_image_speedup:.2}x per image vs batch-1"),
+        );
+        extras.push(("sparse_batch4_per_image_speedup".into(), per_image_speedup));
+        rows.push(vec![
+            "winograd sparse p=0.7 batch-4".into(),
+            format!("{:.2} ms/launch", s_b4.mean * 1e3),
+            format!("{per_image_speedup:.2}x per image vs batch-1"),
+        ]);
+    }
+
+    // ------------------------------------------------------------------
     // Simulator hot paths.
     // ------------------------------------------------------------------
     let a = rng.gaussian_vec(64 * 64);

@@ -1,0 +1,139 @@
+//! Serving-throughput bench: the batched native engine on sparse
+//! vgg_tiny, sweeping fused batch sizes 1 / 2 / 4 / 8.
+//!
+//!   cargo bench --bench serving
+//!
+//! One `forward_batch` launch runs every layer's cached (sparse) filter
+//! bank once for the whole batch — the batch-amortized weight reuse the
+//! paper's 3-D cluster extension banks on.  The sweep is written to
+//! `BENCH_serving.json` (in the bench working directory) so the
+//! amortization shows up in the perf trajectory, and the bench asserts
+//! the two gates that make the serving claim real rather than cosmetic:
+//!
+//! - **bit-identity**: every batched result equals the sequential
+//!   per-image `forward` results exactly, for every batch size;
+//! - **amortization**: batch-4 throughput (images/s) strictly above
+//!   batch-1.
+
+use swcnn::bench::{print_table, time_it};
+use swcnn::executor::{ExecPolicy, NetworkExecutor};
+use swcnn::nn::vgg_tiny;
+use swcnn::util::json::Json;
+use swcnn::util::Rng;
+
+const BATCHES: [usize; 4] = [1, 2, 4, 8];
+const SPARSITY: f64 = 0.7;
+
+fn main() {
+    let max_batch = *BATCHES.iter().max().unwrap();
+    let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, SPARSITY), 7)
+        .with_max_batch(max_batch);
+    let mut rng = Rng::new(42);
+    let images: Vec<Vec<f32>> = (0..max_batch)
+        .map(|_| rng.gaussian_vec(exec.input_elements()))
+        .collect();
+    let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+
+    // Correctness gate: a fast-but-wrong batched engine must fail the
+    // bench.  Every batch size must reproduce the sequential per-image
+    // logits bit for bit.
+    let seq: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im)).collect();
+    for &n in &BATCHES {
+        let got = exec.forward_batch(&refs[..n]);
+        assert_eq!(
+            got,
+            seq[..n],
+            "batch {n} must be bit-identical to sequential forward"
+        );
+    }
+
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    let mut per_batch_tput = Vec::new();
+    for &n in &BATCHES {
+        let s = time_it(1, 8, || {
+            std::hint::black_box(exec.forward_batch(&refs[..n]));
+        });
+        let images_per_s = n as f64 / s.mean;
+        per_batch_tput.push((n, images_per_s));
+        results.push((n, s.mean, images_per_s));
+        rows.push(vec![
+            format!("forward_batch n={n}"),
+            format!("{:.2} ms/launch", s.mean * 1e3),
+            format!("{:.1} img/s", images_per_s),
+        ]);
+    }
+    let tput = |want: usize| {
+        per_batch_tput
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, t)| *t)
+            .unwrap()
+    };
+    let b1 = tput(1);
+    let speedup4 = tput(4) / b1;
+    let speedup8 = tput(8) / b1;
+    rows.push(vec![
+        "batch-4 vs batch-1".into(),
+        format!("{speedup4:.2}x throughput"),
+        "bit-identity verified for all batch sizes".into(),
+    ]);
+    print_table(
+        &format!("serving throughput (sparse {SPARSITY} vgg_tiny, native engine)"),
+        &["launch", "latency", "throughput"],
+        &rows,
+    );
+    write_json(&results, speedup4, speedup8);
+
+    // The amortization gate (CI runs this bench): sharing each stored
+    // filter block across the batch must buy real throughput, not just
+    // plumb a batch dimension through.
+    assert!(
+        speedup4 > 1.0,
+        "batch-4 throughput must strictly beat batch-1 (got {speedup4:.2}x)"
+    );
+}
+
+/// `BENCH_serving.json`: one row per fused batch size with per-launch
+/// mean seconds and images/s, plus the headline batch-4 / batch-8
+/// throughput ratios vs batch-1.
+fn write_json(results: &[(usize, f64, f64)], speedup4: f64, speedup8: f64) {
+    use std::collections::BTreeMap;
+    let b1_tput = results
+        .iter()
+        .find(|(n, _, _)| *n == 1)
+        .map(|(_, _, t)| *t)
+        .unwrap();
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|&(n, mean_s, images_per_s)| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(format!("serve_vgg_tiny_b{n}"))),
+                ("batch".to_string(), Json::Num(n as f64)),
+                ("mean_s".to_string(), Json::Num(mean_s)),
+                ("images_per_s".to_string(), Json::Num(images_per_s)),
+                (
+                    "speedup_vs_b1".to_string(),
+                    Json::Num(images_per_s / b1_tput),
+                ),
+            ]))
+        })
+        .collect();
+    let top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("serving".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("network".to_string(), Json::Str("vgg_tiny".to_string())),
+        (
+            "policy".to_string(),
+            Json::Str(format!("sparse F(2,3) p={SPARSITY}")),
+        ),
+        ("results".to_string(), Json::Arr(rows)),
+        ("batch4_speedup_vs_b1".to_string(), Json::Num(speedup4)),
+        ("batch8_speedup_vs_b1".to_string(), Json::Num(speedup8)),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

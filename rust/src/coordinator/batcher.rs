@@ -63,6 +63,12 @@ impl Batcher {
 
     /// Should the worker wait for more requests?  Yes while the queue
     /// cannot fill the largest executable and the window hasn't expired.
+    ///
+    /// `waited` is the time since the **first enqueue into the empty
+    /// queue** (the head request's age) — that is when the accumulation
+    /// window opens.  Measuring from any earlier origin (e.g. before an
+    /// idle blocking recv) silently expires the window before the burst
+    /// even starts and degenerates steady-state batching to size 1.
     pub fn should_wait(&self, pending: usize, waited: Duration) -> bool {
         pending > 0 && pending < self.max_batch() && waited < self.window
     }

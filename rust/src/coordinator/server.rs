@@ -144,7 +144,8 @@ impl InferenceServer {
         let metrics_worker = metrics.clone();
 
         let worker = std::thread::spawn(move || {
-            let exec = NetworkExecutor::synthetic(cfg.net, cfg.policy, cfg.seed);
+            let exec = NetworkExecutor::synthetic(cfg.net, cfg.policy, cfg.seed)
+                .with_max_batch(cfg.max_batch.max(1));
             let input_elems = exec.input_elements();
             let output_elems = exec.output_elements();
             let batcher = Batcher::contiguous(cfg.max_batch, cfg.window);
@@ -241,7 +242,13 @@ impl Engine {
                     .map(|i| flat[i * per..(i + 1) * per].to_vec())
                     .collect())
             }
-            Engine::Native(exec) => images.iter().map(|im| Ok(exec.forward(im))).collect(),
+            Engine::Native(exec) => {
+                // One fused batched launch per plan: every cached filter
+                // bank streams once for the whole batch instead of once
+                // per image (bit-identical to the per-image path).
+                let imgs: Vec<&[f32]> = images.iter().map(|im| im.as_slice()).collect();
+                Ok(exec.forward_batch(&imgs))
+            }
         }
     }
 }
@@ -298,13 +305,15 @@ fn worker_loop(
     let mut queue: Vec<Pending> = Vec::new();
     let mut open = true;
     while open || !queue.is_empty() {
-        // Drain or wait according to the batching window.
-        let wait_start = Instant::now();
+        // Drain or wait according to the batching window.  The window is
+        // measured from the **first enqueue into the empty queue** (the
+        // head request's timestamp) — measuring from before the idle
+        // recv would burn the window while nothing is pending, so under
+        // steady load every launch would degenerate to batch 1.
         loop {
-            let timeout = if queue.is_empty() {
-                Duration::from_millis(50)
-            } else {
-                batcher.window.saturating_sub(wait_start.elapsed())
+            let timeout = match queue.first() {
+                None => Duration::from_millis(50),
+                Some(head) => batcher.window.saturating_sub(head.enqueued.elapsed()),
             };
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Infer { image, resp }) => {
@@ -320,7 +329,7 @@ fn worker_loop(
                         resp,
                         enqueued: Instant::now(),
                     });
-                    if !batcher.should_wait(queue.len(), wait_start.elapsed()) {
+                    if !batcher.should_wait(queue.len(), queue[0].enqueued.elapsed()) {
                         break;
                     }
                 }
@@ -403,6 +412,36 @@ mod tests {
         assert_eq!(m.requests, 5);
         assert!(m.batches <= 5);
         assert!(m.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn burst_within_window_coalesces_into_one_batch() {
+        // Regression test for the batching-window origin: the window must
+        // open at the first enqueue into the empty queue, not before the
+        // idle recv — otherwise a burst lands after the window already
+        // expired and every launch degenerates to batch 1.  The window is
+        // generous; the launch still fires immediately once the queue
+        // reaches max_batch, so this stays fast.
+        let mut cfg = native_cfg(0.7);
+        cfg.window = Duration::from_secs(1);
+        cfg.max_batch = 4;
+        let server = InferenceServer::start_native(cfg).expect("start");
+        let mut rng = Rng::new(13);
+        let rxs: Vec<_> = (0..4)
+            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .collect();
+        for rx in rxs {
+            let y = rx.recv().expect("response").expect("inference");
+            assert_eq!(y.len(), 10);
+        }
+        let m = match server.metrics.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.batches, 1, "burst must coalesce into one fused launch");
+        assert_eq!(m.batch_histogram()[4], 1);
+        assert!(m.mean_batch() > 1.0);
     }
 
     #[test]

@@ -13,12 +13,22 @@
 //! [`NetworkExecutor`] composes per-layer executors with the `nn` layer
 //! ops (SAME padding, ReLU, stage pooling, FC head) into a full forward
 //! pass — the engine behind the coordinator's native serving path.
+//! [`NetworkExecutor::forward_batch`] runs N images through **one fused
+//! batched launch per layer** on a build-time-sized ping-pong workspace:
+//! zero steady-state allocations, bit-identical to the per-image
+//! [`NetworkExecutor::forward`] results.
 
 use crate::nn::{self, Network};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use crate::winograd::{tile_size, FilterBank, SparseFilterBank, WinogradPlan};
+
+/// Seed of the deterministic calibration sample the activation quantizer
+/// falls back to when [`ExecPolicy::act_scale`] is not set.
+const ACT_CALIB_SEED: u64 = 0xca11b;
+/// Size of that calibration sample.
+const ACT_CALIB_SAMPLES: usize = 4096;
 
 /// Per-layer execution policy: which F(m, r) to run, how hard to prune,
 /// and whether to quantize the datapath.
@@ -33,8 +43,18 @@ pub struct ExecPolicy {
     /// transform-domain path; below it the (pruned) dense bank is cheaper
     /// to stream.
     pub sparse_threshold: f64,
-    /// `Some(bits)` quantizes inputs per call and weights at prepare time.
+    /// `Some(bits)` quantizes activations and weights on the fixed scales
+    /// chosen at prepare time.
     pub bits: Option<u32>,
+    /// Explicit activation-quantizer scale.  `None` calibrates once at
+    /// prepare from a seeded unit-gaussian sample — like real fixed-point
+    /// hardware, the scale never depends on the request, so batched and
+    /// sequential execution are numerically identical.  The default
+    /// sample assumes roughly unit-variance activations (the synthetic
+    /// He-scaled stack); values beyond its ~4σ range clamp to the top
+    /// code, so deployments with a different input range must pin
+    /// `act_scale` to their own Q-format.
+    pub act_scale: Option<f32>,
 }
 
 impl ExecPolicy {
@@ -45,6 +65,7 @@ impl ExecPolicy {
             sparsity: 0.0,
             sparse_threshold: 0.5,
             bits: None,
+            act_scale: None,
         }
     }
 
@@ -64,30 +85,83 @@ impl ExecPolicy {
         }
     }
 
+    /// Pin the activation-quantizer scale (fixed-point Q-format chosen by
+    /// the deployer rather than calibrated from a sample).
+    pub fn with_act_scale(self, scale: f32) -> Self {
+        Self {
+            act_scale: Some(scale),
+            ..self
+        }
+    }
+
     /// Does this policy select the sparse backend?
     pub fn wants_sparse(&self) -> bool {
         self.sparsity >= self.sparse_threshold
     }
+
+    /// Assert every knob is in range — called at prepare so a bad policy
+    /// fails at the API boundary with a clear message instead of deep
+    /// inside pruning or quantization.
+    pub fn validate(&self) {
+        assert!(self.m >= 1, "ExecPolicy.m must be >= 1, got {}", self.m);
+        assert!(
+            (0.0..1.0).contains(&self.sparsity),
+            "ExecPolicy.sparsity must be in [0, 1), got {}",
+            self.sparsity
+        );
+        if let Some(bits) = self.bits {
+            assert!(
+                (2..=32).contains(&bits),
+                "ExecPolicy.bits must be in 2..=32, got {bits}"
+            );
+        }
+        if let Some(scale) = self.act_scale {
+            assert!(
+                scale.is_finite() && scale > 0.0,
+                "ExecPolicy.act_scale must be a positive finite scale, got {scale}"
+            );
+        }
+    }
 }
 
-/// The prepared weights of one conv layer.
+/// The prepared weights of one conv layer.  Quantized backends carry the
+/// activation [`Quantizer`] fixed at prepare time.
 enum Backend {
     Dense(FilterBank),
     Sparse(SparseFilterBank),
-    QuantDense { bank: FilterBank, bits: u32 },
-    QuantSparse { bank: SparseFilterBank, bits: u32 },
+    QuantDense { bank: FilterBank, q: Quantizer },
+    QuantSparse { bank: SparseFilterBank, q: Quantizer },
 }
 
-/// One conv layer, ready to serve: a plan plus its prepared weight bank.
+/// One conv layer, ready to serve: a plan plus its prepared weight bank
+/// (plus a reusable qdq staging buffer on the quantized paths).
 pub struct ConvExecutor {
     plan: WinogradPlan,
     backend: Backend,
+    /// Fake-quantized activation staging (quant backends only) — reused
+    /// across calls so the serving steady state never allocates for qdq.
+    qdq: Vec<f32>,
+}
+
+/// The fixed activation quantizer: an explicit scale from the policy, or
+/// a one-time calibration over a seeded gaussian sample.  Either way the
+/// scale is a property of the *prepared layer*, never of the request.
+fn activation_quantizer(bits: u32, act_scale: Option<f32>) -> Quantizer {
+    match act_scale {
+        Some(scale) => Quantizer { bits, scale },
+        None => {
+            let sample = Rng::new(ACT_CALIB_SEED).gaussian_vec(ACT_CALIB_SAMPLES);
+            Quantizer::calibrate(bits, &sample)
+        }
+    }
 }
 
 impl ConvExecutor {
     /// Prepare one layer: transform (and prune / quantize) the spatial
-    /// weights (K, C, r, r) once.  Every `conv2d` call reuses the bank.
+    /// weights (K, C, r, r) once, and fix the activation-quantizer scale.
+    /// Every `conv2d` / `conv2d_batch_into` call reuses both.
     pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Self {
+        policy.validate();
         assert_eq!(w.shape().len(), 4, "weights must be (K, C, r, r)");
         let r = w.shape()[3];
         let plan = WinogradPlan::new(policy.m, r);
@@ -107,7 +181,7 @@ impl ConvExecutor {
             (true, None) => Backend::Sparse(sparse_bank()),
             (true, Some(bits)) => Backend::QuantSparse {
                 bank: sparse_bank(),
-                bits,
+                q: activation_quantizer(bits, policy.act_scale),
             },
             (false, None) if policy.sparsity == 0.0 => {
                 Backend::Dense(plan.transform_filters(w))
@@ -115,10 +189,14 @@ impl ConvExecutor {
             (false, None) => Backend::Dense(sparse_bank().to_dense_bank()),
             (false, Some(bits)) => Backend::QuantDense {
                 bank: sparse_bank().to_dense_bank(),
-                bits,
+                q: activation_quantizer(bits, policy.act_scale),
             },
         };
-        Self { plan, backend }
+        Self {
+            plan,
+            backend,
+            qdq: Vec::new(),
+        }
     }
 
     /// Which backend the policy selected for this layer.
@@ -139,21 +217,86 @@ impl ConvExecutor {
         }
     }
 
-    /// Run the layer: x (C, H, W) -> (K, H - r + 1, W - r + 1).
-    pub fn conv2d(&mut self, x: &Tensor) -> Tensor {
+    /// The fixed activation quantizer of a quantized backend (`None` on
+    /// the float paths).
+    pub fn activation_quantizer(&self) -> Option<&Quantizer> {
         match &self.backend {
-            Backend::Dense(bank) => self.plan.conv2d_with_filters(x, bank),
-            Backend::Sparse(bank) => self.plan.conv2d_sparse_with_filters(x, bank),
-            Backend::QuantDense { bank, bits } => {
-                let qx = Quantizer::calibrate(*bits, x.data()).qdq_tensor(x);
-                self.plan.conv2d_with_filters(&qx, bank)
+            Backend::QuantDense { q, .. } | Backend::QuantSparse { q, .. } => Some(q),
+            _ => None,
+        }
+    }
+
+    /// Output channels of the prepared bank.
+    fn out_channels(&self) -> usize {
+        match &self.backend {
+            Backend::Dense(bank) => bank.k,
+            Backend::QuantDense { bank, .. } => bank.k,
+            Backend::Sparse(bank) => bank.k,
+            Backend::QuantSparse { bank, .. } => bank.k,
+        }
+    }
+
+    /// Run the layer: x (C, H, W) -> (K, H - r + 1, W - r + 1).  A batch
+    /// of one through the batched engine — which at n = 1 *is* the
+    /// single-image fused loop.
+    pub fn conv2d(&mut self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
+        let (h, w) = (x.shape()[1], x.shape()[2]);
+        let r = self.plan.r();
+        assert!(h >= r && w >= r, "input smaller than the filter");
+        let mut out = Tensor::zeros(&[self.out_channels(), h - r + 1, w - r + 1]);
+        self.conv2d_batch_into(1, x.data(), h, w, out.data_mut());
+        out
+    }
+
+    /// Run the layer over a batch in one fused launch: `x` holds `n`
+    /// row-major (C, H, W) images back to back, `out` receives `n`
+    /// (K, oh, ow) maps back to back.  Bit-identical per image to
+    /// [`ConvExecutor::conv2d`]; no allocations beyond plan scratch.
+    pub fn conv2d_batch_into(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w: usize,
+        out: &mut [f32],
+    ) {
+        let Self { plan, backend, qdq } = self;
+        match backend {
+            Backend::Dense(bank) => plan.conv2d_with_filters_batch_into(n, x, h, w, bank, out),
+            Backend::Sparse(bank) => {
+                plan.conv2d_sparse_with_filters_batch_into(n, x, h, w, bank, out)
             }
-            Backend::QuantSparse { bank, bits } => {
-                let qx = Quantizer::calibrate(*bits, x.data()).qdq_tensor(x);
-                self.plan.conv2d_sparse_with_filters(&qx, bank)
+            Backend::QuantDense { bank, q } => {
+                qdq_into(q, x, qdq);
+                plan.conv2d_with_filters_batch_into(n, qdq, h, w, bank, out)
+            }
+            Backend::QuantSparse { bank, q } => {
+                qdq_into(q, x, qdq);
+                plan.conv2d_sparse_with_filters_batch_into(n, qdq, h, w, bank, out)
             }
         }
     }
+}
+
+/// Fake-quantize `src` into the reusable staging buffer `dst` (resized,
+/// never reallocated in steady state).
+fn qdq_into(q: &Quantizer, src: &[f32], dst: &mut Vec<f32>) {
+    dst.resize(src.len(), 0.0);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = q.qdq(s);
+    }
+}
+
+/// The batched serving workspace: two ping-pong activation buffers sized
+/// once at build time for the largest intermediate of the deepest batch.
+/// Every `forward_batch` stage reads one buffer and writes the other, so
+/// the steady state performs **zero heap allocations** — the same
+/// contract the plan engines keep for their scratch.
+#[derive(Default)]
+struct Workspace {
+    a: Vec<f32>,
+    b: Vec<f32>,
 }
 
 /// A whole pruned network behind per-layer cached filter banks: the
@@ -163,6 +306,9 @@ pub struct NetworkExecutor {
     convs: Vec<ConvExecutor>,
     /// FC weight matrices, (out_f x in_f) row-major.
     fcs: Vec<Tensor>,
+    /// Largest batch one fused `forward_batch` launch may run.
+    max_batch: usize,
+    ws: Workspace,
 }
 
 impl NetworkExecutor {
@@ -172,6 +318,7 @@ impl NetworkExecutor {
     /// dense when its channel count is below the block size, mirroring
     /// the artifacts.
     pub fn synthetic(net: Network, policy: ExecPolicy, seed: u64) -> Self {
+        policy.validate();
         let mut rng = Rng::new(seed);
         let mut convs = Vec::with_capacity(net.convs.len());
         for layer in &net.convs {
@@ -206,7 +353,50 @@ impl NetworkExecutor {
                 Tensor::from_vec(&[fc.out_f, fc.in_f], data)
             })
             .collect();
-        Self { net, convs, fcs }
+        let mut exec = Self {
+            net,
+            convs,
+            fcs,
+            max_batch: 0,
+            ws: Workspace::default(),
+        };
+        exec.size_workspace(1);
+        exec
+    }
+
+    /// Pre-size the ping-pong workspace for fused batches up to `n`
+    /// images — the build-time step of the zero-allocation serving
+    /// contract.  `forward_batch` refuses larger batches.
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.size_workspace(n.max(1));
+        self
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Size both workspace buffers to `n` times the largest per-image
+    /// intermediate anywhere in the pipeline (padded conv inputs are the
+    /// high-water mark; the FC head never exceeds them for VGG-shaped
+    /// nets but is accounted for anyway).
+    fn size_workspace(&mut self, n: usize) {
+        let mut hw = self.net.input_hw;
+        let mut cap = self.net.input_ch * hw * hw;
+        for (i, conv) in self.net.convs.iter().enumerate() {
+            let p = nn::same_pad(conv.r);
+            cap = cap.max(conv.in_ch * (hw + 2 * p) * (hw + 2 * p));
+            cap = cap.max(conv.out_ch * hw * hw);
+            if self.net.pool_after(i) {
+                hw /= 2;
+            }
+        }
+        for fc in &self.net.fcs {
+            cap = cap.max(fc.in_f).max(fc.out_f);
+        }
+        self.max_batch = n;
+        self.ws.a.resize(n * cap, 0.0);
+        self.ws.b.resize(n * cap, 0.0);
     }
 
     pub fn network(&self) -> &Network {
@@ -243,8 +433,7 @@ impl NetworkExecutor {
         let hw = self.net.input_hw;
         let mut x = Tensor::from_vec(&[self.net.input_ch, hw, hw], image.to_vec());
         for i in 0..self.convs.len() {
-            let r = self.net.convs[i].r;
-            let padded = nn::pad_same(&x, r / 2);
+            let padded = nn::pad_same(&x, nn::same_pad(self.net.convs[i].r));
             x = self.convs[i].conv2d(&padded);
             nn::relu_inplace(&mut x);
             if self.net.pool_after(i) {
@@ -256,26 +445,79 @@ impl NetworkExecutor {
         for (j, wm) in self.fcs.iter().enumerate() {
             let (of, inf) = (wm.shape()[0], wm.shape()[1]);
             assert_eq!(a.len(), inf, "fc{j}: input volume mismatch");
-            let wd = wm.data();
             let mut y = vec![0.0f32; of];
-            for (o, yo) in y.iter_mut().enumerate() {
-                let row = &wd[o * inf..(o + 1) * inf];
-                let mut acc = 0.0f32;
-                for (&wv, &av) in row.iter().zip(&a) {
-                    acc += wv * av;
-                }
-                *yo = acc;
-            }
+            nn::fc_into(wm, 1, &a, &mut y);
             if j + 1 < n_fc {
-                for v in &mut y {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
+                nn::relu_slice(&mut y);
             }
             a = y;
         }
         a
+    }
+
+    /// Full batched forward pass: one fused launch per layer over all
+    /// `images`, on the build-time-sized ping-pong workspace.
+    ///
+    /// Zero steady-state heap allocations (beyond the returned logits),
+    /// and bit-identical per image to [`NetworkExecutor::forward`] — the
+    /// batch dimension only widens each stage, it never reorders any
+    /// per-output accumulation.  This is the serving path's amortization
+    /// lever: every cached (sparse) filter bank streams once per batch
+    /// instead of once per request.
+    pub fn forward_batch(&mut self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        let n = images.len();
+        assert!(n >= 1, "forward_batch needs at least one image");
+        assert!(
+            n <= self.max_batch,
+            "batch of {n} exceeds the workspace capacity {} — build the \
+             executor with with_max_batch({n}) or larger",
+            self.max_batch
+        );
+        let ie = self.net.input_ch * self.net.input_hw * self.net.input_hw;
+        let Self { net, convs, fcs, ws, .. } = self;
+        let Workspace { a, b } = ws;
+        for (i, im) in images.iter().enumerate() {
+            assert_eq!(
+                im.len(),
+                ie,
+                "image {i} has {} elements, expected {ie}",
+                im.len()
+            );
+            a[i * ie..(i + 1) * ie].copy_from_slice(im);
+        }
+        let mut hw = net.input_hw;
+        let mut ch = net.input_ch;
+        for i in 0..convs.len() {
+            let p = nn::same_pad(net.convs[i].r);
+            let (hp, wp) = (hw + 2 * p, hw + 2 * p);
+            let k = net.convs[i].out_ch;
+            // pad (a -> b), conv (b -> a, SAME so spatial size is kept),
+            // ReLU in place, pool (a -> b, then swap).
+            let (src, pad, conv) = (n * ch * hw * hw, n * ch * hp * wp, n * k * hw * hw);
+            nn::pad_same_into(&a[..src], n * ch, hw, hw, p, &mut b[..pad]);
+            convs[i].conv2d_batch_into(n, &b[..pad], hp, wp, &mut a[..conv]);
+            nn::relu_slice(&mut a[..conv]);
+            if net.pool_after(i) {
+                let half = hw / 2;
+                nn::maxpool2_into(&a[..conv], n * k, hw, hw, &mut b[..n * k * half * half]);
+                std::mem::swap(a, b);
+                hw = half;
+            }
+            ch = k;
+        }
+        let mut feat = ch * hw * hw;
+        let n_fc = fcs.len();
+        for (j, wm) in fcs.iter().enumerate() {
+            let (of, inf) = (wm.shape()[0], wm.shape()[1]);
+            assert_eq!(feat, inf, "fc{j}: input volume mismatch");
+            nn::fc_into(wm, n, &a[..n * inf], &mut b[..n * of]);
+            if j + 1 < n_fc {
+                nn::relu_slice(&mut b[..n * of]);
+            }
+            std::mem::swap(a, b);
+            feat = of;
+        }
+        (0..n).map(|i| a[i * feat..(i + 1) * feat].to_vec()).collect()
     }
 }
 
@@ -391,6 +633,86 @@ mod tests {
         assert!(logits.iter().all(|v| v.is_finite()));
         // Deterministic across calls (cached banks, bit-identical plans).
         assert_eq!(logits, exec.forward(&image));
+    }
+
+    #[test]
+    #[should_panic(expected = "ExecPolicy.sparsity")]
+    fn policy_rejects_sparsity_one() {
+        let w = Tensor::zeros(&[4, 4, 3, 3]);
+        ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "ExecPolicy.bits")]
+    fn policy_rejects_wild_bit_width() {
+        let w = Tensor::zeros(&[4, 4, 3, 3]);
+        ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_bits(40));
+    }
+
+    #[test]
+    fn activation_quantizer_fixed_at_prepare() {
+        let mut rng = Rng::new(406);
+        let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
+        // Explicit scale is taken verbatim.
+        let policy = ExecPolicy::dense(2).with_bits(8).with_act_scale(0.25);
+        let ex = ConvExecutor::prepare(&w, &policy);
+        let q = ex.activation_quantizer().expect("quant backend");
+        assert_eq!(q.scale, 0.25);
+        assert_eq!(q.bits, 8);
+        // Seeded calibration is a property of the layer, not the input:
+        // two prepares agree, and no request ever changes it.
+        let a = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8));
+        let b = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8));
+        let (qa, qb) = (a.activation_quantizer().unwrap(), b.activation_quantizer().unwrap());
+        assert_eq!(qa.scale, qb.scale);
+        // Float backends have no activation quantizer.
+        assert!(ConvExecutor::prepare(&w, &ExecPolicy::dense(2))
+            .activation_quantizer()
+            .is_none());
+    }
+
+    #[test]
+    fn quant_conv_scale_invariant_inputs() {
+        // The fixed activation scale makes the datapath a real fixed-point
+        // model: feeding a scaled-up input no longer silently recalibrates
+        // the quantizer, so the same executor state serves every request.
+        let mut rng = Rng::new(408);
+        let x = rand_tensor(&mut rng, &[4, 8, 8]);
+        let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_bits(16));
+        let before = *ex.activation_quantizer().unwrap();
+        let y1 = ex.conv2d(&x);
+        let y2 = ex.conv2d(&x);
+        assert_eq!(y1, y2, "same request, same logits");
+        let after = *ex.activation_quantizer().unwrap();
+        assert_eq!(before.scale, after.scale, "requests must not recalibrate");
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential_on_vgg_tiny() {
+        let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.7), 5)
+            .with_max_batch(4);
+        assert_eq!(exec.max_batch(), 4);
+        let mut rng = Rng::new(9);
+        let images: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+        let seq: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im)).collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let got = exec.forward_batch(&refs);
+        assert_eq!(got, seq, "fused batch must be bit-identical to sequential");
+        // Batch membership must not matter either.
+        let pair = exec.forward_batch(&[refs[2], refs[0]]);
+        assert_eq!(pair[0], seq[2]);
+        assert_eq!(pair[1], seq[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the workspace capacity")]
+    fn forward_batch_rejects_oversized_batch() {
+        let mut exec =
+            NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::dense(2), 5).with_max_batch(2);
+        let image = vec![0.0f32; 3 * 32 * 32];
+        let refs = [image.as_slice(), image.as_slice(), image.as_slice()];
+        let _ = exec.forward_batch(&refs);
     }
 
     #[test]

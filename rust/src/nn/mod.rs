@@ -88,54 +88,130 @@ impl Network {
 }
 
 // ---------------------------------------------------------------------------
-// Layer operations (the native serving path's glue around ConvExecutor)
+// Layer operations (the native serving path's glue around ConvExecutor).
+// Each op has a slice-level `_into` form working on `planes` stacked
+// (H, W) planes — a batch of (C, H, W) maps is simply `n * c` planes —
+// so the batched serving workspace runs them with zero allocations; the
+// Tensor forms are thin wrappers.
 // ---------------------------------------------------------------------------
 
-/// Zero-pad a (C, H, W) feature map by `p` on every spatial side — VGG's
-/// SAME padding for its 3x3 / stride-1 convolutions is `p = 1`.
-pub fn pad_same(x: &Tensor, p: usize) -> Tensor {
-    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+/// The symmetric SAME padding amount for an odd filter size: `(r - 1) / 2`.
+///
+/// Asserts `r` is odd: symmetric `r / 2` padding on both sides would
+/// silently shift every output for even `r` (even-sized SAME needs
+/// asymmetric padding, which the engines do not model).
+pub fn same_pad(r: usize) -> usize {
+    assert!(
+        r % 2 == 1,
+        "SAME padding requires an odd filter size, got r = {r}: symmetric \
+         r/2 padding would mis-place outputs for even filters"
+    );
+    r / 2
+}
+
+/// Zero-pad `planes` stacked (h, w) planes by `p` on every spatial side
+/// into `dst` (`planes` stacked (h + 2p, w + 2p) planes).  `dst` is fully
+/// overwritten, so workspace reuse is safe.
+pub fn pad_same_into(src: &[f32], planes: usize, h: usize, w: usize, p: usize, dst: &mut [f32]) {
     let (hp, wp) = (h + 2 * p, w + 2 * p);
-    let mut out = Tensor::zeros(&[c, hp, wp]);
-    let od = out.data_mut();
-    let xd = x.data();
-    for cc in 0..c {
+    assert_eq!(src.len(), planes * h * w, "pad_same_into: source length");
+    assert_eq!(
+        dst.len(),
+        planes * hp * wp,
+        "pad_same_into: destination length"
+    );
+    dst.fill(0.0);
+    for pl in 0..planes {
         for i in 0..h {
-            let src = &xd[(cc * h + i) * w..][..w];
-            od[(cc * hp + i + p) * wp + p..][..w].copy_from_slice(src);
+            let row = &src[(pl * h + i) * w..][..w];
+            dst[(pl * hp + i + p) * wp + p..][..w].copy_from_slice(row);
         }
     }
+}
+
+/// Zero-pad a (C, H, W) feature map by `p` on every spatial side — VGG's
+/// SAME padding for its 3x3 / stride-1 convolutions is `p = 1` (see
+/// [`same_pad`]).
+pub fn pad_same(x: &Tensor, p: usize) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let mut out = Tensor::zeros(&[c, h + 2 * p, w + 2 * p]);
+    pad_same_into(x.data(), c, h, w, p, out.data_mut());
     out
 }
 
-/// In-place ReLU.
-pub fn relu_inplace(x: &mut Tensor) {
-    for v in x.data_mut() {
+/// In-place ReLU over a raw activation slice.
+pub fn relu_slice(xs: &mut [f32]) {
+    for v in xs {
         if *v < 0.0 {
             *v = 0.0;
         }
     }
 }
 
-/// 2x2 max pooling with stride 2 (floor semantics — VGG spatial sizes are
-/// even at every pool).
-pub fn maxpool2(x: &Tensor) -> Tensor {
-    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+/// In-place ReLU.
+pub fn relu_inplace(x: &mut Tensor) {
+    relu_slice(x.data_mut());
+}
+
+/// 2x2 / stride-2 max pooling of `planes` stacked (h, w) planes into
+/// `dst` (`planes` stacked (h/2, w/2) planes).  Asserts even spatial
+/// dims: floor semantics would silently drop the last row/column.
+pub fn maxpool2_into(src: &[f32], planes: usize, h: usize, w: usize, dst: &mut [f32]) {
+    assert!(
+        h % 2 == 0 && w % 2 == 0,
+        "2x2/stride-2 max pool requires even spatial dims, got {h}x{w}: \
+         odd inputs would silently drop the last row/column"
+    );
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[c, oh, ow]);
-    for cc in 0..c {
+    assert_eq!(src.len(), planes * h * w, "maxpool2_into: source length");
+    assert_eq!(dst.len(), planes * oh * ow, "maxpool2_into: destination length");
+    for pl in 0..planes {
         for i in 0..oh {
-            for j in 0..ow {
-                let m = x
-                    .at3(cc, 2 * i, 2 * j)
-                    .max(x.at3(cc, 2 * i, 2 * j + 1))
-                    .max(x.at3(cc, 2 * i + 1, 2 * j))
-                    .max(x.at3(cc, 2 * i + 1, 2 * j + 1));
-                out.set3(cc, i, j, m);
+            let r0 = &src[(pl * h + 2 * i) * w..][..w];
+            let r1 = &src[(pl * h + 2 * i + 1) * w..][..w];
+            let drow = &mut dst[(pl * oh + i) * ow..][..ow];
+            for (j, d) in drow.iter_mut().enumerate() {
+                *d = r0[2 * j]
+                    .max(r0[2 * j + 1])
+                    .max(r1[2 * j])
+                    .max(r1[2 * j + 1]);
             }
         }
     }
+}
+
+/// 2x2 max pooling with stride 2.  VGG spatial sizes are even at every
+/// pool; odd inputs are a caller bug and assert (see [`maxpool2_into`]).
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let mut out = Tensor::zeros(&[c, h / 2, w / 2]);
+    maxpool2_into(x.data(), c, h, w, out.data_mut());
     out
+}
+
+/// Batched fully-connected layer: `xs` holds `n` rows of `in_f`
+/// activations back to back, `out` receives `n` rows of `out_f` logits.
+/// Raw affine-free matvec per image (VGG's FC head has no bias in this
+/// stack); accumulation walks input features in ascending order, so the
+/// batched and per-image results are bit-identical.
+pub fn fc_into(wm: &Tensor, n: usize, xs: &[f32], out: &mut [f32]) {
+    assert_eq!(wm.shape().len(), 2, "FC weights must be (out_f, in_f)");
+    let (of, inf) = (wm.shape()[0], wm.shape()[1]);
+    assert_eq!(xs.len(), n * inf, "fc_into: input length");
+    assert_eq!(out.len(), n * of, "fc_into: output length");
+    let wd = wm.data();
+    for img in 0..n {
+        let a = &xs[img * inf..][..inf];
+        let y = &mut out[img * of..][..of];
+        for (o, yo) in y.iter_mut().enumerate() {
+            let row = &wd[o * inf..(o + 1) * inf];
+            let mut acc = 0.0f32;
+            for (&wv, &av) in row.iter().zip(a) {
+                acc += wv * av;
+            }
+            *yo = acc;
+        }
+    }
 }
 
 /// VGG16 with 224x224x3 input — the paper's workload.
@@ -275,5 +351,66 @@ mod tests {
         let y = maxpool2(&x);
         assert_eq!(y.shape(), &[1, 1, 1]);
         assert_eq!(y.at3(0, 0, 0), 3.0);
+    }
+
+    #[test]
+    fn same_pad_odd_filters() {
+        assert_eq!(same_pad(1), 0);
+        assert_eq!(same_pad(3), 1);
+        assert_eq!(same_pad(5), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "odd filter size")]
+    fn same_pad_rejects_even_filters() {
+        same_pad(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "even spatial dims")]
+    fn maxpool2_rejects_odd_spatial_dims() {
+        maxpool2(&Tensor::zeros(&[1, 3, 4]));
+    }
+
+    #[test]
+    fn batched_into_ops_match_tensor_ops() {
+        // Two stacked (C, H, W) images through the slice-level ops must
+        // equal the per-image Tensor ops exactly (workspace reuse: the
+        // destination starts dirty).
+        let mut a = Tensor::from_vec(&[2, 2, 4], (0..16).map(|i| i as f32 - 7.5).collect());
+        let b = Tensor::from_vec(&[2, 2, 4], (0..16).map(|i| (i * i) as f32 - 60.0).collect());
+        let mut batched: Vec<f32> = a.data().iter().chain(b.data()).copied().collect();
+
+        let mut padded = vec![9.9f32; 2 * 2 * 4 * 6];
+        pad_same_into(&batched, 2 * 2, 2, 4, 1, &mut padded);
+        let pa = pad_same(&a, 1);
+        let pb = pad_same(&b, 1);
+        assert_eq!(&padded[..pa.len()], pa.data());
+        assert_eq!(&padded[pa.len()..], pb.data());
+
+        let mut pooled = vec![9.9f32; 2 * 2 * 1 * 2];
+        maxpool2_into(&batched, 2 * 2, 2, 4, &mut pooled);
+        let ma = maxpool2(&a);
+        let mb = maxpool2(&b);
+        assert_eq!(&pooled[..ma.len()], ma.data());
+        assert_eq!(&pooled[ma.len()..], mb.data());
+
+        let b_relu: Vec<f32> = b.data().iter().map(|v| v.max(0.0)).collect();
+        relu_slice(&mut batched);
+        relu_inplace(&mut a);
+        assert_eq!(&batched[..16], a.data());
+        assert_eq!(&batched[16..], &b_relu[..]);
+    }
+
+    #[test]
+    fn fc_into_matches_per_image_matvec() {
+        let wm = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.5, 4.0]);
+        let xs = [1.0f32, 0.0, -1.0, 2.0, 1.0, 0.5];
+        let mut out = vec![0.0f32; 4];
+        fc_into(&wm, 2, &xs, &mut out);
+        // Image 0: [1*1 + 2*0 + 3*(-1), -1*1 + 0.5*0 + 4*(-1)]
+        assert_eq!(&out[..2], &[-2.0, -5.0]);
+        // Image 1: [1*2 + 2*1 + 3*0.5, -1*2 + 0.5*1 + 4*0.5]
+        assert_eq!(&out[2..], &[5.5, 0.5]);
     }
 }

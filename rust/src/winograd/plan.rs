@@ -37,6 +37,16 @@
 //! counts; at block sparsity 0.0 the sparse path is bit-identical to the
 //! dense plan (the per-output-element accumulation order is the same
 //! ascending-channel walk).
+//!
+//! Both engines are **batched**: `conv2d_with_filters_batch[_into]` and
+//! `conv2d_sparse_with_filters_batch[_into]` run N images through one
+//! fused launch, extending the tile dimension by the batch — every stored
+//! filter block (sparse) or bank row (dense) is loaded once and streamed
+//! against all N images' tiles, the batch-amortized weight reuse the
+//! paper's 3-D cluster extension exists for.  Each output element's
+//! accumulation order is independent of N, so the batched paths are
+//! bit-identical to the single-image engines per image (and the N = 1
+//! batch *is* the single-image code path).
 
 #![allow(clippy::too_many_arguments)]
 
@@ -154,6 +164,10 @@ struct PlanScratch {
     vt: Vec<f32>,
     /// Transform-domain products, `[coord][out_channel][tile]`.
     mm: Vec<f32>,
+    /// Batched-output staging, `[out_channel][image][oh*ow]` — the layout
+    /// the k-sharded workers write contiguously; scattered to the
+    /// caller's `[image][out_channel][oh*ow]` once per launch.
+    yb: Vec<f32>,
     workers: Vec<TileScratch>,
 }
 
@@ -456,46 +470,109 @@ impl WinogradPlan {
 
     /// Convolution with pre-transformed filters (the weight-reuse path).
     pub fn conv2d_with_filters(&mut self, x: &Tensor, bank: &FilterBank) -> Tensor {
+        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
+        let (h, w_in) = (x.shape()[1], x.shape()[2]);
+        assert_eq!(bank.c, x.shape()[0], "filter bank channel mismatch");
+        let r = self.consts.r;
+        assert!(h >= r && w_in >= r, "input smaller than the filter");
+        let mut out = Tensor::zeros(&[bank.k, h - r + 1, w_in - r + 1]);
+        self.dense_batch_into(1, x.data(), h, w_in, bank, out.data_mut());
+        out
+    }
+
+    /// Batched convolution with pre-transformed filters: x (N, C, H, W)
+    /// -> (N, K, H - r + 1, W - r + 1) in **one fused launch** — every
+    /// bank row streams once against all N images' tiles.  Per image
+    /// bit-identical to [`WinogradPlan::conv2d_with_filters`].
+    pub fn conv2d_with_filters_batch(&mut self, x: &Tensor, bank: &FilterBank) -> Tensor {
+        assert_eq!(x.shape().len(), 4, "batched input must be (N, C, H, W)");
+        let (n, h, w_in) = (x.shape()[0], x.shape()[2], x.shape()[3]);
+        assert_eq!(bank.c, x.shape()[1], "filter bank channel mismatch");
+        let r = self.consts.r;
+        assert!(h >= r && w_in >= r, "input smaller than the filter");
+        let mut out = Tensor::zeros(&[n, bank.k, h - r + 1, w_in - r + 1]);
+        self.dense_batch_into(n, x.data(), h, w_in, bank, out.data_mut());
+        out
+    }
+
+    /// Slice-level batched entry point (the serving workspace path): `x`
+    /// holds `n` row-major (C, H, W) images back to back, `out` receives
+    /// `n` (K, oh, ow) feature maps back to back.  No allocations beyond
+    /// plan-owned scratch.
+    pub fn conv2d_with_filters_batch_into(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w_in: usize,
+        bank: &FilterBank,
+        out: &mut [f32],
+    ) {
+        self.dense_batch_into(n, x, h, w_in, bank, out);
+    }
+
+    /// The shared dense engine: the batch extends the tile dimension, so
+    /// stage sharding, scratch, and per-output accumulation order are the
+    /// single-image engine's exactly.  At n == 1 the caller's `out` *is*
+    /// the stage target; for n > 1 the k-sharded workers write the
+    /// contiguous `[k][n][oh*ow]` staging layout which is then scattered
+    /// to `[n][k][oh*ow]`.
+    fn dense_batch_into(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w_in: usize,
+        bank: &FilterBank,
+        out: &mut [f32],
+    ) {
         let threads = self.threads;
         let consts = &self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
-        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
-        let (c, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
-        assert_eq!(bank.c, c, "filter bank channel mismatch");
+        let (c, k) = (bank.c, bank.k);
+        assert!(n >= 1, "batch must be non-empty");
+        assert_eq!(x.len(), n * c * h * w_in, "batched input length mismatch");
         assert_eq!(bank.l, l, "filter bank tile-size mismatch");
         assert!(h >= r && w_in >= r, "input smaller than the filter");
-        let k = bank.k;
         let (oh, ow) = (h - r + 1, w_in - r + 1);
+        assert_eq!(out.len(), n * k * oh * ow, "batched output length mismatch");
         let (nty, ntx) = (num_tiles(oh, m), num_tiles(ow, m));
         let sz = l * l;
+        let img_tiles = nty * ntx;
 
-        let v_len = nty * ntx * c * sz;
-        scratch.v.resize(v_len, 0.0);
-        let n_a = threads.min(nty).max(1);
+        scratch.v.resize(n * img_tiles * c * sz, 0.0);
+        let n_a = threads.min(n * nty).max(1);
         let n_b = threads.min(k).max(1);
         scratch.ensure_workers(n_a.max(n_b), l, m);
-        let PlanScratch { v, workers, .. } = scratch;
-        let xd = x.data();
+        if n > 1 {
+            scratch.yb.resize(n * k * oh * ow, 0.0);
+        }
+        let PlanScratch { v, yb, workers, .. } = scratch;
 
-        // Stage 1: gather + B^T d B per (tile, channel), sharded by tile
-        // row.  Each worker owns a contiguous band of `v`.
-        run_input_stage(consts, workers, xd, c, h, w_in, nty, ntx, v, n_a);
+        // Stage 1: gather + B^T d B per (image, tile, channel), sharded
+        // by global tile row.  Each worker owns a contiguous band of `v`.
+        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a);
 
         // Stage 2 + 3: channel-accumulate and inverse-transform per
-        // (output channel, tile), sharded by output channel.  Workers
-        // write disjoint (k-band) slices of the output feature map.
-        let mut out = Tensor::zeros(&[k, oh, ow]);
+        // (output channel, image, tile), sharded by output channel.
+        // Workers write disjoint contiguous k-band slices of the target.
         let v_ro: &[f32] = v;
+        let target: &mut [f32] = if n == 1 {
+            &mut *out
+        } else {
+            &mut yb[..n * k * oh * ow]
+        };
         if n_b == 1 {
             output_stage_ks(
                 consts,
                 &mut workers[0],
                 bank,
                 v_ro,
-                out.data_mut(),
+                target,
                 0,
                 k,
+                n,
                 c,
                 nty,
                 ntx,
@@ -503,13 +580,12 @@ impl WinogradPlan {
                 ow,
             );
         } else {
-            let out_data = out.data_mut();
             std::thread::scope(|s| {
-                let mut rest: &mut [f32] = out_data;
+                let mut rest: &mut [f32] = target;
                 let mut k0 = 0;
                 for (wi, ws) in workers[..n_b].iter_mut().enumerate() {
                     let ks = k / n_b + usize::from(wi < k % n_b);
-                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(ks * oh * ow);
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(ks * n * oh * ow);
                     rest = tail;
                     let start = k0;
                     k0 += ks;
@@ -522,6 +598,7 @@ impl WinogradPlan {
                             chunk,
                             start,
                             start + ks,
+                            n,
                             c,
                             nty,
                             ntx,
@@ -532,7 +609,9 @@ impl WinogradPlan {
                 }
             });
         }
-        out
+        if n > 1 {
+            scatter_kn_to_nk(yb, out, k, n, oh * ow);
+        }
     }
 
     /// One-shot sparse convolution: transform + prune the weights, then
@@ -559,33 +638,95 @@ impl WinogradPlan {
     /// the dense loop — results are bit-identical across worker counts
     /// and, at block sparsity 0.0, bit-identical to `conv2d_with_filters`.
     pub fn conv2d_sparse_with_filters(&mut self, x: &Tensor, bank: &SparseFilterBank) -> Tensor {
+        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
+        let (h, w_in) = (x.shape()[1], x.shape()[2]);
+        assert_eq!(bank.c, x.shape()[0], "sparse filter bank channel mismatch");
+        let r = self.consts.r;
+        assert!(h >= r && w_in >= r, "input smaller than the filter");
+        let mut out = Tensor::zeros(&[bank.k, h - r + 1, w_in - r + 1]);
+        self.sparse_batch_into(1, x.data(), h, w_in, bank, out.data_mut());
+        out
+    }
+
+    /// Batched sparse transform-domain convolution: x (N, C, H, W) ->
+    /// (N, K, oh, ow) in **one fused launch** over the batch.  The batch
+    /// extends the tile dimension, so each stored (non-zero) weight block
+    /// is decoded once per launch and its axpy streams over all N images'
+    /// tiles — the batch-amortized filter reuse the serving path banks
+    /// on.  Per image bit-identical to
+    /// [`WinogradPlan::conv2d_sparse_with_filters`].
+    pub fn conv2d_sparse_with_filters_batch(
+        &mut self,
+        x: &Tensor,
+        bank: &SparseFilterBank,
+    ) -> Tensor {
+        assert_eq!(x.shape().len(), 4, "batched input must be (N, C, H, W)");
+        let (n, h, w_in) = (x.shape()[0], x.shape()[2], x.shape()[3]);
+        assert_eq!(bank.c, x.shape()[1], "sparse filter bank channel mismatch");
+        let r = self.consts.r;
+        assert!(h >= r && w_in >= r, "input smaller than the filter");
+        let mut out = Tensor::zeros(&[n, bank.k, h - r + 1, w_in - r + 1]);
+        self.sparse_batch_into(n, x.data(), h, w_in, bank, out.data_mut());
+        out
+    }
+
+    /// Slice-level batched sparse entry point (the serving workspace
+    /// path); layout contract as in
+    /// [`WinogradPlan::conv2d_with_filters_batch_into`].
+    pub fn conv2d_sparse_with_filters_batch_into(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w_in: usize,
+        bank: &SparseFilterBank,
+        out: &mut [f32],
+    ) {
+        self.sparse_batch_into(n, x, h, w_in, bank, out);
+    }
+
+    /// The shared sparse engine (see [`WinogradPlan::dense_batch_into`]
+    /// for the n == 1 / staging contract).  Stage 2 is untouched by
+    /// batching: the coordinate-major operand simply grows to
+    /// `n * tiles` columns, so one BCOO directory walk serves the batch.
+    fn sparse_batch_into(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w_in: usize,
+        bank: &SparseFilterBank,
+        out: &mut [f32],
+    ) {
         let threads = self.threads;
         let consts = &self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
-        assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
-        let (c, h, w_in) = (x.shape()[0], x.shape()[1], x.shape()[2]);
-        assert_eq!(bank.c, c, "sparse filter bank channel mismatch");
+        let (c, k) = (bank.c, bank.k);
+        assert!(n >= 1, "batch must be non-empty");
+        assert_eq!(x.len(), n * c * h * w_in, "batched input length mismatch");
         assert_eq!(bank.l, l, "sparse filter bank tile-size mismatch");
         assert!(h >= r && w_in >= r, "input smaller than the filter");
-        let k = bank.k;
         let (oh, ow) = (h - r + 1, w_in - r + 1);
+        assert_eq!(out.len(), n * k * oh * ow, "batched output length mismatch");
         let (nty, ntx) = (num_tiles(oh, m), num_tiles(ow, m));
         let sz = l * l;
-        let n_tiles = nty * ntx;
+        let n_tiles = n * nty * ntx;
 
         scratch.v.resize(n_tiles * c * sz, 0.0);
         scratch.vt.resize(sz * c * n_tiles, 0.0);
         scratch.mm.resize(sz * k * n_tiles, 0.0);
-        let n_a = threads.min(nty).max(1);
+        let n_a = threads.min(n * nty).max(1);
         let n_c = threads.min(sz).max(1);
         let n_b = threads.min(k).max(1);
         scratch.ensure_workers(n_a.max(n_b), l, m);
-        let PlanScratch { v, vt, mm, workers } = scratch;
-        let xd = x.data();
+        if n > 1 {
+            scratch.yb.resize(n * k * oh * ow, 0.0);
+        }
+        let PlanScratch { v, vt, mm, yb, workers } = scratch;
 
         // Stage 1: identical to the dense engine.
-        run_input_stage(consts, workers, xd, c, h, w_in, nty, ntx, v, n_a);
+        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a);
 
         // Stage 2: per-coordinate transpose + block-sparse matmul,
         // sharded by coordinate.  Each worker owns contiguous `vt`/`mm`
@@ -626,31 +767,35 @@ impl WinogradPlan {
         }
 
         // Stage 3: gather the coordinate vector per (output channel,
-        // tile) and inverse-transform, sharded by output channel.
-        let mut out = Tensor::zeros(&[k, oh, ow]);
+        // image, tile) and inverse-transform, sharded by output channel.
         let mm_ro: &[f32] = mm;
+        let target: &mut [f32] = if n == 1 {
+            &mut *out
+        } else {
+            &mut yb[..n * k * oh * ow]
+        };
         if n_b == 1 {
             inverse_stage_ks(
                 consts,
                 &mut workers[0],
                 mm_ro,
-                out.data_mut(),
+                target,
                 0,
                 k,
                 k,
+                n,
                 nty,
                 ntx,
                 oh,
                 ow,
             );
         } else {
-            let out_data = out.data_mut();
             std::thread::scope(|s| {
-                let mut rest: &mut [f32] = out_data;
+                let mut rest: &mut [f32] = target;
                 let mut k0 = 0;
                 for (wi, ws) in workers[..n_b].iter_mut().enumerate() {
                     let ks = k / n_b + usize::from(wi < k % n_b);
-                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(ks * oh * ow);
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(ks * n * oh * ow);
                     rest = tail;
                     let start = k0;
                     k0 += ks;
@@ -663,6 +808,7 @@ impl WinogradPlan {
                             start,
                             start + ks,
                             k,
+                            n,
                             nty,
                             ntx,
                             oh,
@@ -672,16 +818,32 @@ impl WinogradPlan {
                 }
             });
         }
-        out
+        if n > 1 {
+            scatter_kn_to_nk(yb, out, k, n, oh * ow);
+        }
+    }
+}
+
+/// Scatter the stage-owned `[k][n][plane]` staging layout into the
+/// caller's `[n][k][plane]` batched output (contiguous memcpy per plane).
+fn scatter_kn_to_nk(src: &[f32], dst: &mut [f32], k: usize, n: usize, plane: usize) {
+    for kk in 0..k {
+        for img in 0..n {
+            dst[(img * k + kk) * plane..][..plane]
+                .copy_from_slice(&src[(kk * n + img) * plane..][..plane]);
+        }
     }
 }
 
 /// Run the (dense) input stage over `n_a` workers, each owning a
-/// contiguous tile-row band of `v`.
+/// contiguous band of `v`.  The batch rides the tile-row dimension:
+/// global row `g` is row `g % nty` of image `g / nty`, so worker bands
+/// stay contiguous in `v` (`[image][tile][channel][l*l]`).
 fn run_input_stage(
     consts: &PlanConsts,
     workers: &mut [TileScratch],
-    xd: &[f32],
+    x: &[f32],
+    n: usize,
     c: usize,
     h: usize,
     w_in: usize,
@@ -691,21 +853,22 @@ fn run_input_stage(
     n_a: usize,
 ) {
     let sz = consts.l * consts.l;
+    let rows_total = n * nty;
     if n_a == 1 {
-        input_stage_rows(consts, &mut workers[0], xd, c, h, w_in, 0, nty, ntx, v);
+        input_stage_rows(consts, &mut workers[0], x, c, h, w_in, 0, rows_total, nty, ntx, v);
         return;
     }
     std::thread::scope(|s| {
         let mut rest: &mut [f32] = v;
-        let mut ty0 = 0;
+        let mut g0 = 0;
         for (wi, ws) in workers[..n_a].iter_mut().enumerate() {
-            let rows = nty / n_a + usize::from(wi < nty % n_a);
+            let rows = rows_total / n_a + usize::from(wi < rows_total % n_a);
             let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * ntx * c * sz);
             rest = tail;
-            let start = ty0;
-            ty0 += rows;
+            let start = g0;
+            g0 += rows;
             s.spawn(move || {
-                input_stage_rows(consts, ws, xd, c, h, w_in, start, start + rows, ntx, chunk);
+                input_stage_rows(consts, ws, x, c, h, w_in, start, start + rows, nty, ntx, chunk);
             });
         }
     });
@@ -771,9 +934,10 @@ fn coord_stage_ts(
 }
 
 /// Stage 3 worker of the sparse path: for output channels `[k0, k1)`,
-/// gather each tile's coordinate vector from the `[coord][k][tile]`
-/// products, inverse-transform (`A^T t A`), and scatter into the caller's
-/// output band (`out` starts at channel `k0`).
+/// gather each (image, tile)'s coordinate vector from the
+/// `[coord][k][image*tiles]` products, inverse-transform (`A^T t A`),
+/// and scatter into the caller's output band (layout
+/// `[k - k0][image][oh*ow]` — for n == 1 the plain single-image band).
 fn inverse_stage_ks(
     consts: &PlanConsts,
     ws: &mut TileScratch,
@@ -782,6 +946,7 @@ fn inverse_stage_ks(
     k0: usize,
     k1: usize,
     k: usize,
+    n: usize,
     nty: usize,
     ntx: usize,
     oh: usize,
@@ -789,50 +954,59 @@ fn inverse_stage_ks(
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
-    let n_tiles = nty * ntx;
+    let img_tiles = nty * ntx;
+    let n_tiles = n * img_tiles;
     for kk in k0..k1 {
-        let out_k = &mut out[(kk - k0) * oh * ow..][..oh * ow];
-        for ty in 0..nty {
-            let y0 = ty * m;
-            let nrows = (oh - y0).min(m);
-            for tx in 0..ntx {
-                let x0 = tx * m;
-                let ncols = (ow - x0).min(m);
-                let tile = ty * ntx + tx;
-                for t in 0..sz {
-                    ws.acc[t] = mm[(t * k + kk) * n_tiles + tile];
-                }
-                // Y = (A^T t) A -> (m, m), then scatter the valid window —
-                // identical arithmetic to the dense output stage.
-                matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
-                matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
-                for i in 0..nrows {
-                    out_k[(y0 + i) * ow + x0..][..ncols]
-                        .copy_from_slice(&ws.y[i * m..i * m + ncols]);
+        for img in 0..n {
+            let out_k = &mut out[((kk - k0) * n + img) * oh * ow..][..oh * ow];
+            for ty in 0..nty {
+                let y0 = ty * m;
+                let nrows = (oh - y0).min(m);
+                for tx in 0..ntx {
+                    let x0 = tx * m;
+                    let ncols = (ow - x0).min(m);
+                    let tile = img * img_tiles + ty * ntx + tx;
+                    for t in 0..sz {
+                        ws.acc[t] = mm[(t * k + kk) * n_tiles + tile];
+                    }
+                    // Y = (A^T t) A -> (m, m), then scatter the valid
+                    // window — identical arithmetic to the dense output
+                    // stage.
+                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
+                    matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
+                    for i in 0..nrows {
+                        out_k[(y0 + i) * ow + x0..][..ncols]
+                            .copy_from_slice(&ws.y[i * m..i * m + ncols]);
+                    }
                 }
             }
         }
     }
 }
 
-/// Stage 1 worker: transform tile rows `[ty0, ty1)` into the caller's `v`
-/// band (layout `[tile][channel][l*l]`, tile-major within the band).
+/// Stage 1 worker: transform global tile rows `[g0, g1)` (row `g % nty`
+/// of image `g / nty`) into the caller's `v` band (layout
+/// `[tile][channel][l*l]`, tile-major within the band).
 fn input_stage_rows(
     consts: &PlanConsts,
     ws: &mut TileScratch,
-    xd: &[f32],
+    x: &[f32],
     c: usize,
     h: usize,
     w_in: usize,
-    ty0: usize,
-    ty1: usize,
+    g0: usize,
+    g1: usize,
+    nty: usize,
     ntx: usize,
     v: &mut [f32],
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
+    let img_elems = c * h * w_in;
     let mut off = 0;
-    for ty in ty0..ty1 {
+    for g in g0..g1 {
+        let xd = &x[(g / nty) * img_elems..][..img_elems];
+        let ty = g % nty;
         let y0 = ty * m;
         let nrows = (h - y0).min(l);
         for tx in 0..ntx {
@@ -858,8 +1032,10 @@ fn input_stage_rows(
 }
 
 /// Stage 2+3 worker: for output channels `[k0, k1)`, accumulate
-/// U_k ⊙ V over channels per tile, inverse-transform, and scatter into
-/// the caller's output band (`out` starts at channel k0).
+/// U_k ⊙ V over channels per (image, tile), inverse-transform, and
+/// scatter into the caller's output band (layout `[k - k0][image][oh*ow]`
+/// — for n == 1 the plain single-image band).  Each bank row `u_k` is
+/// read once and streamed against every image's tiles.
 fn output_stage_ks(
     consts: &PlanConsts,
     ws: &mut TileScratch,
@@ -868,6 +1044,7 @@ fn output_stage_ks(
     out: &mut [f32],
     k0: usize,
     k1: usize,
+    n: usize,
     c: usize,
     nty: usize,
     ntx: usize,
@@ -876,33 +1053,37 @@ fn output_stage_ks(
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
+    let img_tiles = nty * ntx;
     for kk in k0..k1 {
         let u_k = &bank.u[kk * c * sz..][..c * sz];
-        let out_k = &mut out[(kk - k0) * oh * ow..][..oh * ow];
-        for ty in 0..nty {
-            let y0 = ty * m;
-            let nrows = (oh - y0).min(m);
-            for tx in 0..ntx {
-                let x0 = tx * m;
-                let ncols = (ow - x0).min(m);
-                let tile = ty * ntx + tx;
-                let v_t = &v[tile * c * sz..][..c * sz];
-                // Elementwise accumulate over channels, then inverse once
-                // — the amortization of eq. (5).
-                ws.acc.fill(0.0);
-                for cc in 0..c {
-                    let uu = &u_k[cc * sz..][..sz];
-                    let vv = &v_t[cc * sz..][..sz];
-                    for (a, (&u1, &v1)) in ws.acc.iter_mut().zip(uu.iter().zip(vv)) {
-                        *a += u1 * v1;
+        for img in 0..n {
+            let out_k = &mut out[((kk - k0) * n + img) * oh * ow..][..oh * ow];
+            for ty in 0..nty {
+                let y0 = ty * m;
+                let nrows = (oh - y0).min(m);
+                for tx in 0..ntx {
+                    let x0 = tx * m;
+                    let ncols = (ow - x0).min(m);
+                    let tile = img * img_tiles + ty * ntx + tx;
+                    let v_t = &v[tile * c * sz..][..c * sz];
+                    // Elementwise accumulate over channels, then inverse
+                    // once — the amortization of eq. (5).
+                    ws.acc.fill(0.0);
+                    for cc in 0..c {
+                        let uu = &u_k[cc * sz..][..sz];
+                        let vv = &v_t[cc * sz..][..sz];
+                        for (a, (&u1, &v1)) in ws.acc.iter_mut().zip(uu.iter().zip(vv)) {
+                            *a += u1 * v1;
+                        }
                     }
-                }
-                // Y = (A^T t) A -> (m, m), then scatter the valid window.
-                matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
-                matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
-                for i in 0..nrows {
-                    out_k[(y0 + i) * ow + x0..][..ncols]
-                        .copy_from_slice(&ws.y[i * m..i * m + ncols]);
+                    // Y = (A^T t) A -> (m, m), then scatter the valid
+                    // window.
+                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
+                    matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
+                    for i in 0..nrows {
+                        out_k[(y0 + i) * ow + x0..][..ncols]
+                            .copy_from_slice(&ws.y[i * m..i * m + ncols]);
+                    }
                 }
             }
         }
@@ -1068,6 +1249,125 @@ mod tests {
         let dense = plan.transform_filters(&w);
         let back = plan.transform_filters_sparse(&w, 0.0).to_dense_bank();
         assert_eq!(dense.data(), back.data());
+    }
+
+    /// Stack per-image (C, H, W) tensors into one (N, C, H, W) batch.
+    fn stack(xs: &[Tensor]) -> Tensor {
+        let shape = xs[0].shape();
+        let mut data = Vec::with_capacity(xs.len() * xs[0].len());
+        for x in xs {
+            assert_eq!(x.shape(), shape);
+            data.extend_from_slice(x.data());
+        }
+        Tensor::from_vec(
+            &[xs.len(), shape[0], shape[1], shape[2]],
+            data,
+        )
+    }
+
+    #[test]
+    fn batch_of_one_bit_identical_to_single_image() {
+        let mut rng = Rng::new(317);
+        let x = rand_tensor(&mut rng, &[5, 11, 13]);
+        let w = rand_tensor(&mut rng, &[6, 5, 3, 3]);
+        let mut plan = WinogradPlan::new(4, 3);
+        let dbank = plan.transform_filters(&w);
+        let sbank = plan.transform_filters_sparse(&w, 0.5);
+        let xb = stack(std::slice::from_ref(&x));
+        let yd = plan.conv2d_with_filters(&x, &dbank);
+        let ydb = plan.conv2d_with_filters_batch(&xb, &dbank);
+        assert_eq!(ydb.shape(), &[1, 6, 9, 11]);
+        assert_eq!(yd.data(), ydb.data(), "dense batch N=1 must be exact");
+        let ys = plan.conv2d_sparse_with_filters(&x, &sbank);
+        let ysb = plan.conv2d_sparse_with_filters_batch(&xb, &sbank);
+        assert_eq!(ys.data(), ysb.data(), "sparse batch N=1 must be exact");
+    }
+
+    #[test]
+    fn batched_dense_matches_per_image_runs() {
+        // One fused batched launch == N independent single-image runs,
+        // bit for bit, on non-tile-aligned shapes.
+        let mut rng = Rng::new(318);
+        let w = rand_tensor(&mut rng, &[5, 4, 3, 3]);
+        let xs: Vec<Tensor> = (0..3).map(|_| rand_tensor(&mut rng, &[4, 10, 11])).collect();
+        let mut plan = WinogradPlan::new(2, 3);
+        let bank = plan.transform_filters(&w);
+        let yb = plan.conv2d_with_filters_batch(&stack(&xs), &bank);
+        assert_eq!(yb.shape(), &[3, 5, 8, 9]);
+        let per = 5 * 8 * 9;
+        for (i, x) in xs.iter().enumerate() {
+            let want = plan.conv2d_with_filters(x, &bank);
+            assert_eq!(
+                &yb.data()[i * per..(i + 1) * per],
+                want.data(),
+                "image {i} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_sparse_matches_per_image_runs() {
+        let mut rng = Rng::new(319);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let xs: Vec<Tensor> = (0..4).map(|_| rand_tensor(&mut rng, &[8, 9, 12])).collect();
+        let mut plan = WinogradPlan::new(4, 3);
+        let bank = plan.transform_filters_sparse(&w, 0.6);
+        let yb = plan.conv2d_sparse_with_filters_batch(&stack(&xs), &bank);
+        assert_eq!(yb.shape(), &[4, 8, 7, 10]);
+        let per = 8 * 7 * 10;
+        for (i, x) in xs.iter().enumerate() {
+            let want = plan.conv2d_sparse_with_filters(x, &bank);
+            assert_eq!(
+                &yb.data()[i * per..(i + 1) * per],
+                want.data(),
+                "image {i} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_threaded_bit_identical_to_single_worker() {
+        let mut rng = Rng::new(320);
+        let w = rand_tensor(&mut rng, &[7, 5, 3, 3]);
+        let xs: Vec<Tensor> = (0..3).map(|_| rand_tensor(&mut rng, &[5, 14, 9])).collect();
+        let xb = stack(&xs);
+        let mut single = WinogradPlan::new(2, 3).with_threads(1);
+        let dbank = single.transform_filters(&w);
+        let sbank = single.transform_filters_sparse(&w, 0.5);
+        let want_d = single.conv2d_with_filters_batch(&xb, &dbank);
+        let want_s = single.conv2d_sparse_with_filters_batch(&xb, &sbank);
+        for threads in [2usize, 5, 8] {
+            let mut multi = WinogradPlan::new(2, 3).with_threads(threads);
+            assert_eq!(
+                multi.conv2d_with_filters_batch(&xb, &dbank),
+                want_d,
+                "dense threads={threads}"
+            );
+            assert_eq!(
+                multi.conv2d_sparse_with_filters_batch(&xb, &sbank),
+                want_s,
+                "sparse threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_into_slice_entry_points_match_tensor_api() {
+        let mut rng = Rng::new(321);
+        let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
+        let xs: Vec<Tensor> = (0..2).map(|_| rand_tensor(&mut rng, &[3, 8, 8])).collect();
+        let xb = stack(&xs);
+        let mut plan = WinogradPlan::new(2, 3);
+        let dbank = plan.transform_filters(&w);
+        let sbank = plan.transform_filters_sparse(&w, 0.4);
+        let want_d = plan.conv2d_with_filters_batch(&xb, &dbank);
+        let mut got = vec![0.0f32; want_d.len()];
+        plan.conv2d_with_filters_batch_into(2, xb.data(), 8, 8, &dbank, &mut got);
+        assert_eq!(got, want_d.data());
+        let want_s = plan.conv2d_sparse_with_filters_batch(&xb, &sbank);
+        got.fill(0.0);
+        plan.conv2d_sparse_with_filters_batch_into(2, xb.data(), 8, 8, &sbank, &mut got);
+        assert_eq!(got, want_s.data());
     }
 
     #[test]

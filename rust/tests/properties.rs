@@ -188,6 +188,62 @@ fn prop_sparse_plan_threaded_bit_identical() {
 }
 
 #[test]
+fn prop_forward_batch_bit_identical_to_sequential() {
+    // The serving tentpole property: for random small networks and every
+    // backend family (dense, sparse, quant-sparse), `forward_batch` must
+    // return exactly the per-image `forward` results for batch sizes
+    // 1..=8 — and an image's logits must not depend on which batch it
+    // rides in.
+    use swcnn::executor::{ExecPolicy, NetworkExecutor};
+    use swcnn::nn::{ConvLayer, FcLayer, Network};
+    let mut rng = Rng::new(1017);
+    for case in 0..4 {
+        let c0 = 1 + rng.next_below(3);
+        let k0 = 4 * (1 + rng.next_below(2));
+        let k1 = 4 * (1 + rng.next_below(2));
+        let hw = 8;
+        let net = Network {
+            name: "rand",
+            input_hw: hw,
+            input_ch: c0,
+            convs: vec![
+                ConvLayer { name: "c0", stage: 1, in_ch: c0, out_ch: k0, hw, r: 3 },
+                ConvLayer { name: "c1", stage: 2, in_ch: k0, out_ch: k1, hw: hw / 2, r: 3 },
+            ],
+            fcs: vec![
+                FcLayer { name: "f0", in_f: k1 * (hw / 4) * (hw / 4), out_f: 6 },
+                FcLayer { name: "f1", in_f: 6, out_f: 4 },
+            ],
+        };
+        for policy in [
+            ExecPolicy::dense(2),
+            ExecPolicy::sparse(2, 0.6),
+            ExecPolicy::sparse(4, 0.7).with_bits(16),
+        ] {
+            let mut ex = NetworkExecutor::synthetic(net.clone(), policy, 900 + case as u64)
+                .with_max_batch(8);
+            let images: Vec<Vec<f32>> =
+                (0..8).map(|_| rng.gaussian_vec(c0 * hw * hw)).collect();
+            let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+            let seq: Vec<Vec<f32>> = images.iter().map(|im| ex.forward(im)).collect();
+            for n in 1..=8usize {
+                let got = ex.forward_batch(&refs[..n]);
+                assert_eq!(
+                    got,
+                    seq[..n],
+                    "case {case} {policy:?}: batch {n} != sequential"
+                );
+            }
+            // Batch membership and position must not change an image.
+            let shuffled = ex.forward_batch(&[refs[5], refs[1], refs[7]]);
+            assert_eq!(shuffled[0], seq[5], "case {case} {policy:?}");
+            assert_eq!(shuffled[1], seq[1], "case {case} {policy:?}");
+            assert_eq!(shuffled[2], seq[7], "case {case} {policy:?}");
+        }
+    }
+}
+
+#[test]
 fn prop_cluster_matmul_equals_reference_random_dims() {
     let mut rng = Rng::new(1002);
     for case in 0..30 {
