@@ -1,0 +1,54 @@
+//! Regenerate the per-layer tuning profile for vgg_tiny.
+//!
+//!   cargo run --release --example tune_profile
+//!
+//! Runs the analytical-model-driven autotuner (with its bounded
+//! on-machine calibration pass) over every conv layer, prints the chosen
+//! (m, workers, backend) per layer next to the model's predictions, and
+//! writes `TUNE_vgg_tiny.json` — the file
+//! `InferenceServer::start_native` loads via
+//! `NativeServerConfig::with_profile(TuneProfile::load(...)?)`.
+
+use swcnn::bench::print_table;
+use swcnn::executor::ExecPolicy;
+use swcnn::nn::vgg_tiny;
+use swcnn::tuner::Tuner;
+use swcnn::util::eng;
+
+fn main() {
+    let base = ExecPolicy::sparse(2, 0.7);
+    let profile = Tuner::new(vgg_tiny(), base, 7).tune();
+    let rows: Vec<Vec<String>> = profile
+        .layers
+        .iter()
+        .map(|lt| {
+            let measured = match (lt.measured_s, lt.default_s) {
+                (Some(m), Some(d)) => format!(
+                    "{:.3} ms ({:.2}x vs default)",
+                    m * 1e3,
+                    d / m
+                ),
+                _ => "model-only".to_string(),
+            };
+            vec![
+                lt.name.clone(),
+                format!("F({},3)", lt.m),
+                lt.workers.to_string(),
+                if lt.sparse { "sparse" } else { "dense" }.to_string(),
+                format!("{} cyc", eng(lt.predicted_cycles as f64)),
+                measured,
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "tuned profile: {} (base F({},3) p={}, fused batch {})",
+            profile.network, profile.base_m, profile.sparsity, profile.batch
+        ),
+        &["layer", "tile", "workers", "backend", "model", "measured"],
+        &rows,
+    );
+    let path = "TUNE_vgg_tiny.json";
+    profile.save(path).expect("write profile");
+    println!("\nwrote {path}");
+}

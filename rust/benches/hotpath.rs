@@ -15,10 +15,13 @@
 //! decompressed pruned weights).
 
 use swcnn::bench::{print_table, time_it};
+use swcnn::executor::{ConvExecutor, ExecPolicy, NetworkExecutor};
+use swcnn::nn::{self, vgg_tiny};
 use swcnn::sparse::{synthetic_sparse_matrix, Bcoo};
 use swcnn::systolic::cluster::{BlockMatrix, Cluster};
 use swcnn::systolic::BlockTiming;
 use swcnn::tensor::Tensor;
+use swcnn::tuner::{TuneProfile, Tuner};
 use swcnn::util::json::Json;
 use swcnn::util::{eng, Rng, Stats};
 use swcnn::winograd::{direct_conv2d, winograd_conv2d_reference, WinogradPlan};
@@ -113,6 +116,50 @@ fn write_sparse_json(
         ),
     ]);
     let path = "BENCH_sparse.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// `BENCH_tuner.json`: one row per vgg_tiny layer with the tuned choice
+/// and the measured tuned-vs-default ratio, plus the whole-network
+/// speedup and the profile's fused batch pick.  The CI regression gate
+/// compares the `ratio_vs_default` / `*speedup*` fields against the
+/// committed baselines.
+fn write_tuner_json(
+    profile: &TuneProfile,
+    layer_rows: &[(String, String, f64, f64)],
+    net_speedup: f64,
+) {
+    use std::collections::BTreeMap;
+    let results: Vec<Json> = layer_rows
+        .iter()
+        .map(|(name, choice, default_s, tuned_s)| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(name.clone())),
+                ("choice".to_string(), Json::Str(choice.clone())),
+                ("default_median_s".to_string(), Json::Num(*default_s)),
+                ("tuned_median_s".to_string(), Json::Num(*tuned_s)),
+                (
+                    "ratio_vs_default".to_string(),
+                    Json::Num(default_s / tuned_s),
+                ),
+            ]))
+        })
+        .collect();
+    let top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("tuner".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("network".to_string(), Json::Str(profile.network.clone())),
+        ("batch".to_string(), Json::Num(profile.batch as f64)),
+        (
+            "tuned_net_speedup_vs_default".to_string(),
+            Json::Num(net_speedup),
+        ),
+        ("results".to_string(), Json::Arr(results)),
+    ]);
+    let path = "BENCH_tuner.json";
     match std::fs::write(path, Json::Obj(top).to_string()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
@@ -311,6 +358,134 @@ fn main() {
             format!("{:.2} ms/launch", s_b4.mean * 1e3),
             format!("{per_image_speedup:.2}x per image vs batch-1"),
         ]);
+    }
+
+    // ------------------------------------------------------------------
+    // Per-layer autotuner: tuned-vs-default on every vgg_tiny layer.
+    // The tuner picks (m, workers, backend) per layer from the §5.1
+    // analytical model refined by its bounded calibration pass; the
+    // bench then re-measures both configurations per layer and the
+    // whole-network forward, and emits BENCH_tuner.json — the input of
+    // the CI bench-regression gate.  Layers where the tuner keeps the
+    // default configuration share one measurement (ratio exactly 1.0);
+    // layers where it deviates must hold the measured win.
+    // ------------------------------------------------------------------
+    {
+        let net = vgg_tiny();
+        let base = ExecPolicy::sparse(2, 0.7);
+        let seed = 7u64;
+        let profile = Tuner::new(net.clone(), base, seed).tune();
+        let (weights, _) = nn::synthetic_weights(&net, seed);
+        let default_workers = WinogradPlan::default_threads();
+        let tuned_policies = profile.layer_policies(base);
+        let mut layer_rows: Vec<(String, String, f64, f64)> = Vec::new();
+        let mut any_deviation = false;
+        for (i, layer) in net.convs.iter().enumerate() {
+            let lt = &profile.layers[i];
+            // ExecPolicy::for_layer is the executor's own small-channel
+            // guard, so the measured configs are exactly what serving
+            // builds.
+            let default_policy = base.for_layer(layer);
+            let default_sparse = default_policy.wants_sparse();
+            let tuned_policy = tuned_policies[i].for_layer(layer);
+            let p = nn::same_pad(layer.r);
+            let (hp, wp) = (layer.hw + 2 * p, layer.hw + 2 * p);
+            let xin = Tensor::from_vec(
+                &[layer.in_ch, hp, wp],
+                Rng::new(seed + i as u64).gaussian_vec(layer.in_ch * hp * wp),
+            );
+            let measure = |policy: &ExecPolicy| {
+                let mut ex = ConvExecutor::prepare(&weights[i], policy);
+                time_it(1, 7, || {
+                    std::hint::black_box(ex.conv2d(&xin));
+                })
+            };
+            let s_default = measure(&default_policy);
+            let same_config = lt.m == base.m
+                && lt.workers == default_workers
+                && lt.sparse == default_sparse;
+            any_deviation |= !same_config;
+            let s_tuned = if same_config { s_default } else { measure(&tuned_policy) };
+            let ratio = s_default.median / s_tuned.median;
+            let choice = format!(
+                "F({},3) w={} {}",
+                lt.m,
+                lt.workers,
+                if lt.sparse { "sparse" } else { "dense" }
+            );
+            rows.push(vec![
+                format!("tuner {}: {choice}", layer.name),
+                format!(
+                    "{:.3} ms vs {:.3} ms default",
+                    s_tuned.median * 1e3,
+                    s_default.median * 1e3
+                ),
+                format!("{ratio:.2}x vs default"),
+            ]);
+            layer_rows.push((
+                layer.name.to_string(),
+                choice,
+                s_default.median,
+                s_tuned.median,
+            ));
+            // Noise guard, not the acceptance bar: deviating layers were
+            // chosen with a >= 5% calibrated win, so a re-measure landing
+            // under 0.90 means a real problem rather than shared-runner
+            // jitter (same-config layers share one measurement: 1.0).
+            assert!(
+                ratio >= 0.90,
+                "{}: tuned config {:.3} ms regressed vs default {:.3} ms",
+                layer.name,
+                s_tuned.median * 1e3,
+                s_default.median * 1e3
+            );
+        }
+        // Whole-network forward: the tuned profile vs the uniform default.
+        let mut default_net = NetworkExecutor::synthetic(net.clone(), base, seed);
+        let mut tuned_net = NetworkExecutor::synthetic_per_layer(net, &tuned_policies, seed);
+        let image = Rng::new(seed).gaussian_vec(default_net.input_elements());
+        let s_dnet = time_it(1, 7, || {
+            std::hint::black_box(default_net.forward(&image));
+        });
+        let s_tnet = time_it(1, 7, || {
+            std::hint::black_box(tuned_net.forward(&image));
+        });
+        let net_speedup = s_dnet.median / s_tnet.median;
+        rows.push(vec![
+            "tuner vgg_tiny end-to-end".into(),
+            format!(
+                "{:.2} ms vs {:.2} ms default",
+                s_tnet.median * 1e3,
+                s_dnet.median * 1e3
+            ),
+            format!("{net_speedup:.2}x, fused batch {}", profile.batch),
+        ]);
+        write_tuner_json(&profile, &layer_rows, net_speedup);
+        assert!(
+            net_speedup >= 0.90,
+            "tuned network forward regressed: {net_speedup:.2}x vs default"
+        );
+        // The acceptance headline — a strict per-layer win — only makes
+        // sense when the tuner actually deviated somewhere; keeping the
+        // default everywhere is a legitimate hysteresis outcome on
+        // hardware where no candidate clears the margin, and must not
+        // fail the bench.
+        if any_deviation {
+            let best = layer_rows
+                .iter()
+                .map(|(_, _, d, t)| d / t)
+                .fold(f64::MIN, f64::max);
+            assert!(
+                best > 1.0,
+                "tuner deviated from the default but never beat it \
+                 (best ratio {best:.3})"
+            );
+        } else {
+            println!(
+                "tuner kept the default configuration on every layer \
+                 (no candidate cleared the calibration hysteresis)"
+            );
+        }
     }
 
     // ------------------------------------------------------------------

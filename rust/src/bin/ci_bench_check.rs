@@ -1,0 +1,284 @@
+//! CI perf-regression gate: compare freshly emitted `BENCH_*.json` files
+//! against committed baselines and fail on a real throughput regression.
+//!
+//!   ci_bench_check <baseline_dir> <current_dir> [--threshold 0.25]
+//!
+//! Shared CI runners differ wildly in absolute speed, so absolute
+//! seconds are **not** compared — only the dimensionless ratios the
+//! benches emit (`*speedup*` and `*ratio*` keys: higher is better;
+//! `*overhead*` keys: lower is better), which measure the code against
+//! itself on the same machine and are portable across runners.  A metric
+//! regresses when it moves against its direction by more than the
+//! threshold (default 25%).  Metrics present in the baseline but missing
+//! from the fresh run fail too (a silently deleted gate is a
+//! regression); new metrics in the fresh run are reported and pass —
+//! refresh the baselines to start gating them.
+//!
+//! Every compared row is printed as a delta table so the job log shows
+//! the whole perf trajectory, not just the verdict.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+use swcnn::bench::print_table;
+use swcnn::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    HigherBetter,
+    LowerBetter,
+}
+
+/// Which numeric fields are machine-portable gates, and which way they
+/// point.  Everything else (absolute seconds, sparsity knobs, batch
+/// sizes, iteration counts) is ignored.
+fn classify(key: &str) -> Option<Direction> {
+    let k = key.to_ascii_lowercase();
+    if k.contains("speedup") || k.contains("ratio") {
+        Some(Direction::HigherBetter)
+    } else if k.contains("overhead") {
+        Some(Direction::LowerBetter)
+    } else {
+        None
+    }
+}
+
+/// Flatten one bench document into `(metric, direction, value)` rows:
+/// gated top-level fields plus gated fields of each `results[]` row,
+/// qualified by the row's `name`.
+fn collect_metrics(doc: &Json) -> BTreeMap<String, (Direction, f64)> {
+    let mut out = BTreeMap::new();
+    let Some(map) = doc.as_obj() else {
+        return out;
+    };
+    for (k, v) in map {
+        if let (Some(dir), Some(x)) = (classify(k), v.as_f64()) {
+            out.insert(k.clone(), (dir, x));
+        }
+    }
+    if let Some(rows) = map.get("results").and_then(|r| r.as_arr()) {
+        for (i, row) in rows.iter().enumerate() {
+            let name = row
+                .get("name")
+                .and_then(|n| n.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("row{i}"));
+            if let Some(rm) = row.as_obj() {
+                for (k, v) in rm {
+                    if let (Some(dir), Some(x)) = (classify(k), v.as_f64()) {
+                        out.insert(format!("{name}.{k}"), (dir, x));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Compare one file's metric sets.  Returns the printable delta rows and
+/// the number of regressions.
+fn compare(
+    file: &str,
+    baseline: &BTreeMap<String, (Direction, f64)>,
+    current: &BTreeMap<String, (Direction, f64)>,
+    threshold: f64,
+) -> (Vec<Vec<String>>, usize) {
+    let mut rows = Vec::new();
+    let mut failures = 0;
+    for (metric, &(dir, base)) in baseline {
+        let Some(&(_, cur)) = current.get(metric) else {
+            failures += 1;
+            rows.push(vec![
+                file.to_string(),
+                metric.clone(),
+                format!("{base:.3}"),
+                "missing".to_string(),
+                "-".to_string(),
+                "FAIL (gate removed)".to_string(),
+            ]);
+            continue;
+        };
+        let delta_pct = if base.abs() > f64::EPSILON {
+            (cur / base - 1.0) * 100.0
+        } else {
+            0.0
+        };
+        let regressed = match dir {
+            Direction::HigherBetter => cur < base * (1.0 - threshold),
+            Direction::LowerBetter => cur > base * (1.0 + threshold),
+        };
+        if regressed {
+            failures += 1;
+        }
+        let arrow = match dir {
+            Direction::HigherBetter => "higher-better",
+            Direction::LowerBetter => "lower-better",
+        };
+        rows.push(vec![
+            file.to_string(),
+            metric.clone(),
+            format!("{base:.3}"),
+            format!("{cur:.3}"),
+            format!("{delta_pct:+.1}%"),
+            if regressed {
+                format!("FAIL ({arrow})")
+            } else {
+                "ok".to_string()
+            },
+        ]);
+    }
+    for metric in current.keys() {
+        if !baseline.contains_key(metric) {
+            rows.push(vec![
+                file.to_string(),
+                metric.clone(),
+                "-".to_string(),
+                format!("{:.3}", current[metric].1),
+                "-".to_string(),
+                "new (refresh baseline to gate)".to_string(),
+            ]);
+        }
+    }
+    (rows, failures)
+}
+
+fn run(baseline_dir: &str, current_dir: &str, threshold: f64) -> Result<usize, String> {
+    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)
+        .map_err(|e| format!("reading baseline dir {baseline_dir}: {e}"))?
+        .filter_map(|entry| {
+            let name = entry.ok()?.file_name().to_string_lossy().to_string();
+            name.ends_with(".json").then_some(name)
+        })
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(format!("no *.json baselines in {baseline_dir}"));
+    }
+    let mut all_rows = Vec::new();
+    let mut failures = 0;
+    for name in &names {
+        let load = |dir: &str| -> Result<Json, String> {
+            let path = format!("{dir}/{name}");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+        };
+        let base = collect_metrics(&load(baseline_dir)?);
+        let cur = collect_metrics(&load(current_dir)?);
+        let (rows, fails) = compare(name, &base, &cur, threshold);
+        all_rows.extend(rows);
+        failures += fails;
+    }
+    print_table(
+        &format!("bench regression gate (threshold {:.0}%)", threshold * 100.0),
+        &["file", "metric", "baseline", "current", "delta", "status"],
+        &all_rows,
+    );
+    Ok(failures)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut positional = Vec::new();
+    let mut threshold = 0.25;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--threshold" {
+            let Some(v) = args.get(i + 1).and_then(|s| s.parse::<f64>().ok()) else {
+                eprintln!("--threshold needs a numeric value");
+                return ExitCode::FAILURE;
+            };
+            threshold = v;
+            i += 2;
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let [baseline_dir, current_dir] = positional.as_slice() else {
+        eprintln!("usage: ci_bench_check <baseline_dir> <current_dir> [--threshold 0.25]");
+        return ExitCode::FAILURE;
+    };
+    match run(baseline_dir, current_dir, threshold) {
+        Ok(0) => {
+            println!("\nno regressions beyond {:.0}%", threshold * 100.0);
+            ExitCode::SUCCESS
+        }
+        Ok(n) => {
+            eprintln!("\n{n} metric(s) regressed beyond {:.0}%", threshold * 100.0);
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> BTreeMap<String, (Direction, f64)> {
+        collect_metrics(&Json::parse(text).expect("test json"))
+    }
+
+    #[test]
+    fn classify_directions() {
+        assert_eq!(classify("plan_speedup_vs_naive"), Some(Direction::HigherBetter));
+        assert_eq!(classify("ratio_vs_default"), Some(Direction::HigherBetter));
+        assert_eq!(
+            classify("sparse_overhead_at_0_0"),
+            Some(Direction::LowerBetter)
+        );
+        assert_eq!(classify("mean_s"), None);
+        assert_eq!(classify("schema"), None);
+        assert_eq!(classify("block_sparsity"), None);
+    }
+
+    #[test]
+    fn collects_top_level_and_row_metrics() {
+        let m = doc(
+            r#"{"schema": 1, "plan_speedup_vs_naive": 8.0, "dense_mean_s": 0.01,
+                "results": [
+                  {"name": "a", "speedup_vs_dense": 2.0, "mean_s": 0.005},
+                  {"name": "b", "speedup_vs_dense": 1.5}
+                ]}"#,
+        );
+        assert_eq!(m.len(), 3);
+        assert_eq!(m["plan_speedup_vs_naive"].1, 8.0);
+        assert_eq!(m["a.speedup_vs_dense"].1, 2.0);
+        assert_eq!(m["b.speedup_vs_dense"].1, 1.5);
+    }
+
+    #[test]
+    fn within_threshold_passes_beyond_fails() {
+        let base = doc(r#"{"x_speedup": 2.0}"#);
+        let ok = doc(r#"{"x_speedup": 1.6}"#); // -20% with 25% tolerance
+        let bad = doc(r#"{"x_speedup": 1.4}"#); // -30%
+        assert_eq!(compare("f", &base, &ok, 0.25).1, 0);
+        assert_eq!(compare("f", &base, &bad, 0.25).1, 1);
+        // Improvements never fail.
+        let better = doc(r#"{"x_speedup": 9.0}"#);
+        assert_eq!(compare("f", &base, &better, 0.25).1, 0);
+    }
+
+    #[test]
+    fn overhead_direction_is_inverted() {
+        let base = doc(r#"{"x_overhead": 1.1}"#);
+        let ok = doc(r#"{"x_overhead": 1.3}"#); // +18%
+        let bad = doc(r#"{"x_overhead": 1.5}"#); // +36%
+        assert_eq!(compare("f", &base, &ok, 0.25).1, 0);
+        assert_eq!(compare("f", &base, &bad, 0.25).1, 1);
+        let better = doc(r#"{"x_overhead": 0.9}"#);
+        assert_eq!(compare("f", &base, &better, 0.25).1, 0);
+    }
+
+    #[test]
+    fn missing_metric_fails_new_metric_passes() {
+        let base = doc(r#"{"x_speedup": 2.0}"#);
+        let cur = doc(r#"{"y_speedup": 3.0}"#);
+        let (rows, fails) = compare("f", &base, &cur, 0.25);
+        assert_eq!(fails, 1, "removed gate must fail");
+        assert!(rows.iter().any(|r| r[5].contains("new")), "{rows:?}");
+    }
+}

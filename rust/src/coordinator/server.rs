@@ -17,6 +17,7 @@ use super::metrics::Metrics;
 use crate::executor::{ExecPolicy, NetworkExecutor};
 use crate::nn::Network;
 use crate::runtime::{LoadedModel, Runtime};
+use crate::tuner::TuneProfile;
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -58,6 +59,12 @@ pub struct NativeServerConfig {
     /// Largest batch one launch may run (the native engine accepts any
     /// size up to this).
     pub max_batch: usize,
+    /// Optional per-layer tuning profile (see [`crate::tuner`]).  When
+    /// set, every conv layer runs its tuned (m, workers, backend) instead
+    /// of the uniform `policy`, and the batcher's capacity grows to the
+    /// profile's fused batch granularity.  The profile must describe
+    /// `net` (checked at startup).
+    pub profile: Option<TuneProfile>,
 }
 
 impl NativeServerConfig {
@@ -68,7 +75,15 @@ impl NativeServerConfig {
             seed: 7,
             window: Duration::from_millis(2),
             max_batch: 4,
+            profile: None,
         }
+    }
+
+    /// Serve with a tuned per-layer profile (from [`crate::tuner::Tuner`]
+    /// or [`TuneProfile::load`]).
+    pub fn with_profile(mut self, profile: TuneProfile) -> Self {
+        self.profile = Some(profile);
+        self
     }
 }
 
@@ -140,15 +155,41 @@ impl InferenceServer {
     pub fn start_native(cfg: NativeServerConfig) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
-        let metrics = Arc::new(Mutex::new(Metrics::new(cfg.max_batch.max(16), 4096)));
+        // A tuned profile may ask for a larger fused batch than the
+        // config default — the batcher and workspace follow the profile.
+        let fused_batch = cfg
+            .max_batch
+            .max(cfg.profile.as_ref().map(|p| p.batch).unwrap_or(1))
+            .max(1);
+        let metrics = Arc::new(Mutex::new(Metrics::new(fused_batch.max(16), 4096)));
         let metrics_worker = metrics.clone();
 
         let worker = std::thread::spawn(move || {
-            let exec = NetworkExecutor::synthetic(cfg.net, cfg.policy, cfg.seed)
-                .with_max_batch(cfg.max_batch.max(1));
+            let NativeServerConfig {
+                net,
+                policy,
+                seed,
+                window,
+                profile,
+                ..
+            } = cfg;
+            let built = match &profile {
+                Some(profile) => profile.matches(&net, &policy).map(|()| {
+                    let policies = profile.layer_policies(policy);
+                    NetworkExecutor::synthetic_per_layer(net, &policies, seed)
+                }),
+                None => Ok(NetworkExecutor::synthetic(net, policy, seed)),
+            };
+            let exec = match built {
+                Ok(exec) => exec.with_max_batch(fused_batch),
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
             let input_elems = exec.input_elements();
             let output_elems = exec.output_elements();
-            let batcher = Batcher::contiguous(cfg.max_batch, cfg.window);
+            let batcher = Batcher::contiguous(fused_batch, window);
             let _ = ready_tx.send(Ok(Ready {
                 input_elems,
                 output_elems,
@@ -449,6 +490,52 @@ mod tests {
         let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
         let err = server.infer(vec![0.0; 7]).unwrap_err();
         assert!(err.to_string().contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn native_server_serves_with_tuned_profile() {
+        use crate::tuner::{TuneOptions, Tuner};
+        let policy = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), policy, 7)
+            .with_options(TuneOptions {
+                calibrate: false,
+                ..TuneOptions::default()
+            })
+            .tune();
+        let profile_batch = profile.batch;
+        let cfg = NativeServerConfig::new(vgg_tiny(), policy).with_profile(profile);
+        let server = InferenceServer::start_native(cfg).expect("start tuned");
+        assert_eq!(server.input_elements(), 3 * 32 * 32);
+        assert_eq!(server.output_elements(), 10);
+        let mut rng = Rng::new(21);
+        let n = profile_batch.max(2);
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .collect();
+        for rx in rxs {
+            let y = rx.recv().expect("response").expect("inference");
+            assert_eq!(y.len(), 10);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn native_server_rejects_mismatched_profile() {
+        use crate::tuner::{TuneOptions, Tuner};
+        let policy = ExecPolicy::sparse(2, 0.7);
+        let mut profile = Tuner::new(vgg_tiny(), policy, 7)
+            .with_options(TuneOptions {
+                calibrate: false,
+                ..TuneOptions::default()
+            })
+            .tune();
+        profile.layers.pop(); // no longer describes vgg_tiny
+        let cfg = NativeServerConfig::new(vgg_tiny(), policy).with_profile(profile);
+        let err = match InferenceServer::start_native(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("mismatched profile must be refused"),
+        };
+        assert!(err.to_string().contains("layers"), "{err}");
     }
 
     #[test]

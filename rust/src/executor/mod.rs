@@ -18,7 +18,7 @@
 //! zero steady-state allocations, bit-identical to the per-image
 //! [`NetworkExecutor::forward`] results.
 
-use crate::nn::{self, Network};
+use crate::nn::{self, ConvLayer, Network};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -55,6 +55,11 @@ pub struct ExecPolicy {
     /// code, so deployments with a different input range must pin
     /// `act_scale` to their own Q-format.
     pub act_scale: Option<f32>,
+    /// Worker-count override for the layer's plan engine.  `None` keeps
+    /// the plan default (machine parallelism, capped); the tuner pins a
+    /// measured-best count per layer.  Results are bit-identical for any
+    /// value — this knob is purely a performance choice.
+    pub workers: Option<usize>,
 }
 
 impl ExecPolicy {
@@ -66,6 +71,7 @@ impl ExecPolicy {
             sparse_threshold: 0.5,
             bits: None,
             act_scale: None,
+            workers: None,
         }
     }
 
@@ -94,9 +100,34 @@ impl ExecPolicy {
         }
     }
 
+    /// Pin the layer's plan worker count (the tuner's per-layer choice).
+    pub fn with_workers(self, workers: usize) -> Self {
+        Self {
+            workers: Some(workers),
+            ..self
+        }
+    }
+
     /// Does this policy select the sparse backend?
     pub fn wants_sparse(&self) -> bool {
         self.sparsity >= self.sparse_threshold
+    }
+
+    /// The policy actually served for `layer`: layers whose input channel
+    /// count is below the tile size stay unpruned, mirroring the
+    /// artifacts' dense first layer.  This is the **single** definition
+    /// of the small-channel guard — `NetworkExecutor`, the tuner, and
+    /// the benches all route through it so a tuned profile always
+    /// describes exactly what serving builds.
+    pub fn for_layer(self, layer: &ConvLayer) -> Self {
+        if layer.in_ch < tile_size(self.m, layer.r) {
+            Self {
+                sparsity: 0.0,
+                ..self
+            }
+        } else {
+            self
+        }
     }
 
     /// Assert every knob is in range — called at prepare so a bad policy
@@ -120,6 +151,9 @@ impl ExecPolicy {
                 scale.is_finite() && scale > 0.0,
                 "ExecPolicy.act_scale must be a positive finite scale, got {scale}"
             );
+        }
+        if let Some(workers) = self.workers {
+            assert!(workers >= 1, "ExecPolicy.workers must be >= 1, got 0");
         }
     }
 }
@@ -164,7 +198,10 @@ impl ConvExecutor {
         policy.validate();
         assert_eq!(w.shape().len(), 4, "weights must be (K, C, r, r)");
         let r = w.shape()[3];
-        let plan = WinogradPlan::new(policy.m, r);
+        let mut plan = WinogradPlan::new(policy.m, r);
+        if let Some(workers) = policy.workers {
+            plan.set_threads(workers);
+        }
         // Pruning and quantization are always honored (quantization acts
         // on the *transform-domain* values — what the arrays see); the
         // threshold only selects whether the prepared weights execute on
@@ -318,39 +355,32 @@ impl NetworkExecutor {
     /// dense when its channel count is below the block size, mirroring
     /// the artifacts.
     pub fn synthetic(net: Network, policy: ExecPolicy, seed: u64) -> Self {
-        policy.validate();
-        let mut rng = Rng::new(seed);
-        let mut convs = Vec::with_capacity(net.convs.len());
-        for layer in &net.convs {
-            let fan_in = layer.in_ch * layer.r * layer.r;
-            let scale = (2.0 / fan_in as f64).sqrt() as f32;
-            let data: Vec<f32> = rng
-                .gaussian_vec(layer.out_ch * fan_in)
-                .iter()
-                .map(|v| v * scale)
-                .collect();
-            let w = Tensor::from_vec(&[layer.out_ch, layer.in_ch, layer.r, layer.r], data);
-            let lp = if layer.in_ch < tile_size(policy.m, layer.r) {
-                ExecPolicy {
-                    sparsity: 0.0,
-                    ..policy
-                }
-            } else {
-                policy
-            };
-            convs.push(ConvExecutor::prepare(&w, &lp));
-        }
-        let fcs = net
-            .fcs
+        let policies = vec![policy; net.convs.len()];
+        Self::synthetic_per_layer(net, &policies, seed)
+    }
+
+    /// Build with an **independent policy per conv layer** — the tuner's
+    /// entry point ([`crate::tuner::TuneProfile::layer_policies`] turns a
+    /// profile into this list).  Each layer may pick its own F(m, 3),
+    /// worker count, and dense/sparse backend crossover; layers whose
+    /// input channel count is below their tile size stay unpruned
+    /// (mirroring the artifacts), exactly as in the uniform constructor.
+    pub fn synthetic_per_layer(net: Network, policies: &[ExecPolicy], seed: u64) -> Self {
+        assert_eq!(
+            policies.len(),
+            net.convs.len(),
+            "need one policy per conv layer ({} layers, {} policies)",
+            net.convs.len(),
+            policies.len()
+        );
+        let (weights, fcs) = nn::synthetic_weights(&net, seed);
+        let convs = net
+            .convs
             .iter()
-            .map(|fc| {
-                let scale = (2.0 / fc.in_f as f64).sqrt() as f32;
-                let data: Vec<f32> = rng
-                    .gaussian_vec(fc.out_f * fc.in_f)
-                    .iter()
-                    .map(|v| v * scale)
-                    .collect();
-                Tensor::from_vec(&[fc.out_f, fc.in_f], data)
+            .zip(weights.iter().zip(policies))
+            .map(|(layer, (w, policy))| {
+                policy.validate();
+                ConvExecutor::prepare(w, &policy.for_layer(layer))
             })
             .collect();
         let mut exec = Self {
@@ -713,6 +743,71 @@ mod tests {
         let image = vec![0.0f32; 3 * 32 * 32];
         let refs = [image.as_slice(), image.as_slice(), image.as_slice()];
         let _ = exec.forward_batch(&refs);
+    }
+
+    #[test]
+    fn pinned_workers_bit_identical_and_validated() {
+        let mut rng = Rng::new(409);
+        let x = rand_tensor(&mut rng, &[8, 9, 9]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        let want =
+            ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.5).with_workers(1)).conv2d(&x);
+        for workers in [2usize, 3, 8] {
+            let got =
+                ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.5).with_workers(workers))
+                    .conv2d(&x);
+            assert_eq!(got, want, "workers={workers} must be bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ExecPolicy.workers")]
+    fn policy_rejects_zero_workers() {
+        let w = Tensor::zeros(&[4, 4, 3, 3]);
+        ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_workers(0));
+    }
+
+    #[test]
+    fn per_layer_policies_match_uniform_and_allow_mixing() {
+        let mut rng = Rng::new(410);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        // A repeated uniform policy through the per-layer constructor is
+        // the uniform constructor exactly.
+        let policy = ExecPolicy::sparse(2, 0.7);
+        let mut uniform = NetworkExecutor::synthetic(vgg_tiny(), policy, 5);
+        let mut repeated =
+            NetworkExecutor::synthetic_per_layer(vgg_tiny(), &[policy; 5], 5);
+        assert_eq!(uniform.forward(&image), repeated.forward(&image));
+        // Mixed per-layer m / workers / crossover runs end to end.
+        let policies = [
+            ExecPolicy::dense(2),
+            ExecPolicy::sparse(4, 0.7).with_workers(2),
+            ExecPolicy::sparse(2, 0.7),
+            ExecPolicy::sparse(6, 0.7).with_workers(1),
+            ExecPolicy {
+                sparse_threshold: 2.0, // force the pruned-dense backend
+                ..ExecPolicy::sparse(4, 0.7)
+            },
+        ];
+        let mut mixed = NetworkExecutor::synthetic_per_layer(vgg_tiny(), &policies, 5);
+        let backends = mixed.conv_backends();
+        assert_eq!(backends[0], "dense");
+        assert_eq!(backends[1], "sparse");
+        assert_eq!(backends[4], "dense", "threshold 2.0 must force dense");
+        let logits = mixed.forward(&image);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(logits, mixed.forward(&image), "deterministic");
+    }
+
+    #[test]
+    #[should_panic(expected = "one policy per conv layer")]
+    fn per_layer_policies_must_cover_every_layer() {
+        let _ = NetworkExecutor::synthetic_per_layer(
+            vgg_tiny(),
+            &[ExecPolicy::dense(2); 2],
+            5,
+        );
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! - **L3 (this crate)** — the paper's system: a cycle-level simulator of
 //!   the systolic-array accelerator (`systolic`, `scheduler`,
 //!   `accelerator`), its memory layout (`zmorton`) and sparse format
-//!   (`sparse`), the analytical model (`model`), the FPGA resource model
+//!   (`sparse`), the analytical model (`model`), the model-driven
+//!   per-layer autotuner (`tuner`), the FPGA resource model
 //!   (`resources`), and a serving coordinator (`coordinator`) that
 //!   executes the AOT artifacts through PJRT (`runtime`).
 
@@ -27,6 +28,7 @@ pub mod scheduler;
 pub mod sparse;
 pub mod systolic;
 pub mod tensor;
+pub mod tuner;
 pub mod util;
 pub mod winograd;
 pub mod zmorton;

@@ -84,6 +84,18 @@ impl LayerModel {
     pub fn dilation(&self) -> f64 {
         (self.l as f64 / self.m as f64).powi(2)
     }
+
+    /// Per-image data volume when `batch` images share one weight stream:
+    /// the transformed feature maps (D_wi + D_wo) are paid per image, the
+    /// transformed weights D_wk amortize across the fused batch.  This is
+    /// the model behind the tuner's fused-batch-granularity pick — the
+    /// marginal gain of a larger batch decays as 1/n, so the knee is
+    /// where the weight term stops dominating.
+    pub fn volume_per_image(&self, batch: usize) -> f64 {
+        assert!(batch >= 1, "batch must be at least 1");
+        let v = &self.volumes;
+        (v.d_wi + v.d_wo) as f64 + v.d_wk as f64 / batch as f64
+    }
 }
 
 /// Table 1 row: per-stage Winograd neuron/weight counts for a network.
@@ -271,6 +283,28 @@ mod tests {
             lm.arithmetic.s_a,
             2 * th * th * 8 * 8 * 4 * (nnz_a as u64 - 2)
         );
+    }
+
+    #[test]
+    fn batched_volume_amortizes_weights_only() {
+        let layer = ConvLayer {
+            name: "t",
+            stage: 1,
+            in_ch: 16,
+            out_ch: 16,
+            hw: 32,
+            r: 3,
+        };
+        let lm = LayerModel::new(&layer, 2);
+        let v1 = lm.volume_per_image(1);
+        let v4 = lm.volume_per_image(4);
+        let maps = (lm.volumes.d_wi + lm.volumes.d_wo) as f64;
+        // Exactly the weight term shrinks; the map term is batch-invariant.
+        assert!((v1 - (maps + lm.volumes.d_wk as f64)).abs() < 1e-9);
+        assert!((v4 - (maps + lm.volumes.d_wk as f64 / 4.0)).abs() < 1e-9);
+        assert!(v4 < v1);
+        // Diminishing returns: the 4 -> 8 gain is below the 1 -> 2 gain.
+        assert!(v1 - lm.volume_per_image(2) > lm.volume_per_image(4) - lm.volume_per_image(8));
     }
 
     #[test]

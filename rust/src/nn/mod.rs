@@ -214,6 +214,44 @@ pub fn fc_into(wm: &Tensor, n: usize, xs: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Deterministic synthetic weights for a whole network: He-scaled
+/// gaussians per layer, convs first then FCs, all drawn from **one**
+/// seeded stream — the stand-in for reference \[2\]'s pruned VGG weights.
+/// [`crate::executor::NetworkExecutor::synthetic`] and the tuner's
+/// calibration pass both draw from here, so the weights the tuner
+/// measures are exactly the weights serving runs.
+pub fn synthetic_weights(net: &Network, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = crate::util::Rng::new(seed);
+    let convs = net
+        .convs
+        .iter()
+        .map(|layer| {
+            let fan_in = layer.in_ch * layer.r * layer.r;
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            let data: Vec<f32> = rng
+                .gaussian_vec(layer.out_ch * fan_in)
+                .iter()
+                .map(|v| v * scale)
+                .collect();
+            Tensor::from_vec(&[layer.out_ch, layer.in_ch, layer.r, layer.r], data)
+        })
+        .collect();
+    let fcs = net
+        .fcs
+        .iter()
+        .map(|fc| {
+            let scale = (2.0 / fc.in_f as f64).sqrt() as f32;
+            let data: Vec<f32> = rng
+                .gaussian_vec(fc.out_f * fc.in_f)
+                .iter()
+                .map(|v| v * scale)
+                .collect();
+            Tensor::from_vec(&[fc.out_f, fc.in_f], data)
+        })
+        .collect();
+    (convs, fcs)
+}
+
 /// VGG16 with 224x224x3 input — the paper's workload.
 pub fn vgg16() -> Network {
     let convs = vec![
@@ -400,6 +438,30 @@ mod tests {
         relu_inplace(&mut a);
         assert_eq!(&batched[..16], a.data());
         assert_eq!(&batched[16..], &b_relu[..]);
+    }
+
+    #[test]
+    fn synthetic_weights_shapes_and_determinism() {
+        let net = vgg_tiny();
+        let (convs, fcs) = synthetic_weights(&net, 5);
+        assert_eq!(convs.len(), net.convs.len());
+        assert_eq!(fcs.len(), net.fcs.len());
+        for (w, layer) in convs.iter().zip(&net.convs) {
+            assert_eq!(
+                w.shape(),
+                &[layer.out_ch, layer.in_ch, layer.r, layer.r],
+                "{}",
+                layer.name
+            );
+        }
+        for (w, fc) in fcs.iter().zip(&net.fcs) {
+            assert_eq!(w.shape(), &[fc.out_f, fc.in_f], "{}", fc.name);
+        }
+        // Same seed, same stream; a different seed diverges.
+        let (again, _) = synthetic_weights(&net, 5);
+        assert_eq!(convs[0], again[0]);
+        let (other, _) = synthetic_weights(&net, 6);
+        assert_ne!(convs[0], other[0]);
     }
 
     #[test]

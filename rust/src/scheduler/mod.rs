@@ -55,6 +55,19 @@ impl AcceleratorConfig {
     pub fn with_m(self, m: usize) -> Self {
         Self { m, ..self }
     }
+
+    /// Re-target the cluster count (the tuner maps CPU worker candidates
+    /// onto it: matmul waves scale with `ceil(l^2 / clusters)`, so the
+    /// analytical plan predicts how far a layer can use extra workers).
+    /// The transform-array count keeps the paper's 2:1 ratio to clusters.
+    pub fn with_clusters(self, clusters: usize) -> Self {
+        assert!(clusters >= 1, "need at least one cluster");
+        Self {
+            clusters,
+            transform_arrays: 2 * clusters,
+            ..self
+        }
+    }
 }
 
 /// Cycle breakdown of one scheduled layer.
@@ -209,6 +222,20 @@ pub fn schedule_sparse_bank(
     schedule_sparse(layer, cfg, &dirs)
 }
 
+/// Schedule one layer on either backend: dense when `bank` is `None`,
+/// the block-sparse pipeline otherwise — the single entry point the
+/// tuner scores candidate (m, clusters, backend) configurations through.
+pub fn schedule_layer(
+    layer: &ConvLayer,
+    cfg: &AcceleratorConfig,
+    bank: Option<&SparseFilterBank>,
+) -> LayerPlan {
+    match bank {
+        Some(bank) => schedule_sparse_bank(layer, cfg, bank),
+        None => schedule_dense(layer, cfg),
+    }
+}
+
 /// Memory-access accounting for one layer (feeds the energy model with
 /// *measured-style* counts that mirror §5.1.3's assumptions: transformed
 /// maps live in local memory, weights stream from external memory).
@@ -327,6 +354,45 @@ mod tests {
         assert!(via_bank.occupancy < 0.6, "70% pruning must cut occupancy");
         let dense = schedule_dense(&layer, &cfg);
         assert!(via_bank.matmul_cycles < dense.matmul_cycles);
+    }
+
+    #[test]
+    fn schedule_layer_dispatches_both_backends() {
+        use crate::tensor::Tensor;
+        use crate::winograd::WinogradPlan;
+        let cfg = AcceleratorConfig::paper();
+        let layer = ConvLayer {
+            name: "t",
+            stage: 1,
+            in_ch: 16,
+            out_ch: 16,
+            hw: 8,
+            r: 3,
+        };
+        let mut rng = Rng::new(53);
+        let w = Tensor::from_vec(&[16, 16, 3, 3], rng.gaussian_vec(16 * 16 * 9));
+        let plan = WinogradPlan::new(cfg.m, cfg.r);
+        let bank = plan.transform_filters_sparse(&w, 0.7);
+        let dense = schedule_layer(&layer, &cfg, None);
+        assert_eq!(dense.matmul_cycles, schedule_dense(&layer, &cfg).matmul_cycles);
+        let sparse = schedule_layer(&layer, &cfg, Some(&bank));
+        assert_eq!(
+            sparse.matmul_cycles,
+            schedule_sparse_bank(&layer, &cfg, &bank).matmul_cycles
+        );
+        assert!(sparse.matmul_cycles < dense.matmul_cycles);
+    }
+
+    #[test]
+    fn with_clusters_retargets_and_keeps_ratio() {
+        let cfg = AcceleratorConfig::paper().with_clusters(4);
+        assert_eq!(cfg.clusters, 4);
+        assert_eq!(cfg.transform_arrays, 8);
+        // Fewer clusters -> more matmul waves.
+        let layer = conv5();
+        let p8 = schedule_dense(&layer, &AcceleratorConfig::paper());
+        let p4 = schedule_dense(&layer, &cfg);
+        assert!(p4.matmul_cycles > p8.matmul_cycles);
     }
 
     #[test]

@@ -304,17 +304,22 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_expand_block_still_correct() {
-        // The allocating form stays as a thin wrapper for external users;
-        // internal hot paths all use `expand_block_into`.
+    fn expand_block_into_reports_pruned_blocks() {
+        // The `_into` decompressor is the hot-path contract: present
+        // blocks fill the scratch and return true, pruned blocks return
+        // false without touching it (the deprecated allocating wrapper
+        // delegates here, so this covers both).
         let (mat, rows, cols) = dense_fixture();
         let bcoo = Bcoo::compress(&mat, rows, cols, 4);
-        let tile = bcoo.expand_block(0).unwrap();
         let mut scratch = vec![0.0f32; 16];
         assert!(bcoo.expand_block_into(0, &mut scratch));
-        assert_eq!(tile, scratch);
-        assert!(bcoo.expand_block(1).is_none());
+        let mut want = vec![0.0f32; 16];
+        want[0] = 1.0;
+        want[4 + 2] = 2.0;
+        assert_eq!(scratch, want);
+        scratch.fill(0.0);
+        assert!(!bcoo.expand_block_into(1, &mut scratch));
+        assert!(scratch.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -523,15 +523,16 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn get_into_matches_get_and_keeps_padding() {
+    fn get_into_copies_rows_and_keeps_padding() {
         let data: Vec<f32> = (0..6).map(|i| i as f32 + 1.0).collect();
         let bm = BlockMatrix::new(&data, 2, 3, 4);
         let mut scratch = vec![0.0f32; 16];
         bm.get_into(0, 0, &mut scratch);
-        // The deprecated allocating form stays as a wrapper; it must keep
-        // agreeing with the `_into` hot path.
-        assert_eq!(scratch, bm.get(0, 0));
+        // Rows land at block stride; the ragged margin stays zero.
+        let mut want = vec![0.0f32; 16];
+        want[..3].copy_from_slice(&[1.0, 2.0, 3.0]);
+        want[4..7].copy_from_slice(&[4.0, 5.0, 6.0]);
+        assert_eq!(scratch, want);
         // Out-of-range block leaves the zeroed scratch untouched.
         scratch.fill(0.0);
         bm.get_into(5, 5, &mut scratch);

@@ -1,0 +1,927 @@
+//! Analytical-model-driven per-layer autotuner.
+//!
+//! The paper's thesis is that throughput only materializes when compute
+//! and the memory subsystem are balanced, and §5.1's analytical model is
+//! the design reference for picking that balance.  This module closes the
+//! loop between that model and the code that serves traffic: at prepare
+//! time the [`Tuner`] scores, for **every conv layer independently**,
+//!
+//! - the Winograd output tile size m (the paper's central knob — larger m
+//!   cuts multiplies per output but dilates the weights),
+//! - the worker count (mapped onto the scheduler's cluster dimension:
+//!   matmul waves scale with `ceil(l^2 / clusters)`),
+//! - the dense-vs-sparse backend crossover (BCOO block-skipping vs
+//!   streaming the pruned-dense bank — pruning itself is always honored,
+//!   so the crossover never changes the numerics),
+//!
+//! using [`crate::model::LayerModel`] volumes/arithmetic and
+//! [`crate::scheduler::LayerPlan`] cycle predictions, optionally refined
+//! by a **bounded on-machine microbenchmark calibration pass** (the
+//! model ranks, the machine votes among the top few).  The result is a
+//! serializable [`TuneProfile`] (via [`crate::util::json`]) that
+//! [`crate::executor::NetworkExecutor::synthetic_per_layer`] and
+//! [`crate::coordinator::InferenceServer::start_native`] load, so serving
+//! launches with a tuned plan instead of one hard-wired configuration.
+//!
+//! The fused serving batch granularity is chosen from the model too:
+//! [`crate::model::LayerModel::volume_per_image`] amortizes the
+//! transformed-weight volume D_wk across the batch, and the tuner picks
+//! the knee where a larger batch stops paying.
+
+use crate::bench::time_it;
+use crate::executor::{ConvExecutor, ExecPolicy};
+use crate::memory::EnergyTable;
+use crate::model::LayerModel;
+use crate::nn::{self, same_pad, ConvLayer, Network};
+use crate::scheduler::{layer_energy, schedule_layer, AcceleratorConfig};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::Rng;
+use crate::winograd::{SparseFilterBank, WinogradPlan};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Search-space and calibration knobs.  The defaults cover the paper's
+/// tile sizes and the machine's useful worker counts; calibration is on
+/// and bounded (a handful of timed convolutions per layer).
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Candidate Winograd output tile sizes.
+    pub ms: Vec<usize>,
+    /// Candidate plan worker counts.
+    pub workers: Vec<usize>,
+    /// Candidate fused serving batch sizes (ascending).
+    pub batches: Vec<usize>,
+    /// Refine the model ranking with on-machine measurements.
+    pub calibrate: bool,
+    /// Timed iterations per measured candidate (after one warmup).
+    pub calib_iters: usize,
+    /// How many model-ranked candidates to measure per layer (the default
+    /// configuration is always measured on top of these).
+    pub calib_top: usize,
+    /// Hysteresis: deviate from the default configuration only when the
+    /// measured win is at least this fraction (guards against choosing a
+    /// noise blip that a re-measurement would not reproduce).
+    pub min_gain: f64,
+    /// Fused-batch knee: stop growing the batch once the next candidate
+    /// improves the model's per-image volume by less than this fraction.
+    pub batch_knee: f64,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        let default_threads = WinogradPlan::default_threads();
+        let mut workers = vec![1, (default_threads / 2).max(1), default_threads];
+        workers.sort_unstable();
+        workers.dedup();
+        Self {
+            ms: vec![2, 4, 6],
+            workers,
+            batches: vec![1, 2, 4, 8],
+            calibrate: true,
+            calib_iters: 7,
+            calib_top: 3,
+            min_gain: 0.05,
+            batch_knee: 0.03,
+        }
+    }
+}
+
+/// One layer's tuned configuration plus the evidence behind it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTune {
+    /// Conv layer name (must match the network's layer at this index).
+    pub name: String,
+    /// Chosen Winograd output tile size.
+    pub m: usize,
+    /// Chosen plan worker count.
+    pub workers: usize,
+    /// Chosen backend: BCOO block-skipping (true) vs pruned-dense stream.
+    pub sparse: bool,
+    /// Scheduler-predicted pipelined cycles of the chosen configuration.
+    pub predicted_cycles: u64,
+    /// Analytical energy of the chosen configuration (MAC units).
+    pub model_energy: f64,
+    /// Median measured seconds of the chosen configuration (calibration
+    /// runs only).
+    pub measured_s: Option<f64>,
+    /// Median measured seconds of the default configuration (calibration
+    /// runs only) — `default_s / measured_s` is the expected speedup.
+    pub default_s: Option<f64>,
+}
+
+/// A serializable per-layer tuning decision for one network: what
+/// `NetworkExecutor` / `InferenceServer::start_native` load so serving
+/// starts from a tuned plan.  Produced by [`Tuner::tune`], stored as JSON
+/// (see `TuneProfile::save` / `TuneProfile::load`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneProfile {
+    /// Network name the profile was tuned for (checked at load time).
+    pub network: String,
+    /// The default tile size the profile was tuned against.
+    pub base_m: usize,
+    /// The target block sparsity the banks were pruned at.
+    pub sparsity: f64,
+    /// The datapath bit width the profile was tuned under (`None` =
+    /// float) — calibration evidence from one datapath does not carry to
+    /// another, so [`TuneProfile::matches`] pins it.
+    pub bits: Option<u32>,
+    /// Model-chosen fused serving batch granularity.
+    pub batch: usize,
+    pub layers: Vec<LayerTune>,
+}
+
+impl TuneProfile {
+    /// Check the profile describes exactly this network's conv stack
+    /// **and** the base policy it was tuned against: the crossover picks
+    /// and measured evidence were produced at `base_m` / `sparsity`, so
+    /// applying them to a different pruning level would serve untested
+    /// configurations.
+    pub fn matches(&self, net: &Network, base: &ExecPolicy) -> Result<()> {
+        if self.network != net.name {
+            bail!(
+                "profile tuned for network {:?}, serving {:?}",
+                self.network,
+                net.name
+            );
+        }
+        if self.base_m != base.m {
+            bail!(
+                "profile tuned against default F({},3), policy runs F({},3)",
+                self.base_m,
+                base.m
+            );
+        }
+        if self.sparsity != base.sparsity {
+            bail!(
+                "profile tuned at block sparsity {}, policy asks for {}",
+                self.sparsity,
+                base.sparsity
+            );
+        }
+        if self.bits != base.bits {
+            bail!(
+                "profile tuned on the {} datapath, policy asks for {}",
+                datapath(self.bits),
+                datapath(base.bits)
+            );
+        }
+        if self.layers.len() != net.convs.len() {
+            bail!(
+                "profile has {} layers, network has {}",
+                self.layers.len(),
+                net.convs.len()
+            );
+        }
+        for (lt, conv) in self.layers.iter().zip(&net.convs) {
+            if lt.name != conv.name {
+                bail!(
+                    "profile layer {:?} does not match network layer {:?}",
+                    lt.name,
+                    conv.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the profile into one [`ExecPolicy`] per conv layer, carrying
+    /// the base policy's pruning / quantization knobs.  The backend
+    /// crossover rides the threshold: 0.0 forces the BCOO loop, 2.0 can
+    /// never be reached (sparsity < 1), forcing the pruned-dense stream —
+    /// either way the target sparsity is honored, so swapping backends
+    /// never changes the numerics, only the schedule.
+    pub fn layer_policies(&self, base: ExecPolicy) -> Vec<ExecPolicy> {
+        self.layers
+            .iter()
+            .map(|lt| ExecPolicy {
+                m: lt.m,
+                workers: Some(lt.workers),
+                sparse_threshold: if lt.sparse { 0.0 } else { 2.0 },
+                ..base
+            })
+            .collect()
+    }
+
+    /// Serialize to the profile's JSON form (schema 1).
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|lt| {
+                let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+                Json::Obj(BTreeMap::from([
+                    ("name".to_string(), Json::Str(lt.name.clone())),
+                    ("m".to_string(), Json::Num(lt.m as f64)),
+                    ("workers".to_string(), Json::Num(lt.workers as f64)),
+                    (
+                        "backend".to_string(),
+                        Json::Str(if lt.sparse { "sparse" } else { "dense" }.to_string()),
+                    ),
+                    (
+                        "predicted_cycles".to_string(),
+                        Json::Num(lt.predicted_cycles as f64),
+                    ),
+                    ("model_energy".to_string(), Json::Num(lt.model_energy)),
+                    ("measured_s".to_string(), opt(lt.measured_s)),
+                    ("default_s".to_string(), opt(lt.default_s)),
+                ]))
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("schema".to_string(), Json::Num(1.0)),
+            ("kind".to_string(), Json::Str("tune_profile".to_string())),
+            ("network".to_string(), Json::Str(self.network.clone())),
+            ("base_m".to_string(), Json::Num(self.base_m as f64)),
+            ("sparsity".to_string(), Json::Num(self.sparsity)),
+            (
+                "bits".to_string(),
+                self.bits.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+            ),
+            ("batch".to_string(), Json::Num(self.batch as f64)),
+            ("layers".to_string(), Json::Arr(layers)),
+        ]))
+    }
+
+    /// Parse a profile from its JSON form.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or_default();
+        if kind != "tune_profile" {
+            bail!("not a tune profile (kind = {kind:?})");
+        }
+        let num = |j: &Json, key: &str| -> Result<f64> {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("profile field {key:?} must be a number"))
+        };
+        // The integer knobs reject fractional or negative values outright
+        // — a hand-edited "m": 3.5 must fail at load, not silently
+        // truncate into a configuration nobody wrote.
+        let uint = |j: &Json, key: &str| -> Result<u64> {
+            let x = num(j, key)?;
+            if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0) {
+                bail!("profile field {key:?} must be a non-negative integer, got {x}");
+            }
+            Ok(x as u64)
+        };
+        let layers = v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("profile field \"layers\" must be an array"))?
+            .iter()
+            .map(|row| {
+                let backend = row
+                    .req("backend")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("layer backend must be a string"))?;
+                let sparse = match backend {
+                    "sparse" => true,
+                    "dense" => false,
+                    other => bail!("unknown backend {other:?}"),
+                };
+                let opt = |key: &str| -> Result<Option<f64>> {
+                    match row.get(key) {
+                        None | Some(Json::Null) => Ok(None),
+                        Some(j) => Ok(Some(j.as_f64().ok_or_else(|| {
+                            anyhow!("layer field {key:?} must be a number or null")
+                        })?)),
+                    }
+                };
+                let name = row
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("layer name must be a string"))?
+                    .to_string();
+                // Range-check the knobs here so a hand-edited profile
+                // fails at load with a clear message instead of deep
+                // inside plan construction on the server worker thread.
+                let m = uint(row, "m")? as usize;
+                if !(1..=MAX_PROFILE_M).contains(&m) {
+                    bail!("layer {name:?}: m = {m} outside supported 1..={MAX_PROFILE_M}");
+                }
+                let workers = uint(row, "workers")? as usize;
+                if workers == 0 {
+                    bail!("layer {name:?}: workers must be >= 1");
+                }
+                Ok(LayerTune {
+                    name,
+                    m,
+                    workers,
+                    sparse,
+                    predicted_cycles: uint(row, "predicted_cycles")?,
+                    model_energy: num(row, "model_energy")?,
+                    measured_s: opt("measured_s")?,
+                    default_s: opt("default_s")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let bits = match v.get("bits") {
+            None | Some(Json::Null) => None,
+            Some(_) => {
+                let b = uint(v, "bits")? as u32;
+                if !(2..=32).contains(&b) {
+                    bail!("profile bits = {b} outside supported 2..=32");
+                }
+                Some(b)
+            }
+        };
+        let batch = uint(v, "batch")? as usize;
+        if !(1..=MAX_PROFILE_BATCH).contains(&batch) {
+            bail!("profile batch = {batch} outside supported 1..={MAX_PROFILE_BATCH}");
+        }
+        Ok(Self {
+            network: v
+                .req("network")?
+                .as_str()
+                .ok_or_else(|| anyhow!("profile network must be a string"))?
+                .to_string(),
+            base_m: uint(v, "base_m")? as usize,
+            sparsity: num(v, "sparsity")?,
+            bits,
+            batch,
+            layers,
+        })
+    }
+
+    /// Write the profile as JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing tune profile {}", path.display()))
+    }
+
+    /// Load a profile written by [`TuneProfile::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune profile {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing tune profile {}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Largest tile size a loaded profile may name: F(m, 3) needs
+/// `m + 1` interpolation points and the canonical table tops out well
+/// past the search space, but anything beyond 8 was never a candidate.
+const MAX_PROFILE_M: usize = 8;
+
+/// Largest fused batch a loaded profile may ask for — the serving
+/// workspace is sized proportionally to it at startup, so an unchecked
+/// value would turn a corrupt profile into a giant allocation.
+const MAX_PROFILE_BATCH: usize = 64;
+
+fn datapath(bits: Option<u32>) -> String {
+    match bits {
+        Some(b) => format!("{b}-bit quantized"),
+        None => "float".to_string(),
+    }
+}
+
+/// One scored configuration of one layer.
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    m: usize,
+    workers: usize,
+    sparse: bool,
+    predicted_cycles: u64,
+    model_energy: f64,
+}
+
+impl Candidate {
+    fn same_config(&self, other: &Candidate) -> bool {
+        self.m == other.m && self.workers == other.workers && self.sparse == other.sparse
+    }
+}
+
+/// Model rank: fewer predicted cycles, then lower analytical energy, then
+/// the smaller tile (less weight dilation), then fewer workers.
+fn rank(a: &Candidate, b: &Candidate) -> Ordering {
+    a.predicted_cycles
+        .cmp(&b.predicted_cycles)
+        .then(
+            a.model_energy
+                .partial_cmp(&b.model_energy)
+                .unwrap_or(Ordering::Equal),
+        )
+        .then(a.m.cmp(&b.m))
+        .then(a.workers.cmp(&b.workers))
+}
+
+/// The per-layer autotuner.  Scores every (m, workers, backend) candidate
+/// with the analytical model, optionally calibrates the top candidates on
+/// this machine, and emits a [`TuneProfile`].
+pub struct Tuner {
+    net: Network,
+    base: ExecPolicy,
+    seed: u64,
+    opts: TuneOptions,
+}
+
+impl Tuner {
+    /// `base` is the untuned serving policy (its m is the comparison
+    /// default; its pruning / quantization knobs are preserved in every
+    /// candidate).  `seed` must be the serving weight seed so the tuner
+    /// scores and measures exactly the banks serving will run.
+    pub fn new(net: Network, base: ExecPolicy, seed: u64) -> Self {
+        base.validate();
+        Self {
+            net,
+            base,
+            seed,
+            opts: TuneOptions::default(),
+        }
+    }
+
+    pub fn with_options(mut self, opts: TuneOptions) -> Self {
+        assert!(!opts.ms.is_empty(), "need at least one candidate m");
+        assert!(!opts.workers.is_empty(), "need at least one worker count");
+        assert!(!opts.batches.is_empty(), "need at least one batch size");
+        assert!(opts.calib_iters >= 1, "calibration needs >= 1 iteration");
+        self.opts = opts;
+        self
+    }
+
+    /// Run the search and return the profile.
+    pub fn tune(&self) -> TuneProfile {
+        let (weights, _) = nn::synthetic_weights(&self.net, self.seed);
+        let table = EnergyTable::default();
+        let default_workers = self
+            .base
+            .workers
+            .unwrap_or_else(WinogradPlan::default_threads);
+        let mut layers = Vec::with_capacity(self.net.convs.len());
+        for (layer, w) in self.net.convs.iter().zip(&weights) {
+            let mut cands = self.candidates(layer, w, &table);
+            // The default configuration competes on equal footing (and is
+            // what hysteresis protects).  It is usually already in the
+            // candidate grid; only score it (bank transform included)
+            // when the options exclude it.
+            let default_sparse = self.default_backend_sparse(layer, self.base.m);
+            let default = cands.iter().copied().find(|c| {
+                c.m == self.base.m
+                    && c.workers == default_workers
+                    && c.sparse == default_sparse
+            });
+            let default = match default {
+                Some(d) => d,
+                None => {
+                    let d = self.score(
+                        layer,
+                        w,
+                        self.base.m,
+                        default_workers,
+                        default_sparse,
+                        &table,
+                    );
+                    cands.push(d);
+                    d
+                }
+            };
+            cands.sort_by(rank);
+            let lt = if self.opts.calibrate {
+                self.calibrate_layer(layer, w, &cands, &default)
+            } else {
+                let best = cands[0];
+                layer_tune(layer, &best, None, None)
+            };
+            layers.push(lt);
+        }
+        let batch = self.choose_batch(&layers);
+        TuneProfile {
+            network: self.net.name.to_string(),
+            base_m: self.base.m,
+            sparsity: self.base.sparsity,
+            bits: self.base.bits,
+            batch,
+            layers,
+        }
+    }
+
+    /// Would the *untuned* executor run this layer sparse at tile size m?
+    /// Routed through [`ExecPolicy::for_layer`] — the executor's own
+    /// small-channel guard — so the default the tuner competes against is
+    /// exactly the backend serving would select.
+    fn default_backend_sparse(&self, layer: &ConvLayer, m: usize) -> bool {
+        ExecPolicy { m, ..self.base }.for_layer(layer).wants_sparse()
+    }
+
+    /// Every candidate (m, workers, backend) of one layer, scored by the
+    /// analytical model on the layer's **actual pruned banks**.  The bank
+    /// depends only on m, so it is transformed once per tile size and
+    /// shared across the worker-count candidates.
+    fn candidates(&self, layer: &ConvLayer, w: &Tensor, table: &EnergyTable) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for &m in &self.opts.ms {
+            // Pruning eligibility comes from the executor's own guard.
+            let eligible = ExecPolicy { m, ..self.base }.for_layer(layer).sparsity > 0.0;
+            let bank = eligible.then(|| {
+                WinogradPlan::new(m, layer.r).transform_filters_sparse(w, self.base.sparsity)
+            });
+            for &workers in &self.opts.workers {
+                out.push(self.score_config(layer, m, workers, None, table));
+                if let Some(bank) = &bank {
+                    out.push(self.score_config(layer, m, workers, Some(bank), table));
+                }
+            }
+        }
+        out
+    }
+
+    /// Score one configuration against the pruning level of `self.base`:
+    /// `None` bank = the pruned-dense stream, `Some` = the BCOO loop.
+    fn score(
+        &self,
+        layer: &ConvLayer,
+        w: &Tensor,
+        m: usize,
+        workers: usize,
+        sparse: bool,
+        table: &EnergyTable,
+    ) -> Candidate {
+        let bank = sparse.then(|| {
+            WinogradPlan::new(m, layer.r).transform_filters_sparse(w, self.base.sparsity)
+        });
+        self.score_config(layer, m, workers, bank.as_ref(), table)
+    }
+
+    /// Score one configuration on an already-built bank: scheduler cycles
+    /// (worker count mapped to the cluster dimension) + the §5.1 energy
+    /// model.
+    fn score_config(
+        &self,
+        layer: &ConvLayer,
+        m: usize,
+        workers: usize,
+        bank: Option<&SparseFilterBank>,
+        table: &EnergyTable,
+    ) -> Candidate {
+        let cfg = AcceleratorConfig {
+            m,
+            r: layer.r,
+            ..AcceleratorConfig::paper().with_clusters(workers)
+        };
+        let plan = schedule_layer(layer, &cfg, bank);
+        Candidate {
+            m,
+            workers,
+            sparse: bank.is_some(),
+            predicted_cycles: plan.pipelined_cycles(),
+            model_energy: layer_energy(layer, &cfg, bank.map(|b| b.block_sparsity()), table),
+        }
+    }
+
+    /// The bounded microbenchmark pass: measure the model's top candidates
+    /// plus the default, pick the measured best, and keep the default
+    /// unless the win clears the hysteresis margin.
+    fn calibrate_layer(
+        &self,
+        layer: &ConvLayer,
+        w: &Tensor,
+        ranked: &[Candidate],
+        default: &Candidate,
+    ) -> LayerTune {
+        let mut to_measure: Vec<Candidate> =
+            ranked.iter().take(self.opts.calib_top).copied().collect();
+        if !to_measure.iter().any(|c| c.same_config(default)) {
+            to_measure.push(*default);
+        }
+        // The calibration input is the layer's serving shape: SAME-padded
+        // activations, deterministic per layer.
+        let p = same_pad(layer.r);
+        let (hp, wp) = (layer.hw + 2 * p, layer.hw + 2 * p);
+        let mut rng =
+            Rng::new(self.seed ^ ((layer.in_ch as u64) << 32) ^ layer.out_ch as u64);
+        let x = Tensor::from_vec(
+            &[layer.in_ch, hp, wp],
+            rng.gaussian_vec(layer.in_ch * hp * wp),
+        );
+        let mut best: Option<(f64, Candidate)> = None;
+        let mut default_s = f64::INFINITY;
+        for cand in &to_measure {
+            let policy = self.candidate_policy(layer, cand);
+            let mut ex = ConvExecutor::prepare(w, &policy);
+            let stats = time_it(1, self.opts.calib_iters, || {
+                std::hint::black_box(ex.conv2d(&x));
+            });
+            let t = stats.median;
+            if cand.same_config(default) {
+                default_s = t;
+            }
+            if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+                best = Some((t, *cand));
+            }
+        }
+        let (best_t, best_c) = best.expect("at least one measured candidate");
+        let (chosen, chosen_t) =
+            if !best_c.same_config(default) && best_t < default_s * (1.0 - self.opts.min_gain) {
+                (best_c, best_t)
+            } else {
+                (*default, default_s)
+            };
+        layer_tune(layer, &chosen, Some(chosen_t), Some(default_s))
+    }
+
+    /// The policy a candidate runs under — exactly what serving would
+    /// build for this layer ([`ExecPolicy::for_layer`] applies the
+    /// small-channel pruning guard).
+    fn candidate_policy(&self, layer: &ConvLayer, cand: &Candidate) -> ExecPolicy {
+        ExecPolicy {
+            m: cand.m,
+            workers: Some(cand.workers),
+            sparse_threshold: if cand.sparse { 0.0 } else { 2.0 },
+            ..self.base
+        }
+        .for_layer(layer)
+    }
+
+    /// Model-driven fused batch granularity: per-image transformed volume
+    /// with D_wk amortized over the batch, summed at each layer's chosen
+    /// m; grow the batch until the marginal gain falls under the knee.
+    fn choose_batch(&self, layers: &[LayerTune]) -> usize {
+        let vol = |n: usize| -> f64 {
+            self.net
+                .convs
+                .iter()
+                .zip(layers)
+                .map(|(layer, lt)| LayerModel::new(layer, lt.m).volume_per_image(n))
+                .sum()
+        };
+        let mut batches = self.opts.batches.clone();
+        batches.sort_unstable();
+        batches.dedup();
+        let mut chosen = batches[0];
+        for &next in &batches[1..] {
+            let gain = 1.0 - vol(next) / vol(chosen);
+            if gain < self.opts.batch_knee {
+                break;
+            }
+            chosen = next;
+        }
+        chosen
+    }
+}
+
+fn layer_tune(
+    layer: &ConvLayer,
+    c: &Candidate,
+    measured_s: Option<f64>,
+    default_s: Option<f64>,
+) -> LayerTune {
+    LayerTune {
+        name: layer.name.to_string(),
+        m: c.m,
+        workers: c.workers,
+        sparse: c.sparse,
+        predicted_cycles: c.predicted_cycles,
+        model_energy: c.model_energy,
+        measured_s,
+        default_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::NetworkExecutor;
+    use crate::nn::{vgg_tiny, FcLayer};
+
+    fn model_only() -> TuneOptions {
+        TuneOptions {
+            calibrate: false,
+            ..TuneOptions::default()
+        }
+    }
+
+    #[test]
+    fn model_only_tune_covers_every_layer() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune();
+        assert_eq!(profile.network, "vgg_tiny");
+        assert_eq!(profile.base_m, 2);
+        assert_eq!(profile.layers.len(), 5);
+        for (lt, conv) in profile.layers.iter().zip(&vgg_tiny().convs) {
+            assert_eq!(lt.name, conv.name);
+            assert!([2, 4, 6].contains(&lt.m), "{lt:?}");
+            assert!(lt.workers >= 1);
+            assert!(lt.predicted_cycles > 0);
+            assert!(lt.model_energy > 0.0);
+            assert_eq!(lt.measured_s, None, "model-only run must not measure");
+        }
+        // conv0 has 3 input channels: below every tile size, never sparse.
+        assert!(!profile.layers[0].sparse);
+        // At 70% block sparsity the scheduler strongly favors the BCOO
+        // loop for the wide layers.
+        assert!(
+            profile.layers[1..].iter().any(|lt| lt.sparse),
+            "{profile:?}"
+        );
+        assert!([1, 2, 4, 8].contains(&profile.batch));
+        profile.matches(&vgg_tiny(), &base).expect("self-match");
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune();
+        let text = profile.to_json().to_string();
+        let back = TuneProfile::from_json(&Json::parse(&text).expect("parse")).expect("decode");
+        assert_eq!(profile, back);
+    }
+
+    #[test]
+    fn profile_save_load_roundtrip() {
+        let base = ExecPolicy::sparse(2, 0.6);
+        let profile = Tuner::new(vgg_tiny(), base, 3)
+            .with_options(model_only())
+            .tune();
+        let path = std::env::temp_dir().join(format!(
+            "swcnn_tune_profile_{}.json",
+            std::process::id()
+        ));
+        profile.save(&path).expect("save");
+        let back = TuneProfile::load(&path).expect("load");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(profile, back);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_kind_and_backend() {
+        let bad = Json::parse(r#"{"kind": "bench"}"#).unwrap();
+        assert!(TuneProfile::from_json(&bad).is_err());
+        let bad_backend = Json::parse(
+            r#"{"kind": "tune_profile", "network": "n", "base_m": 2,
+                "sparsity": 0.5, "batch": 4,
+                "layers": [{"name": "c0", "m": 2, "workers": 1,
+                            "backend": "quantum", "predicted_cycles": 1,
+                            "model_energy": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(TuneProfile::from_json(&bad_backend).is_err());
+    }
+
+    #[test]
+    fn profile_matches_rejects_mismatched_network_or_policy() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let mut profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune();
+        profile.matches(&vgg_tiny(), &base).expect("match");
+        // The profile's evidence was produced at base_m / sparsity: a
+        // different pruning level or default tile must be refused.
+        assert!(
+            profile.matches(&vgg_tiny(), &ExecPolicy::sparse(2, 0.3)).is_err(),
+            "sparsity mismatch"
+        );
+        assert!(
+            profile.matches(&vgg_tiny(), &ExecPolicy::sparse(4, 0.7)).is_err(),
+            "base m mismatch"
+        );
+        assert!(
+            profile
+                .matches(&vgg_tiny(), &ExecPolicy::sparse(2, 0.7).with_bits(8))
+                .is_err(),
+            "datapath mismatch: float evidence must not serve quantized"
+        );
+        profile.layers.pop();
+        assert!(profile.matches(&vgg_tiny(), &base).is_err(), "layer count");
+        let mut renamed = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune();
+        renamed.layers[0].name = "other".into();
+        assert!(renamed.matches(&vgg_tiny(), &base).is_err(), "layer name");
+        let mut wrong_net = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune();
+        wrong_net.network = "vgg16".into();
+        assert!(wrong_net.matches(&vgg_tiny(), &base).is_err(), "network name");
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_range_knobs() {
+        let template = |m: i64, workers: i64, batch: &str, bits: &str| {
+            format!(
+                r#"{{"kind": "tune_profile", "network": "n", "base_m": 2,
+                     "sparsity": 0.5, "batch": {batch}, "bits": {bits},
+                     "layers": [{{"name": "c0", "m": {m}, "workers": {workers},
+                                 "backend": "dense", "predicted_cycles": 1,
+                                 "model_energy": 1.0}}]}}"#
+            )
+        };
+        let reject = [
+            template(0, 1, "4", "null"),
+            template(-1, 1, "4", "null"),
+            template(99, 1, "4", "null"),
+            template(2, 0, "4", "null"),
+            template(2, -3, "4", "null"),
+            // An absurd fused batch must fail at load, not as a giant
+            // workspace allocation in the server worker.
+            template(2, 1, "1e12", "null"),
+            template(2, 1, "0", "null"),
+            template(2, 1, "4", "64"),   // bits outside 2..=32
+            template(2, 1, "4.5", "null"), // fractional knob must not truncate
+        ];
+        for text in &reject {
+            let v = Json::parse(text).expect("test json");
+            assert!(TuneProfile::from_json(&v).is_err(), "{text}");
+        }
+        let ok = Json::parse(&template(6, 4, "8", "16")).expect("test json");
+        let profile = TuneProfile::from_json(&ok).expect("in-range profile");
+        assert_eq!(profile.bits, Some(16));
+        assert_eq!(profile.batch, 8);
+    }
+
+    #[test]
+    fn layer_policies_plug_into_the_executor() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 5)
+            .with_options(model_only())
+            .tune();
+        let policies = profile.layer_policies(base);
+        assert_eq!(policies.len(), 5);
+        for (p, lt) in policies.iter().zip(&profile.layers) {
+            assert_eq!(p.m, lt.m);
+            assert_eq!(p.workers, Some(lt.workers));
+            assert_eq!(p.sparsity, base.sparsity, "pruning knob carried over");
+        }
+        let mut tuned = NetworkExecutor::synthetic_per_layer(vgg_tiny(), &policies, 5);
+        // The executor's backend selection must realize the profile's
+        // crossover choice exactly.
+        for (backend, lt) in tuned.conv_backends().iter().zip(&profile.layers) {
+            let want = if lt.sparse { "sparse" } else { "dense" };
+            assert_eq!(*backend, want, "{}", lt.name);
+        }
+        let mut rng = Rng::new(8);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let logits = tuned.forward(&image);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn calibration_is_bounded_and_never_worse_than_default() {
+        // One small layer keeps the measured pass cheap; the contract is
+        // that the chosen config is the default unless the measured win
+        // cleared the hysteresis margin.
+        let net = Network {
+            name: "tiny1",
+            input_hw: 8,
+            input_ch: 8,
+            convs: vec![ConvLayer {
+                name: "c0",
+                stage: 1,
+                in_ch: 8,
+                out_ch: 8,
+                hw: 8,
+                r: 3,
+            }],
+            fcs: vec![FcLayer {
+                name: "f0",
+                in_f: 8 * 4 * 4,
+                out_f: 4,
+            }],
+        };
+        let opts = TuneOptions {
+            calib_iters: 2,
+            calib_top: 2,
+            ..TuneOptions::default()
+        };
+        let profile = Tuner::new(net, ExecPolicy::sparse(2, 0.5), 11)
+            .with_options(opts)
+            .tune();
+        let lt = &profile.layers[0];
+        let measured = lt.measured_s.expect("calibrated run records timing");
+        let default = lt.default_s.expect("default is always measured");
+        assert!(measured > 0.0 && default > 0.0);
+        assert!(
+            measured <= default,
+            "chosen {measured}s must not be slower than default {default}s"
+        );
+    }
+
+    #[test]
+    fn batch_choice_respects_knee_and_candidates() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        // A huge knee forces batch 1; a zero knee takes the largest.
+        let p1 = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(TuneOptions {
+                batch_knee: 0.9,
+                ..model_only()
+            })
+            .tune();
+        assert_eq!(p1.batch, 1);
+        let p8 = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(TuneOptions {
+                batch_knee: 0.0,
+                ..model_only()
+            })
+            .tune();
+        assert_eq!(p8.batch, 8);
+    }
+}

@@ -325,10 +325,7 @@ impl WinogradPlan {
         let a = transpose(&at, m, l);
         let gt = transpose(&g, l, r);
         let b = transpose(&bt, l, l);
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8);
+        let threads = Self::default_threads();
         Self {
             consts: PlanConsts {
                 m,
@@ -349,8 +346,26 @@ impl WinogradPlan {
     /// Override the worker count (1 = single-threaded; results are
     /// bit-identical for any value).
     pub fn with_threads(mut self, n: usize) -> Self {
-        self.threads = n.max(1);
+        self.set_threads(n);
         self
+    }
+
+    /// The worker count every new plan starts with (machine parallelism,
+    /// capped at 8) — also the baseline configuration the tuner measures
+    /// its candidates against.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+
+    /// In-place worker-count override — the hook the tuner profile uses
+    /// to apply a per-layer worker choice to an executor's plan.  Worker
+    /// counts beyond what a launch can use are clamped per stage inside
+    /// the engines, so any value >= 1 is safe and bit-identical.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
     }
 
     pub fn m(&self) -> usize {

@@ -188,6 +188,78 @@ fn prop_sparse_plan_threaded_bit_identical() {
 }
 
 #[test]
+fn prop_tuner_eligible_configs_match_reference() {
+    // Every configuration the tuner may emit — (m, workers, backend) over
+    // the full candidate grid — must produce the same convolution as the
+    // seed per-tile oracle within tolerance.  A tuned profile must never
+    // be able to change what a layer computes, only how fast.
+    use swcnn::executor::{ConvExecutor, ExecPolicy};
+    let mut rng = Rng::new(1018);
+    let x = rand_tensor(&mut rng, &[8, 11, 13]);
+    let wt = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+    for &m in &[2usize, 4, 6] {
+        let want = winograd::winograd_conv2d_reference(&x, &wt, m);
+        for &workers in &[1usize, 2, 5] {
+            for &sparse in &[false, true] {
+                // Backend selection rides the threshold exactly as
+                // TuneProfile::layer_policies emits it; sparsity 0.0
+                // keeps the weights unpruned so both backends hold the
+                // same values and only the schedule differs.
+                let policy = ExecPolicy {
+                    sparse_threshold: if sparse { 0.0 } else { 2.0 },
+                    ..ExecPolicy::dense(m).with_workers(workers)
+                };
+                let mut ex = ConvExecutor::prepare(&wt, &policy);
+                assert_eq!(ex.backend_name(), if sparse { "sparse" } else { "dense" });
+                let got = ex.conv2d(&x);
+                assert!(
+                    got.allclose(&want, 2e-3, 2e-3),
+                    "F({m},3) workers={workers} sparse={sparse}: diff {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tuner_crossover_bit_identical_at_zero_sparsity() {
+    // The dense/sparse crossover the tuner flips must be numerically
+    // invisible: at block sparsity 0.0 the two backends are bit-identical
+    // for every candidate m and worker count (the accumulation order per
+    // output element is the same ascending-channel walk).
+    use swcnn::executor::{ConvExecutor, ExecPolicy};
+    let mut rng = Rng::new(1019);
+    for case in 0..6 {
+        let c = 4 * (1 + rng.next_below(2));
+        let k = 4 * (1 + rng.next_below(3));
+        let h = 7 + rng.next_below(10);
+        let w = 7 + rng.next_below(10);
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        for &m in &[2usize, 4, 6] {
+            for &workers in &[1usize, 3] {
+                let base = ExecPolicy::dense(m).with_workers(workers);
+                let dense = ExecPolicy {
+                    sparse_threshold: 2.0,
+                    ..base
+                };
+                let sparse = ExecPolicy {
+                    sparse_threshold: 0.0,
+                    ..base
+                };
+                let yd = ConvExecutor::prepare(&wt, &dense).conv2d(&x);
+                let ys = ConvExecutor::prepare(&wt, &sparse).conv2d(&x);
+                assert_eq!(
+                    yd, ys,
+                    "case {case}: F({m},3) C={c} K={k} {h}x{w} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_forward_batch_bit_identical_to_sequential() {
     // The serving tentpole property: for random small networks and every
     // backend family (dense, sparse, quant-sparse), `forward_batch` must

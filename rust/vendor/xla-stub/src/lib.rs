@@ -1,0 +1,216 @@
+//! Offline stand-in for the `xla` crate (PJRT C API bindings).
+//!
+//! The offline crate set cannot ship the real `xla` crate (it links the
+//! PJRT runtime), but the `pjrt` feature gate still has to **compile** so
+//! CI catches gate breakage before a real deployment hits it.  This shim
+//! mirrors exactly the surface `swcnn::runtime` uses — `PjRtClient`,
+//! `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`, `ArrayShape`,
+//! `HloModuleProto`, `XlaComputation` — and fails at the earliest runtime
+//! entry point ([`PjRtClient::cpu`]) with a clear message.  Swapping in
+//! the real crate is a one-line change in `rust/Cargo.toml` (point the
+//! `xla` path dependency at a vendored copy of the real bindings).
+//!
+//! Nothing here ever executes: every constructor chain begins at
+//! `PjRtClient::cpu()`, which returns [`Error`].  The other types exist
+//! so the typed call sites in `runtime::exec` type-check unchanged.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `?`-compatibility: implements
+/// [`std::error::Error`], so `anyhow` call sites convert transparently.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} unavailable — this build links the offline xla stub; vendor \
+         the real xla crate and point rust/Cargo.toml's `xla` path at it"
+    )))
+}
+
+/// Array shape of a literal (dims only; element type is always f32 in
+/// this project's artifacts).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host tensor handle.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types [`Literal::to_vec`] can extract.  The real crate is
+/// generic over its element trait; the stub only needs f32.
+pub trait NativeType: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl Literal {
+    /// A rank-1 literal over host data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Copy out as a flat host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal.  Stub literals are never tuples
+    /// (nothing executes), so this is unreachable in practice.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("tuple literals")
+    }
+}
+
+/// Parsed HLO module (text form).  The stub validates the file exists so
+/// manifest errors still surface at the right call site.
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(Self { _text: text }),
+            Err(e) => Err(Error(format!("reading {}: {e}", path.display()))),
+        }
+    }
+}
+
+/// A computation handle built from an HLO proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device buffers")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.  Generic over the argument type
+    /// like the real crate (`execute::<Literal>`); the stub never runs.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// PJRT client.  The stub fails here — the earliest entry point — so
+/// every downstream path reports the same actionable message.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu()")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().expect_err("stub must not construct");
+        let msg = err.to_string();
+        assert!(msg.contains("xla stub"), "{msg}");
+        assert!(msg.contains("vendor the real xla crate"), "{msg}");
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).expect("reshape");
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 3]).is_err(), "element-count mismatch");
+    }
+
+    #[test]
+    fn hlo_text_loads_and_missing_file_errors() {
+        let path = std::env::temp_dir().join(format!("xla_stub_{}.hlo", std::process::id()));
+        std::fs::write(&path, "HloModule m").unwrap();
+        assert!(HloModuleProto::from_text_file(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+    }
+}
