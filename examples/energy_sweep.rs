@@ -6,7 +6,7 @@
 use swcnn::bench::print_table;
 use swcnn::memory::EnergyTable;
 use swcnn::model::energy_vs_m;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 
 fn main() {
     let table = EnergyTable::default();
@@ -22,7 +22,7 @@ fn main() {
         &rows,
     );
 
-    let net = vgg16();
+    let net = vgg16_network();
     let curve = energy_vs_m(&net, &[2, 3, 4, 6], &table);
     let e0 = curve[0].1;
     let rows: Vec<Vec<String>> = curve

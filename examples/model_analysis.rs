@@ -5,10 +5,10 @@
 
 use swcnn::bench::print_table;
 use swcnn::model::{table1, LayerModel};
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 
 fn main() {
-    let net = vgg16();
+    let net = vgg16_network();
 
     // Table 1 (m = 2).
     let rows: Vec<Vec<String>> = table1(&net, 2)
@@ -32,7 +32,7 @@ fn main() {
     let rows: Vec<Vec<String>> = [2usize, 3, 4, 6]
         .iter()
         .map(|&m| {
-            let lm = LayerModel::new(&conv5, m);
+            let lm = LayerModel::new(&conv5.shape(), m);
             vec![
                 m.to_string(),
                 format!("{}", lm.l),

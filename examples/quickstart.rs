@@ -1,64 +1,107 @@
-//! Quickstart: load the AOT-compiled Winograd conv layer, run it through
-//! PJRT, and check the numerics against the in-crate direct convolution.
+//! Quickstart for the Graph & Session API: **build** a typed graph,
+//! **compile** it into a `Session` (weights bound from a `WeightSource`,
+//! one `ExecPolicy` per conv), and **serve** it through the native
+//! `InferenceServer` — no artifacts or PJRT feature required.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!
+//! Also exercises the fallible API edges (bad requests are typed
+//! `GraphError`s, not panics) and the `save_weights`/`load_weights`
+//! roundtrip that ships a model to disk and back bit-identically.
 
 use anyhow::{bail, Result};
-use swcnn::runtime::{read_f32_bin, Runtime};
-use swcnn::tensor::Tensor;
+use swcnn::coordinator::{InferenceServer, NativeServerConfig};
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::{load_weights, save_weights, GraphBuilder, Synthetic};
+use swcnn::nn::vgg_tiny;
 use swcnn::util::Rng;
-use swcnn::winograd::direct_conv2d;
 
 fn main() -> Result<()> {
-    let mut rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
-
-    let model = rt.load("quickstart")?;
-    let meta = &model.spec.meta;
-    let (c, k, h, w) = (
-        meta.req("C")?.as_usize().unwrap(),
-        meta.req("K")?.as_usize().unwrap(),
-        meta.req("H")?.as_usize().unwrap(),
-        meta.req("W")?.as_usize().unwrap(),
+    // -- build ------------------------------------------------------------
+    // The stock VGG-Tiny graph, plus a custom non-VGG graph with an odd
+    // spatial size (9x9 pools to 5x5 in ceil mode) to show the IR is not
+    // tied to the paper's ladder.
+    let vgg = vgg_tiny();
+    println!(
+        "vgg_tiny graph: {} nodes, input {} -> output {}",
+        vgg.nodes().len(),
+        vgg.input_shape(),
+        vgg.output_shape()
     );
-    println!("quickstart layer: C={c} K={k} {h}x{w} (m=2, r=3, SAME + ReLU)");
+    let custom = GraphBuilder::new("oddnet", (3, 9, 9))
+        .pad(1)
+        .conv2d("c0", 8, 3)
+        .relu()
+        .maxpool2() // 9x9 -> 5x5, ceil mode
+        .pad(1)
+        .conv2d("c1", 8, 3)
+        .relu()
+        .flatten()
+        .fc("head", 4)
+        .build()?;
+    println!(
+        "custom graph:   {} nodes, input {} -> output {}",
+        custom.nodes().len(),
+        custom.input_shape(),
+        custom.output_shape()
+    );
 
-    // Random input image.
-    let mut rng = Rng::new(1234);
-    let x = rng.gaussian_vec(c * h * w);
+    // -- compile ----------------------------------------------------------
+    // Synthetic He-scaled weights; 70% block pruning on the wide layers.
+    let policy = ExecPolicy::sparse(2, 0.7);
+    let mut sess = Session::uniform(vgg.clone(), &mut Synthetic::new(7), policy)?;
+    println!("compiled backends: {:?}", sess.conv_backends());
 
-    // Run on the accelerator runtime.
-    let out = model.run(&[x.clone()])?;
-    let y = Tensor::from_vec(&[k, h, w], out[0].clone());
+    let mut rng = Rng::new(42);
+    let image = rng.gaussian_vec(sess.input_elements());
+    let logits = sess.forward(&image)?;
+    println!("direct forward:  {} logits, first = {:.4}", logits.len(), logits[0]);
 
-    // Oracle: direct convolution with the spatial weights that shipped
-    // alongside the artifact.
-    let g_meta = meta.req("g_spatial")?;
-    let g_file = g_meta.req("file")?.as_str().unwrap();
-    let g = read_f32_bin(
-        &std::path::Path::new("artifacts").join(g_file),
-        k * c * 3 * 3,
-    )?;
-    let g = Tensor::from_vec(&[k, c, 3, 3], g);
-    // SAME padding: pad the input by 1 on each side.
-    let mut xp = Tensor::zeros(&[c, h + 2, w + 2]);
-    for cc in 0..c {
-        for i in 0..h {
-            for j in 0..w {
-                xp.set3(cc, i + 1, j + 1, x[(cc * h + i) * w + j]);
-            }
-        }
+    // Misuse is a typed error, not a panic.
+    let err = sess.forward(&[0.0; 7]).unwrap_err();
+    println!("bad request ->   {err}");
+
+    // The custom graph runs through exactly the same machinery.
+    let mut odd = Session::uniform(custom.clone(), &mut Synthetic::new(3), policy)?;
+    let y = odd.forward(&rng.gaussian_vec(odd.input_elements()))?;
+    println!("custom forward:  {} outputs (odd 9x9 input)", y.len());
+
+    // -- persist ----------------------------------------------------------
+    // Ship the weights to disk and reload them: the file-backed source
+    // must reproduce the synthetic session bit for bit.
+    let path = std::env::temp_dir().join(format!("swcnn_quickstart_{}.bin", std::process::id()));
+    save_weights(&path, &vgg, &mut Synthetic::new(7))?;
+    let mut from_file = Session::uniform(vgg.clone(), &mut load_weights(&path)?, policy)?;
+    let reloaded = from_file.forward(&image)?;
+    let _ = std::fs::remove_file(&path);
+    if reloaded != logits {
+        bail!("weights did not roundtrip bit-identically");
     }
-    let mut want = direct_conv2d(&xp, &g);
-    for v in want.data_mut() {
-        *v = v.max(0.0); // ReLU
-    }
+    println!("weights roundtripped through {} bit-identically", path.display());
 
-    let diff = y.max_abs_diff(&want);
-    println!("max |pjrt - direct| = {diff:.2e}");
-    if diff > 1e-3 {
-        bail!("numerics mismatch: {diff}");
+    // -- serve ------------------------------------------------------------
+    let server = InferenceServer::start_native(NativeServerConfig::new(
+        Session::uniform(vgg, &mut Synthetic::new(7), policy)?,
+    ))?;
+    let solo = server.infer(image.clone())?;
+    if solo != logits {
+        bail!("served logits diverged from the direct session");
     }
-    println!("quickstart OK — Winograd pipeline matches direct convolution");
+    let pending: Vec<_> = (0..16)
+        .map(|_| server.infer_async(rng.gaussian_vec(server.input_elements())))
+        .collect();
+    for rx in pending {
+        let y = rx.recv().expect("worker alive")?;
+        assert_eq!(y.len(), server.output_elements());
+    }
+    println!(
+        "served 17 requests; metrics: {}",
+        server
+            .metrics
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .summary()
+    );
+    println!("quickstart OK — build -> compile -> serve through one typed API");
     Ok(())
 }

@@ -11,7 +11,7 @@ use swcnn::accelerator::{simulate_dense, simulate_sparse};
 use swcnn::bench::{print_table, time_it};
 use swcnn::executor::{ConvExecutor, ExecPolicy};
 use swcnn::memory::EnergyTable;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 use swcnn::runtime::Runtime;
 use swcnn::scheduler::AcceleratorConfig;
 use swcnn::tensor::Tensor;
@@ -20,7 +20,7 @@ use swcnn::util::Rng;
 fn main() -> Result<()> {
     let cfg = AcceleratorConfig::paper();
     let table = EnergyTable::default();
-    let net = vgg16();
+    let net = vgg16_network();
 
     // CPU fast path first: one VGG-ish layer (C=64, K=64, 56², F(4,3))
     // through the executor pipeline — the same pruned banks the
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
     let (c, k, hw) = (64usize, 64usize, 56usize);
     let x = Tensor::from_vec(&[c, hw, hw], rng.gaussian_vec(c * hw * hw));
     let w = Tensor::from_vec(&[k, c, 3, 3], rng.gaussian_vec(k * c * 9));
-    let mut dense_ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4));
+    let mut dense_ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4)).expect("prepare");
     let s_dense = time_it(1, 3, || {
         std::hint::black_box(dense_ex.conv2d(&x));
     });
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         "1.00x".to_string(),
     ]];
     for p in [0.5, 0.7, 0.9] {
-        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(4, p));
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(4, p)).expect("prepare");
         let s = time_it(1, 3, || {
             std::hint::black_box(ex.conv2d(&x));
         });

@@ -3,21 +3,25 @@
 //!   cargo run --release --example tune_profile
 //!
 //! Runs the analytical-model-driven autotuner (with its bounded
-//! on-machine calibration pass) over every conv layer, prints the chosen
-//! (m, workers, backend) per layer next to the model's predictions, and
-//! writes `TUNE_vgg_tiny.json` — the file
-//! `InferenceServer::start_native` loads via
-//! `NativeServerConfig::with_profile(TuneProfile::load(...)?)`.
+//! on-machine calibration pass) over every conv node of the vgg_tiny
+//! graph, prints the chosen (m, workers, backend) per node next to the
+//! model's predictions, and writes `TUNE_vgg_tiny.json`.  Serving loads
+//! it back with `TuneProfile::load`, expands it through
+//! `profile.policies_for(&graph, &base)` into the per-conv policy list a
+//! `Session` compiles, and passes the profile to
+//! `NativeServerConfig::with_profile` so the batcher adopts its fused
+//! batch.
 
 use swcnn::bench::print_table;
-use swcnn::executor::ExecPolicy;
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::Synthetic;
 use swcnn::nn::vgg_tiny;
 use swcnn::tuner::Tuner;
 use swcnn::util::eng;
 
 fn main() {
     let base = ExecPolicy::sparse(2, 0.7);
-    let profile = Tuner::new(vgg_tiny(), base, 7).tune();
+    let profile = Tuner::new(vgg_tiny(), base, 7).tune().expect("tune");
     let rows: Vec<Vec<String>> = profile
         .layers
         .iter()
@@ -31,7 +35,7 @@ fn main() {
                 _ => "model-only".to_string(),
             };
             vec![
-                lt.name.clone(),
+                format!("#{} {}", lt.node, lt.name),
                 format!("F({},3)", lt.m),
                 lt.workers.to_string(),
                 if lt.sparse { "sparse" } else { "dense" }.to_string(),
@@ -45,10 +49,22 @@ fn main() {
             "tuned profile: {} (base F({},3) p={}, fused batch {})",
             profile.network, profile.base_m, profile.sparsity, profile.batch
         ),
-        &["layer", "tile", "workers", "backend", "model", "measured"],
+        &["node", "tile", "workers", "backend", "model", "measured"],
         &rows,
     );
     let path = "TUNE_vgg_tiny.json";
     profile.save(path).expect("write profile");
     println!("\nwrote {path}");
+
+    // Prove the profile round-trips into a servable session: expand it
+    // into per-conv policies and compile.
+    let policies = profile
+        .policies_for(&vgg_tiny(), &base)
+        .expect("profile matches its own graph");
+    let mut sess = Session::build(vgg_tiny(), &mut Synthetic::new(7), &policies)
+        .expect("tuned session compiles");
+    let logits = sess
+        .forward(&vec![0.1; sess.input_elements()])
+        .expect("tuned forward");
+    println!("tuned session serves: {} logits", logits.len());
 }

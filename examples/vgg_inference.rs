@@ -9,7 +9,7 @@ use std::time::Instant;
 use swcnn::accelerator::simulate_dense;
 use swcnn::coordinator::{InferenceServer, ServerConfig};
 use swcnn::memory::EnergyTable;
-use swcnn::nn::vgg_tiny;
+use swcnn::nn::vgg_tiny_network;
 use swcnn::scheduler::AcceleratorConfig;
 use swcnn::util::Rng;
 
@@ -65,7 +65,7 @@ fn main() -> Result<()> {
     // Side-by-side: what the simulated FPGA accelerator would do on the
     // same network (its clock, not the host CPU's).
     let rep = simulate_dense(
-        &vgg_tiny(),
+        &vgg_tiny_network(),
         &AcceleratorConfig::paper(),
         &EnergyTable::default(),
     );

@@ -11,7 +11,7 @@
 
 use swcnn::bench::print_table;
 use swcnn::memory::EnergyTable;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 use swcnn::scheduler::{
     schedule_dense, schedule_direct, schedule_sparse, schedule_waves,
     AcceleratorConfig, WavePolicy,
@@ -26,7 +26,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut rng = Rng::new(2024);
     let cfg = AcceleratorConfig::paper();
-    let conv5 = vgg16().convs[10];
+    let conv5 = vgg16_network().convs[10].shape();
 
     // A1: Z-Morton locality.  Replay the unrolled Algorithm-1 schedule's
     // operand-block streams through a small circular FIFO (capacity 8

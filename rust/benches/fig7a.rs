@@ -7,10 +7,10 @@
 use swcnn::bench::{print_table, time_it};
 use swcnn::memory::EnergyTable;
 use swcnn::model::energy_vs_m;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 
 fn main() {
-    let net = vgg16();
+    let net = vgg16_network();
     let table = EnergyTable::default();
     let stats = time_it(3, 20, || {
         std::hint::black_box(energy_vs_m(&net, &[2, 3, 4, 6], &table));

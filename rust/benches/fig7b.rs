@@ -7,11 +7,11 @@
 use swcnn::accelerator::{latency_sweep, simulate_dense};
 use swcnn::bench::{print_table, time_it};
 use swcnn::memory::EnergyTable;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 use swcnn::scheduler::AcceleratorConfig;
 
 fn main() {
-    let net = vgg16();
+    let net = vgg16_network();
     let cfg = AcceleratorConfig::paper();
     let table = EnergyTable::default();
 

@@ -15,7 +15,8 @@
 //! decompressed pruned weights).
 
 use swcnn::bench::{print_table, time_it};
-use swcnn::executor::{ConvExecutor, ExecPolicy, NetworkExecutor};
+use swcnn::executor::{ConvExecutor, ExecPolicy, Session};
+use swcnn::nn::graph::{Synthetic, WeightSource};
 use swcnn::nn::{self, vgg_tiny};
 use swcnn::sparse::{synthetic_sparse_matrix, Bcoo};
 use swcnn::systolic::cluster::{BlockMatrix, Cluster};
@@ -371,31 +372,42 @@ fn main() {
     // layers where it deviates must hold the measured win.
     // ------------------------------------------------------------------
     {
-        let net = vgg_tiny();
         let base = ExecPolicy::sparse(2, 0.7);
         let seed = 7u64;
-        let profile = Tuner::new(net.clone(), base, seed).tune();
-        let (weights, _) = nn::synthetic_weights(&net, seed);
+        let profile = Tuner::new(vgg_tiny(), base, seed).tune().expect("tune");
+        // The conv weights exactly as a seeded session binds them: the
+        // canonical request order is convs-first, so pulling the conv
+        // specs in order reproduces the serving stream.
+        let mut src = Synthetic::new(seed);
+        let weights: Vec<Tensor> = vgg_tiny()
+            .weight_requests()
+            .iter()
+            .filter(|spec| spec.shape.len() == 4)
+            .map(|spec| src.tensor(spec).expect("synthetic weights"))
+            .collect();
+        let convs = vgg_tiny().conv_infos();
         let default_workers = WinogradPlan::default_threads();
-        let tuned_policies = profile.layer_policies(base);
+        let tuned_policies = profile
+            .policies_for(&vgg_tiny(), &base)
+            .expect("fresh profile matches its own graph");
         let mut layer_rows: Vec<(String, String, f64, f64)> = Vec::new();
         let mut any_deviation = false;
-        for (i, layer) in net.convs.iter().enumerate() {
+        for (i, info) in convs.iter().enumerate() {
             let lt = &profile.layers[i];
-            // ExecPolicy::for_layer is the executor's own small-channel
+            // ExecPolicy::for_conv is the executor's own small-channel
             // guard, so the measured configs are exactly what serving
             // builds.
-            let default_policy = base.for_layer(layer);
+            let default_policy = base.for_conv(&info.shape);
             let default_sparse = default_policy.wants_sparse();
-            let tuned_policy = tuned_policies[i].for_layer(layer);
-            let p = nn::same_pad(layer.r);
-            let (hp, wp) = (layer.hw + 2 * p, layer.hw + 2 * p);
+            let tuned_policy = tuned_policies[i].for_conv(&info.shape);
+            let p = nn::same_pad(info.shape.r);
+            let (hp, wp) = (info.shape.hw + 2 * p, info.shape.hw + 2 * p);
             let xin = Tensor::from_vec(
-                &[layer.in_ch, hp, wp],
-                Rng::new(seed + i as u64).gaussian_vec(layer.in_ch * hp * wp),
+                &[info.shape.in_ch, hp, wp],
+                Rng::new(seed + i as u64).gaussian_vec(info.shape.in_ch * hp * wp),
             );
             let measure = |policy: &ExecPolicy| {
-                let mut ex = ConvExecutor::prepare(&weights[i], policy);
+                let mut ex = ConvExecutor::prepare(&weights[i], policy).expect("prepare");
                 time_it(1, 7, || {
                     std::hint::black_box(ex.conv2d(&xin));
                 })
@@ -414,7 +426,7 @@ fn main() {
                 if lt.sparse { "sparse" } else { "dense" }
             );
             rows.push(vec![
-                format!("tuner {}: {choice}", layer.name),
+                format!("tuner {}: {choice}", info.name),
                 format!(
                     "{:.3} ms vs {:.3} ms default",
                     s_tuned.median * 1e3,
@@ -423,7 +435,7 @@ fn main() {
                 format!("{ratio:.2}x vs default"),
             ]);
             layer_rows.push((
-                layer.name.to_string(),
+                info.name.clone(),
                 choice,
                 s_default.median,
                 s_tuned.median,
@@ -435,20 +447,23 @@ fn main() {
             assert!(
                 ratio >= 0.90,
                 "{}: tuned config {:.3} ms regressed vs default {:.3} ms",
-                layer.name,
+                info.name,
                 s_tuned.median * 1e3,
                 s_default.median * 1e3
             );
         }
         // Whole-network forward: the tuned profile vs the uniform default.
-        let mut default_net = NetworkExecutor::synthetic(net.clone(), base, seed);
-        let mut tuned_net = NetworkExecutor::synthetic_per_layer(net, &tuned_policies, seed);
+        let mut default_net =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(seed), base).expect("session");
+        let mut tuned_net =
+            Session::build(vgg_tiny(), &mut Synthetic::new(seed), &tuned_policies)
+                .expect("tuned session");
         let image = Rng::new(seed).gaussian_vec(default_net.input_elements());
         let s_dnet = time_it(1, 7, || {
-            std::hint::black_box(default_net.forward(&image));
+            std::hint::black_box(default_net.forward(&image).expect("forward"));
         });
         let s_tnet = time_it(1, 7, || {
-            std::hint::black_box(tuned_net.forward(&image));
+            std::hint::black_box(tuned_net.forward(&image).expect("forward"));
         });
         let net_speedup = s_dnet.median / s_tnet.median;
         rows.push(vec![

@@ -16,7 +16,8 @@
 //!   batch-1.
 
 use swcnn::bench::{print_table, time_it};
-use swcnn::executor::{ExecPolicy, NetworkExecutor};
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::Synthetic;
 use swcnn::nn::vgg_tiny;
 use swcnn::util::json::Json;
 use swcnn::util::Rng;
@@ -26,8 +27,13 @@ const SPARSITY: f64 = 0.7;
 
 fn main() {
     let max_batch = *BATCHES.iter().max().unwrap();
-    let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, SPARSITY), 7)
-        .with_max_batch(max_batch);
+    let mut exec = Session::uniform(
+        vgg_tiny(),
+        &mut Synthetic::new(7),
+        ExecPolicy::sparse(2, SPARSITY),
+    )
+    .expect("vgg_tiny compiles")
+    .with_max_batch(max_batch);
     let mut rng = Rng::new(42);
     let images: Vec<Vec<f32>> = (0..max_batch)
         .map(|_| rng.gaussian_vec(exec.input_elements()))
@@ -37,9 +43,12 @@ fn main() {
     // Correctness gate: a fast-but-wrong batched engine must fail the
     // bench.  Every batch size must reproduce the sequential per-image
     // logits bit for bit.
-    let seq: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im)).collect();
+    let seq: Vec<Vec<f32>> = images
+        .iter()
+        .map(|im| exec.forward(im).expect("forward"))
+        .collect();
     for &n in &BATCHES {
-        let got = exec.forward_batch(&refs[..n]);
+        let got = exec.forward_batch(&refs[..n]).expect("forward_batch");
         assert_eq!(
             got,
             seq[..n],
@@ -52,7 +61,7 @@ fn main() {
     let mut per_batch_tput = Vec::new();
     for &n in &BATCHES {
         let s = time_it(1, 8, || {
-            std::hint::black_box(exec.forward_batch(&refs[..n]));
+            std::hint::black_box(exec.forward_batch(&refs[..n]).expect("forward_batch"));
         });
         let images_per_s = n as f64 / s.mean;
         per_batch_tput.push((n, images_per_s));

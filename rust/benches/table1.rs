@@ -5,7 +5,7 @@
 
 use swcnn::bench::{print_table, time_it};
 use swcnn::model::table1;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 
 // Paper Table 1 rows: (label, neurons, weights).
 const PAPER: &[(&str, u64, u64)] = &[
@@ -18,7 +18,7 @@ const PAPER: &[(&str, u64, u64)] = &[
 ];
 
 fn main() {
-    let net = vgg16();
+    let net = vgg16_network();
     let stats = time_it(3, 20, || {
         std::hint::black_box(table1(&net, 2));
     });

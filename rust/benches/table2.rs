@@ -10,14 +10,14 @@
 use swcnn::accelerator::{simulate_dense, simulate_sparse, JOULES_PER_UNIT};
 use swcnn::bench::{print_table, time_it};
 use swcnn::memory::EnergyTable;
-use swcnn::nn::vgg16;
+use swcnn::nn::vgg16_network;
 use swcnn::resources::{paper_configuration, XCVU095};
 use swcnn::scheduler::AcceleratorConfig;
 
 fn main() {
     let cfg = AcceleratorConfig::paper();
     let table = EnergyTable::default();
-    let net = vgg16();
+    let net = vgg16_network();
 
     let t_dense = time_it(1, 5, || {
         std::hint::black_box(simulate_dense(&net, &cfg, &table));

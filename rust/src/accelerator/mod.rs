@@ -70,9 +70,9 @@ pub fn simulate_dense(
 ) -> NetworkReport {
     let mut layers = Vec::with_capacity(net.convs.len());
     for conv in &net.convs {
-        let plan = schedule_dense(conv, cfg);
+        let plan = schedule_dense(&conv.shape(), cfg);
         let cycles = plan.pipelined_cycles();
-        let acc = layer_accesses(conv, cfg, None);
+        let acc = layer_accesses(&conv.shape(), cfg, None);
         layers.push(LayerReport {
             name: conv.name,
             plan,
@@ -119,12 +119,12 @@ pub fn simulate_sparse(
                 .map(|m| Bcoo::compress(m, cp, kp, l))
                 .collect();
             let dirs: Vec<Option<&Bcoo>> = bcoos.iter().map(Some).collect();
-            schedule_sparse(conv, cfg, &dirs)
+            schedule_sparse(&conv.shape(), cfg, &dirs)
         } else {
-            schedule_dense(conv, cfg)
+            schedule_dense(&conv.shape(), cfg)
         };
         let cycles = plan.pipelined_cycles();
-        let acc = layer_accesses(conv, cfg, block_ok.then_some(sparsity));
+        let acc = layer_accesses(&conv.shape(), cfg, block_ok.then_some(sparsity));
         layers.push(LayerReport {
             name: conv.name,
             plan,
@@ -212,16 +212,16 @@ pub fn latency_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::{vgg16, vgg_tiny};
+    use crate::nn::{vgg16_network, vgg_tiny_network};
 
     #[test]
     fn dense_vgg16_report_sane() {
         let cfg = AcceleratorConfig::paper();
-        let rep = simulate_dense(&vgg16(), &cfg, &EnergyTable::default());
+        let rep = simulate_dense(&vgg16_network(), &cfg, &EnergyTable::default());
         assert_eq!(rep.layers.len(), 13);
         assert!(rep.total_seconds > 0.0);
         // Effective ops must equal the network's direct-conv ops.
-        assert_eq!(rep.total_effective_ops, vgg16().total_ops() - 2 * vgg16().fcs.iter().map(|f| f.macs()).sum::<u64>());
+        assert_eq!(rep.total_effective_ops, vgg16_network().total_ops() - 2 * vgg16_network().fcs.iter().map(|f| f.macs()).sum::<u64>());
         // Throughput in a plausible band for 512 DSP MACs @150 MHz with
         // Winograd gain: hundreds of Gops/s effective.
         let gops = rep.gops();
@@ -233,8 +233,8 @@ mod tests {
         // Paper: "for the best case, we achieve almost 5x speedup" at 90%.
         let cfg = AcceleratorConfig::paper();
         let t = EnergyTable::default();
-        let dense = simulate_dense(&vgg16(), &cfg, &t);
-        let sparse = simulate_sparse(&vgg16(), &cfg, &t, 0.9, 1);
+        let dense = simulate_dense(&vgg16_network(), &cfg, &t);
+        let sparse = simulate_sparse(&vgg16_network(), &cfg, &t, 0.9, 1);
         let speedup = dense.total_seconds / sparse.total_seconds;
         assert!(
             (3.0..6.5).contains(&speedup),
@@ -246,7 +246,7 @@ mod tests {
     fn sparsity_monotone() {
         let cfg = AcceleratorConfig::paper();
         let t = EnergyTable::default();
-        let net = vgg_tiny();
+        let net = vgg_tiny_network();
         let mut last = f64::INFINITY;
         for p in [0.6, 0.7, 0.8, 0.9] {
             let rep = simulate_sparse(&net, &cfg, &t, p, 2);
@@ -262,7 +262,7 @@ mod tests {
     fn latency_sweep_shape() {
         let cfg = AcceleratorConfig::paper();
         let rows = latency_sweep(
-            &vgg_tiny(),
+            &vgg_tiny_network(),
             &cfg,
             &EnergyTable::default(),
             &[2, 4],
@@ -286,8 +286,8 @@ mod tests {
     fn fc_layers_extend_the_report() {
         let cfg = AcceleratorConfig::paper();
         let t = EnergyTable::default();
-        let conv_only = simulate_dense(&vgg16(), &cfg, &t);
-        let with_fc = simulate_dense_with_fc(&vgg16(), &cfg, &t, 1);
+        let conv_only = simulate_dense(&vgg16_network(), &cfg, &t);
+        let with_fc = simulate_dense_with_fc(&vgg16_network(), &cfg, &t, 1);
         assert_eq!(with_fc.layers.len(), conv_only.layers.len() + 3);
         assert!(with_fc.total_cycles > conv_only.total_cycles);
         // FC6 (25088x4096) dominates the FC tail but conv still dominates
@@ -295,7 +295,7 @@ mod tests {
         let fc_cycles: u64 = with_fc.layers[13..].iter().map(|l| l.cycles).sum();
         assert!(fc_cycles < conv_only.total_cycles);
         // Batching amortizes FC weight streaming.
-        let b8 = simulate_dense_with_fc(&vgg16(), &cfg, &t, 8);
+        let b8 = simulate_dense_with_fc(&vgg16_network(), &cfg, &t, 8);
         let fc8: u64 = b8.layers[13..].iter().map(|l| l.cycles).sum();
         assert!(fc8 < 8 * fc_cycles);
     }
@@ -303,7 +303,7 @@ mod tests {
     #[test]
     fn energy_and_power_positive() {
         let cfg = AcceleratorConfig::paper();
-        let rep = simulate_dense(&vgg16(), &cfg, &EnergyTable::default());
+        let rep = simulate_dense(&vgg16_network(), &cfg, &EnergyTable::default());
         assert!(rep.total_energy_units > 0.0);
         let w = rep.power_w(JOULES_PER_UNIT);
         assert!((0.5..50.0).contains(&w), "power {w} W implausible");

@@ -14,6 +14,12 @@
 //! regression); new metrics in the fresh run are reported and pass —
 //! refresh the baselines to start gating them.
 //!
+//! File-level mismatches are **warnings, not failures**: a BENCH file
+//! present on only one side (a new bench landing with its baseline in
+//! the same PR before the CI artifact list catches up, or a fresh run
+//! that skipped a suite) is reported loudly and skipped, so the gate
+//! never blocks the PR that introduces a new bench.
+//!
 //! Every compared row is printed as a delta table so the job log shows
 //! the whole perf trajectory, not just the verdict.
 
@@ -141,30 +147,99 @@ fn compare(
     (rows, failures)
 }
 
-fn run(baseline_dir: &str, current_dir: &str, threshold: f64) -> Result<usize, String> {
-    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)
-        .map_err(|e| format!("reading baseline dir {baseline_dir}: {e}"))?
+/// `BENCH_*.json`-style file names present in a directory.
+fn bench_files(dir: &str) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
         .filter_map(|entry| {
             let name = entry.ok()?.file_name().to_string_lossy().to_string();
-            name.ends_with(".json").then_some(name)
+            (name.ends_with(".json") && name.starts_with("BENCH")).then_some(name)
         })
         .collect();
     names.sort();
-    if names.is_empty() {
-        return Err(format!("no *.json baselines in {baseline_dir}"));
+    names
+}
+
+/// File-level reconciliation: rows + failure count for one bench file
+/// that may be missing on either side.  One-sided files warn and pass.
+fn compare_files(
+    file: &str,
+    baseline: Option<&BTreeMap<String, (Direction, f64)>>,
+    current: Option<&BTreeMap<String, (Direction, f64)>>,
+    threshold: f64,
+) -> (Vec<Vec<String>>, usize) {
+    match (baseline, current) {
+        (Some(base), Some(cur)) => compare(file, base, cur, threshold),
+        (Some(base), None) => (
+            base.keys()
+                .map(|metric| {
+                    vec![
+                        file.to_string(),
+                        metric.clone(),
+                        format!("{:.3}", base[metric].1),
+                        "missing".to_string(),
+                        "-".to_string(),
+                        "WARN (file not in fresh run)".to_string(),
+                    ]
+                })
+                .collect(),
+            0,
+        ),
+        (None, Some(cur)) => (
+            cur.keys()
+                .map(|metric| {
+                    vec![
+                        file.to_string(),
+                        metric.clone(),
+                        "-".to_string(),
+                        format!("{:.3}", cur[metric].1),
+                        "-".to_string(),
+                        "WARN (no baseline; commit one to gate)".to_string(),
+                    ]
+                })
+                .collect(),
+            0,
+        ),
+        (None, None) => (Vec::new(), 0),
     }
+}
+
+fn run(baseline_dir: &str, current_dir: &str, threshold: f64) -> Result<usize, String> {
+    let base_names = bench_files(baseline_dir);
+    let cur_names = bench_files(current_dir);
+    if base_names.is_empty() {
+        return Err(format!("no BENCH*.json baselines in {baseline_dir}"));
+    }
+    // Per-file one-sidedness is tolerated below, but a fresh run that
+    // produced NOTHING is a broken pipeline (crashed benches, wrong
+    // artifact path), not a new-bench transition — downgrading every
+    // row to a warning would turn the whole gate off silently.
+    if cur_names.is_empty() {
+        return Err(format!(
+            "no BENCH*.json files in {current_dir} — the bench run produced nothing to gate"
+        ));
+    }
+    let mut names: Vec<String> = base_names.iter().chain(&cur_names).cloned().collect();
+    names.sort();
+    names.dedup();
     let mut all_rows = Vec::new();
     let mut failures = 0;
     for name in &names {
-        let load = |dir: &str| -> Result<Json, String> {
+        let load = |dir: &str, present: bool| -> Result<Option<Json>, String> {
+            if !present {
+                return Ok(None);
+            }
             let path = format!("{dir}/{name}");
             let text = std::fs::read_to_string(&path)
                 .map_err(|e| format!("reading {path}: {e}"))?;
-            Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+            Json::parse(&text)
+                .map(Some)
+                .map_err(|e| format!("parsing {path}: {e}"))
         };
-        let base = collect_metrics(&load(baseline_dir)?);
-        let cur = collect_metrics(&load(current_dir)?);
-        let (rows, fails) = compare(name, &base, &cur, threshold);
+        let base = load(baseline_dir, base_names.contains(name))?.map(|d| collect_metrics(&d));
+        let cur = load(current_dir, cur_names.contains(name))?.map(|d| collect_metrics(&d));
+        let (rows, fails) = compare_files(name, base.as_ref(), cur.as_ref(), threshold);
         all_rows.extend(rows);
         failures += fails;
     }
@@ -280,5 +355,25 @@ mod tests {
         let (rows, fails) = compare("f", &base, &cur, 0.25);
         assert_eq!(fails, 1, "removed gate must fail");
         assert!(rows.iter().any(|r| r[5].contains("new")), "{rows:?}");
+    }
+
+    #[test]
+    fn one_sided_files_warn_and_pass() {
+        // A bench file present on only one side (a new bench landing with
+        // its baseline in the same PR, or a skipped suite) must warn, not
+        // fail the gate.
+        let base = doc(r#"{"x_speedup": 2.0}"#);
+        let (rows, fails) = compare_files("f", Some(&base), None, 0.25);
+        assert_eq!(fails, 0, "missing fresh run warns");
+        assert!(rows.iter().all(|r| r[5].contains("WARN")), "{rows:?}");
+        let cur = doc(r#"{"x_speedup": 2.0}"#);
+        let (rows, fails) = compare_files("f", None, Some(&cur), 0.25);
+        assert_eq!(fails, 0, "missing baseline warns");
+        assert!(rows.iter().all(|r| r[5].contains("no baseline")), "{rows:?}");
+        // Both present still gates.
+        let bad = doc(r#"{"x_speedup": 1.0}"#);
+        let (_, fails) = compare_files("f", Some(&base), Some(&bad), 0.25);
+        assert_eq!(fails, 1);
+        assert_eq!(compare_files("f", None, None, 0.25).1, 0);
     }
 }

@@ -6,6 +6,7 @@
 //! batching move that keeps the "DSP array" (here: the XLA executable)
 //! full, mirroring how the paper's 3-D extension keeps all 8 clusters fed.
 
+use crate::nn::graph::GraphError;
 use std::time::Duration;
 
 /// Batching policy configuration.
@@ -24,18 +25,34 @@ pub struct BatchPlan {
 }
 
 impl Batcher {
-    pub fn new(mut sizes: Vec<usize>, window: Duration) -> Self {
-        assert!(sizes.contains(&1), "batch size 1 is required as fallback");
+    /// Build a policy over an explicit executable batch-size set.  The
+    /// set must contain 1 (the fallback for a lone request) and no zero
+    /// entries — violations are a typed [`GraphError`] so a server built
+    /// from a bad artifact manifest refuses to start instead of dying.
+    pub fn new(mut sizes: Vec<usize>, window: Duration) -> Result<Self, GraphError> {
+        if sizes.contains(&0) {
+            return Err(GraphError::Config(
+                "batch size 0 is not executable".to_string(),
+            ));
+        }
+        if !sizes.contains(&1) {
+            return Err(GraphError::Config(format!(
+                "batch size 1 is required as the fallback (have {sizes:?})"
+            )));
+        }
         sizes.sort_unstable_by(|a, b| b.cmp(a)); // descending
         sizes.dedup();
-        Self { sizes, window }
+        Ok(Self { sizes, window })
     }
 
     /// A policy over every batch size `1..=max` — the native
-    /// `ConvExecutor` engine can run any batch, so the planner packs the
-    /// whole queue into as few launches as possible.
+    /// `Session` engine can run any batch, so the planner packs the
+    /// whole queue into as few launches as possible.  Always valid.
     pub fn contiguous(max: usize, window: Duration) -> Self {
-        Self::new((1..=max.max(1)).collect(), window)
+        Self {
+            sizes: (1..=max.max(1)).rev().collect(),
+            window,
+        }
     }
 
     pub fn sizes(&self) -> &[usize] {
@@ -79,7 +96,7 @@ mod tests {
     use super::*;
 
     fn batcher() -> Batcher {
-        Batcher::new(vec![1, 4], Duration::from_millis(2))
+        Batcher::new(vec![1, 4], Duration::from_millis(2)).unwrap()
     }
 
     #[test]
@@ -101,7 +118,7 @@ mod tests {
 
     #[test]
     fn sizes_sorted_descending_deduped() {
-        let b = Batcher::new(vec![1, 4, 4, 2], Duration::ZERO);
+        let b = Batcher::new(vec![1, 4, 4, 2], Duration::ZERO).unwrap();
         assert_eq!(b.sizes(), &[4, 2, 1]);
         assert_eq!(b.max_batch(), 4);
     }
@@ -116,9 +133,13 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn requires_unit_batch() {
-        Batcher::new(vec![2, 4], Duration::ZERO);
+    fn bad_size_sets_are_typed_errors() {
+        // No unit fallback: the server must refuse, not panic.
+        let e = Batcher::new(vec![2, 4], Duration::ZERO).unwrap_err();
+        assert!(matches!(e, GraphError::Config(_)), "{e}");
+        assert!(e.to_string().contains("batch size 1"), "{e}");
+        let e = Batcher::new(vec![0, 1], Duration::ZERO).unwrap_err();
+        assert!(e.to_string().contains("batch size 0"), "{e}");
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! latency/throughput metrics.  Two engines plug in behind the same
 //! worker: the PJRT runtime driving the AOT artifacts (vgg_tiny_b4 /
 //! vgg_tiny_b1 picked per batch), and the native
-//! [`crate::executor::NetworkExecutor`] serving whole pruned networks
-//! with per-layer cached sparse filter banks — the transform-domain
-//! sparse pipeline's serving path.
+//! [`crate::executor::Session`] serving whole compiled graphs with
+//! per-conv cached sparse filter banks — the transform-domain sparse
+//! pipeline's serving path.
 //!
 //! Thread model: std::thread + mpsc (the offline crate set has no tokio);
 //! one worker owns the engine, callers hold cloneable handles.

@@ -7,15 +7,17 @@
 //!   crate's handles are `!Send` (Rc-based), so the worker thread
 //!   constructs the `Runtime` itself; the caller only ever touches plain
 //!   channels and `Vec<f32>` payloads.
-//! - **Native** — a [`NetworkExecutor`] running a whole pruned network on
-//!   the CPU plan engines, with per-layer cached (sparse) filter banks.
-//!   This is the transform-domain sparse pipeline's serving path and
-//!   works without the `pjrt` feature or artifacts.
+//! - **Native** — a compiled [`Session`] (typed graph + bound weights +
+//!   per-conv policies) running on the CPU plan engines with cached
+//!   (sparse) filter banks.  This is the transform-domain sparse
+//!   pipeline's serving path and works without the `pjrt` feature or
+//!   artifacts.  Build the session first (all compile errors surface as
+//!   typed [`crate::nn::graph::GraphError`]s at build time), then hand
+//!   it to [`InferenceServer::start_native`].
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use crate::executor::{ExecPolicy, NetworkExecutor};
-use crate::nn::Network;
+use crate::executor::Session;
 use crate::runtime::{LoadedModel, Runtime};
 use crate::tuner::TuneProfile;
 use anyhow::{anyhow, Result};
@@ -46,40 +48,37 @@ impl ServerConfig {
     }
 }
 
-/// Configuration for the native (in-process `ConvExecutor`) serving path.
-#[derive(Debug, Clone)]
+/// Configuration for the native (in-process [`Session`]) serving path.
+/// The session is built by the caller — compile errors are typed
+/// [`crate::nn::graph::GraphError`]s *before* any server thread exists.
 pub struct NativeServerConfig {
-    pub net: Network,
-    /// Per-layer backend selection (pruning knob, bit width, F(m, r)).
-    pub policy: ExecPolicy,
-    /// Seed for the synthetic weight set.
-    pub seed: u64,
+    /// The compiled graph the worker serves.
+    pub session: Session,
     /// Batch-accumulation window.
     pub window: Duration,
-    /// Largest batch one launch may run (the native engine accepts any
-    /// size up to this).
+    /// Largest batch one launch may run; the session's workspace grows
+    /// to cover it (and to a tuned profile's fused batch, if set).
     pub max_batch: usize,
-    /// Optional per-layer tuning profile (see [`crate::tuner`]).  When
-    /// set, every conv layer runs its tuned (m, workers, backend) instead
-    /// of the uniform `policy`, and the batcher's capacity grows to the
-    /// profile's fused batch granularity.  The profile must describe
-    /// `net` (checked at startup).
+    /// Optional per-conv-node tuning profile (see [`crate::tuner`]).
+    /// Checked against the session's graph at startup — a mismatched
+    /// profile is a refused start, not a panic; the batcher's capacity
+    /// grows to the profile's fused batch granularity.  Build the
+    /// session from [`TuneProfile::policies_for`] so the executors
+    /// actually run the tuned configurations.
     pub profile: Option<TuneProfile>,
 }
 
 impl NativeServerConfig {
-    pub fn new(net: Network, policy: ExecPolicy) -> Self {
+    pub fn new(session: Session) -> Self {
         Self {
-            net,
-            policy,
-            seed: 7,
+            session,
             window: Duration::from_millis(2),
             max_batch: 4,
             profile: None,
         }
     }
 
-    /// Serve with a tuned per-layer profile (from [`crate::tuner::Tuner`]
+    /// Serve with a tuned per-node profile (from [`crate::tuner::Tuner`]
     /// or [`TuneProfile::load`]).
     pub fn with_profile(mut self, profile: TuneProfile) -> Self {
         self.profile = Some(profile);
@@ -122,7 +121,16 @@ impl InferenceServer {
         let worker = std::thread::spawn(move || {
             match setup(&cfg) {
                 Ok((models, sizes, input_elems, output_elems)) => {
-                    let batcher = Batcher::new(sizes.clone(), cfg.window);
+                    // `setup` guarantees batch size 1 exists, so this
+                    // cannot fail — but a typed refusal beats a panic on
+                    // a worker thread if the invariant ever moves.
+                    let batcher = match Batcher::new(sizes.clone(), cfg.window) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(anyhow!("{e}")));
+                            return;
+                        }
+                    };
                     let _ = ready_tx.send(Ok(Ready {
                         input_elems,
                         output_elems,
@@ -148,65 +156,48 @@ impl InferenceServer {
         })
     }
 
-    /// Start the native serving path: the worker builds a
-    /// [`NetworkExecutor`] (per-layer `ConvExecutor`s with cached pruned
-    /// filter banks) and serves whole-network inference through the same
-    /// dynamic batcher — no PJRT feature or artifacts required.
+    /// Start the native serving path: the worker owns the caller-built
+    /// [`Session`] and serves whole-graph inference through the same
+    /// dynamic batcher — no PJRT feature or artifacts required.  A tuned
+    /// profile (if any) is validated against the session's graph before
+    /// any thread spawns, so a mismatch is a typed refusal.
     pub fn start_native(cfg: NativeServerConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
+        let NativeServerConfig {
+            mut session,
+            window,
+            max_batch,
+            profile,
+        } = cfg;
         // A tuned profile may ask for a larger fused batch than the
         // config default — the batcher and workspace follow the profile.
-        let fused_batch = cfg
-            .max_batch
-            .max(cfg.profile.as_ref().map(|p| p.batch).unwrap_or(1))
+        let fused_batch = max_batch
+            .max(profile.as_ref().map(|p| p.batch).unwrap_or(1))
             .max(1);
+        if let Some(profile) = &profile {
+            // The profile must describe this graph AND be what the
+            // session actually compiled — attaching a tuned profile to a
+            // session built from different policies is refused, exactly
+            // like the pre-redesign worker's matches() check.
+            profile.matches_graph(session.graph())?;
+            profile.matches_policies(session.conv_policies())?;
+        }
+        session.grow_max_batch(fused_batch);
+        let input_elems = session.input_elements();
+        let output_elems = session.output_elements();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::new(fused_batch.max(16), 4096)));
         let metrics_worker = metrics.clone();
-
+        let batcher = Batcher::contiguous(fused_batch, window);
         let worker = std::thread::spawn(move || {
-            let NativeServerConfig {
-                net,
-                policy,
-                seed,
-                window,
-                profile,
-                ..
-            } = cfg;
-            let built = match &profile {
-                Some(profile) => profile.matches(&net, &policy).map(|()| {
-                    let policies = profile.layer_policies(policy);
-                    NetworkExecutor::synthetic_per_layer(net, &policies, seed)
-                }),
-                None => Ok(NetworkExecutor::synthetic(net, policy, seed)),
-            };
-            let exec = match built {
-                Ok(exec) => exec.with_max_batch(fused_batch),
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let input_elems = exec.input_elements();
-            let output_elems = exec.output_elements();
-            let batcher = Batcher::contiguous(fused_batch, window);
-            let _ = ready_tx.send(Ok(Ready {
-                input_elems,
-                output_elems,
-            }));
-            let engine = Engine::Native(Box::new(exec));
+            let engine = Engine::Native(Box::new(session));
             worker_loop(rx, engine, batcher, metrics_worker, input_elems);
         });
-
-        let ready = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))??;
         Ok(Self {
             tx,
             worker: Some(worker),
             metrics,
-            input_elems: ready.input_elems,
-            output_elems: ready.output_elems,
+            input_elems,
+            output_elems,
         })
     }
 
@@ -248,11 +239,11 @@ impl Drop for InferenceServer {
 type Models = Vec<Arc<LoadedModel>>;
 
 /// The execution engine behind the batching worker: compiled PJRT
-/// executables (one per batch size) or the native `NetworkExecutor`
-/// running whole pruned networks on the CPU plan engines.
+/// executables (one per batch size) or the native `Session` running
+/// whole compiled graphs on the CPU plan engines.
 enum Engine {
     Pjrt { models: Models, sizes: Vec<usize> },
-    Native(Box<NetworkExecutor>),
+    Native(Box<Session>),
 }
 
 impl Engine {
@@ -283,12 +274,14 @@ impl Engine {
                     .map(|i| flat[i * per..(i + 1) * per].to_vec())
                     .collect())
             }
-            Engine::Native(exec) => {
+            Engine::Native(session) => {
                 // One fused batched launch per plan: every cached filter
                 // bank streams once for the whole batch instead of once
-                // per image (bit-identical to the per-image path).
+                // per image (bit-identical to the per-image path).  A
+                // typed GraphError becomes a per-request failure, never
+                // a dead worker.
                 let imgs: Vec<&[f32]> = images.iter().map(|im| im.as_slice()).collect();
-                Ok(exec.forward_batch(&imgs))
+                Ok(session.forward_batch(&imgs)?)
             }
         }
     }
@@ -424,11 +417,19 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::executor::ExecPolicy;
+    use crate::nn::graph::Synthetic;
     use crate::nn::vgg_tiny;
     use crate::util::Rng;
 
     fn native_cfg(sparsity: f64) -> NativeServerConfig {
-        NativeServerConfig::new(vgg_tiny(), ExecPolicy::sparse(2, sparsity))
+        let session = Session::uniform(
+            vgg_tiny(),
+            &mut Synthetic::new(7),
+            ExecPolicy::sparse(2, sparsity),
+        )
+        .expect("vgg_tiny compiles");
+        NativeServerConfig::new(session)
     }
 
     #[test]
@@ -495,15 +496,23 @@ mod tests {
     #[test]
     fn native_server_serves_with_tuned_profile() {
         use crate::tuner::{TuneOptions, Tuner};
-        let policy = ExecPolicy::sparse(2, 0.7);
-        let profile = Tuner::new(vgg_tiny(), policy, 7)
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
             .with_options(TuneOptions {
                 calibrate: false,
                 ..TuneOptions::default()
             })
-            .tune();
+            .tune()
+            .expect("tune");
         let profile_batch = profile.batch;
-        let cfg = NativeServerConfig::new(vgg_tiny(), policy).with_profile(profile);
+        // The tuned serving recipe: expand the profile into per-conv
+        // policies, compile the session, hand both to the server.
+        let policies = profile
+            .policies_for(&vgg_tiny(), &base)
+            .expect("profile matches");
+        let session = Session::build(vgg_tiny(), &mut Synthetic::new(7), &policies)
+            .expect("tuned session compiles");
+        let cfg = NativeServerConfig::new(session).with_profile(profile);
         let server = InferenceServer::start_native(cfg).expect("start tuned");
         assert_eq!(server.input_elements(), 3 * 32 * 32);
         assert_eq!(server.output_elements(), 10);
@@ -520,22 +529,49 @@ mod tests {
     }
 
     #[test]
-    fn native_server_rejects_mismatched_profile() {
+    fn native_server_rejects_profile_on_untuned_session() {
+        // A profile attached to a session compiled from some OTHER
+        // policy list (here: a uniform dense F(4,3) build) must be
+        // refused at startup — the pre-redesign matches() contract.
         use crate::tuner::{TuneOptions, Tuner};
-        let policy = ExecPolicy::sparse(2, 0.7);
-        let mut profile = Tuner::new(vgg_tiny(), policy, 7)
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
             .with_options(TuneOptions {
                 calibrate: false,
                 ..TuneOptions::default()
             })
-            .tune();
+            .tune()
+            .expect("tune");
+        let session = Session::uniform(vgg_tiny(), &mut Synthetic::new(7), ExecPolicy::dense(4))
+            .expect("session");
+        let cfg = NativeServerConfig::new(session).with_profile(profile);
+        let err = match InferenceServer::start_native(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("profile over an untuned session must be refused"),
+        };
+        assert!(err.to_string().contains("session compiled"), "{err}");
+    }
+
+    #[test]
+    fn native_server_rejects_mismatched_profile() {
+        use crate::tuner::{TuneOptions, Tuner};
+        let base = ExecPolicy::sparse(2, 0.7);
+        let mut profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(TuneOptions {
+                calibrate: false,
+                ..TuneOptions::default()
+            })
+            .tune()
+            .expect("tune");
         profile.layers.pop(); // no longer describes vgg_tiny
-        let cfg = NativeServerConfig::new(vgg_tiny(), policy).with_profile(profile);
+        let session =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(7), base).expect("session");
+        let cfg = NativeServerConfig::new(session).with_profile(profile);
         let err = match InferenceServer::start_native(cfg) {
             Err(e) => e,
             Ok(_) => panic!("mismatched profile must be refused"),
         };
-        assert!(err.to_string().contains("layers"), "{err}");
+        assert!(err.to_string().contains("conv"), "{err}");
     }
 
     #[test]

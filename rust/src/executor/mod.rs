@@ -8,17 +8,22 @@
 //! (transformed via `G`, optionally block-pruned per Winograd coordinate
 //! and/or fake-quantized) and every `conv2d` call reuses the cached bank —
 //! the serving steady state.  The backend is selected per layer by the
-//! [`ExecPolicy`]'s target sparsity and bit width.
+//! [`ExecPolicy`]'s target sparsity and bit width; every knob is validated
+//! at the API boundary with a typed [`GraphError`].
 //!
-//! [`NetworkExecutor`] composes per-layer executors with the `nn` layer
-//! ops (SAME padding, ReLU, stage pooling, FC head) into a full forward
-//! pass — the engine behind the coordinator's native serving path.
-//! [`NetworkExecutor::forward_batch`] runs N images through **one fused
-//! batched launch per layer** on a build-time-sized ping-pong workspace:
-//! zero steady-state allocations, bit-identical to the per-image
-//! [`NetworkExecutor::forward`] results.
+//! [`Session`] compiles a whole [`crate::nn::graph::Graph`] (weights
+//! bound through a [`crate::nn::graph::WeightSource`], one policy per
+//! conv node) onto per-node executors and a zero-allocation ping-pong
+//! workspace — the engine behind the coordinator's native serving path.
+//! The legacy [`NetworkExecutor`] remains as a deprecated shim over
+//! `Session` for the fixed VGG-ladder [`Network`] descriptor.
 
-use crate::nn::{self, ConvLayer, Network};
+mod session;
+
+pub use session::Session;
+
+use crate::nn::graph::{GraphError, Synthetic};
+use crate::nn::{ConvLayer, ConvShape, Network};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -113,14 +118,14 @@ impl ExecPolicy {
         self.sparsity >= self.sparse_threshold
     }
 
-    /// The policy actually served for `layer`: layers whose input channel
-    /// count is below the tile size stay unpruned, mirroring the
-    /// artifacts' dense first layer.  This is the **single** definition
-    /// of the small-channel guard — `NetworkExecutor`, the tuner, and
-    /// the benches all route through it so a tuned profile always
-    /// describes exactly what serving builds.
-    pub fn for_layer(self, layer: &ConvLayer) -> Self {
-        if layer.in_ch < tile_size(self.m, layer.r) {
+    /// The policy actually served for a conv of this geometry: layers
+    /// whose input channel count is below the tile size stay unpruned,
+    /// mirroring the artifacts' dense first layer.  This is the
+    /// **single** definition of the small-channel guard — [`Session`],
+    /// the tuner, and the benches all route through it so a tuned
+    /// profile always describes exactly what serving builds.
+    pub fn for_conv(self, shape: &ConvShape) -> Self {
+        if shape.in_ch < tile_size(self.m, shape.r) {
             Self {
                 sparsity: 0.0,
                 ..self
@@ -130,31 +135,43 @@ impl ExecPolicy {
         }
     }
 
-    /// Assert every knob is in range — called at prepare so a bad policy
-    /// fails at the API boundary with a clear message instead of deep
-    /// inside pruning or quantization.
-    pub fn validate(&self) {
-        assert!(self.m >= 1, "ExecPolicy.m must be >= 1, got {}", self.m);
-        assert!(
-            (0.0..1.0).contains(&self.sparsity),
-            "ExecPolicy.sparsity must be in [0, 1), got {}",
-            self.sparsity
-        );
+    /// [`ExecPolicy::for_conv`] on a legacy [`ConvLayer`].
+    pub fn for_layer(self, layer: &ConvLayer) -> Self {
+        self.for_conv(&layer.shape())
+    }
+
+    /// Check every knob is in range — called at prepare so a bad policy
+    /// fails at the API boundary with a typed [`GraphError`] instead of
+    /// panicking deep inside pruning or quantization.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let bad = |msg: String| Err(GraphError::Policy(msg));
+        if self.m < 1 {
+            return bad(format!("ExecPolicy.m must be >= 1, got {}", self.m));
+        }
+        if !(0.0..1.0).contains(&self.sparsity) {
+            return bad(format!(
+                "ExecPolicy.sparsity must be in [0, 1), got {}",
+                self.sparsity
+            ));
+        }
         if let Some(bits) = self.bits {
-            assert!(
-                (2..=32).contains(&bits),
-                "ExecPolicy.bits must be in 2..=32, got {bits}"
-            );
+            if !(2..=32).contains(&bits) {
+                return bad(format!("ExecPolicy.bits must be in 2..=32, got {bits}"));
+            }
         }
         if let Some(scale) = self.act_scale {
-            assert!(
-                scale.is_finite() && scale > 0.0,
-                "ExecPolicy.act_scale must be a positive finite scale, got {scale}"
-            );
+            if !(scale.is_finite() && scale > 0.0) {
+                return bad(format!(
+                    "ExecPolicy.act_scale must be a positive finite scale, got {scale}"
+                ));
+            }
         }
         if let Some(workers) = self.workers {
-            assert!(workers >= 1, "ExecPolicy.workers must be >= 1, got 0");
+            if workers < 1 {
+                return bad("ExecPolicy.workers must be >= 1, got 0".to_string());
+            }
         }
+        Ok(())
     }
 }
 
@@ -193,10 +210,16 @@ fn activation_quantizer(bits: u32, act_scale: Option<f32>) -> Quantizer {
 impl ConvExecutor {
     /// Prepare one layer: transform (and prune / quantize) the spatial
     /// weights (K, C, r, r) once, and fix the activation-quantizer scale.
-    /// Every `conv2d` / `conv2d_batch_into` call reuses both.
-    pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Self {
-        policy.validate();
-        assert_eq!(w.shape().len(), 4, "weights must be (K, C, r, r)");
+    /// Every `conv2d` / `conv2d_batch_into` call reuses both.  A bad
+    /// policy or weight shape is a typed [`GraphError`].
+    pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Result<Self, GraphError> {
+        policy.validate()?;
+        if w.shape().len() != 4 {
+            return Err(GraphError::Weights(format!(
+                "conv weights must be (K, C, r, r), got shape {:?}",
+                w.shape()
+            )));
+        }
         let r = w.shape()[3];
         let mut plan = WinogradPlan::new(policy.m, r);
         if let Some(workers) = policy.workers {
@@ -229,11 +252,11 @@ impl ConvExecutor {
                 q: activation_quantizer(bits, policy.act_scale),
             },
         };
-        Self {
+        Ok(Self {
             plan,
             backend,
             qdq: Vec::new(),
-        }
+        })
     }
 
     /// Which backend the policy selected for this layer.
@@ -325,29 +348,23 @@ fn qdq_into(q: &Quantizer, src: &[f32], dst: &mut Vec<f32>) {
     }
 }
 
-/// The batched serving workspace: two ping-pong activation buffers sized
-/// once at build time for the largest intermediate of the deepest batch.
-/// Every `forward_batch` stage reads one buffer and writes the other, so
-/// the steady state performs **zero heap allocations** — the same
-/// contract the plan engines keep for their scratch.
-#[derive(Default)]
-struct Workspace {
-    a: Vec<f32>,
-    b: Vec<f32>,
-}
-
-/// A whole pruned network behind per-layer cached filter banks: the
-/// native serving engine.
+/// A whole pruned network behind per-layer cached filter banks.
+///
+/// Deprecated thin shim: the [`Network`] ladder is lowered through
+/// [`Network::to_graph`] and compiled into a [`Session`] — which is what
+/// every method delegates to.  New code should build a `Session`
+/// directly (arbitrary graphs, typed errors, real weight sources);
+/// this shim keeps the historical synthetic-only, panicking contract.
+#[deprecated(
+    note = "build a graph with `nn::graph::GraphBuilder` (or `Network::to_graph`) and \
+            compile it into an `executor::Session`"
+)]
 pub struct NetworkExecutor {
     net: Network,
-    convs: Vec<ConvExecutor>,
-    /// FC weight matrices, (out_f x in_f) row-major.
-    fcs: Vec<Tensor>,
-    /// Largest batch one fused `forward_batch` launch may run.
-    max_batch: usize,
-    ws: Workspace,
+    session: Session,
 }
 
+#[allow(deprecated)]
 impl NetworkExecutor {
     /// Build from deterministic synthetic weights (He-scaled gaussians —
     /// the stand-in for reference \[2\]'s pruned VGG weights, matching
@@ -359,74 +376,25 @@ impl NetworkExecutor {
         Self::synthetic_per_layer(net, &policies, seed)
     }
 
-    /// Build with an **independent policy per conv layer** — the tuner's
-    /// entry point ([`crate::tuner::TuneProfile::layer_policies`] turns a
-    /// profile into this list).  Each layer may pick its own F(m, 3),
-    /// worker count, and dense/sparse backend crossover; layers whose
-    /// input channel count is below their tile size stay unpruned
-    /// (mirroring the artifacts), exactly as in the uniform constructor.
+    /// Build with an **independent policy per conv layer** (see
+    /// [`Session::build`]).  Panics on invalid input — the historical
+    /// contract; `Session` returns typed errors instead.
     pub fn synthetic_per_layer(net: Network, policies: &[ExecPolicy], seed: u64) -> Self {
-        assert_eq!(
-            policies.len(),
-            net.convs.len(),
-            "need one policy per conv layer ({} layers, {} policies)",
-            net.convs.len(),
-            policies.len()
-        );
-        let (weights, fcs) = nn::synthetic_weights(&net, seed);
-        let convs = net
-            .convs
-            .iter()
-            .zip(weights.iter().zip(policies))
-            .map(|(layer, (w, policy))| {
-                policy.validate();
-                ConvExecutor::prepare(w, &policy.for_layer(layer))
-            })
-            .collect();
-        let mut exec = Self {
-            net,
-            convs,
-            fcs,
-            max_batch: 0,
-            ws: Workspace::default(),
-        };
-        exec.size_workspace(1);
-        exec
+        let session = Session::build(net.to_graph(), &mut Synthetic::new(seed), policies)
+            .unwrap_or_else(|e| panic!("{e}"));
+        Self { net, session }
     }
 
-    /// Pre-size the ping-pong workspace for fused batches up to `n`
-    /// images — the build-time step of the zero-allocation serving
-    /// contract.  `forward_batch` refuses larger batches.
-    pub fn with_max_batch(mut self, n: usize) -> Self {
-        self.size_workspace(n.max(1));
-        self
+    /// Pre-size the workspace for fused batches up to `n` images.
+    pub fn with_max_batch(self, n: usize) -> Self {
+        Self {
+            net: self.net,
+            session: self.session.with_max_batch(n),
+        }
     }
 
     pub fn max_batch(&self) -> usize {
-        self.max_batch
-    }
-
-    /// Size both workspace buffers to `n` times the largest per-image
-    /// intermediate anywhere in the pipeline (padded conv inputs are the
-    /// high-water mark; the FC head never exceeds them for VGG-shaped
-    /// nets but is accounted for anyway).
-    fn size_workspace(&mut self, n: usize) {
-        let mut hw = self.net.input_hw;
-        let mut cap = self.net.input_ch * hw * hw;
-        for (i, conv) in self.net.convs.iter().enumerate() {
-            let p = nn::same_pad(conv.r);
-            cap = cap.max(conv.in_ch * (hw + 2 * p) * (hw + 2 * p));
-            cap = cap.max(conv.out_ch * hw * hw);
-            if self.net.pool_after(i) {
-                hw /= 2;
-            }
-        }
-        for fc in &self.net.fcs {
-            cap = cap.max(fc.in_f).max(fc.out_f);
-        }
-        self.max_batch = n;
-        self.ws.a.resize(n * cap, 0.0);
-        self.ws.b.resize(n * cap, 0.0);
+        self.session.max_batch()
     }
 
     pub fn network(&self) -> &Network {
@@ -434,127 +402,43 @@ impl NetworkExecutor {
     }
 
     pub fn input_elements(&self) -> usize {
-        self.net.input_ch * self.net.input_hw * self.net.input_hw
+        self.session.input_elements()
     }
 
     pub fn output_elements(&self) -> usize {
-        self.net.fcs.last().map(|f| f.out_f).unwrap_or(0)
+        self.session.output_elements()
     }
 
     /// Per-layer backend names (executor selection, for reporting).
     pub fn conv_backends(&self) -> Vec<&'static str> {
-        self.convs.iter().map(|c| c.backend_name()).collect()
+        self.session.conv_backends()
     }
 
     /// Full forward pass: flat (C * H * W) image -> logits.
-    ///
-    /// conv (SAME, via the per-layer executor) + ReLU per layer, 2x2 max
-    /// pool after each stage, then the FC head (ReLU between, raw logits
-    /// out).  Deterministic for a given build (the plan engines are
-    /// bit-identical across worker counts).
     pub fn forward(&mut self, image: &[f32]) -> Vec<f32> {
-        assert_eq!(
-            image.len(),
-            self.input_elements(),
-            "image has {} elements, expected {}",
-            image.len(),
-            self.input_elements()
-        );
-        let hw = self.net.input_hw;
-        let mut x = Tensor::from_vec(&[self.net.input_ch, hw, hw], image.to_vec());
-        for i in 0..self.convs.len() {
-            let padded = nn::pad_same(&x, nn::same_pad(self.net.convs[i].r));
-            x = self.convs[i].conv2d(&padded);
-            nn::relu_inplace(&mut x);
-            if self.net.pool_after(i) {
-                x = nn::maxpool2(&x);
-            }
-        }
-        let mut a = x.into_vec();
-        let n_fc = self.fcs.len();
-        for (j, wm) in self.fcs.iter().enumerate() {
-            let (of, inf) = (wm.shape()[0], wm.shape()[1]);
-            assert_eq!(a.len(), inf, "fc{j}: input volume mismatch");
-            let mut y = vec![0.0f32; of];
-            nn::fc_into(wm, 1, &a, &mut y);
-            if j + 1 < n_fc {
-                nn::relu_slice(&mut y);
-            }
-            a = y;
-        }
-        a
+        self.session
+            .forward(image)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Full batched forward pass: one fused launch per layer over all
-    /// `images`, on the build-time-sized ping-pong workspace.
-    ///
-    /// Zero steady-state heap allocations (beyond the returned logits),
-    /// and bit-identical per image to [`NetworkExecutor::forward`] — the
-    /// batch dimension only widens each stage, it never reorders any
-    /// per-output accumulation.  This is the serving path's amortization
-    /// lever: every cached (sparse) filter bank streams once per batch
-    /// instead of once per request.
+    /// Full batched forward pass (bit-identical per image to
+    /// [`NetworkExecutor::forward`]).
     pub fn forward_batch(&mut self, images: &[&[f32]]) -> Vec<Vec<f32>> {
-        let n = images.len();
-        assert!(n >= 1, "forward_batch needs at least one image");
-        assert!(
-            n <= self.max_batch,
-            "batch of {n} exceeds the workspace capacity {} — build the \
-             executor with with_max_batch({n}) or larger",
-            self.max_batch
-        );
-        let ie = self.net.input_ch * self.net.input_hw * self.net.input_hw;
-        let Self { net, convs, fcs, ws, .. } = self;
-        let Workspace { a, b } = ws;
-        for (i, im) in images.iter().enumerate() {
-            assert_eq!(
-                im.len(),
-                ie,
-                "image {i} has {} elements, expected {ie}",
-                im.len()
-            );
-            a[i * ie..(i + 1) * ie].copy_from_slice(im);
-        }
-        let mut hw = net.input_hw;
-        let mut ch = net.input_ch;
-        for i in 0..convs.len() {
-            let p = nn::same_pad(net.convs[i].r);
-            let (hp, wp) = (hw + 2 * p, hw + 2 * p);
-            let k = net.convs[i].out_ch;
-            // pad (a -> b), conv (b -> a, SAME so spatial size is kept),
-            // ReLU in place, pool (a -> b, then swap).
-            let (src, pad, conv) = (n * ch * hw * hw, n * ch * hp * wp, n * k * hw * hw);
-            nn::pad_same_into(&a[..src], n * ch, hw, hw, p, &mut b[..pad]);
-            convs[i].conv2d_batch_into(n, &b[..pad], hp, wp, &mut a[..conv]);
-            nn::relu_slice(&mut a[..conv]);
-            if net.pool_after(i) {
-                let half = hw / 2;
-                nn::maxpool2_into(&a[..conv], n * k, hw, hw, &mut b[..n * k * half * half]);
-                std::mem::swap(a, b);
-                hw = half;
-            }
-            ch = k;
-        }
-        let mut feat = ch * hw * hw;
-        let n_fc = fcs.len();
-        for (j, wm) in fcs.iter().enumerate() {
-            let (of, inf) = (wm.shape()[0], wm.shape()[1]);
-            assert_eq!(feat, inf, "fc{j}: input volume mismatch");
-            nn::fc_into(wm, n, &a[..n * inf], &mut b[..n * of]);
-            if j + 1 < n_fc {
-                nn::relu_slice(&mut b[..n * of]);
-            }
-            std::mem::swap(a, b);
-            feat = of;
-        }
-        (0..n).map(|i| a[i * feat..(i + 1) * feat].to_vec()).collect()
+        self.session
+            .forward_batch(images)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// The compiled session behind the shim.
+    pub fn into_session(self) -> Session {
+        self.session
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::vgg_tiny;
+    use crate::nn::vgg_tiny_network;
     use crate::winograd::direct_conv2d;
 
     fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
@@ -567,7 +451,7 @@ mod tests {
         let mut rng = Rng::new(401);
         let x = rand_tensor(&mut rng, &[3, 10, 12]);
         let w = rand_tensor(&mut rng, &[4, 3, 3, 3]);
-        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4));
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(4)).unwrap();
         assert_eq!(ex.backend_name(), "dense");
         let got = ex.conv2d(&x);
         let want = direct_conv2d(&x, &w);
@@ -590,7 +474,7 @@ mod tests {
             (ExecPolicy::sparse(2, 0.7).with_bits(8), "quant-sparse"),
         ];
         for (policy, want) in cases {
-            let ex = ConvExecutor::prepare(&w, &policy);
+            let ex = ConvExecutor::prepare(&w, &policy).unwrap();
             assert_eq!(ex.backend_name(), want, "{policy:?}");
         }
     }
@@ -601,7 +485,7 @@ mod tests {
         let x = rand_tensor(&mut rng, &[8, 9, 9]);
         let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
         let policy = ExecPolicy::sparse(2, 0.5);
-        let mut ex = ConvExecutor::prepare(&w, &policy);
+        let mut ex = ConvExecutor::prepare(&w, &policy).unwrap();
         assert!(ex.block_sparsity() > 0.3);
         let got = ex.conv2d(&x);
         let mut plan = WinogradPlan::new(2, 3);
@@ -617,7 +501,7 @@ mod tests {
         let mut rng = Rng::new(405);
         let x = rand_tensor(&mut rng, &[8, 9, 9]);
         let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
-        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.3));
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.3)).unwrap();
         assert_eq!(ex.backend_name(), "dense");
         let got = ex.conv2d(&x);
         let mut plan = WinogradPlan::new(2, 3);
@@ -639,44 +523,32 @@ mod tests {
                 bits: None,
                 ..policy
             };
-            let got = ConvExecutor::prepare(&w, &policy).conv2d(&x);
-            let want = ConvExecutor::prepare(&w, &float_policy).conv2d(&x);
+            let got = ConvExecutor::prepare(&w, &policy).unwrap().conv2d(&x);
+            let want = ConvExecutor::prepare(&w, &float_policy).unwrap().conv2d(&x);
             let rel = got.max_abs_diff(&want) / want.max_abs().max(1e-6);
             assert!(rel < 1e-2, "{policy:?}: rel {rel}");
         }
     }
 
     #[test]
-    fn network_executor_runs_vgg_tiny_end_to_end() {
-        let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.7), 5);
-        assert_eq!(exec.input_elements(), 3 * 32 * 32);
-        assert_eq!(exec.output_elements(), 10);
-        // conv0 has 3 input channels (< l = 4): stays dense like the
-        // artifacts; the rest run sparse.
-        let backends = exec.conv_backends();
-        assert_eq!(backends[0], "dense");
-        assert!(backends[1..].iter().all(|&b| b == "sparse"), "{backends:?}");
-        let mut rng = Rng::new(6);
-        let image = rng.gaussian_vec(3 * 32 * 32);
-        let logits = exec.forward(&image);
-        assert_eq!(logits.len(), 10);
-        assert!(logits.iter().all(|v| v.is_finite()));
-        // Deterministic across calls (cached banks, bit-identical plans).
-        assert_eq!(logits, exec.forward(&image));
-    }
-
-    #[test]
-    #[should_panic(expected = "ExecPolicy.sparsity")]
-    fn policy_rejects_sparsity_one() {
+    fn policy_validation_is_typed() {
         let w = Tensor::zeros(&[4, 4, 3, 3]);
-        ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 1.0));
-    }
-
-    #[test]
-    #[should_panic(expected = "ExecPolicy.bits")]
-    fn policy_rejects_wild_bit_width() {
-        let w = Tensor::zeros(&[4, 4, 3, 3]);
-        ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_bits(40));
+        let cases = [
+            (ExecPolicy::sparse(2, 1.0), "sparsity"),
+            (ExecPolicy::dense(2).with_bits(40), "bits"),
+            (ExecPolicy::dense(2).with_workers(0), "workers"),
+            (ExecPolicy::dense(0), "ExecPolicy.m"),
+            (ExecPolicy::dense(2).with_act_scale(-1.0), "act_scale"),
+        ];
+        for (policy, needle) in cases {
+            let e = ConvExecutor::prepare(&w, &policy).unwrap_err();
+            assert!(matches!(e, GraphError::Policy(_)), "{policy:?}: {e}");
+            assert!(e.to_string().contains(needle), "{policy:?}: {e}");
+        }
+        // A wrong weight rank is a typed weight error, not a panic.
+        let e = ConvExecutor::prepare(&Tensor::zeros(&[4, 9]), &ExecPolicy::dense(2))
+            .unwrap_err();
+        assert!(matches!(e, GraphError::Weights(_)), "{e}");
     }
 
     #[test]
@@ -685,18 +557,19 @@ mod tests {
         let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
         // Explicit scale is taken verbatim.
         let policy = ExecPolicy::dense(2).with_bits(8).with_act_scale(0.25);
-        let ex = ConvExecutor::prepare(&w, &policy);
+        let ex = ConvExecutor::prepare(&w, &policy).unwrap();
         let q = ex.activation_quantizer().expect("quant backend");
         assert_eq!(q.scale, 0.25);
         assert_eq!(q.bits, 8);
         // Seeded calibration is a property of the layer, not the input:
         // two prepares agree, and no request ever changes it.
-        let a = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8));
-        let b = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8));
+        let a = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8)).unwrap();
+        let b = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.7).with_bits(8)).unwrap();
         let (qa, qb) = (a.activation_quantizer().unwrap(), b.activation_quantizer().unwrap());
         assert_eq!(qa.scale, qb.scale);
         // Float backends have no activation quantizer.
         assert!(ConvExecutor::prepare(&w, &ExecPolicy::dense(2))
+            .unwrap()
             .activation_quantizer()
             .is_none());
     }
@@ -709,7 +582,7 @@ mod tests {
         let mut rng = Rng::new(408);
         let x = rand_tensor(&mut rng, &[4, 8, 8]);
         let w = rand_tensor(&mut rng, &[4, 4, 3, 3]);
-        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_bits(16));
+        let mut ex = ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_bits(16)).unwrap();
         let before = *ex.activation_quantizer().unwrap();
         let y1 = ex.conv2d(&x);
         let y2 = ex.conv2d(&x);
@@ -719,105 +592,71 @@ mod tests {
     }
 
     #[test]
-    fn forward_batch_matches_sequential_on_vgg_tiny() {
-        let mut exec = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.7), 5)
-            .with_max_batch(4);
-        assert_eq!(exec.max_batch(), 4);
-        let mut rng = Rng::new(9);
-        let images: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
-        let seq: Vec<Vec<f32>> = images.iter().map(|im| exec.forward(im)).collect();
-        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
-        let got = exec.forward_batch(&refs);
-        assert_eq!(got, seq, "fused batch must be bit-identical to sequential");
-        // Batch membership must not matter either.
-        let pair = exec.forward_batch(&[refs[2], refs[0]]);
-        assert_eq!(pair[0], seq[2]);
-        assert_eq!(pair[1], seq[0]);
-    }
-
-    #[test]
-    #[should_panic(expected = "exceeds the workspace capacity")]
-    fn forward_batch_rejects_oversized_batch() {
-        let mut exec =
-            NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::dense(2), 5).with_max_batch(2);
-        let image = vec![0.0f32; 3 * 32 * 32];
-        let refs = [image.as_slice(), image.as_slice(), image.as_slice()];
-        let _ = exec.forward_batch(&refs);
-    }
-
-    #[test]
     fn pinned_workers_bit_identical_and_validated() {
         let mut rng = Rng::new(409);
         let x = rand_tensor(&mut rng, &[8, 9, 9]);
         let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
-        let want =
-            ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.5).with_workers(1)).conv2d(&x);
+        let want = ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.5).with_workers(1))
+            .unwrap()
+            .conv2d(&x);
         for workers in [2usize, 3, 8] {
             let got =
                 ConvExecutor::prepare(&w, &ExecPolicy::sparse(2, 0.5).with_workers(workers))
+                    .unwrap()
                     .conv2d(&x);
             assert_eq!(got, want, "workers={workers} must be bit-identical");
         }
     }
 
     #[test]
-    #[should_panic(expected = "ExecPolicy.workers")]
-    fn policy_rejects_zero_workers() {
-        let w = Tensor::zeros(&[4, 4, 3, 3]);
-        ConvExecutor::prepare(&w, &ExecPolicy::dense(2).with_workers(0));
-    }
-
-    #[test]
-    fn per_layer_policies_match_uniform_and_allow_mixing() {
-        let mut rng = Rng::new(410);
-        let image = rng.gaussian_vec(3 * 32 * 32);
-        // A repeated uniform policy through the per-layer constructor is
-        // the uniform constructor exactly.
+    #[allow(deprecated)]
+    fn legacy_shim_matches_session() {
+        // The deprecated NetworkExecutor is a pure delegation shim: same
+        // graph, same synthetic stream, bit-identical logits.
+        let net = vgg_tiny_network();
         let policy = ExecPolicy::sparse(2, 0.7);
-        let mut uniform = NetworkExecutor::synthetic(vgg_tiny(), policy, 5);
-        let mut repeated =
-            NetworkExecutor::synthetic_per_layer(vgg_tiny(), &[policy; 5], 5);
-        assert_eq!(uniform.forward(&image), repeated.forward(&image));
-        // Mixed per-layer m / workers / crossover runs end to end.
-        let policies = [
-            ExecPolicy::dense(2),
-            ExecPolicy::sparse(4, 0.7).with_workers(2),
-            ExecPolicy::sparse(2, 0.7),
-            ExecPolicy::sparse(6, 0.7).with_workers(1),
-            ExecPolicy {
-                sparse_threshold: 2.0, // force the pruned-dense backend
-                ..ExecPolicy::sparse(4, 0.7)
-            },
-        ];
-        let mut mixed = NetworkExecutor::synthetic_per_layer(vgg_tiny(), &policies, 5);
-        let backends = mixed.conv_backends();
-        assert_eq!(backends[0], "dense");
-        assert_eq!(backends[1], "sparse");
-        assert_eq!(backends[4], "dense", "threshold 2.0 must force dense");
-        let logits = mixed.forward(&image);
-        assert_eq!(logits.len(), 10);
-        assert!(logits.iter().all(|v| v.is_finite()));
-        assert_eq!(logits, mixed.forward(&image), "deterministic");
+        let mut shim = NetworkExecutor::synthetic(net.clone(), policy, 5).with_max_batch(4);
+        let mut sess =
+            Session::uniform(net.to_graph(), &mut Synthetic::new(5), policy)
+                .unwrap()
+                .with_max_batch(4);
+        assert_eq!(shim.input_elements(), sess.input_elements());
+        assert_eq!(shim.conv_backends(), sess.conv_backends());
+        let mut rng = Rng::new(6);
+        let images: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+        for im in &images {
+            assert_eq!(shim.forward(im), sess.forward(im).unwrap());
+        }
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(shim.forward_batch(&refs), sess.forward_batch(&refs).unwrap());
     }
 
     #[test]
-    #[should_panic(expected = "one policy per conv layer")]
-    fn per_layer_policies_must_cover_every_layer() {
+    #[allow(deprecated)]
+    #[should_panic(expected = "one policy per conv node")]
+    fn legacy_shim_keeps_panicking_contract() {
         let _ = NetworkExecutor::synthetic_per_layer(
-            vgg_tiny(),
+            vgg_tiny_network(),
             &[ExecPolicy::dense(2); 2],
             5,
         );
     }
 
     #[test]
-    fn network_executor_sparsity_changes_outputs_not_shapes() {
+    fn network_sparsity_changes_outputs_not_shapes() {
         let mut rng = Rng::new(407);
         let image = rng.gaussian_vec(3 * 32 * 32);
-        let mut dense = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::dense(2), 5);
-        let mut sparse = NetworkExecutor::synthetic(vgg_tiny(), ExecPolicy::sparse(2, 0.9), 5);
-        let yd = dense.forward(&image);
-        let ys = sparse.forward(&image);
+        let mut dense =
+            Session::uniform(vgg_tiny_network().to_graph(), &mut Synthetic::new(5), ExecPolicy::dense(2))
+                .unwrap();
+        let mut sparse = Session::uniform(
+            vgg_tiny_network().to_graph(),
+            &mut Synthetic::new(5),
+            ExecPolicy::sparse(2, 0.9),
+        )
+        .unwrap();
+        let yd = dense.forward(&image).unwrap();
+        let ys = sparse.forward(&image).unwrap();
         assert_eq!(yd.len(), ys.len());
         assert!(ys.iter().all(|v| v.is_finite()));
         assert_ne!(yd, ys, "90% pruning must change the logits");

@@ -1,0 +1,439 @@
+//! `Session` — a compiled graph ready to serve.
+//!
+//! A [`Session`] is the product of three ingredients: a typed
+//! [`Graph`], a [`WeightSource`] binding one tensor per conv/fc node,
+//! and one [`ExecPolicy`] per conv node.  Compilation prepares every
+//! conv's [`ConvExecutor`] (transform + prune + quantize once) and sizes
+//! the ping-pong activation workspace; after that,
+//! [`Session::forward`] / [`Session::forward_batch`] run the whole op
+//! chain with **zero steady-state heap allocations** and return typed
+//! [`GraphError`]s instead of panicking on bad requests.
+//!
+//! ```
+//! use swcnn::executor::{ExecPolicy, Session};
+//! use swcnn::nn::{graph::Synthetic, vgg_tiny};
+//!
+//! let mut sess = Session::uniform(
+//!     vgg_tiny(),
+//!     &mut Synthetic::new(5),
+//!     ExecPolicy::sparse(2, 0.7),
+//! )
+//! .unwrap();
+//! let image = vec![0.5; sess.input_elements()];
+//! let logits = sess.forward(&image).unwrap();
+//! assert_eq!(logits.len(), 10);
+//! // A wrong-sized request is a typed error, not a panic:
+//! assert!(sess.forward(&[0.0; 7]).is_err());
+//! ```
+
+use crate::executor::{ConvExecutor, ExecPolicy};
+use crate::nn;
+use crate::nn::graph::{Graph, GraphError, Op, Shape, WeightSource};
+use crate::tensor::Tensor;
+
+/// The batched serving workspace: two ping-pong activation buffers sized
+/// once at build time for the largest intermediate of the deepest batch.
+/// Every stage reads one buffer and writes the other, so the steady
+/// state performs **zero heap allocations** — the same contract the plan
+/// engines keep for their scratch.
+#[derive(Default)]
+struct Workspace {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// Per-node prepared state: conv executors and fc weight matrices, keyed
+/// by graph node id.
+enum Prepared {
+    /// Shape-only op (pad / relu / pool / flatten).
+    None,
+    Conv(Box<ConvExecutor>),
+    Fc(Tensor),
+}
+
+/// A compiled graph + weights + policies: the single serving engine
+/// behind [`crate::coordinator::InferenceServer::start_native`].
+pub struct Session {
+    graph: Graph,
+    /// One entry per graph node, same indexing as `graph.nodes()`.
+    prepared: Vec<Prepared>,
+    /// The policy each conv node was prepared with (after the
+    /// small-channel guard), in conv order — what a tuned profile can be
+    /// checked against.
+    conv_policies: Vec<ExecPolicy>,
+    max_batch: usize,
+    ws: Workspace,
+}
+
+impl Session {
+    /// Compile `graph` with one policy per conv node (in graph order).
+    /// Weights are pulled from `source` in the canonical
+    /// [`Graph::weight_requests`] order.
+    pub fn build(
+        graph: Graph,
+        source: &mut dyn WeightSource,
+        policies: &[ExecPolicy],
+    ) -> Result<Self, GraphError> {
+        let convs = graph.conv_infos();
+        if policies.len() != convs.len() {
+            return Err(GraphError::PolicyCount {
+                expected: convs.len(),
+                got: policies.len(),
+            });
+        }
+        for p in policies {
+            p.validate()?;
+        }
+        // Bind weights in the canonical order (convs first, then fcs) so
+        // seeded sources reproduce the legacy synthetic stream.
+        let mut tensors: Vec<(usize, Tensor)> = Vec::new();
+        for spec in graph.weight_requests() {
+            let t = source.tensor(&spec)?;
+            if t.shape() != spec.shape.as_slice() {
+                return Err(GraphError::Weights(format!(
+                    "{}: source produced shape {:?}, graph needs {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                )));
+            }
+            tensors.push((spec.node, t));
+        }
+        let mut prepared: Vec<Prepared> =
+            graph.nodes().iter().map(|_| Prepared::None).collect();
+        let mut conv_policies = Vec::with_capacity(convs.len());
+        for (info, policy) in convs.iter().zip(policies) {
+            let w = &tensors
+                .iter()
+                .find(|(node, _)| *node == info.node)
+                .expect("weight bound for every conv node")
+                .1;
+            // The small-channel guard keeps narrow layers unpruned,
+            // exactly as the legacy executor did.
+            let policy = policy.for_conv(&info.shape);
+            prepared[info.node] = Prepared::Conv(Box::new(ConvExecutor::prepare(w, &policy)?));
+            conv_policies.push(policy);
+        }
+        for (node, t) in tensors {
+            if matches!(graph.nodes()[node].op, Op::Fc { .. }) {
+                prepared[node] = Prepared::Fc(t);
+            }
+        }
+        let mut sess = Self {
+            graph,
+            prepared,
+            conv_policies,
+            max_batch: 0,
+            ws: Workspace::default(),
+        };
+        sess.size_workspace(1);
+        Ok(sess)
+    }
+
+    /// Compile with one uniform policy for every conv node.
+    pub fn uniform(
+        graph: Graph,
+        source: &mut dyn WeightSource,
+        policy: ExecPolicy,
+    ) -> Result<Self, GraphError> {
+        let n = graph.conv_infos().len();
+        Self::build(graph, source, &vec![policy; n])
+    }
+
+    /// Pre-size the ping-pong workspace for fused batches up to `n`
+    /// images — the build-time step of the zero-allocation serving
+    /// contract.  `forward_batch` refuses larger batches.
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.size_workspace(n.max(1));
+        self
+    }
+
+    /// Grow the workspace in place (the server applies a tuned profile's
+    /// fused batch this way).
+    pub fn grow_max_batch(&mut self, n: usize) {
+        if n > self.max_batch {
+            self.size_workspace(n);
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Size both workspace buffers to `n` times the largest per-image
+    /// activation anywhere in the chain (every node's output, plus the
+    /// graph input).
+    fn size_workspace(&mut self, n: usize) {
+        let mut cap = self.graph.input_elements();
+        for node in self.graph.nodes() {
+            cap = cap.max(node.out_shape.elements());
+        }
+        self.max_batch = n;
+        self.ws.a.resize(n * cap, 0.0);
+        self.ws.b.resize(n * cap, 0.0);
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The effective per-conv policies the session was compiled with
+    /// (small-channel guard applied), in conv order.
+    pub fn conv_policies(&self) -> &[ExecPolicy] {
+        &self.conv_policies
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.graph.input_elements()
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.graph.output_elements()
+    }
+
+    /// Per-conv backend names (executor selection, for reporting), in
+    /// conv order.
+    pub fn conv_backends(&self) -> Vec<&'static str> {
+        self.prepared
+            .iter()
+            .filter_map(|p| match p {
+                Prepared::Conv(ex) => Some(ex.backend_name()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Full forward pass: flat (C * H * W) image -> the graph's output
+    /// vector.  A batch of one through the batched engine — which at
+    /// n = 1 *is* the single-image fused loop.
+    pub fn forward(&mut self, image: &[f32]) -> Result<Vec<f32>, GraphError> {
+        Ok(self
+            .forward_batch(&[image])?
+            .pop()
+            .expect("one output per image"))
+    }
+
+    /// Full batched forward pass: one fused launch per node over all
+    /// `images`, on the build-time-sized ping-pong workspace.
+    ///
+    /// Zero steady-state heap allocations (beyond the returned outputs),
+    /// and bit-identical per image to [`Session::forward`] — the batch
+    /// dimension only widens each stage, it never reorders any
+    /// per-output accumulation.
+    pub fn forward_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>, GraphError> {
+        let n = images.len();
+        if n == 0 {
+            return Err(GraphError::EmptyBatch);
+        }
+        if n > self.max_batch {
+            return Err(GraphError::BatchTooLarge {
+                got: n,
+                max: self.max_batch,
+            });
+        }
+        let ie = self.graph.input_elements();
+        for (i, im) in images.iter().enumerate() {
+            if im.len() != ie {
+                return Err(GraphError::Input {
+                    index: i,
+                    expected: ie,
+                    got: im.len(),
+                });
+            }
+        }
+        let Self {
+            graph,
+            prepared,
+            ws,
+            ..
+        } = self;
+        let Workspace { a, b } = ws;
+        for (i, im) in images.iter().enumerate() {
+            a[i * ie..(i + 1) * ie].copy_from_slice(im);
+        }
+        let mut cur = graph.input_shape();
+        for (node, prep) in graph.nodes().iter().zip(prepared.iter_mut()) {
+            let out = node.out_shape;
+            let (src, dst) = (n * cur.elements(), n * out.elements());
+            match (&node.op, prep) {
+                (Op::Pad { p }, _) => {
+                    let Shape::Chw(c, h, w) = cur else {
+                        unreachable!("pad input is a map by construction")
+                    };
+                    nn::pad_same_into(&a[..src], n * c, h, w, *p, &mut b[..dst]);
+                    std::mem::swap(a, b);
+                }
+                (Op::Conv2d { .. }, Prepared::Conv(ex)) => {
+                    let Shape::Chw(_, h, w) = cur else {
+                        unreachable!("conv input is a map by construction")
+                    };
+                    ex.conv2d_batch_into(n, &a[..src], h, w, &mut b[..dst]);
+                    std::mem::swap(a, b);
+                }
+                (Op::Relu, _) => nn::relu_slice(&mut a[..src]),
+                (Op::MaxPool2, _) => {
+                    let Shape::Chw(c, h, w) = cur else {
+                        unreachable!("pool input is a map by construction")
+                    };
+                    nn::maxpool2_into(&a[..src], n * c, h, w, &mut b[..dst]);
+                    std::mem::swap(a, b);
+                }
+                (Op::Flatten, _) => {} // shape bookkeeping only
+                (Op::Fc { .. }, Prepared::Fc(wm)) => {
+                    nn::fc_into(wm, n, &a[..src], &mut b[..dst]);
+                    std::mem::swap(a, b);
+                }
+                _ => unreachable!("prepared state matches the op by construction"),
+            }
+            cur = out;
+        }
+        let oe = cur.elements();
+        Ok((0..n).map(|i| a[i * oe..(i + 1) * oe].to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::{GraphBuilder, Synthetic};
+    use crate::nn::vgg_tiny;
+    use crate::util::Rng;
+
+    #[test]
+    fn session_runs_vgg_tiny_end_to_end() {
+        let mut sess =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::sparse(2, 0.7))
+                .unwrap();
+        assert_eq!(sess.input_elements(), 3 * 32 * 32);
+        assert_eq!(sess.output_elements(), 10);
+        // conv0 has 3 input channels (< l = 4): stays dense like the
+        // artifacts; the rest run sparse.
+        let backends = sess.conv_backends();
+        assert_eq!(backends[0], "dense");
+        assert!(backends[1..].iter().all(|&b| b == "sparse"), "{backends:?}");
+        let mut rng = Rng::new(6);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let logits = sess.forward(&image).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(logits, sess.forward(&image).unwrap(), "deterministic");
+    }
+
+    #[test]
+    fn session_policy_count_and_validation_errors() {
+        let e = Session::build(
+            vgg_tiny(),
+            &mut Synthetic::new(5),
+            &[ExecPolicy::dense(2); 2],
+        )
+        .unwrap_err();
+        assert_eq!(e, GraphError::PolicyCount { expected: 5, got: 2 });
+        let e = Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::sparse(2, 1.0))
+            .unwrap_err();
+        assert!(matches!(e, GraphError::Policy(_)), "{e}");
+    }
+
+    #[test]
+    fn session_request_errors_are_typed() {
+        let mut sess =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::dense(2))
+                .unwrap()
+                .with_max_batch(2);
+        assert_eq!(
+            sess.forward(&[0.0; 7]).unwrap_err(),
+            GraphError::Input {
+                index: 0,
+                expected: 3 * 32 * 32,
+                got: 7
+            }
+        );
+        assert_eq!(sess.forward_batch(&[]).unwrap_err(), GraphError::EmptyBatch);
+        let im = vec![0.0f32; 3 * 32 * 32];
+        let refs = [im.as_slice(), im.as_slice(), im.as_slice()];
+        assert_eq!(
+            sess.forward_batch(&refs).unwrap_err(),
+            GraphError::BatchTooLarge { got: 3, max: 2 }
+        );
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential() {
+        let mut sess =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::sparse(2, 0.7))
+                .unwrap()
+                .with_max_batch(4);
+        assert_eq!(sess.max_batch(), 4);
+        let mut rng = Rng::new(9);
+        let images: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+        let seq: Vec<Vec<f32>> = images
+            .iter()
+            .map(|im| sess.forward(im).unwrap())
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let got = sess.forward_batch(&refs).unwrap();
+        assert_eq!(got, seq, "fused batch must be bit-identical to sequential");
+        let pair = sess.forward_batch(&[refs[2], refs[0]]).unwrap();
+        assert_eq!(pair[0], seq[2]);
+        assert_eq!(pair[1], seq[0]);
+    }
+
+    #[test]
+    fn odd_spatial_graph_runs_end_to_end() {
+        // conv -> pool -> conv on odd spatial sizes: 9x9 -> (pool, ceil)
+        // 5x5 -> 3x3 valid conv -> flatten -> fc.  Not expressible as a
+        // legacy Network; must serve through the same API.
+        let g = GraphBuilder::new("oddnet", (3, 9, 9))
+            .pad(1)
+            .conv2d("c0", 8, 3)
+            .relu()
+            .maxpool2()
+            .conv2d("c1", 4, 3)
+            .relu()
+            .flatten()
+            .fc("head", 6)
+            .build()
+            .unwrap();
+        assert_eq!(g.output_elements(), 6);
+        let mut sess =
+            Session::uniform(g, &mut Synthetic::new(11), ExecPolicy::sparse(2, 0.6))
+                .unwrap()
+                .with_max_batch(3);
+        let mut rng = Rng::new(12);
+        let images: Vec<Vec<f32>> = (0..3).map(|_| rng.gaussian_vec(3 * 9 * 9)).collect();
+        let seq: Vec<Vec<f32>> = images
+            .iter()
+            .map(|im| sess.forward(im).unwrap())
+            .collect();
+        for y in &seq {
+            assert_eq!(y.len(), 6);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(sess.forward_batch(&refs).unwrap(), seq);
+    }
+
+    #[test]
+    fn per_conv_policies_apply_in_graph_order() {
+        let policies = [
+            ExecPolicy::dense(2),
+            ExecPolicy::sparse(4, 0.7).with_workers(2),
+            ExecPolicy::sparse(2, 0.7),
+            ExecPolicy::sparse(6, 0.7).with_workers(1),
+            ExecPolicy {
+                sparse_threshold: 2.0, // force the pruned-dense backend
+                ..ExecPolicy::sparse(4, 0.7)
+            },
+        ];
+        let mut sess = Session::build(vgg_tiny(), &mut Synthetic::new(5), &policies).unwrap();
+        let backends = sess.conv_backends();
+        assert_eq!(backends[0], "dense");
+        assert_eq!(backends[1], "sparse");
+        assert_eq!(backends[4], "dense", "threshold 2.0 must force dense");
+        assert_eq!(sess.conv_policies().len(), 5);
+        let mut rng = Rng::new(8);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let logits = sess.forward(&image).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

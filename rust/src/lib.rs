@@ -10,9 +10,16 @@
 //!   the systolic-array accelerator (`systolic`, `scheduler`,
 //!   `accelerator`), its memory layout (`zmorton`) and sparse format
 //!   (`sparse`), the analytical model (`model`), the model-driven
-//!   per-layer autotuner (`tuner`), the FPGA resource model
+//!   per-node autotuner (`tuner`), the FPGA resource model
 //!   (`resources`), and a serving coordinator (`coordinator`) that
 //!   executes the AOT artifacts through PJRT (`runtime`).
+//!
+//! The public serving API is the typed graph IR ([`nn::graph`]): build a
+//! [`nn::graph::Graph`] (shape-inferred, validated), bind weights via a
+//! [`nn::graph::WeightSource`], compile into an [`executor::Session`]
+//! with one [`executor::ExecPolicy`] per conv node, and serve it through
+//! [`coordinator::InferenceServer::start_native`].  Every fallible
+//! boundary returns a typed [`nn::graph::GraphError`].
 
 pub mod accelerator;
 pub mod bench;

@@ -13,7 +13,7 @@ use swcnn::bench::print_table;
 use swcnn::coordinator::{InferenceServer, ServerConfig};
 use swcnn::memory::EnergyTable;
 use swcnn::model::table1;
-use swcnn::nn::{vgg16, vgg_tiny, Network};
+use swcnn::nn::{vgg16_network, vgg_tiny_network, Network};
 use swcnn::resources::{paper_configuration, XCVU095};
 use swcnn::scheduler::AcceleratorConfig;
 use swcnn::util::Rng;
@@ -76,8 +76,8 @@ impl Args {
 
 fn net_by_name(name: &str) -> Result<Network> {
     match name {
-        "vgg16" => Ok(vgg16()),
-        "vgg_tiny" => Ok(vgg_tiny()),
+        "vgg16" => Ok(vgg16_network()),
+        "vgg_tiny" => Ok(vgg_tiny_network()),
         _ => bail!("unknown net {name:?} (vgg16 | vgg_tiny)"),
     }
 }

@@ -3,7 +3,7 @@
 //! reference that picked m = 2 (Fig. 7a) and Table 1's counts.
 
 use crate::memory::EnergyTable;
-use crate::nn::{ConvLayer, Network};
+use crate::nn::{ConvLayer, ConvShape, Network};
 use crate::winograd::{nnz_counts, num_tiles, tile_size};
 
 /// Per-layer data volumes after the Winograd transform (eq. 6-8).
@@ -41,7 +41,9 @@ pub struct LayerModel {
 
 impl LayerModel {
     /// Evaluate eq. (6)-(10) exactly (ceil forms, not the approximations).
-    pub fn new(layer: &ConvLayer, m: usize) -> Self {
+    /// Takes the pure [`ConvShape`] geometry so legacy `Network` layers
+    /// (via [`ConvLayer::shape`]) and graph conv nodes score identically.
+    pub fn new(layer: &ConvShape, m: usize) -> Self {
         let r = layer.r;
         let l = tile_size(m, r);
         let (c, k) = (layer.in_ch as u64, layer.out_ch as u64);
@@ -130,7 +132,7 @@ pub fn table1(net: &Network, m: usize) -> Vec<StageCounts> {
     }
     let mut out: Vec<StageCounts> = Vec::new();
     for conv in &convs {
-        let lm = LayerModel::new(conv, m);
+        let lm = LayerModel::new(&conv.shape(), m);
         // Table 1 groups by (stage, shape); within a VGG stage the shapes
         // with equal in_ch form one row (the paper splits conv1 3-ch input
         // into "Conv1 (x2)" by taking the dominant 64-ch shape; we follow
@@ -157,7 +159,7 @@ pub fn energy_vs_m(net: &Network, ms: &[usize], t: &EnergyTable) -> Vec<(usize, 
             let e: f64 = net
                 .convs
                 .iter()
-                .map(|c| LayerModel::new(c, m).total_energy(t))
+                .map(|c| LayerModel::new(&c.shape(), m).total_energy(t))
                 .sum();
             (m, e)
         })
@@ -167,7 +169,7 @@ pub fn energy_vs_m(net: &Network, ms: &[usize], t: &EnergyTable) -> Vec<(usize, 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::vgg16;
+    use crate::nn::vgg16_network;
 
     #[test]
     fn volumes_match_paper_approximations() {
@@ -184,7 +186,7 @@ mod tests {
             hw: 224,
             r: 3,
         };
-        let lm = LayerModel::new(&layer, 2);
+        let lm = LayerModel::new(&layer.shape(), 2);
         // ceil(224/2)^2 * 64 * 16 = 112^2 * 1024
         assert_eq!(lm.volumes.d_wi, 112 * 112 * 64 * 16);
         assert_eq!(lm.volumes.d_wk, 64 * 64 * 16);
@@ -199,7 +201,7 @@ mod tests {
         //   ...
         //   Conv6: 131,072 / 4,194,304
         // Our exact eq. (6)/(8) for the 64-ch 224x224 layer:
-        let rows = table1(&vgg16(), 2);
+        let rows = table1(&vgg16_network(), 2);
         // Conv6 pseudo-row (fc6 as 7x7 conv): 131,072 / 4,194,304.
         assert!(rows
             .iter()
@@ -233,7 +235,7 @@ mod tests {
         };
         let direct = layer.direct_macs();
         for m in [2, 3, 4, 6] {
-            let lm = LayerModel::new(&layer, m);
+            let lm = LayerModel::new(&layer.shape(), m);
             assert!(
                 lm.arithmetic.m_w < direct,
                 "m={m}: {} !< {direct}",
@@ -241,8 +243,8 @@ mod tests {
             );
         }
         // And savings improve with m (fewer multiplies per output).
-        let m2 = LayerModel::new(&layer, 2).arithmetic.m_w;
-        let m6 = LayerModel::new(&layer, 6).arithmetic.m_w;
+        let m2 = LayerModel::new(&layer.shape(), 2).arithmetic.m_w;
+        let m6 = LayerModel::new(&layer.shape(), 6).arithmetic.m_w;
         assert!(m6 < m2);
     }
 
@@ -253,7 +255,7 @@ mod tests {
         // for late layers; overall the curve is convex-ish with the
         // minimum at small-to-mid m.  Check convexity qualitatively:
         let t = EnergyTable::default();
-        let curve = energy_vs_m(&vgg16(), &[2, 3, 4, 6], &t);
+        let curve = energy_vs_m(&vgg16_network(), &[2, 3, 4, 6], &t);
         let es: Vec<f64> = curve.iter().map(|&(_, e)| e).collect();
         // m=6 must be worse than the best of {2,3,4} (weight blowup).
         let best = es[..3].iter().cloned().fold(f64::INFINITY, f64::min);
@@ -272,7 +274,7 @@ mod tests {
             hw: 16,
             r: 3,
         };
-        let lm = LayerModel::new(&layer, 2);
+        let lm = LayerModel::new(&layer.shape(), 2);
         let th = 8u64; // ceil(16/2)
         let (nnz_b, nnz_a) = nnz_counts(2, 3);
         assert_eq!(
@@ -295,7 +297,7 @@ mod tests {
             hw: 32,
             r: 3,
         };
-        let lm = LayerModel::new(&layer, 2);
+        let lm = LayerModel::new(&layer.shape(), 2);
         let v1 = lm.volume_per_image(1);
         let v4 = lm.volume_per_image(4);
         let maps = (lm.volumes.d_wi + lm.volumes.d_wo) as f64;
@@ -319,7 +321,7 @@ mod tests {
             r: 3,
         };
         for m in [2, 4, 6] {
-            let e = LayerModel::new(&layer, m).total_energy(&t);
+            let e = LayerModel::new(&layer.shape(), m).total_energy(&t);
             assert!(e > 0.0);
         }
     }

@@ -1,0 +1,915 @@
+//! Typed graph IR: the public model description the serving stack
+//! compiles.
+//!
+//! The legacy [`crate::nn::Network`] could only express one implicit
+//! topology — a conv ladder with a `pool_after` heuristic and an FC tail.
+//! The graph IR makes the op sequence explicit: a [`Graph`] is a linear
+//! chain of typed [`Op`]s with **inferred, validated shapes**, built
+//! through [`GraphBuilder`].  Anything expressible with the ops below
+//! (arbitrary conv/pool interleavings, odd spatial sizes, nets that are
+//! not VGG) compiles onto the same
+//! [`crate::executor::Session`] machinery, mirroring how WinoCNN
+//! decouples its systolic fabric from layer shape via a uniform per-op
+//! interface.
+//!
+//! Weights are bound through the [`WeightSource`] trait —
+//! [`Synthetic`] for the deterministic He-scaled stand-in weights, or
+//! [`FileWeights`] for a flat binary blob written by [`save_weights`]
+//! (so a tuned model can be shipped and reloaded bit-identically).
+//!
+//! Every fallible boundary returns a typed [`GraphError`] instead of
+//! panicking: shape inference, policy validation, weight binding, and
+//! request execution.
+//!
+//! ```
+//! use swcnn::nn::graph::{GraphBuilder, Synthetic};
+//! use swcnn::executor::{ExecPolicy, Session};
+//!
+//! // conv -> pool -> conv on an odd spatial size (not expressible as a
+//! // legacy Network): build, compile, run.
+//! let g = GraphBuilder::new("demo", (3, 9, 9))
+//!     .pad(1)
+//!     .conv2d("c0", 8, 3)
+//!     .relu()
+//!     .maxpool2() // 9x9 -> 5x5 (ceil mode)
+//!     .pad(1)
+//!     .conv2d("c1", 8, 3)
+//!     .relu()
+//!     .flatten()
+//!     .fc("head", 4)
+//!     .build()
+//!     .unwrap();
+//! let mut sess = Session::uniform(g, &mut Synthetic::new(7), ExecPolicy::dense(2)).unwrap();
+//! let logits = sess.forward(&vec![0.1; 3 * 9 * 9]).unwrap();
+//! assert_eq!(logits.len(), 4);
+//! ```
+
+use crate::nn::ConvShape;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed error for every fallible graph/session boundary.  All the
+/// panicking asserts the old `Network` stack kept at its API edges
+/// (policy validation, input-length checks, shape mismatches) are
+/// variants here, so a server can reject a bad request instead of dying.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphError {
+    /// Shape inference failed at a node.
+    Shape { node: usize, msg: String },
+    /// An [`crate::executor::ExecPolicy`] knob is out of range.
+    Policy(String),
+    /// The per-conv policy list does not cover the graph's conv nodes.
+    PolicyCount { expected: usize, got: usize },
+    /// A request input has the wrong number of elements.
+    Input {
+        index: usize,
+        expected: usize,
+        got: usize,
+    },
+    /// `forward_batch` was called with no images.
+    EmptyBatch,
+    /// A batch exceeds the session's build-time workspace capacity.
+    BatchTooLarge { got: usize, max: usize },
+    /// A weight source could not produce (or persist) a tensor.
+    Weights(String),
+    /// Reading or writing a weight file failed.
+    Io(String),
+    /// A configuration value (batcher sizes, profile contents, ...) is
+    /// invalid for the graph it is applied to.
+    Config(String),
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Shape { node, msg } => write!(f, "shape error at node {node}: {msg}"),
+            GraphError::Policy(msg) => write!(f, "invalid ExecPolicy: {msg}"),
+            GraphError::PolicyCount { expected, got } => write!(
+                f,
+                "need one policy per conv node ({expected} conv nodes, {got} policies)"
+            ),
+            GraphError::Input {
+                index,
+                expected,
+                got,
+            } => write!(
+                f,
+                "image {index} has {got} elements, expected {expected}"
+            ),
+            GraphError::EmptyBatch => write!(f, "forward_batch needs at least one image"),
+            GraphError::BatchTooLarge { got, max } => write!(
+                f,
+                "batch of {got} exceeds the workspace capacity {max} — build the \
+                 session with with_max_batch({got}) or larger"
+            ),
+            GraphError::Weights(msg) => write!(f, "weight source: {msg}"),
+            GraphError::Io(msg) => write!(f, "weight file: {msg}"),
+            GraphError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+// ---------------------------------------------------------------------------
+// Ops, shapes, nodes
+// ---------------------------------------------------------------------------
+
+/// One typed operation.  Convs and FCs carry a name — the key their
+/// weights are bound and persisted under.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// VALID 2-D convolution (no implicit padding — compose with
+    /// [`Op::Pad`] for SAME semantics), r x r filters, stride 1.
+    Conv2d {
+        name: String,
+        out_ch: usize,
+        r: usize,
+    },
+    /// Elementwise max(x, 0); works on maps and flat vectors.
+    Relu,
+    /// 2x2 / stride-2 max pooling, **ceil mode**: odd spatial sizes keep
+    /// their last row/column as a clipped window (7x7 -> 4x4).
+    MaxPool2,
+    /// Zero-pad every spatial side by `p`.
+    Pad { p: usize },
+    /// Collapse a (C, H, W) map into a flat feature vector.
+    Flatten,
+    /// Fully-connected layer (no bias, matching the legacy FC head).
+    Fc { name: String, out_f: usize },
+}
+
+impl Op {
+    /// Short op mnemonic for error messages and listings.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Conv2d { .. } => "conv2d",
+            Op::Relu => "relu",
+            Op::MaxPool2 => "maxpool2",
+            Op::Pad { .. } => "pad",
+            Op::Flatten => "flatten",
+            Op::Fc { .. } => "fc",
+        }
+    }
+}
+
+/// An inferred activation shape flowing along the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// A (channels, height, width) feature map.
+    Chw(usize, usize, usize),
+    /// A flat feature vector.
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elements(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Shape::Chw(c, h, w) => write!(f, "({c}, {h}, {w})"),
+            Shape::Flat(n) => write!(f, "({n},)"),
+        }
+    }
+}
+
+/// One node: an op plus its inferred output shape.  `id` is the node's
+/// position in the chain — the key tuned profiles validate against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: usize,
+    pub op: Op,
+    pub out_shape: Shape,
+}
+
+/// A conv node's identity and geometry, as the tuner and scheduler see
+/// it: the graph node id, the weight name, and the [`ConvShape`] whose
+/// `hw` is the node's **output** spatial size (for the SAME-style
+/// pad+conv pairs the VGG constructors emit this equals the unpadded
+/// input size, matching the legacy `ConvLayer` convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvInfo {
+    pub node: usize,
+    pub name: String,
+    pub shape: ConvShape,
+}
+
+/// One weight tensor a graph needs, in the canonical binding order
+/// (conv nodes in graph order, then fc nodes in graph order — the order
+/// [`Synthetic`] draws its stream in, kept identical to the legacy
+/// `nn::synthetic_weights` stream so graph-built sessions reproduce the
+/// legacy executor bit for bit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightSpec {
+    pub node: usize,
+    pub name: String,
+    /// `[K, C, r, r]` for convs, `[out_f, in_f]` for fcs.
+    pub shape: Vec<usize>,
+}
+
+/// A typed, shape-inferred op chain.  Construct through
+/// [`GraphBuilder`]; every instance is valid by construction.
+///
+/// ```
+/// use swcnn::nn::vgg_tiny;
+/// let g = vgg_tiny();
+/// assert_eq!(g.input_elements(), 3 * 32 * 32);
+/// assert_eq!(g.output_elements(), 10);
+/// assert_eq!(g.conv_infos().len(), 5);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    name: String,
+    input: (usize, usize, usize),
+    nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The (C, H, W) the graph consumes.
+    pub fn input_shape(&self) -> Shape {
+        Shape::Chw(self.input.0, self.input.1, self.input.2)
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.input_shape().elements()
+    }
+
+    /// The final node's output shape (the input shape for an empty graph).
+    pub fn output_shape(&self) -> Shape {
+        self.nodes
+            .last()
+            .map(|n| n.out_shape)
+            .unwrap_or_else(|| self.input_shape())
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.output_shape().elements()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// The shape flowing **into** node `id` (the previous node's output,
+    /// or the graph input for node 0).
+    pub fn in_shape(&self, id: usize) -> Shape {
+        if id == 0 {
+            self.input_shape()
+        } else {
+            self.nodes[id - 1].out_shape
+        }
+    }
+
+    /// Every conv node with its geometry, in graph order — what the
+    /// tuner scores and a [`crate::tuner::TuneProfile`] is keyed by.
+    pub fn conv_infos(&self) -> Vec<ConvInfo> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Conv2d { name, out_ch, r } => {
+                    let Shape::Chw(c, _, _) = self.in_shape(n.id) else {
+                        unreachable!("conv input is a map by construction");
+                    };
+                    let Shape::Chw(_, oh, _) = n.out_shape else {
+                        unreachable!("conv output is a map by construction");
+                    };
+                    Some(ConvInfo {
+                        node: n.id,
+                        name: name.clone(),
+                        shape: ConvShape {
+                            in_ch: c,
+                            out_ch: *out_ch,
+                            hw: oh,
+                            r: *r,
+                        },
+                    })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Every weight tensor the graph binds, in the canonical order (see
+    /// [`WeightSpec`]).
+    pub fn weight_requests(&self) -> Vec<WeightSpec> {
+        let mut convs = Vec::new();
+        let mut fcs = Vec::new();
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv2d { name, out_ch, r } => {
+                    let Shape::Chw(c, _, _) = self.in_shape(n.id) else {
+                        unreachable!("conv input is a map by construction");
+                    };
+                    convs.push(WeightSpec {
+                        node: n.id,
+                        name: name.clone(),
+                        shape: vec![*out_ch, c, *r, *r],
+                    });
+                }
+                Op::Fc { name, out_f } => {
+                    let Shape::Flat(in_f) = self.in_shape(n.id) else {
+                        unreachable!("fc input is flat by construction");
+                    };
+                    fcs.push(WeightSpec {
+                        node: n.id,
+                        name: name.clone(),
+                        shape: vec![*out_f, in_f],
+                    });
+                }
+                _ => {}
+            }
+        }
+        convs.extend(fcs);
+        convs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder + shape inference
+// ---------------------------------------------------------------------------
+
+/// Chainable constructor for [`Graph`]: append ops, then
+/// [`GraphBuilder::build`] runs shape inference over the chain and
+/// returns the validated graph or the first [`GraphError`].
+///
+/// ```
+/// use swcnn::nn::graph::{GraphBuilder, Shape};
+/// let g = GraphBuilder::new("mini", (1, 4, 4))
+///     .pad(1)
+///     .conv2d("c", 2, 3)
+///     .relu()
+///     .maxpool2()
+///     .build()
+///     .unwrap();
+/// assert_eq!(g.output_shape(), Shape::Chw(2, 2, 2));
+///
+/// // An FC before a flatten is a typed error, not a panic:
+/// assert!(GraphBuilder::new("bad", (1, 4, 4)).fc("f", 2).build().is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    name: String,
+    input: (usize, usize, usize),
+    ops: Vec<Op>,
+}
+
+impl GraphBuilder {
+    /// Start a graph consuming (C, H, W) images.
+    pub fn new(name: &str, input: (usize, usize, usize)) -> Self {
+        Self {
+            name: name.to_string(),
+            input,
+            ops: Vec::new(),
+        }
+    }
+
+    pub fn op(mut self, op: Op) -> Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn pad(self, p: usize) -> Self {
+        self.op(Op::Pad { p })
+    }
+
+    pub fn conv2d(self, name: &str, out_ch: usize, r: usize) -> Self {
+        self.op(Op::Conv2d {
+            name: name.to_string(),
+            out_ch,
+            r,
+        })
+    }
+
+    pub fn relu(self) -> Self {
+        self.op(Op::Relu)
+    }
+
+    pub fn maxpool2(self) -> Self {
+        self.op(Op::MaxPool2)
+    }
+
+    pub fn flatten(self) -> Self {
+        self.op(Op::Flatten)
+    }
+
+    pub fn fc(self, name: &str, out_f: usize) -> Self {
+        self.op(Op::Fc {
+            name: name.to_string(),
+            out_f,
+        })
+    }
+
+    /// Run shape inference and return the validated graph.
+    pub fn build(self) -> Result<Graph, GraphError> {
+        let (c, h, w) = self.input;
+        if c == 0 || h == 0 || w == 0 {
+            return Err(GraphError::Shape {
+                node: 0,
+                msg: format!("graph input ({c}, {h}, {w}) has a zero dimension"),
+            });
+        }
+        let mut cur = Shape::Chw(c, h, w);
+        let mut nodes = Vec::with_capacity(self.ops.len());
+        let mut weight_names: Vec<String> = Vec::new();
+        for (id, op) in self.ops.into_iter().enumerate() {
+            let out = infer(id, &op, cur)?;
+            if let Op::Conv2d { name, .. } | Op::Fc { name, .. } = &op {
+                if name.is_empty() {
+                    return Err(GraphError::Shape {
+                        node: id,
+                        msg: format!("{} node needs a non-empty weight name", op.kind()),
+                    });
+                }
+                if weight_names.iter().any(|n| n == name) {
+                    return Err(GraphError::Shape {
+                        node: id,
+                        msg: format!("duplicate weight name {name:?}"),
+                    });
+                }
+                weight_names.push(name.clone());
+            }
+            nodes.push(Node {
+                id,
+                op,
+                out_shape: out,
+            });
+            cur = out;
+        }
+        Ok(Graph {
+            name: self.name,
+            input: self.input,
+            nodes,
+        })
+    }
+}
+
+/// Shape-inference rule for one op.
+fn infer(id: usize, op: &Op, input: Shape) -> Result<Shape, GraphError> {
+    let want_map = |shape: Shape| -> Result<(usize, usize, usize), GraphError> {
+        match shape {
+            Shape::Chw(c, h, w) => Ok((c, h, w)),
+            Shape::Flat(_) => Err(GraphError::Shape {
+                node: id,
+                msg: format!("{} needs a (C, H, W) map input, got {shape}", op.kind()),
+            }),
+        }
+    };
+    match op {
+        Op::Pad { p } => {
+            let (c, h, w) = want_map(input)?;
+            Ok(Shape::Chw(c, h + 2 * p, w + 2 * p))
+        }
+        Op::Conv2d { out_ch, r, .. } => {
+            let (_, h, w) = want_map(input)?;
+            if *r == 0 || *out_ch == 0 {
+                return Err(GraphError::Shape {
+                    node: id,
+                    msg: format!("conv2d needs r >= 1 and out_ch >= 1, got r={r} out_ch={out_ch}"),
+                });
+            }
+            if h < *r || w < *r {
+                return Err(GraphError::Shape {
+                    node: id,
+                    msg: format!("{h}x{w} input is smaller than the {r}x{r} filter"),
+                });
+            }
+            Ok(Shape::Chw(*out_ch, h - r + 1, w - r + 1))
+        }
+        Op::Relu => Ok(input),
+        Op::MaxPool2 => {
+            let (c, h, w) = want_map(input)?;
+            // Ceil mode: an odd trailing row/column pools as a clipped
+            // window (see `nn::maxpool2_into`).
+            Ok(Shape::Chw(c, h.div_ceil(2), w.div_ceil(2)))
+        }
+        Op::Flatten => {
+            let (c, h, w) = want_map(input)?;
+            Ok(Shape::Flat(c * h * w))
+        }
+        Op::Fc { out_f, .. } => match input {
+            Shape::Flat(_) if *out_f > 0 => Ok(Shape::Flat(*out_f)),
+            Shape::Flat(_) => Err(GraphError::Shape {
+                node: id,
+                msg: "fc needs out_f >= 1".to_string(),
+            }),
+            other => Err(GraphError::Shape {
+                node: id,
+                msg: format!("fc needs a flat input (insert a flatten), got {other}"),
+            }),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weight sources
+// ---------------------------------------------------------------------------
+
+/// Where a session's weights come from.  The session requests each
+/// tensor in the graph's canonical order ([`Graph::weight_requests`]);
+/// a source may be consulted once per build.
+pub trait WeightSource {
+    /// Produce the tensor for `spec` (shape must match `spec.shape`).
+    fn tensor(&mut self, spec: &WeightSpec) -> Result<Tensor, GraphError>;
+}
+
+/// Deterministic He-scaled gaussian weights from one seeded stream —
+/// the stand-in for reference \[2\]'s pruned VGG weights.  Drawing in
+/// the canonical request order reproduces the legacy
+/// `nn::synthetic_weights` stream exactly, so a graph-built session
+/// serves bit-identical logits to the pre-graph executor.
+///
+/// ```
+/// use swcnn::nn::graph::{Synthetic, WeightSource};
+/// use swcnn::nn::vgg_tiny;
+/// let g = vgg_tiny();
+/// let spec = &g.weight_requests()[0];
+/// let w = Synthetic::new(5).tensor(spec).unwrap();
+/// assert_eq!(w.shape(), &[16, 3, 3, 3]);
+/// ```
+pub struct Synthetic {
+    rng: Rng,
+}
+
+impl Synthetic {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl WeightSource for Synthetic {
+    fn tensor(&mut self, spec: &WeightSpec) -> Result<Tensor, GraphError> {
+        // He scaling over the tensor's fan-in: C*r*r for convs, in_f for
+        // fcs — i.e. everything after the leading output dimension.
+        let fan_in: usize = spec.shape[1..].iter().product();
+        let n: usize = spec.shape.iter().product();
+        if fan_in == 0 || n == 0 {
+            return Err(GraphError::Weights(format!(
+                "{}: degenerate weight shape {:?}",
+                spec.name, spec.shape
+            )));
+        }
+        let scale = (2.0 / fan_in as f64).sqrt() as f32;
+        let data: Vec<f32> = self
+            .rng
+            .gaussian_vec(n)
+            .iter()
+            .map(|v| v * scale)
+            .collect();
+        Ok(Tensor::from_vec(&spec.shape, data))
+    }
+}
+
+/// An in-memory weight table — the loaded form of a weight file, and a
+/// handy source for tests that bind explicit tensors.
+pub struct MapWeights {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl MapWeights {
+    pub fn new() -> Self {
+        Self {
+            tensors: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+impl Default for MapWeights {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WeightSource for MapWeights {
+    fn tensor(&mut self, spec: &WeightSpec) -> Result<Tensor, GraphError> {
+        let t = self.tensors.get(&spec.name).ok_or_else(|| {
+            GraphError::Weights(format!("no tensor named {:?} in the source", spec.name))
+        })?;
+        if t.shape() != spec.shape.as_slice() {
+            return Err(GraphError::Weights(format!(
+                "{}: stored shape {:?} does not match the graph's {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            )));
+        }
+        Ok(t.clone())
+    }
+}
+
+/// File-backed weights: a flat binary blob with a JSON directory, the
+/// roundtrip partner of [`save_weights`].
+pub type FileWeights = MapWeights;
+
+// The blob layout: MAGIC, a little-endian u64 header length, the JSON
+// header (graph name + entries with name/node/shape/offset), then the
+// raw f32 little-endian data section.
+const WEIGHTS_MAGIC: &[u8; 8] = b"SWCNNWB1";
+
+/// Pull every weight the graph needs from `source` and persist them as
+/// one flat binary blob that [`load_weights`] restores bit-identically.
+pub fn save_weights(
+    path: impl AsRef<Path>,
+    graph: &Graph,
+    source: &mut dyn WeightSource,
+) -> Result<(), GraphError> {
+    use crate::util::json::Json;
+    let path = path.as_ref();
+    let mut entries = Vec::new();
+    let mut data: Vec<u8> = Vec::new();
+    let mut offset = 0u64;
+    for spec in graph.weight_requests() {
+        let t = source.tensor(&spec)?;
+        if t.shape() != spec.shape.as_slice() {
+            return Err(GraphError::Weights(format!(
+                "{}: source produced shape {:?}, graph needs {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            )));
+        }
+        let len = t.data().len() as u64;
+        entries.push(Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::Str(spec.name.clone())),
+            ("node".to_string(), Json::Num(spec.node as f64)),
+            (
+                "shape".to_string(),
+                Json::Arr(spec.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("offset".to_string(), Json::Num(offset as f64)),
+            ("len".to_string(), Json::Num(len as f64)),
+        ])));
+        for v in t.data() {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        offset += len;
+    }
+    let header = Json::Obj(BTreeMap::from([
+        ("kind".to_string(), Json::Str("weights".to_string())),
+        ("graph".to_string(), Json::Str(graph.name().to_string())),
+        ("entries".to_string(), Json::Arr(entries)),
+    ]))
+    .to_string();
+    let mut blob = Vec::with_capacity(16 + header.len() + data.len());
+    blob.extend_from_slice(WEIGHTS_MAGIC);
+    blob.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    blob.extend_from_slice(header.as_bytes());
+    blob.extend_from_slice(&data);
+    std::fs::write(path, blob)
+        .map_err(|e| GraphError::Io(format!("writing {}: {e}", path.display())))
+}
+
+/// Load a weight blob written by [`save_weights`].  The result is a
+/// [`FileWeights`] source usable with any graph whose weight names and
+/// shapes match.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<FileWeights, GraphError> {
+    use crate::util::json::Json;
+    let path = path.as_ref();
+    let blob = std::fs::read(path)
+        .map_err(|e| GraphError::Io(format!("reading {}: {e}", path.display())))?;
+    let bad = |msg: &str| GraphError::Io(format!("{}: {msg}", path.display()));
+    if blob.len() < 16 || &blob[..8] != WEIGHTS_MAGIC {
+        return Err(bad("not a swcnn weight blob (bad magic)"));
+    }
+    let header_len = u64::from_le_bytes(blob[8..16].try_into().unwrap()) as usize;
+    let Some(header_bytes) = blob.get(16..16 + header_len) else {
+        return Err(bad("truncated header"));
+    };
+    let header_text = std::str::from_utf8(header_bytes)
+        .map_err(|_| bad("header is not valid UTF-8"))?;
+    let header =
+        Json::parse(header_text).map_err(|e| bad(&format!("header parse error: {e}")))?;
+    let data = &blob[16 + header_len..];
+    if data.len() % 4 != 0 {
+        return Err(bad("data section is not a whole number of f32s"));
+    }
+    let floats: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let entries = header
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| bad("header has no entries array"))?;
+    let mut out = MapWeights::new();
+    for e in entries {
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| bad("entry without a name"))?;
+        let shape = e
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| bad("entry without a shape"))?;
+        let off = e
+            .get("offset")
+            .and_then(|o| o.as_usize())
+            .ok_or_else(|| bad("entry without an offset"))?;
+        let len = e
+            .get("len")
+            .and_then(|l| l.as_usize())
+            .ok_or_else(|| bad("entry without a len"))?;
+        if shape.iter().product::<usize>() != len {
+            return Err(bad(&format!("{name}: shape {shape:?} disagrees with len {len}")));
+        }
+        let Some(slice) = floats.get(off..off + len) else {
+            return Err(bad(&format!("{name}: data range out of bounds")));
+        };
+        out.insert(name, Tensor::from_vec(&shape, slice.to_vec()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{vgg16, vgg_tiny};
+
+    #[test]
+    fn builder_infers_vgg_tiny_shapes() {
+        let g = vgg_tiny();
+        assert_eq!(g.name(), "vgg_tiny");
+        assert_eq!(g.input_shape(), Shape::Chw(3, 32, 32));
+        assert_eq!(g.output_shape(), Shape::Flat(10));
+        let convs = g.conv_infos();
+        assert_eq!(convs.len(), 5);
+        assert_eq!(convs[0].name, "conv0");
+        assert_eq!(convs[0].shape.in_ch, 3);
+        assert_eq!(convs[0].shape.out_ch, 16);
+        assert_eq!(convs[0].shape.hw, 32);
+        assert_eq!(convs[4].shape.hw, 8);
+        // Node ids are distinct positions in the chain.
+        let ids: Vec<usize> = convs.iter().map(|c| c.node).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ids.len(), sorted.len());
+    }
+
+    #[test]
+    fn vgg16_graph_matches_paper_head() {
+        let g = vgg16();
+        assert_eq!(g.input_elements(), 3 * 224 * 224);
+        assert_eq!(g.output_elements(), 1000);
+        assert_eq!(g.conv_infos().len(), 13);
+        // Five pools: 224 -> 7 before the FC head.
+        let flat = g
+            .nodes()
+            .iter()
+            .find_map(|n| match n.op {
+                Op::Flatten => Some(n.out_shape),
+                _ => None,
+            })
+            .expect("vgg16 flattens before its head");
+        assert_eq!(flat, Shape::Flat(512 * 7 * 7));
+    }
+
+    #[test]
+    fn ceil_mode_pool_shapes() {
+        let g = GraphBuilder::new("odd", (2, 7, 9))
+            .maxpool2()
+            .build()
+            .unwrap();
+        assert_eq!(g.output_shape(), Shape::Chw(2, 4, 5));
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        // fc before flatten
+        let e = GraphBuilder::new("g", (1, 4, 4)).fc("f", 2).build().unwrap_err();
+        assert!(matches!(e, GraphError::Shape { node: 0, .. }), "{e}");
+        // conv smaller than filter
+        let e = GraphBuilder::new("g", (1, 2, 2))
+            .conv2d("c", 4, 3)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("smaller than"), "{e}");
+        // pad after flatten
+        let e = GraphBuilder::new("g", (1, 4, 4))
+            .flatten()
+            .pad(1)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, GraphError::Shape { node: 1, .. }), "{e}");
+        // duplicate weight names
+        let e = GraphBuilder::new("g", (1, 8, 8))
+            .conv2d("c", 2, 3)
+            .conv2d("c", 2, 3)
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+        // zero-sized input
+        let e = GraphBuilder::new("g", (0, 4, 4)).build().unwrap_err();
+        assert!(e.to_string().contains("zero dimension"), "{e}");
+    }
+
+    #[test]
+    fn weight_requests_are_convs_then_fcs() {
+        let g = vgg_tiny();
+        let reqs = g.weight_requests();
+        assert_eq!(reqs.len(), 7);
+        assert_eq!(reqs[0].shape, vec![16, 3, 3, 3]);
+        assert_eq!(reqs[4].shape, vec![64, 32, 3, 3]);
+        assert_eq!(reqs[5].shape, vec![128, 64 * 4 * 4]);
+        assert_eq!(reqs[6].shape, vec![10, 128]);
+        // Convs strictly precede fcs regardless of node ids.
+        assert!(reqs[..5].iter().all(|r| r.shape.len() == 4));
+        assert!(reqs[5..].iter().all(|r| r.shape.len() == 2));
+    }
+
+    #[test]
+    fn synthetic_matches_legacy_stream() {
+        // The graph-ordered synthetic stream must reproduce the legacy
+        // `nn::synthetic_weights` tensors exactly.
+        let net = crate::nn::vgg_tiny_network();
+        let (convs, fcs) = crate::nn::synthetic_weights(&net, 5);
+        let g = vgg_tiny();
+        let mut src = Synthetic::new(5);
+        for (spec, want) in g.weight_requests().iter().zip(convs.iter().chain(&fcs)) {
+            let got = src.tensor(spec).unwrap();
+            assert_eq!(&got, want, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn map_source_checks_names_and_shapes() {
+        let g = GraphBuilder::new("g", (1, 4, 4))
+            .conv2d("c", 2, 3)
+            .build()
+            .unwrap();
+        let spec = &g.weight_requests()[0];
+        let mut empty = MapWeights::new();
+        assert!(matches!(
+            empty.tensor(spec).unwrap_err(),
+            GraphError::Weights(_)
+        ));
+        let mut wrong = MapWeights::new();
+        wrong.insert("c", Tensor::zeros(&[2, 1, 5, 5]));
+        assert!(wrong.tensor(spec).unwrap_err().to_string().contains("shape"));
+        let mut ok = MapWeights::new();
+        ok.insert("c", Tensor::zeros(&[2, 1, 3, 3]));
+        assert_eq!(ok.tensor(spec).unwrap().shape(), &[2, 1, 3, 3]);
+    }
+
+    #[test]
+    fn weights_roundtrip_through_file() {
+        let g = vgg_tiny();
+        let path = std::env::temp_dir().join(format!(
+            "swcnn_weights_rt_{}.bin",
+            std::process::id()
+        ));
+        save_weights(&path, &g, &mut Synthetic::new(9)).unwrap();
+        let mut loaded = load_weights(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let mut fresh = Synthetic::new(9);
+        for spec in g.weight_requests() {
+            let a = loaded.tensor(&spec).unwrap();
+            let b = fresh.tensor(&spec).unwrap();
+            assert_eq!(a, b, "{} must roundtrip bit-identically", spec.name);
+        }
+    }
+
+    #[test]
+    fn load_weights_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!(
+            "swcnn_weights_bad_{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, b"not a weight blob").unwrap();
+        let e = load_weights(&path).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        assert!(matches!(e, GraphError::Io(_)), "{e}");
+        assert!(load_weights("/definitely/not/here/w.bin").is_err());
+    }
+}

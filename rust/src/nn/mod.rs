@@ -1,15 +1,53 @@
 //! Network descriptors: the layer shapes the accelerator schedules.
 //!
-//! VGG16 (paper §6.1, Table 1) plus the reduced VGG-Tiny used by the
-//! end-to-end PJRT driver.  Mirrors `python/compile/model.py` — the same
-//! stage structure produces both the HLO artifacts and the simulator's
-//! workload description.
+//! The public model description is the typed [`graph`] IR —
+//! [`vgg16`] and [`vgg_tiny`] are graph constructors consumed by
+//! [`crate::executor::Session`].  The legacy [`Network`] ladder remains
+//! as the *simulator workload descriptor* (the cycle-level accelerator
+//! model and the paper-table benches walk its conv list); build one with
+//! [`vgg16_network`] / [`vgg_tiny_network`] or convert it to a graph
+//! with [`Network::to_graph`].
 //!
 //! Also hosts the layer *operations* the native serving path composes
-//! around [`crate::executor::ConvExecutor`]: SAME padding, ReLU, and the
-//! 2x2 stage pooling (VGG pools after the last conv of every stage).
+//! around [`crate::executor::ConvExecutor`]: SAME padding, ReLU, and
+//! ceil-mode 2x2 pooling (VGG pools after the last conv of every stage).
+
+pub mod graph;
 
 use crate::tensor::Tensor;
+
+/// The pure geometry of a convolution — what the analytical model and
+/// the scheduler consume.  `hw` is the **output** spatial size (for the
+/// SAME-padded VGG convolutions it equals the unpadded input size).
+/// Both the legacy [`ConvLayer`] (via [`ConvLayer::shape`]) and graph
+/// conv nodes (via [`graph::Graph::conv_infos`]) produce one, so the
+/// tuner and simulator score arbitrary graphs and paper networks through
+/// the same code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    /// Output spatial size (H = W in the model's equations).
+    pub hw: usize,
+    pub r: usize,
+}
+
+impl ConvShape {
+    /// Output spatial size (SAME padding, stride 1).
+    pub fn out_hw(&self) -> usize {
+        self.hw
+    }
+
+    /// MACs of the direct (spatial) convolution — eq. (1).
+    pub fn direct_macs(&self) -> u64 {
+        (self.out_ch * self.in_ch * self.hw * self.hw * self.r * self.r) as u64
+    }
+
+    /// Operation count used for Gops/s reporting (2 ops per MAC).
+    pub fn direct_ops(&self) -> u64 {
+        2 * self.direct_macs()
+    }
+}
 
 /// One convolutional layer (3x3, stride 1, SAME padding in VGG).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,6 +63,16 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
+    /// The layer's geometry for the model/scheduler/tuner.
+    pub fn shape(&self) -> ConvShape {
+        ConvShape {
+            in_ch: self.in_ch,
+            out_ch: self.out_ch,
+            hw: self.hw,
+            r: self.r,
+        }
+    }
+
     /// Output spatial size (SAME padding, stride 1).
     pub fn out_hw(&self) -> usize {
         self.hw
@@ -32,12 +80,12 @@ impl ConvLayer {
 
     /// MACs of the direct (spatial) convolution — eq. (1).
     pub fn direct_macs(&self) -> u64 {
-        (self.out_ch * self.in_ch * self.hw * self.hw * self.r * self.r) as u64
+        self.shape().direct_macs()
     }
 
     /// Operation count used for Gops/s reporting (2 ops per MAC).
     pub fn direct_ops(&self) -> u64 {
-        2 * self.direct_macs()
+        self.shape().direct_ops()
     }
 }
 
@@ -154,37 +202,41 @@ pub fn relu_inplace(x: &mut Tensor) {
 }
 
 /// 2x2 / stride-2 max pooling of `planes` stacked (h, w) planes into
-/// `dst` (`planes` stacked (h/2, w/2) planes).  Asserts even spatial
-/// dims: floor semantics would silently drop the last row/column.
+/// `dst` (`planes` stacked (ceil(h/2), ceil(w/2)) planes).  **Ceil
+/// mode**: an odd trailing row/column pools as a clipped 1-wide window
+/// instead of being dropped (real nets hit 7x7 -> 4x4 pools).  Even
+/// inputs are bit-identical to the historical even-only implementation.
 pub fn maxpool2_into(src: &[f32], planes: usize, h: usize, w: usize, dst: &mut [f32]) {
-    assert!(
-        h % 2 == 0 && w % 2 == 0,
-        "2x2/stride-2 max pool requires even spatial dims, got {h}x{w}: \
-         odd inputs would silently drop the last row/column"
-    );
-    let (oh, ow) = (h / 2, w / 2);
+    assert!(h >= 1 && w >= 1, "maxpool2_into: empty spatial dims");
+    let (oh, ow) = (h.div_ceil(2), w.div_ceil(2));
     assert_eq!(src.len(), planes * h * w, "maxpool2_into: source length");
     assert_eq!(dst.len(), planes * oh * ow, "maxpool2_into: destination length");
     for pl in 0..planes {
         for i in 0..oh {
             let r0 = &src[(pl * h + 2 * i) * w..][..w];
-            let r1 = &src[(pl * h + 2 * i + 1) * w..][..w];
+            let r1 = (2 * i + 1 < h).then(|| &src[(pl * h + 2 * i + 1) * w..][..w]);
             let drow = &mut dst[(pl * oh + i) * ow..][..ow];
             for (j, d) in drow.iter_mut().enumerate() {
-                *d = r0[2 * j]
-                    .max(r0[2 * j + 1])
-                    .max(r1[2 * j])
-                    .max(r1[2 * j + 1]);
+                let mut m = r0[2 * j];
+                if 2 * j + 1 < w {
+                    m = m.max(r0[2 * j + 1]);
+                }
+                if let Some(r1) = r1 {
+                    m = m.max(r1[2 * j]);
+                    if 2 * j + 1 < w {
+                        m = m.max(r1[2 * j + 1]);
+                    }
+                }
+                *d = m;
             }
         }
     }
 }
 
-/// 2x2 max pooling with stride 2.  VGG spatial sizes are even at every
-/// pool; odd inputs are a caller bug and assert (see [`maxpool2_into`]).
+/// 2x2 max pooling with stride 2, ceil mode (see [`maxpool2_into`]).
 pub fn maxpool2(x: &Tensor) -> Tensor {
     let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
-    let mut out = Tensor::zeros(&[c, h / 2, w / 2]);
+    let mut out = Tensor::zeros(&[c, h.div_ceil(2), w.div_ceil(2)]);
     maxpool2_into(x.data(), c, h, w, out.data_mut());
     out
 }
@@ -217,9 +269,9 @@ pub fn fc_into(wm: &Tensor, n: usize, xs: &[f32], out: &mut [f32]) {
 /// Deterministic synthetic weights for a whole network: He-scaled
 /// gaussians per layer, convs first then FCs, all drawn from **one**
 /// seeded stream — the stand-in for reference \[2\]'s pruned VGG weights.
-/// [`crate::executor::NetworkExecutor::synthetic`] and the tuner's
-/// calibration pass both draw from here, so the weights the tuner
-/// measures are exactly the weights serving runs.
+/// [`graph::Synthetic`] draws the same stream in the graph's canonical
+/// request order, so graph-built sessions and the tuner's calibration
+/// pass measure exactly the weights legacy serving ran.
 pub fn synthetic_weights(net: &Network, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
     let mut rng = crate::util::Rng::new(seed);
     let convs = net
@@ -252,8 +304,62 @@ pub fn synthetic_weights(net: &Network, seed: u64) -> (Vec<Tensor>, Vec<Tensor>)
     (convs, fcs)
 }
 
-/// VGG16 with 224x224x3 input — the paper's workload.
-pub fn vgg16() -> Network {
+/// VGG16 with 224x224x3 input as a typed [`graph::Graph`] — the paper's
+/// workload through the public graph/session API.
+pub fn vgg16() -> graph::Graph {
+    vgg16_network().to_graph()
+}
+
+/// The reduced VGG as a typed [`graph::Graph`] (see [`vgg_tiny_network`]
+/// for the simulator descriptor).
+///
+/// ```
+/// use swcnn::executor::{ExecPolicy, Session};
+/// use swcnn::nn::{graph::Synthetic, vgg_tiny};
+/// let mut sess =
+///     Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::sparse(2, 0.7)).unwrap();
+/// let logits = sess.forward(&vec![0.0; sess.input_elements()]).unwrap();
+/// assert_eq!(logits.len(), 10);
+/// ```
+pub fn vgg_tiny() -> graph::Graph {
+    vgg_tiny_network().to_graph()
+}
+
+impl Network {
+    /// Lower the ladder into the typed graph IR: per conv, SAME pad +
+    /// conv + ReLU, a ceil-mode 2x2 pool after each stage
+    /// ([`Network::pool_after`]), then flatten and the FC head with ReLU
+    /// between (not after) the FC layers — exactly the op sequence the
+    /// legacy executor hard-wired.
+    pub fn to_graph(&self) -> graph::Graph {
+        let mut b = graph::GraphBuilder::new(
+            self.name,
+            (self.input_ch, self.input_hw, self.input_hw),
+        );
+        for (i, conv) in self.convs.iter().enumerate() {
+            b = b
+                .pad(same_pad(conv.r))
+                .conv2d(conv.name, conv.out_ch, conv.r)
+                .relu();
+            if self.pool_after(i) {
+                b = b.maxpool2();
+            }
+        }
+        b = b.flatten();
+        let n_fc = self.fcs.len();
+        for (j, fc) in self.fcs.iter().enumerate() {
+            b = b.fc(fc.name, fc.out_f);
+            if j + 1 < n_fc {
+                b = b.relu();
+            }
+        }
+        b.build()
+            .expect("a well-formed Network lowers to a valid graph")
+    }
+}
+
+/// VGG16 with 224x224x3 input — the simulator's workload descriptor.
+pub fn vgg16_network() -> Network {
     let convs = vec![
         ConvLayer { name: "conv1_1", stage: 1, in_ch: 3, out_ch: 64, hw: 224, r: 3 },
         ConvLayer { name: "conv1_2", stage: 1, in_ch: 64, out_ch: 64, hw: 224, r: 3 },
@@ -284,8 +390,9 @@ pub fn vgg16() -> Network {
 }
 
 /// The reduced VGG used by the end-to-end CPU driver (must match
-/// `python/compile/model.py::VGG_TINY`).
-pub fn vgg_tiny() -> Network {
+/// `python/compile/model.py::VGG_TINY`) — the simulator's descriptor;
+/// serving goes through [`vgg_tiny`].
+pub fn vgg_tiny_network() -> Network {
     let convs = vec![
         ConvLayer { name: "conv0", stage: 1, in_ch: 3, out_ch: 16, hw: 32, r: 3 },
         ConvLayer { name: "conv1", stage: 1, in_ch: 16, out_ch: 16, hw: 32, r: 3 },
@@ -312,7 +419,7 @@ mod tests {
 
     #[test]
     fn vgg16_structure() {
-        let net = vgg16();
+        let net = vgg16_network();
         assert_eq!(net.convs.len(), 13);
         assert_eq!(net.fcs.len(), 3);
         assert_eq!(net.convs[0].hw, 224);
@@ -323,7 +430,7 @@ mod tests {
     #[test]
     fn vgg16_total_macs_ballpark() {
         // VGG16 convolutions are ~15.3 GMACs for 224x224 input.
-        let macs = vgg16().total_conv_macs();
+        let macs = vgg16_network().total_conv_macs();
         assert!(
             (14.0e9..16.0e9).contains(&(macs as f64)),
             "got {macs}"
@@ -332,7 +439,7 @@ mod tests {
 
     #[test]
     fn stage_spatial_halving() {
-        let net = vgg16();
+        let net = vgg16_network();
         for w in net.convs.windows(2) {
             if w[1].stage == w[0].stage {
                 assert_eq!(w[1].hw, w[0].hw);
@@ -344,7 +451,7 @@ mod tests {
 
     #[test]
     fn vgg_tiny_matches_python_config() {
-        let net = vgg_tiny();
+        let net = vgg_tiny_network();
         assert_eq!(net.convs.len(), 5);
         assert_eq!(net.fcs[0].in_f, 1024);
         assert_eq!(net.fcs[1].out_f, 10);
@@ -354,7 +461,7 @@ mod tests {
     fn pool_after_matches_fc_input_sizes() {
         // Following pool_after through the stages must land exactly on
         // the FC head's expected input volume, for both networks.
-        for net in [vgg16(), vgg_tiny()] {
+        for net in [vgg16_network(), vgg_tiny_network()] {
             let mut hw = net.input_hw;
             let mut ch = net.input_ch;
             for (i, conv) in net.convs.iter().enumerate() {
@@ -405,9 +512,30 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "even spatial dims")]
-    fn maxpool2_rejects_odd_spatial_dims() {
-        maxpool2(&Tensor::zeros(&[1, 3, 4]));
+    fn maxpool2_ceil_mode_odd_inputs() {
+        // 3x4: the last row pools as a clipped 1-high window.
+        let x = Tensor::from_vec(
+            &[1, 3, 4],
+            vec![
+                1.0, 2.0, 3.0, 4.0, //
+                5.0, 6.0, 7.0, 8.0, //
+                9.0, -1.0, -2.0, -3.0,
+            ],
+        );
+        let y = maxpool2(&x);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0, 9.0, -2.0]);
+        // 3x3: clipped in both directions; the corner is its own window.
+        let x = Tensor::from_vec(
+            &[1, 3, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0],
+        );
+        let y = maxpool2(&x);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 6.0, 8.0, 9.0]);
+        // 1x1 degenerates to the identity.
+        let x = Tensor::from_vec(&[1, 1, 1], vec![-4.0]);
+        assert_eq!(maxpool2(&x).data(), &[-4.0]);
     }
 
     #[test]
@@ -442,7 +570,7 @@ mod tests {
 
     #[test]
     fn synthetic_weights_shapes_and_determinism() {
-        let net = vgg_tiny();
+        let net = vgg_tiny_network();
         let (convs, fcs) = synthetic_weights(&net, 5);
         assert_eq!(convs.len(), net.convs.len());
         assert_eq!(fcs.len(), net.fcs.len());

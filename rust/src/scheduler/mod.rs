@@ -16,7 +16,7 @@
 
 use crate::memory::{AccessCounter, EnergyTable, Level};
 use crate::model::LayerModel;
-use crate::nn::ConvLayer;
+use crate::nn::ConvShape;
 use crate::sparse::Bcoo;
 use crate::systolic::BlockTiming;
 use crate::winograd::{num_tiles, tile_size, SparseFilterBank};
@@ -115,8 +115,10 @@ impl LayerPlan {
     }
 }
 
-/// Schedule one layer densely.
-pub fn schedule_dense(layer: &ConvLayer, cfg: &AcceleratorConfig) -> LayerPlan {
+/// Schedule one layer densely.  Takes the pure [`ConvShape`] geometry —
+/// legacy `Network` layers (via `ConvLayer::shape`) and graph conv nodes
+/// schedule through the same code.
+pub fn schedule_dense(layer: &ConvShape, cfg: &AcceleratorConfig) -> LayerPlan {
     let l = cfg.l();
     let timing = BlockTiming::new(l);
     let tiles_1d = num_tiles(layer.out_hw(), cfg.m);
@@ -156,7 +158,7 @@ pub fn schedule_dense(layer: &ConvLayer, cfg: &AcceleratorConfig) -> LayerPlan {
 /// single representative directory it may repeat it.  `None` entries fall
 /// back to dense (e.g. the 3-channel first layer).
 pub fn schedule_sparse(
-    layer: &ConvLayer,
+    layer: &ConvShape,
     cfg: &AcceleratorConfig,
     weight_directories: &[Option<&Bcoo>],
 ) -> LayerPlan {
@@ -213,7 +215,7 @@ pub fn schedule_sparse(
 /// simulation streams, so the analytical plan, the CPU numerics, and the
 /// simulated hardware all describe one weight set.
 pub fn schedule_sparse_bank(
-    layer: &ConvLayer,
+    layer: &ConvShape,
     cfg: &AcceleratorConfig,
     bank: &SparseFilterBank,
 ) -> LayerPlan {
@@ -226,7 +228,7 @@ pub fn schedule_sparse_bank(
 /// the block-sparse pipeline otherwise — the single entry point the
 /// tuner scores candidate (m, clusters, backend) configurations through.
 pub fn schedule_layer(
-    layer: &ConvLayer,
+    layer: &ConvShape,
     cfg: &AcceleratorConfig,
     bank: Option<&SparseFilterBank>,
 ) -> LayerPlan {
@@ -240,7 +242,7 @@ pub fn schedule_layer(
 /// *measured-style* counts that mirror §5.1.3's assumptions: transformed
 /// maps live in local memory, weights stream from external memory).
 pub fn layer_accesses(
-    layer: &ConvLayer,
+    layer: &ConvShape,
     cfg: &AcceleratorConfig,
     sparsity: Option<f64>,
 ) -> AccessCounter {
@@ -275,7 +277,7 @@ pub fn cycles_to_seconds(cycles: u64, cfg: &AcceleratorConfig) -> f64 {
 
 /// Layer energy in MAC-units under a table (dense or sparse).
 pub fn layer_energy(
-    layer: &ConvLayer,
+    layer: &ConvShape,
     cfg: &AcceleratorConfig,
     sparsity: Option<f64>,
     table: &EnergyTable,
@@ -286,12 +288,12 @@ pub fn layer_energy(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::vgg16;
+    use crate::nn::vgg16_network;
     use crate::sparse::synthetic_sparse_matrix;
     use crate::util::Rng;
 
-    fn conv5() -> ConvLayer {
-        vgg16().convs[10]
+    fn conv5() -> ConvShape {
+        vgg16_network().convs[10].shape()
     }
 
     #[test]
@@ -335,9 +337,7 @@ mod tests {
         use crate::tensor::Tensor;
         use crate::winograd::WinogradPlan;
         let cfg = AcceleratorConfig::paper();
-        let layer = ConvLayer {
-            name: "t",
-            stage: 1,
+        let layer = ConvShape {
             in_ch: 16,
             out_ch: 16,
             hw: 8,
@@ -361,9 +361,7 @@ mod tests {
         use crate::tensor::Tensor;
         use crate::winograd::WinogradPlan;
         let cfg = AcceleratorConfig::paper();
-        let layer = ConvLayer {
-            name: "t",
-            stage: 1,
+        let layer = ConvShape {
             in_ch: 16,
             out_ch: 16,
             hw: 8,
@@ -479,7 +477,7 @@ pub fn schedule_fc(
 /// (m^2 r^2 / l^2, 2.25x for F(2,3)) shows up as the cycle ratio between
 /// this and `schedule_dense` — the paper's "dense implementation"
 /// comparator.
-pub fn schedule_direct(layer: &ConvLayer, cfg: &AcceleratorConfig) -> LayerPlan {
+pub fn schedule_direct(layer: &ConvShape, cfg: &AcceleratorConfig) -> LayerPlan {
     let l = cfg.l();
     let timing = BlockTiming::new(l);
     let (k, ckk, b) = (
@@ -536,7 +534,7 @@ pub fn schedule_waves(per_matmul: &[u64], clusters: usize, policy: WavePolicy) -
 #[cfg(test)]
 mod ext_tests {
     use super::*;
-    use crate::nn::{vgg16, FcLayer};
+    use crate::nn::{vgg16_network, FcLayer};
 
     #[test]
     fn fc_plan_scales_with_batch() {
@@ -556,7 +554,7 @@ mod ext_tests {
     #[test]
     fn winograd_beats_direct_by_arithmetic_gain() {
         let cfg = AcceleratorConfig::paper();
-        let layer = vgg16().convs[10]; // conv5_1
+        let layer = vgg16_network().convs[10].shape(); // conv5_1
         let direct = schedule_direct(&layer, &cfg);
         let wino = schedule_dense(&layer, &cfg);
         let ratio = direct.matmul_cycles as f64 / wino.matmul_cycles as f64;

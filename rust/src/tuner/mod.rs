@@ -4,7 +4,9 @@
 //! and the memory subsystem are balanced, and §5.1's analytical model is
 //! the design reference for picking that balance.  This module closes the
 //! loop between that model and the code that serves traffic: at prepare
-//! time the [`Tuner`] scores, for **every conv layer independently**,
+//! time the [`Tuner`] walks the conv nodes of a typed
+//! [`crate::nn::graph::Graph`] and scores, for **every conv node
+//! independently**,
 //!
 //! - the Winograd output tile size m (the paper's central knob — larger m
 //!   cuts multiplies per output but dilates the weights),
@@ -18,10 +20,12 @@
 //! [`crate::scheduler::LayerPlan`] cycle predictions, optionally refined
 //! by a **bounded on-machine microbenchmark calibration pass** (the
 //! model ranks, the machine votes among the top few).  The result is a
-//! serializable [`TuneProfile`] (via [`crate::util::json`]) that
-//! [`crate::executor::NetworkExecutor::synthetic_per_layer`] and
-//! [`crate::coordinator::InferenceServer::start_native`] load, so serving
-//! launches with a tuned plan instead of one hard-wired configuration.
+//! serializable [`TuneProfile`] **keyed by graph node id**, so a profile
+//! validates against the exact graph it was tuned for —
+//! [`TuneProfile::policies_for`] expands it into the per-conv
+//! [`ExecPolicy`] list a [`crate::executor::Session`] compiles, and
+//! [`crate::coordinator::InferenceServer::start_native`] checks it at
+//! startup.
 //!
 //! The fused serving batch granularity is chosen from the model too:
 //! [`crate::model::LayerModel::volume_per_image`] amortizes the
@@ -32,13 +36,13 @@ use crate::bench::time_it;
 use crate::executor::{ConvExecutor, ExecPolicy};
 use crate::memory::EnergyTable;
 use crate::model::LayerModel;
-use crate::nn::{self, same_pad, ConvLayer, Network};
+use crate::nn::graph::{ConvInfo, Graph, GraphError, Op, Shape, Synthetic, WeightSource};
+use crate::nn::{same_pad, ConvShape};
 use crate::scheduler::{layer_energy, schedule_layer, AcceleratorConfig};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::Rng;
 use crate::winograd::{SparseFilterBank, WinogradPlan};
-use anyhow::{anyhow, bail, Context, Result};
 use std::cmp::Ordering;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -89,10 +93,13 @@ impl Default for TuneOptions {
     }
 }
 
-/// One layer's tuned configuration plus the evidence behind it.
+/// One conv node's tuned configuration plus the evidence behind it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerTune {
-    /// Conv layer name (must match the network's layer at this index).
+    /// Graph node id of the conv this row tunes — the key
+    /// [`TuneProfile::matches_graph`] validates.
+    pub node: usize,
+    /// Conv weight name (must match the graph's node at `node`).
     pub name: String,
     /// Chosen Winograd output tile size.
     pub m: usize,
@@ -112,13 +119,15 @@ pub struct LayerTune {
     pub default_s: Option<f64>,
 }
 
-/// A serializable per-layer tuning decision for one network: what
-/// `NetworkExecutor` / `InferenceServer::start_native` load so serving
-/// starts from a tuned plan.  Produced by [`Tuner::tune`], stored as JSON
-/// (see `TuneProfile::save` / `TuneProfile::load`).
+/// A serializable per-conv-node tuning decision for one graph: what
+/// [`crate::executor::Session`] / the native server load so serving
+/// starts from a tuned plan.  Produced by [`Tuner::tune`], stored as
+/// JSON (see `TuneProfile::save` / `TuneProfile::load`), and keyed by
+/// **graph node id** so it can describe any graph, not just the VGG
+/// ladder.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TuneProfile {
-    /// Network name the profile was tuned for (checked at load time).
+    /// Graph name the profile was tuned for (checked at load time).
     pub network: String,
     /// The default tile size the profile was tuned against.
     pub base_m: usize,
@@ -126,7 +135,7 @@ pub struct TuneProfile {
     pub sparsity: f64,
     /// The datapath bit width the profile was tuned under (`None` =
     /// float) — calibration evidence from one datapath does not carry to
-    /// another, so [`TuneProfile::matches`] pins it.
+    /// another, so [`TuneProfile::matches_base`] pins it.
     pub bits: Option<u32>,
     /// Model-chosen fused serving batch granularity.
     pub batch: usize,
@@ -134,65 +143,161 @@ pub struct TuneProfile {
 }
 
 impl TuneProfile {
-    /// Check the profile describes exactly this network's conv stack
-    /// **and** the base policy it was tuned against: the crossover picks
-    /// and measured evidence were produced at `base_m` / `sparsity`, so
-    /// applying them to a different pruning level would serve untested
-    /// configurations.
-    pub fn matches(&self, net: &Network, base: &ExecPolicy) -> Result<()> {
-        if self.network != net.name {
-            bail!(
-                "profile tuned for network {:?}, serving {:?}",
+    /// Check the profile structurally describes `graph`: same name, and
+    /// one row per conv node with matching node id and weight name.
+    pub fn matches_graph(&self, graph: &Graph) -> Result<(), GraphError> {
+        let bad = |msg: String| Err(GraphError::Config(msg));
+        if self.network != graph.name() {
+            return bad(format!(
+                "profile tuned for graph {:?}, serving {:?}",
                 self.network,
-                net.name
-            );
+                graph.name()
+            ));
         }
-        if self.base_m != base.m {
-            bail!(
-                "profile tuned against default F({},3), policy runs F({},3)",
-                self.base_m,
-                base.m
-            );
-        }
-        if self.sparsity != base.sparsity {
-            bail!(
-                "profile tuned at block sparsity {}, policy asks for {}",
-                self.sparsity,
-                base.sparsity
-            );
-        }
-        if self.bits != base.bits {
-            bail!(
-                "profile tuned on the {} datapath, policy asks for {}",
-                datapath(self.bits),
-                datapath(base.bits)
-            );
-        }
-        if self.layers.len() != net.convs.len() {
-            bail!(
-                "profile has {} layers, network has {}",
+        let convs = graph.conv_infos();
+        if self.layers.len() != convs.len() {
+            return bad(format!(
+                "profile has {} conv rows, graph has {} conv nodes",
                 self.layers.len(),
-                net.convs.len()
-            );
+                convs.len()
+            ));
         }
-        for (lt, conv) in self.layers.iter().zip(&net.convs) {
-            if lt.name != conv.name {
-                bail!(
-                    "profile layer {:?} does not match network layer {:?}",
-                    lt.name,
-                    conv.name
-                );
+        for (lt, info) in self.layers.iter().zip(&convs) {
+            if lt.node != info.node {
+                return bad(format!(
+                    "profile row {:?} is keyed to node {}, graph conv sits at node {}",
+                    lt.name, lt.node, info.node
+                ));
+            }
+            if lt.name != info.name {
+                return bad(format!(
+                    "profile row {:?} does not match graph conv {:?} at node {}",
+                    lt.name, info.name, info.node
+                ));
             }
         }
         Ok(())
     }
 
-    /// Expand the profile into one [`ExecPolicy`] per conv layer, carrying
+    /// Check that compiled per-conv policies actually realize this
+    /// profile's picks: per row, the tile size, pinned worker count, and
+    /// backend crossover must match, and the pruning/datapath knobs must
+    /// be the profile's (a small-channel-guarded conv legitimately runs
+    /// unpruned).  This is the server's startup guard — a session built
+    /// from some *other* policy list must be refused, not silently
+    /// served while reporting a tuned profile.
+    pub fn matches_policies(&self, policies: &[ExecPolicy]) -> Result<(), GraphError> {
+        let bad = |msg: String| Err(GraphError::Config(msg));
+        if policies.len() != self.layers.len() {
+            return bad(format!(
+                "profile has {} conv rows, session compiled {} conv policies",
+                self.layers.len(),
+                policies.len()
+            ));
+        }
+        for (lt, p) in self.layers.iter().zip(policies) {
+            if p.m != lt.m {
+                return bad(format!(
+                    "node {} ({}): profile picked F({},3), session compiled F({},3)",
+                    lt.node, lt.name, lt.m, p.m
+                ));
+            }
+            if p.workers != Some(lt.workers) {
+                return bad(format!(
+                    "node {} ({}): profile pinned {} workers, session compiled {:?}",
+                    lt.node, lt.name, lt.workers, p.workers
+                ));
+            }
+            if p.wants_sparse() != lt.sparse {
+                return bad(format!(
+                    "node {} ({}): profile chose the {} backend, session compiled {}",
+                    lt.node,
+                    lt.name,
+                    if lt.sparse { "sparse" } else { "dense" },
+                    if p.wants_sparse() { "sparse" } else { "dense" }
+                ));
+            }
+            if p.sparsity != self.sparsity && p.sparsity != 0.0 {
+                return bad(format!(
+                    "node {} ({}): profile tuned at sparsity {}, session compiled {}",
+                    lt.node, lt.name, self.sparsity, p.sparsity
+                ));
+            }
+            if p.bits != self.bits {
+                return bad(format!(
+                    "node {} ({}): profile tuned on the {} datapath, session compiled {}",
+                    lt.node,
+                    lt.name,
+                    datapath(self.bits),
+                    datapath(p.bits)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Check the base policy matches what the profile was tuned against:
+    /// the crossover picks and measured evidence were produced at
+    /// `base_m` / `sparsity` / `bits`, so applying them to a different
+    /// pruning level or datapath would serve untested configurations.
+    pub fn matches_base(&self, base: &ExecPolicy) -> Result<(), GraphError> {
+        let bad = |msg: String| Err(GraphError::Config(msg));
+        if self.base_m != base.m {
+            return bad(format!(
+                "profile tuned against default F({},3), policy runs F({},3)",
+                self.base_m, base.m
+            ));
+        }
+        if self.sparsity != base.sparsity {
+            return bad(format!(
+                "profile tuned at block sparsity {}, policy asks for {}",
+                self.sparsity, base.sparsity
+            ));
+        }
+        if self.bits != base.bits {
+            return bad(format!(
+                "profile tuned on the {} datapath, policy asks for {}",
+                datapath(self.bits),
+                datapath(base.bits)
+            ));
+        }
+        Ok(())
+    }
+
+    /// Validate against `graph` + `base` and expand into the per-conv
+    /// [`ExecPolicy`] list a [`crate::executor::Session`] compiles —
+    /// the one call between a loaded profile and a tuned session.
+    ///
+    /// ```
+    /// use swcnn::executor::{ExecPolicy, Session};
+    /// use swcnn::nn::{graph::Synthetic, vgg_tiny};
+    /// use swcnn::tuner::{TuneOptions, Tuner};
+    /// let base = ExecPolicy::sparse(2, 0.7);
+    /// let profile = Tuner::new(vgg_tiny(), base, 7)
+    ///     .with_options(TuneOptions { calibrate: false, ..TuneOptions::default() })
+    ///     .tune()
+    ///     .unwrap();
+    /// let policies = profile.policies_for(&vgg_tiny(), &base).unwrap();
+    /// let sess = Session::build(vgg_tiny(), &mut Synthetic::new(7), &policies).unwrap();
+    /// assert_eq!(sess.conv_backends().len(), 5);
+    /// ```
+    pub fn policies_for(
+        &self,
+        graph: &Graph,
+        base: &ExecPolicy,
+    ) -> Result<Vec<ExecPolicy>, GraphError> {
+        self.matches_graph(graph)?;
+        self.matches_base(base)?;
+        Ok(self.layer_policies(*base))
+    }
+
+    /// Expand the profile into one [`ExecPolicy`] per conv node, carrying
     /// the base policy's pruning / quantization knobs.  The backend
     /// crossover rides the threshold: 0.0 forces the BCOO loop, 2.0 can
     /// never be reached (sparsity < 1), forcing the pruned-dense stream —
     /// either way the target sparsity is honored, so swapping backends
-    /// never changes the numerics, only the schedule.
+    /// never changes the numerics, only the schedule.  Prefer
+    /// [`TuneProfile::policies_for`], which validates first.
     pub fn layer_policies(&self, base: ExecPolicy) -> Vec<ExecPolicy> {
         self.layers
             .iter()
@@ -205,7 +310,7 @@ impl TuneProfile {
             .collect()
     }
 
-    /// Serialize to the profile's JSON form (schema 1).
+    /// Serialize to the profile's JSON form (schema 2: node-keyed rows).
     pub fn to_json(&self) -> Json {
         let layers: Vec<Json> = self
             .layers
@@ -213,6 +318,7 @@ impl TuneProfile {
             .map(|lt| {
                 let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
                 Json::Obj(BTreeMap::from([
+                    ("node".to_string(), Json::Num(lt.node as f64)),
                     ("name".to_string(), Json::Str(lt.name.clone())),
                     ("m".to_string(), Json::Num(lt.m as f64)),
                     ("workers".to_string(), Json::Num(lt.workers as f64)),
@@ -231,7 +337,7 @@ impl TuneProfile {
             })
             .collect();
         Json::Obj(BTreeMap::from([
-            ("schema".to_string(), Json::Num(1.0)),
+            ("schema".to_string(), Json::Num(2.0)),
             ("kind".to_string(), Json::Str("tune_profile".to_string())),
             ("network".to_string(), Json::Str(self.network.clone())),
             ("base_m".to_string(), Json::Num(self.base_m as f64)),
@@ -246,66 +352,75 @@ impl TuneProfile {
     }
 
     /// Parse a profile from its JSON form.
-    pub fn from_json(v: &Json) -> Result<Self> {
-        let kind = v.req("kind")?.as_str().unwrap_or_default();
+    pub fn from_json(v: &Json) -> Result<Self, GraphError> {
+        let bad = |msg: String| GraphError::Config(msg);
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .unwrap_or_default();
         if kind != "tune_profile" {
-            bail!("not a tune profile (kind = {kind:?})");
+            return Err(bad(format!("not a tune profile (kind = {kind:?})")));
         }
-        let num = |j: &Json, key: &str| -> Result<f64> {
-            j.req(key)?
-                .as_f64()
-                .ok_or_else(|| anyhow!("profile field {key:?} must be a number"))
+        let num = |j: &Json, key: &str| -> Result<f64, GraphError> {
+            j.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| bad(format!("profile field {key:?} must be a number")))
         };
         // The integer knobs reject fractional or negative values outright
         // — a hand-edited "m": 3.5 must fail at load, not silently
         // truncate into a configuration nobody wrote.
-        let uint = |j: &Json, key: &str| -> Result<u64> {
+        let uint = |j: &Json, key: &str| -> Result<u64, GraphError> {
             let x = num(j, key)?;
             if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0) {
-                bail!("profile field {key:?} must be a non-negative integer, got {x}");
+                return Err(bad(format!(
+                    "profile field {key:?} must be a non-negative integer, got {x}"
+                )));
             }
             Ok(x as u64)
         };
         let layers = v
-            .req("layers")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("profile field \"layers\" must be an array"))?
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| bad("profile field \"layers\" must be an array".to_string()))?
             .iter()
             .map(|row| {
                 let backend = row
-                    .req("backend")?
-                    .as_str()
-                    .ok_or_else(|| anyhow!("layer backend must be a string"))?;
+                    .get("backend")
+                    .and_then(|b| b.as_str())
+                    .ok_or_else(|| bad("layer backend must be a string".to_string()))?;
                 let sparse = match backend {
                     "sparse" => true,
                     "dense" => false,
-                    other => bail!("unknown backend {other:?}"),
+                    other => return Err(bad(format!("unknown backend {other:?}"))),
                 };
-                let opt = |key: &str| -> Result<Option<f64>> {
+                let opt = |key: &str| -> Result<Option<f64>, GraphError> {
                     match row.get(key) {
                         None | Some(Json::Null) => Ok(None),
                         Some(j) => Ok(Some(j.as_f64().ok_or_else(|| {
-                            anyhow!("layer field {key:?} must be a number or null")
+                            bad(format!("layer field {key:?} must be a number or null"))
                         })?)),
                     }
                 };
                 let name = row
-                    .req("name")?
-                    .as_str()
-                    .ok_or_else(|| anyhow!("layer name must be a string"))?
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| bad("layer name must be a string".to_string()))?
                     .to_string();
                 // Range-check the knobs here so a hand-edited profile
                 // fails at load with a clear message instead of deep
                 // inside plan construction on the server worker thread.
                 let m = uint(row, "m")? as usize;
                 if !(1..=MAX_PROFILE_M).contains(&m) {
-                    bail!("layer {name:?}: m = {m} outside supported 1..={MAX_PROFILE_M}");
+                    return Err(bad(format!(
+                        "layer {name:?}: m = {m} outside supported 1..={MAX_PROFILE_M}"
+                    )));
                 }
                 let workers = uint(row, "workers")? as usize;
                 if workers == 0 {
-                    bail!("layer {name:?}: workers must be >= 1");
+                    return Err(bad(format!("layer {name:?}: workers must be >= 1")));
                 }
                 Ok(LayerTune {
+                    node: uint(row, "node")? as usize,
                     name,
                     m,
                     workers,
@@ -316,26 +431,28 @@ impl TuneProfile {
                     default_s: opt("default_s")?,
                 })
             })
-            .collect::<Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>, GraphError>>()?;
         let bits = match v.get("bits") {
             None | Some(Json::Null) => None,
             Some(_) => {
                 let b = uint(v, "bits")? as u32;
                 if !(2..=32).contains(&b) {
-                    bail!("profile bits = {b} outside supported 2..=32");
+                    return Err(bad(format!("profile bits = {b} outside supported 2..=32")));
                 }
                 Some(b)
             }
         };
         let batch = uint(v, "batch")? as usize;
         if !(1..=MAX_PROFILE_BATCH).contains(&batch) {
-            bail!("profile batch = {batch} outside supported 1..={MAX_PROFILE_BATCH}");
+            return Err(bad(format!(
+                "profile batch = {batch} outside supported 1..={MAX_PROFILE_BATCH}"
+            )));
         }
         Ok(Self {
             network: v
-                .req("network")?
-                .as_str()
-                .ok_or_else(|| anyhow!("profile network must be a string"))?
+                .get("network")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| bad("profile network must be a string".to_string()))?
                 .to_string(),
             base_m: uint(v, "base_m")? as usize,
             sparsity: num(v, "sparsity")?,
@@ -346,19 +463,21 @@ impl TuneProfile {
     }
 
     /// Write the profile as JSON.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), GraphError> {
         let path = path.as_ref();
         std::fs::write(path, self.to_json().to_string())
-            .with_context(|| format!("writing tune profile {}", path.display()))
+            .map_err(|e| GraphError::Io(format!("writing tune profile {}: {e}", path.display())))
     }
 
     /// Load a profile written by [`TuneProfile::save`].
-    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, GraphError> {
         let path = path.as_ref();
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading tune profile {}", path.display()))?;
-        let v = Json::parse(&text)
-            .map_err(|e| anyhow!("parsing tune profile {}: {e}", path.display()))?;
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            GraphError::Io(format!("reading tune profile {}: {e}", path.display()))
+        })?;
+        let v = Json::parse(&text).map_err(|e| {
+            GraphError::Io(format!("parsing tune profile {}: {e}", path.display()))
+        })?;
         Self::from_json(&v)
     }
 }
@@ -380,7 +499,7 @@ fn datapath(bits: Option<u32>) -> String {
     }
 }
 
-/// One scored configuration of one layer.
+/// One scored configuration of one conv node.
 #[derive(Debug, Clone, Copy)]
 struct Candidate {
     m: usize,
@@ -410,11 +529,11 @@ fn rank(a: &Candidate, b: &Candidate) -> Ordering {
         .then(a.workers.cmp(&b.workers))
 }
 
-/// The per-layer autotuner.  Scores every (m, workers, backend) candidate
-/// with the analytical model, optionally calibrates the top candidates on
-/// this machine, and emits a [`TuneProfile`].
+/// The per-conv-node autotuner.  Scores every (m, workers, backend)
+/// candidate with the analytical model, optionally calibrates the top
+/// candidates on this machine, and emits a node-keyed [`TuneProfile`].
 pub struct Tuner {
-    net: Network,
+    graph: Graph,
     base: ExecPolicy,
     seed: u64,
     opts: TuneOptions,
@@ -425,10 +544,9 @@ impl Tuner {
     /// default; its pruning / quantization knobs are preserved in every
     /// candidate).  `seed` must be the serving weight seed so the tuner
     /// scores and measures exactly the banks serving will run.
-    pub fn new(net: Network, base: ExecPolicy, seed: u64) -> Self {
-        base.validate();
+    pub fn new(graph: Graph, base: ExecPolicy, seed: u64) -> Self {
         Self {
-            net,
+            graph,
             base,
             seed,
             opts: TuneOptions::default(),
@@ -444,22 +562,49 @@ impl Tuner {
         self
     }
 
-    /// Run the search and return the profile.
-    pub fn tune(&self) -> TuneProfile {
-        let (weights, _) = nn::synthetic_weights(&self.net, self.seed);
+    /// Run the search and return the node-keyed profile.
+    pub fn tune(&self) -> Result<TuneProfile, GraphError> {
+        self.base.validate()?;
+        // The §5.1 model and the calibration inputs assume square maps
+        // (H = W); a non-square conv would be silently mis-scored, so
+        // refuse it up front.  (Sessions still *execute* non-square
+        // graphs fine — only tuning is square-only.)
+        for n in self.graph.nodes() {
+            if let (Op::Conv2d { name, .. }, Shape::Chw(_, h, w)) = (&n.op, n.out_shape) {
+                if h != w {
+                    return Err(GraphError::Config(format!(
+                        "conv node {} ({name}) has a non-square {h}x{w} output; \
+                         the analytical tuner only scores square maps",
+                        n.id
+                    )));
+                }
+            }
+        }
+        // Pull exactly the conv weights a synthetic-seeded session binds
+        // (same source, same canonical order → same stream).
+        let mut source = Synthetic::new(self.seed);
+        let mut weights: BTreeMap<usize, Tensor> = BTreeMap::new();
+        for spec in self.graph.weight_requests() {
+            let t = source.tensor(&spec)?;
+            if spec.shape.len() == 4 {
+                weights.insert(spec.node, t);
+            }
+        }
         let table = EnergyTable::default();
         let default_workers = self
             .base
             .workers
             .unwrap_or_else(WinogradPlan::default_threads);
-        let mut layers = Vec::with_capacity(self.net.convs.len());
-        for (layer, w) in self.net.convs.iter().zip(&weights) {
-            let mut cands = self.candidates(layer, w, &table);
+        let convs = self.graph.conv_infos();
+        let mut layers = Vec::with_capacity(convs.len());
+        for info in &convs {
+            let w = &weights[&info.node];
+            let mut cands = self.candidates(&info.shape, w, &table);
             // The default configuration competes on equal footing (and is
             // what hysteresis protects).  It is usually already in the
             // candidate grid; only score it (bank transform included)
             // when the options exclude it.
-            let default_sparse = self.default_backend_sparse(layer, self.base.m);
+            let default_sparse = self.default_backend_sparse(&info.shape, self.base.m);
             let default = cands.iter().copied().find(|c| {
                 c.m == self.base.m
                     && c.workers == default_workers
@@ -469,7 +614,7 @@ impl Tuner {
                 Some(d) => d,
                 None => {
                     let d = self.score(
-                        layer,
+                        &info.shape,
                         w,
                         self.base.m,
                         default_workers,
@@ -482,48 +627,48 @@ impl Tuner {
             };
             cands.sort_by(rank);
             let lt = if self.opts.calibrate {
-                self.calibrate_layer(layer, w, &cands, &default)
+                self.calibrate_layer(info, w, &cands, &default)?
             } else {
                 let best = cands[0];
-                layer_tune(layer, &best, None, None)
+                layer_tune(info, &best, None, None)
             };
             layers.push(lt);
         }
-        let batch = self.choose_batch(&layers);
-        TuneProfile {
-            network: self.net.name.to_string(),
+        let batch = self.choose_batch(&convs, &layers);
+        Ok(TuneProfile {
+            network: self.graph.name().to_string(),
             base_m: self.base.m,
             sparsity: self.base.sparsity,
             bits: self.base.bits,
             batch,
             layers,
-        }
+        })
     }
 
-    /// Would the *untuned* executor run this layer sparse at tile size m?
-    /// Routed through [`ExecPolicy::for_layer`] — the executor's own
+    /// Would the *untuned* executor run this conv sparse at tile size m?
+    /// Routed through [`ExecPolicy::for_conv`] — the executor's own
     /// small-channel guard — so the default the tuner competes against is
     /// exactly the backend serving would select.
-    fn default_backend_sparse(&self, layer: &ConvLayer, m: usize) -> bool {
-        ExecPolicy { m, ..self.base }.for_layer(layer).wants_sparse()
+    fn default_backend_sparse(&self, shape: &ConvShape, m: usize) -> bool {
+        ExecPolicy { m, ..self.base }.for_conv(shape).wants_sparse()
     }
 
-    /// Every candidate (m, workers, backend) of one layer, scored by the
-    /// analytical model on the layer's **actual pruned banks**.  The bank
+    /// Every candidate (m, workers, backend) of one conv, scored by the
+    /// analytical model on the node's **actual pruned banks**.  The bank
     /// depends only on m, so it is transformed once per tile size and
     /// shared across the worker-count candidates.
-    fn candidates(&self, layer: &ConvLayer, w: &Tensor, table: &EnergyTable) -> Vec<Candidate> {
+    fn candidates(&self, shape: &ConvShape, w: &Tensor, table: &EnergyTable) -> Vec<Candidate> {
         let mut out = Vec::new();
         for &m in &self.opts.ms {
             // Pruning eligibility comes from the executor's own guard.
-            let eligible = ExecPolicy { m, ..self.base }.for_layer(layer).sparsity > 0.0;
+            let eligible = ExecPolicy { m, ..self.base }.for_conv(shape).sparsity > 0.0;
             let bank = eligible.then(|| {
-                WinogradPlan::new(m, layer.r).transform_filters_sparse(w, self.base.sparsity)
+                WinogradPlan::new(m, shape.r).transform_filters_sparse(w, self.base.sparsity)
             });
             for &workers in &self.opts.workers {
-                out.push(self.score_config(layer, m, workers, None, table));
+                out.push(self.score_config(shape, m, workers, None, table));
                 if let Some(bank) = &bank {
-                    out.push(self.score_config(layer, m, workers, Some(bank), table));
+                    out.push(self.score_config(shape, m, workers, Some(bank), table));
                 }
             }
         }
@@ -534,7 +679,7 @@ impl Tuner {
     /// `None` bank = the pruned-dense stream, `Some` = the BCOO loop.
     fn score(
         &self,
-        layer: &ConvLayer,
+        shape: &ConvShape,
         w: &Tensor,
         m: usize,
         workers: usize,
@@ -542,9 +687,9 @@ impl Tuner {
         table: &EnergyTable,
     ) -> Candidate {
         let bank = sparse.then(|| {
-            WinogradPlan::new(m, layer.r).transform_filters_sparse(w, self.base.sparsity)
+            WinogradPlan::new(m, shape.r).transform_filters_sparse(w, self.base.sparsity)
         });
-        self.score_config(layer, m, workers, bank.as_ref(), table)
+        self.score_config(shape, m, workers, bank.as_ref(), table)
     }
 
     /// Score one configuration on an already-built bank: scheduler cycles
@@ -552,7 +697,7 @@ impl Tuner {
     /// model.
     fn score_config(
         &self,
-        layer: &ConvLayer,
+        shape: &ConvShape,
         m: usize,
         workers: usize,
         bank: Option<&SparseFilterBank>,
@@ -560,16 +705,16 @@ impl Tuner {
     ) -> Candidate {
         let cfg = AcceleratorConfig {
             m,
-            r: layer.r,
+            r: shape.r,
             ..AcceleratorConfig::paper().with_clusters(workers)
         };
-        let plan = schedule_layer(layer, &cfg, bank);
+        let plan = schedule_layer(shape, &cfg, bank);
         Candidate {
             m,
             workers,
             sparse: bank.is_some(),
             predicted_cycles: plan.pipelined_cycles(),
-            model_energy: layer_energy(layer, &cfg, bank.map(|b| b.block_sparsity()), table),
+            model_energy: layer_energy(shape, &cfg, bank.map(|b| b.block_sparsity()), table),
         }
     }
 
@@ -578,31 +723,32 @@ impl Tuner {
     /// unless the win clears the hysteresis margin.
     fn calibrate_layer(
         &self,
-        layer: &ConvLayer,
+        info: &ConvInfo,
         w: &Tensor,
         ranked: &[Candidate],
         default: &Candidate,
-    ) -> LayerTune {
+    ) -> Result<LayerTune, GraphError> {
+        let shape = &info.shape;
         let mut to_measure: Vec<Candidate> =
             ranked.iter().take(self.opts.calib_top).copied().collect();
         if !to_measure.iter().any(|c| c.same_config(default)) {
             to_measure.push(*default);
         }
-        // The calibration input is the layer's serving shape: SAME-padded
-        // activations, deterministic per layer.
-        let p = same_pad(layer.r);
-        let (hp, wp) = (layer.hw + 2 * p, layer.hw + 2 * p);
+        // The calibration input is the conv's serving shape: SAME-padded
+        // activations, deterministic per node.
+        let p = same_pad(shape.r);
+        let (hp, wp) = (shape.hw + 2 * p, shape.hw + 2 * p);
         let mut rng =
-            Rng::new(self.seed ^ ((layer.in_ch as u64) << 32) ^ layer.out_ch as u64);
+            Rng::new(self.seed ^ ((shape.in_ch as u64) << 32) ^ shape.out_ch as u64);
         let x = Tensor::from_vec(
-            &[layer.in_ch, hp, wp],
-            rng.gaussian_vec(layer.in_ch * hp * wp),
+            &[shape.in_ch, hp, wp],
+            rng.gaussian_vec(shape.in_ch * hp * wp),
         );
         let mut best: Option<(f64, Candidate)> = None;
         let mut default_s = f64::INFINITY;
         for cand in &to_measure {
-            let policy = self.candidate_policy(layer, cand);
-            let mut ex = ConvExecutor::prepare(w, &policy);
+            let policy = self.candidate_policy(shape, cand);
+            let mut ex = ConvExecutor::prepare(w, &policy)?;
             let stats = time_it(1, self.opts.calib_iters, || {
                 std::hint::black_box(ex.conv2d(&x));
             });
@@ -621,32 +767,31 @@ impl Tuner {
             } else {
                 (*default, default_s)
             };
-        layer_tune(layer, &chosen, Some(chosen_t), Some(default_s))
+        Ok(layer_tune(info, &chosen, Some(chosen_t), Some(default_s)))
     }
 
     /// The policy a candidate runs under — exactly what serving would
-    /// build for this layer ([`ExecPolicy::for_layer`] applies the
+    /// build for this conv ([`ExecPolicy::for_conv`] applies the
     /// small-channel pruning guard).
-    fn candidate_policy(&self, layer: &ConvLayer, cand: &Candidate) -> ExecPolicy {
+    fn candidate_policy(&self, shape: &ConvShape, cand: &Candidate) -> ExecPolicy {
         ExecPolicy {
             m: cand.m,
             workers: Some(cand.workers),
             sparse_threshold: if cand.sparse { 0.0 } else { 2.0 },
             ..self.base
         }
-        .for_layer(layer)
+        .for_conv(shape)
     }
 
     /// Model-driven fused batch granularity: per-image transformed volume
-    /// with D_wk amortized over the batch, summed at each layer's chosen
+    /// with D_wk amortized over the batch, summed at each conv's chosen
     /// m; grow the batch until the marginal gain falls under the knee.
-    fn choose_batch(&self, layers: &[LayerTune]) -> usize {
+    fn choose_batch(&self, convs: &[ConvInfo], layers: &[LayerTune]) -> usize {
         let vol = |n: usize| -> f64 {
-            self.net
-                .convs
+            convs
                 .iter()
                 .zip(layers)
-                .map(|(layer, lt)| LayerModel::new(layer, lt.m).volume_per_image(n))
+                .map(|(info, lt)| LayerModel::new(&info.shape, lt.m).volume_per_image(n))
                 .sum()
         };
         let mut batches = self.opts.batches.clone();
@@ -665,13 +810,14 @@ impl Tuner {
 }
 
 fn layer_tune(
-    layer: &ConvLayer,
+    info: &ConvInfo,
     c: &Candidate,
     measured_s: Option<f64>,
     default_s: Option<f64>,
 ) -> LayerTune {
     LayerTune {
-        name: layer.name.to_string(),
+        node: info.node,
+        name: info.name.clone(),
         m: c.m,
         workers: c.workers,
         sparse: c.sparse,
@@ -685,8 +831,9 @@ fn layer_tune(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::executor::NetworkExecutor;
-    use crate::nn::{vgg_tiny, FcLayer};
+    use crate::executor::Session;
+    use crate::nn::graph::GraphBuilder;
+    use crate::nn::vgg_tiny;
 
     fn model_only() -> TuneOptions {
         TuneOptions {
@@ -696,16 +843,18 @@ mod tests {
     }
 
     #[test]
-    fn model_only_tune_covers_every_layer() {
+    fn model_only_tune_covers_every_conv_node() {
         let base = ExecPolicy::sparse(2, 0.7);
         let profile = Tuner::new(vgg_tiny(), base, 7)
             .with_options(model_only())
-            .tune();
+            .tune()
+            .unwrap();
         assert_eq!(profile.network, "vgg_tiny");
         assert_eq!(profile.base_m, 2);
         assert_eq!(profile.layers.len(), 5);
-        for (lt, conv) in profile.layers.iter().zip(&vgg_tiny().convs) {
-            assert_eq!(lt.name, conv.name);
+        for (lt, info) in profile.layers.iter().zip(vgg_tiny().conv_infos()) {
+            assert_eq!(lt.node, info.node, "profile rows are node-keyed");
+            assert_eq!(lt.name, info.name);
             assert!([2, 4, 6].contains(&lt.m), "{lt:?}");
             assert!(lt.workers >= 1);
             assert!(lt.predicted_cycles > 0);
@@ -721,7 +870,8 @@ mod tests {
             "{profile:?}"
         );
         assert!([1, 2, 4, 8].contains(&profile.batch));
-        profile.matches(&vgg_tiny(), &base).expect("self-match");
+        profile.matches_graph(&vgg_tiny()).expect("self-match");
+        profile.matches_base(&base).expect("base-match");
     }
 
     #[test]
@@ -729,7 +879,8 @@ mod tests {
         let base = ExecPolicy::sparse(2, 0.7);
         let profile = Tuner::new(vgg_tiny(), base, 7)
             .with_options(model_only())
-            .tune();
+            .tune()
+            .unwrap();
         let text = profile.to_json().to_string();
         let back = TuneProfile::from_json(&Json::parse(&text).expect("parse")).expect("decode");
         assert_eq!(profile, back);
@@ -740,7 +891,8 @@ mod tests {
         let base = ExecPolicy::sparse(2, 0.6);
         let profile = Tuner::new(vgg_tiny(), base, 3)
             .with_options(model_only())
-            .tune();
+            .tune()
+            .unwrap();
         let path = std::env::temp_dir().join(format!(
             "swcnn_tune_profile_{}.json",
             std::process::id()
@@ -758,49 +910,77 @@ mod tests {
         let bad_backend = Json::parse(
             r#"{"kind": "tune_profile", "network": "n", "base_m": 2,
                 "sparsity": 0.5, "batch": 4,
-                "layers": [{"name": "c0", "m": 2, "workers": 1,
+                "layers": [{"node": 1, "name": "c0", "m": 2, "workers": 1,
                             "backend": "quantum", "predicted_cycles": 1,
                             "model_energy": 1.0}]}"#,
         )
         .unwrap();
         assert!(TuneProfile::from_json(&bad_backend).is_err());
+        // A pre-redesign profile without node keys must be rejected, not
+        // silently mis-keyed.
+        let no_node = Json::parse(
+            r#"{"kind": "tune_profile", "network": "n", "base_m": 2,
+                "sparsity": 0.5, "batch": 4,
+                "layers": [{"name": "c0", "m": 2, "workers": 1,
+                            "backend": "dense", "predicted_cycles": 1,
+                            "model_energy": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(TuneProfile::from_json(&no_node).is_err());
     }
 
     #[test]
-    fn profile_matches_rejects_mismatched_network_or_policy() {
+    fn profile_matches_rejects_mismatched_graph_or_policy() {
         let base = ExecPolicy::sparse(2, 0.7);
         let mut profile = Tuner::new(vgg_tiny(), base, 7)
             .with_options(model_only())
-            .tune();
-        profile.matches(&vgg_tiny(), &base).expect("match");
+            .tune()
+            .unwrap();
+        profile.policies_for(&vgg_tiny(), &base).expect("match");
         // The profile's evidence was produced at base_m / sparsity: a
         // different pruning level or default tile must be refused.
         assert!(
-            profile.matches(&vgg_tiny(), &ExecPolicy::sparse(2, 0.3)).is_err(),
+            profile.matches_base(&ExecPolicy::sparse(2, 0.3)).is_err(),
             "sparsity mismatch"
         );
         assert!(
-            profile.matches(&vgg_tiny(), &ExecPolicy::sparse(4, 0.7)).is_err(),
+            profile.matches_base(&ExecPolicy::sparse(4, 0.7)).is_err(),
             "base m mismatch"
         );
         assert!(
             profile
-                .matches(&vgg_tiny(), &ExecPolicy::sparse(2, 0.7).with_bits(8))
+                .matches_base(&ExecPolicy::sparse(2, 0.7).with_bits(8))
                 .is_err(),
             "datapath mismatch: float evidence must not serve quantized"
         );
+        // A graph whose convs sit at different node ids must be refused
+        // even when the names line up row for row.
+        let shifted = GraphBuilder::new("vgg_tiny", (3, 32, 32))
+            .conv2d("conv0", 16, 3)
+            .conv2d("conv1", 16, 3)
+            .conv2d("conv2", 32, 3)
+            .conv2d("conv3", 32, 3)
+            .conv2d("conv4", 64, 3)
+            .flatten()
+            .fc("fc0", 10)
+            .build()
+            .unwrap();
+        let e = profile.matches_graph(&shifted).unwrap_err();
+        assert!(e.to_string().contains("node"), "node mismatch: {e}");
         profile.layers.pop();
-        assert!(profile.matches(&vgg_tiny(), &base).is_err(), "layer count");
+        assert!(profile.matches_graph(&vgg_tiny()).is_err(), "row count");
         let mut renamed = Tuner::new(vgg_tiny(), base, 7)
             .with_options(model_only())
-            .tune();
+            .tune()
+            .unwrap();
         renamed.layers[0].name = "other".into();
-        assert!(renamed.matches(&vgg_tiny(), &base).is_err(), "layer name");
+        assert!(renamed.matches_graph(&vgg_tiny()).is_err(), "layer name");
         let mut wrong_net = Tuner::new(vgg_tiny(), base, 7)
             .with_options(model_only())
-            .tune();
+            .tune()
+            .unwrap();
         wrong_net.network = "vgg16".into();
-        assert!(wrong_net.matches(&vgg_tiny(), &base).is_err(), "network name");
+        assert!(wrong_net.matches_graph(&vgg_tiny()).is_err(), "graph name");
     }
 
     #[test]
@@ -809,7 +989,7 @@ mod tests {
             format!(
                 r#"{{"kind": "tune_profile", "network": "n", "base_m": 2,
                      "sparsity": 0.5, "batch": {batch}, "bits": {bits},
-                     "layers": [{{"name": "c0", "m": {m}, "workers": {workers},
+                     "layers": [{{"node": 1, "name": "c0", "m": {m}, "workers": {workers},
                                  "backend": "dense", "predicted_cycles": 1,
                                  "model_energy": 1.0}}]}}"#
             )
@@ -835,22 +1015,29 @@ mod tests {
         let profile = TuneProfile::from_json(&ok).expect("in-range profile");
         assert_eq!(profile.bits, Some(16));
         assert_eq!(profile.batch, 8);
+        assert_eq!(profile.layers[0].node, 1);
     }
 
     #[test]
-    fn layer_policies_plug_into_the_executor() {
+    fn tuned_policies_plug_into_a_session() {
         let base = ExecPolicy::sparse(2, 0.7);
         let profile = Tuner::new(vgg_tiny(), base, 5)
             .with_options(model_only())
-            .tune();
-        let policies = profile.layer_policies(base);
+            .tune()
+            .unwrap();
+        let policies = profile.policies_for(&vgg_tiny(), &base).unwrap();
         assert_eq!(policies.len(), 5);
         for (p, lt) in policies.iter().zip(&profile.layers) {
             assert_eq!(p.m, lt.m);
             assert_eq!(p.workers, Some(lt.workers));
             assert_eq!(p.sparsity, base.sparsity, "pruning knob carried over");
         }
-        let mut tuned = NetworkExecutor::synthetic_per_layer(vgg_tiny(), &policies, 5);
+        let mut tuned = Session::build(
+            vgg_tiny(),
+            &mut Synthetic::new(5),
+            &policies,
+        )
+        .unwrap();
         // The executor's backend selection must realize the profile's
         // crossover choice exactly.
         for (backend, lt) in tuned.conv_backends().iter().zip(&profile.layers) {
@@ -859,42 +1046,112 @@ mod tests {
         }
         let mut rng = Rng::new(8);
         let image = rng.gaussian_vec(3 * 32 * 32);
-        let logits = tuned.forward(&image);
+        let logits = tuned.forward(&image).unwrap();
         assert_eq!(logits.len(), 10);
         assert!(logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]
+    fn tuner_handles_non_vgg_graphs() {
+        // A conv -> pool -> conv graph with an odd spatial size: the
+        // tuner must key rows by the actual node ids and the profile
+        // must validate against the same graph.
+        let graph = || {
+            GraphBuilder::new("oddnet", (8, 9, 9))
+                .pad(1)
+                .conv2d("c0", 8, 3)
+                .relu()
+                .maxpool2()
+                .pad(1)
+                .conv2d("c1", 8, 3)
+                .relu()
+                .flatten()
+                .fc("head", 4)
+                .build()
+                .unwrap()
+        };
+        let base = ExecPolicy::sparse(2, 0.6);
+        let profile = Tuner::new(graph(), base, 13)
+            .with_options(model_only())
+            .tune()
+            .unwrap();
+        assert_eq!(profile.layers.len(), 2);
+        let infos = graph().conv_infos();
+        assert_eq!(profile.layers[0].node, infos[0].node);
+        assert_eq!(profile.layers[1].node, infos[1].node);
+        let policies = profile.policies_for(&graph(), &base).unwrap();
+        let mut sess = Session::build(graph(), &mut Synthetic::new(13), &policies).unwrap();
+        let y = sess.forward(&vec![0.25; 8 * 9 * 9]).unwrap();
+        assert_eq!(y.len(), 4);
+        // And it must not validate against vgg_tiny.
+        assert!(profile.matches_graph(&vgg_tiny()).is_err());
+    }
+
+    #[test]
+    fn matches_policies_guards_the_serving_config() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune()
+            .unwrap();
+        // The session's own compiled policies (profile expansion + the
+        // executor's small-channel guard) must pass.
+        let policies = profile.policies_for(&vgg_tiny(), &base).unwrap();
+        let sess = Session::build(vgg_tiny(), &mut Synthetic::new(7), &policies).unwrap();
+        profile
+            .matches_policies(sess.conv_policies())
+            .expect("tuned session realizes its own profile");
+        // A session compiled from anything else must be refused.
+        let untuned = Session::uniform(vgg_tiny(), &mut Synthetic::new(7), ExecPolicy::dense(4))
+            .unwrap();
+        assert!(profile.matches_policies(untuned.conv_policies()).is_err());
+        let wrong_len = &policies[..3];
+        assert!(profile.matches_policies(wrong_len).is_err());
+    }
+
+    #[test]
+    fn tuner_refuses_non_square_conv_outputs() {
+        // Sessions execute non-square graphs; the analytical tuner does
+        // not score them — it must refuse loudly instead of silently
+        // mis-modeling the geometry.
+        let g = GraphBuilder::new("wide", (3, 8, 16))
+            .pad(1)
+            .conv2d("c0", 4, 3)
+            .relu()
+            .flatten()
+            .fc("head", 2)
+            .build()
+            .unwrap();
+        let e = Tuner::new(g, ExecPolicy::sparse(2, 0.6), 3)
+            .with_options(model_only())
+            .tune()
+            .unwrap_err();
+        assert!(e.to_string().contains("non-square"), "{e}");
+    }
+
+    #[test]
     fn calibration_is_bounded_and_never_worse_than_default() {
-        // One small layer keeps the measured pass cheap; the contract is
+        // One small conv keeps the measured pass cheap; the contract is
         // that the chosen config is the default unless the measured win
         // cleared the hysteresis margin.
-        let net = Network {
-            name: "tiny1",
-            input_hw: 8,
-            input_ch: 8,
-            convs: vec![ConvLayer {
-                name: "c0",
-                stage: 1,
-                in_ch: 8,
-                out_ch: 8,
-                hw: 8,
-                r: 3,
-            }],
-            fcs: vec![FcLayer {
-                name: "f0",
-                in_f: 8 * 4 * 4,
-                out_f: 4,
-            }],
-        };
+        let g = GraphBuilder::new("tiny1", (8, 8, 8))
+            .pad(1)
+            .conv2d("c0", 8, 3)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("f0", 4)
+            .build()
+            .unwrap();
         let opts = TuneOptions {
             calib_iters: 2,
             calib_top: 2,
             ..TuneOptions::default()
         };
-        let profile = Tuner::new(net, ExecPolicy::sparse(2, 0.5), 11)
+        let profile = Tuner::new(g, ExecPolicy::sparse(2, 0.5), 11)
             .with_options(opts)
-            .tune();
+            .tune()
+            .unwrap();
         let lt = &profile.layers[0];
         let measured = lt.measured_s.expect("calibrated run records timing");
         let default = lt.default_s.expect("default is always measured");
@@ -914,14 +1171,16 @@ mod tests {
                 batch_knee: 0.9,
                 ..model_only()
             })
-            .tune();
+            .tune()
+            .unwrap();
         assert_eq!(p1.batch, 1);
         let p8 = Tuner::new(vgg_tiny(), base, 7)
             .with_options(TuneOptions {
                 batch_knee: 0.0,
                 ..model_only()
             })
-            .tune();
+            .tune()
+            .unwrap();
         assert_eq!(p8.batch, 8);
     }
 }

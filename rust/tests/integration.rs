@@ -250,16 +250,23 @@ fn vgg16_conv5_layer_executes_at_paper_scale() {
 
 // ---------------------------------------------------------------------------
 // Native serving path (no artifacts needed): the transform-domain sparse
-// pipeline end-to-end — ConvExecutor banks -> NetworkExecutor -> batcher.
+// pipeline end-to-end — graph -> Session -> batcher.
 // ---------------------------------------------------------------------------
 
 #[test]
 fn native_server_end_to_end_sparse_pipeline() {
     use swcnn::coordinator::NativeServerConfig;
-    use swcnn::executor::ExecPolicy;
+    use swcnn::executor::{ExecPolicy, Session};
+    use swcnn::nn::graph::Synthetic;
     use swcnn::nn::vgg_tiny;
 
-    let cfg = NativeServerConfig::new(vgg_tiny(), ExecPolicy::sparse(2, 0.8));
+    let session = Session::uniform(
+        vgg_tiny(),
+        &mut Synthetic::new(7),
+        ExecPolicy::sparse(2, 0.8),
+    )
+    .unwrap();
+    let cfg = NativeServerConfig::new(session);
     let server = InferenceServer::start_native(cfg).unwrap();
     let mut rng = Rng::new(44);
     let elems = server.input_elements();

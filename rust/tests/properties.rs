@@ -209,7 +209,7 @@ fn prop_tuner_eligible_configs_match_reference() {
                     sparse_threshold: if sparse { 0.0 } else { 2.0 },
                     ..ExecPolicy::dense(m).with_workers(workers)
                 };
-                let mut ex = ConvExecutor::prepare(&wt, &policy);
+                let mut ex = ConvExecutor::prepare(&wt, &policy).expect("prepare");
                 assert_eq!(ex.backend_name(), if sparse { "sparse" } else { "dense" });
                 let got = ex.conv2d(&x);
                 assert!(
@@ -248,8 +248,8 @@ fn prop_tuner_crossover_bit_identical_at_zero_sparsity() {
                     sparse_threshold: 0.0,
                     ..base
                 };
-                let yd = ConvExecutor::prepare(&wt, &dense).conv2d(&x);
-                let ys = ConvExecutor::prepare(&wt, &sparse).conv2d(&x);
+                let yd = ConvExecutor::prepare(&wt, &dense).expect("prepare").conv2d(&x);
+                let ys = ConvExecutor::prepare(&wt, &sparse).expect("prepare").conv2d(&x);
                 assert_eq!(
                     yd, ys,
                     "case {case}: F({m},3) C={c} K={k} {h}x{w} workers={workers}"
@@ -266,7 +266,8 @@ fn prop_forward_batch_bit_identical_to_sequential() {
     // return exactly the per-image `forward` results for batch sizes
     // 1..=8 — and an image's logits must not depend on which batch it
     // rides in.
-    use swcnn::executor::{ExecPolicy, NetworkExecutor};
+    use swcnn::executor::{ExecPolicy, Session};
+    use swcnn::nn::graph::Synthetic;
     use swcnn::nn::{ConvLayer, FcLayer, Network};
     let mut rng = Rng::new(1017);
     for case in 0..4 {
@@ -292,14 +293,22 @@ fn prop_forward_batch_bit_identical_to_sequential() {
             ExecPolicy::sparse(2, 0.6),
             ExecPolicy::sparse(4, 0.7).with_bits(16),
         ] {
-            let mut ex = NetworkExecutor::synthetic(net.clone(), policy, 900 + case as u64)
-                .with_max_batch(8);
+            let mut ex = Session::uniform(
+                net.to_graph(),
+                &mut Synthetic::new(900 + case as u64),
+                policy,
+            )
+            .expect("session compiles")
+            .with_max_batch(8);
             let images: Vec<Vec<f32>> =
                 (0..8).map(|_| rng.gaussian_vec(c0 * hw * hw)).collect();
             let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
-            let seq: Vec<Vec<f32>> = images.iter().map(|im| ex.forward(im)).collect();
+            let seq: Vec<Vec<f32>> = images
+                .iter()
+                .map(|im| ex.forward(im).expect("forward"))
+                .collect();
             for n in 1..=8usize {
-                let got = ex.forward_batch(&refs[..n]);
+                let got = ex.forward_batch(&refs[..n]).expect("forward_batch");
                 assert_eq!(
                     got,
                     seq[..n],
@@ -307,7 +316,9 @@ fn prop_forward_batch_bit_identical_to_sequential() {
                 );
             }
             // Batch membership and position must not change an image.
-            let shuffled = ex.forward_batch(&[refs[5], refs[1], refs[7]]);
+            let shuffled = ex
+                .forward_batch(&[refs[5], refs[1], refs[7]])
+                .expect("forward_batch");
             assert_eq!(shuffled[0], seq[5], "case {case} {policy:?}");
             assert_eq!(shuffled[1], seq[1], "case {case} {policy:?}");
             assert_eq!(shuffled[2], seq[7], "case {case} {policy:?}");
@@ -527,5 +538,38 @@ fn prop_quantizer_error_bound() {
                 "bits={bits}"
             );
         }
+    }
+}
+
+#[test]
+fn prop_maxpool2_ceil_mode_matches_scalar_oracle() {
+    // Ceil-mode 2x2/stride-2 pooling on arbitrary (odd and even) spatial
+    // sizes must match a from-scratch scalar oracle, for both the Tensor
+    // form and the stacked-plane `_into` form on a dirty workspace.
+    use swcnn::nn::{maxpool2, maxpool2_into};
+    let mut rng = Rng::new(1020);
+    for case in 0..60 {
+        let c = 1 + rng.next_below(4);
+        let h = 1 + rng.next_below(12);
+        let w = 1 + rng.next_below(12);
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let (oh, ow) = (h.div_ceil(2), w.div_ceil(2));
+        // Scalar oracle: windows clipped at the bottom/right edges.
+        let mut want = vec![f32::NEG_INFINITY; c * oh * ow];
+        for cc in 0..c {
+            for i in 0..h {
+                for j in 0..w {
+                    let dst = &mut want[(cc * oh + i / 2) * ow + j / 2];
+                    *dst = dst.max(x.data()[(cc * h + i) * w + j]);
+                }
+            }
+        }
+        let got = maxpool2(&x);
+        assert_eq!(got.shape(), &[c, oh, ow], "case {case}: {h}x{w}");
+        assert_eq!(got.data(), &want[..], "case {case}: {h}x{w}");
+        // The slice form over a dirty destination buffer.
+        let mut dirty = vec![9.9f32; c * oh * ow];
+        maxpool2_into(x.data(), c, h, w, &mut dirty);
+        assert_eq!(&dirty[..], &want[..], "case {case} (into): {h}x{w}");
     }
 }
