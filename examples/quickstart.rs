@@ -88,7 +88,11 @@ fn main() -> Result<()> {
         bail!("served logits diverged from the direct session");
     }
     let pending: Vec<_> = (0..16)
-        .map(|_| server.infer_async(rng.gaussian_vec(server.input_elements())))
+        .map(|_| {
+            server
+                .infer_async(rng.gaussian_vec(server.input_elements()))
+                .expect("admitted")
+        })
         .collect();
     for rx in pending {
         let y = rx.recv().expect("worker alive")?;

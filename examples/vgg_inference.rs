@@ -31,7 +31,9 @@ fn main() -> Result<()> {
     // concurrently) and the solo path must agree.
     let img = rng.gaussian_vec(elems);
     let solo = server.infer(img.clone())?;
-    let fan: Vec<_> = (0..4).map(|_| server.infer_async(img.clone())).collect();
+    let fan: Vec<_> = (0..4)
+        .map(|_| server.infer_async(img.clone()).expect("admitted"))
+        .collect();
     for rx in fan {
         let batched = rx.recv().unwrap()?;
         let diff = solo
@@ -46,7 +48,7 @@ fn main() -> Result<()> {
     // Throughput run: fire all requests, then collect.
     let t0 = Instant::now();
     let pending: Vec<_> = (0..n_requests)
-        .map(|_| server.infer_async(rng.gaussian_vec(elems)))
+        .map(|_| server.infer_async(rng.gaussian_vec(elems)).expect("admitted"))
         .collect();
     let mut ok = 0;
     for p in pending {

@@ -86,8 +86,12 @@ impl Batcher {
     /// window opens.  Measuring from any earlier origin (e.g. before an
     /// idle blocking recv) silently expires the window before the burst
     /// even starts and degenerates steady-state batching to size 1.
-    pub fn should_wait(&self, pending: usize, waited: Duration) -> bool {
-        pending > 0 && pending < self.max_batch() && waited < self.window
+    ///
+    /// `draining` short-circuits the window: during shutdown the worker
+    /// flushes whatever is queued immediately — a request admitted just
+    /// before shutdown must not sit out the full accumulation window.
+    pub fn should_wait(&self, pending: usize, waited: Duration, draining: bool) -> bool {
+        !draining && pending > 0 && pending < self.max_batch() && waited < self.window
     }
 }
 
@@ -126,10 +130,20 @@ mod tests {
     #[test]
     fn wait_logic() {
         let b = batcher();
-        assert!(!b.should_wait(0, Duration::ZERO));
-        assert!(b.should_wait(2, Duration::from_micros(100)));
-        assert!(!b.should_wait(2, Duration::from_millis(5)));
-        assert!(!b.should_wait(4, Duration::ZERO));
+        assert!(!b.should_wait(0, Duration::ZERO, false));
+        assert!(b.should_wait(2, Duration::from_micros(100), false));
+        assert!(!b.should_wait(2, Duration::from_millis(5), false));
+        assert!(!b.should_wait(4, Duration::ZERO, false));
+    }
+
+    #[test]
+    fn draining_bypasses_the_window() {
+        // A half-full queue inside the window would normally wait —
+        // during a drain it must flush immediately.
+        let b = batcher();
+        assert!(b.should_wait(2, Duration::from_micros(100), false));
+        assert!(!b.should_wait(2, Duration::from_micros(100), true));
+        assert!(!b.should_wait(1, Duration::ZERO, true));
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Deterministic fault injection for the serving pipeline.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a dice roll: every injected
+//! fault is keyed to the worker's global batch counter and every
+//! "random" schedule is expanded from an explicit seed at construction
+//! time.  No wall-clock randomness exists anywhere in the harness, so a
+//! failing robustness test replays bit-identically from its seed.
+//!
+//! Three fault classes cover the failure modes the supervisor must
+//! survive:
+//!
+//! - **Injected panics** (`panic_on_batch`) unwind out of the engine
+//!   call inside the supervisor's `catch_unwind` scope — the model of a
+//!   bug in a kernel: the batch's requests fail with a typed
+//!   [`super::AdmissionError::WorkerFault`], the workspace is reset, and
+//!   the worker restarts with bounded backoff.
+//! - **Injected latency** (`latency_on_batch` / `latency_every_batch`)
+//!   stalls the engine, which is how tests build deterministic queue
+//!   pressure: while one batch crawls, admissions pile into the bounded
+//!   queue and exercise `QueueFull` rejection, drop-oldest eviction, and
+//!   pre-dispatch deadline ejection.
+//! - **Injected kills** (`kill_on_batch`) panic *outside* the
+//!   supervisor's catch scope, so the worker thread genuinely dies — the
+//!   regression model for the pre-supervisor hang-on-worker-death bug:
+//!   every stranded caller must still receive a typed error, never block
+//!   forever.
+//!
+//! The plan also derives deterministic queue-pressure [`burst
+//! schedules`](FaultPlan::burst_sizes) for load-shaped tests, and the
+//! supervisor records everything it injects or catches as
+//! [`FaultEvent`]s, which tests dump via [`render_log`] as the CI
+//! artifact on failure.
+
+use crate::util::Rng;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::time::Duration;
+
+/// Substring marking a panic injected *inside* the supervisor's catch
+/// scope (a recoverable engine fault).
+pub const PANIC_MARKER: &str = "fault-injection: injected engine panic";
+
+/// Substring marking an injected panic that deliberately escapes the
+/// supervisor (a real worker-thread death).
+pub const KILL_MARKER: &str = "fault-injection: injected worker kill";
+
+/// A seeded, wall-clock-free fault schedule keyed to the worker's
+/// global batch counter (batch 0 is the first dispatch after startup).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    panic_batches: BTreeSet<u64>,
+    kill_batches: BTreeSet<u64>,
+    /// Latency injected before the listed batches…
+    latency_batches: BTreeSet<u64>,
+    /// …or before every batch when `latency_every` is set.
+    latency_every: bool,
+    latency: Duration,
+}
+
+impl FaultPlan {
+    /// An empty plan carrying `seed` for the derived schedules
+    /// ([`Self::with_random_panics`], [`Self::burst_sizes`]).
+    pub fn seeded(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Panic (caught by the supervisor) when dispatching batch `k`.
+    pub fn panic_on_batch(mut self, k: u64) -> Self {
+        self.panic_batches.insert(k);
+        self
+    }
+
+    /// Kill the worker thread for real when dispatching batch `k`.
+    pub fn kill_on_batch(mut self, k: u64) -> Self {
+        self.kill_batches.insert(k);
+        self
+    }
+
+    /// Inject `latency` before batch `k` only.
+    pub fn latency_on_batch(mut self, k: u64, latency: Duration) -> Self {
+        self.latency_batches.insert(k);
+        self.latency = latency;
+        self
+    }
+
+    /// Inject `latency` before every batch.
+    pub fn latency_every_batch(mut self, latency: Duration) -> Self {
+        self.latency_every = true;
+        self.latency = latency;
+        self
+    }
+
+    /// Expand the seed into a panic schedule over batches `0..horizon`,
+    /// each panicking independently with probability `p` — fully
+    /// determined by the seed, so stress runs replay exactly.
+    pub fn with_random_panics(mut self, horizon: u64, p: f64) -> Self {
+        let mut rng = Rng::new(self.seed ^ 0x70a1c);
+        for k in 0..horizon {
+            if rng.next_f64() < p {
+                self.panic_batches.insert(k);
+            }
+        }
+        self
+    }
+
+    /// A deterministic queue-pressure schedule: `rounds` burst sizes in
+    /// `1..=max`, derived from the seed.  Load tests use this so "send a
+    /// random burst" is replayable.
+    pub fn burst_sizes(&self, rounds: usize, max: usize) -> Vec<usize> {
+        let mut rng = Rng::new(self.seed ^ 0xb0257);
+        (0..rounds).map(|_| 1 + rng.next_below(max.max(1))).collect()
+    }
+
+    /// Batch indices scheduled to panic (inspection/logging).
+    pub fn panic_batches(&self) -> impl Iterator<Item = u64> + '_ {
+        self.panic_batches.iter().copied()
+    }
+
+    pub(crate) fn latency_for(&self, k: u64) -> Option<Duration> {
+        if self.latency > Duration::ZERO
+            && (self.latency_every || self.latency_batches.contains(&k))
+        {
+            Some(self.latency)
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn panics_on(&self, k: u64) -> bool {
+        self.panic_batches.contains(&k)
+    }
+
+    pub(crate) fn kills_on(&self, k: u64) -> bool {
+        self.kill_batches.contains(&k)
+    }
+}
+
+/// One entry in the supervisor's fault journal.  Ordered, append-only,
+/// and keyed to batch indices rather than timestamps, so a journal from
+/// a failing run is directly comparable across machines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// The plan stalled batch `batch` by `delay`.
+    InjectedLatency { batch: u64, delay: Duration },
+    /// The plan panicked batch `batch` inside the catch scope.
+    InjectedPanic { batch: u64 },
+    /// The supervisor caught a panic (injected or genuine) at `batch`.
+    CaughtPanic { batch: u64, msg: String },
+    /// The worker restarted after a caught panic: workspace reset, then
+    /// `backoff` of bounded exponential delay before the next dispatch.
+    Restarted { incarnation: u32, backoff: Duration },
+    /// `consecutive` faults in a row tripped the circuit breaker; new
+    /// admissions fast-fail until the cooldown elapses.
+    BreakerTripped { consecutive: u32 },
+    /// A successful batch closed the breaker again.
+    BreakerClosed,
+    /// The worker thread itself died (killed outside the catch scope);
+    /// all queued requests were failed with a typed error.
+    WorkerDied,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::InjectedLatency { batch, delay } => {
+                write!(f, "batch {batch}: injected latency {delay:?}")
+            }
+            FaultEvent::InjectedPanic { batch } => {
+                write!(f, "batch {batch}: injected panic")
+            }
+            FaultEvent::CaughtPanic { batch, msg } => {
+                write!(f, "batch {batch}: caught panic: {msg}")
+            }
+            FaultEvent::Restarted {
+                incarnation,
+                backoff,
+            } => write!(
+                f,
+                "worker restarted (incarnation {incarnation}, backoff {backoff:?})"
+            ),
+            FaultEvent::BreakerTripped { consecutive } => {
+                write!(f, "circuit breaker tripped after {consecutive} consecutive faults")
+            }
+            FaultEvent::BreakerClosed => write!(f, "circuit breaker closed"),
+            FaultEvent::WorkerDied => write!(f, "worker thread died"),
+        }
+    }
+}
+
+/// Render a fault journal as the line-per-event log tests upload as the
+/// CI artifact when a robustness assertion fails.
+pub fn render_log(events: &[FaultEvent]) -> String {
+    let mut out = String::new();
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&format!("[{i:04}] {e}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_from_seed() {
+        let a = FaultPlan::seeded(42).with_random_panics(64, 0.25);
+        let b = FaultPlan::seeded(42).with_random_panics(64, 0.25);
+        assert_eq!(
+            a.panic_batches().collect::<Vec<_>>(),
+            b.panic_batches().collect::<Vec<_>>()
+        );
+        assert_eq!(a.burst_sizes(16, 8), b.burst_sizes(16, 8));
+        let c = FaultPlan::seeded(43).with_random_panics(64, 0.25);
+        assert_ne!(
+            a.panic_batches().collect::<Vec<_>>(),
+            c.panic_batches().collect::<Vec<_>>(),
+            "different seeds must give different schedules"
+        );
+        assert!(a.burst_sizes(32, 8).iter().all(|&s| (1..=8).contains(&s)));
+    }
+
+    #[test]
+    fn latency_targets_the_scheduled_batches() {
+        let d = Duration::from_millis(5);
+        let p = FaultPlan::seeded(1).latency_on_batch(2, d);
+        assert_eq!(p.latency_for(2), Some(d));
+        assert_eq!(p.latency_for(3), None);
+        let p = FaultPlan::seeded(1).latency_every_batch(d);
+        assert_eq!(p.latency_for(0), Some(d));
+        assert_eq!(p.latency_for(99), Some(d));
+        assert_eq!(FaultPlan::seeded(1).latency_for(0), None);
+    }
+
+    #[test]
+    fn panic_and_kill_schedules() {
+        let p = FaultPlan::seeded(0).panic_on_batch(1).kill_on_batch(4);
+        assert!(p.panics_on(1) && !p.panics_on(0));
+        assert!(p.kills_on(4) && !p.kills_on(1));
+    }
+
+    #[test]
+    fn log_renders_every_event() {
+        let events = vec![
+            FaultEvent::InjectedLatency {
+                batch: 0,
+                delay: Duration::from_millis(3),
+            },
+            FaultEvent::InjectedPanic { batch: 1 },
+            FaultEvent::CaughtPanic {
+                batch: 1,
+                msg: "boom".into(),
+            },
+            FaultEvent::Restarted {
+                incarnation: 1,
+                backoff: Duration::from_millis(5),
+            },
+            FaultEvent::BreakerTripped { consecutive: 3 },
+            FaultEvent::BreakerClosed,
+            FaultEvent::WorkerDied,
+        ];
+        let log = render_log(&events);
+        assert_eq!(log.lines().count(), events.len());
+        assert!(log.contains("injected panic"));
+        assert!(log.contains("breaker tripped"));
+        assert!(log.contains("worker thread died"));
+    }
+}

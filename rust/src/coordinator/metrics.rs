@@ -1,5 +1,6 @@
-//! Serving metrics: request counts, batch-size histogram, and latency
-//! percentiles over a bounded reservoir.
+//! Serving metrics: request counts, batch-size histogram, latency
+//! percentiles over a bounded reservoir, and the robustness counters
+//! (rejections, deadline ejections, worker faults, peak queue depth).
 
 use std::time::Duration;
 
@@ -7,6 +8,17 @@ use std::time::Duration;
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
+    /// Requests refused (or evicted under drop-oldest) because the
+    /// bounded admission queue was full.
+    pub rejected_full: u64,
+    /// Requests ejected pre-dispatch because their deadline expired
+    /// while queued — they never occupied a fused batch slot.
+    pub ejected_deadline: u64,
+    /// Batches failed by a caught engine panic (each restart of the
+    /// supervised worker counts once).
+    pub worker_faults: u64,
+    /// High-water mark of the admission queue depth.
+    pub queue_depth_peak: usize,
     /// `batch_hist[s]` = number of launches with batch size s.
     batch_hist: Vec<u64>,
     /// Request latencies (seconds), bounded reservoir.
@@ -25,10 +37,31 @@ impl Metrics {
         Self {
             requests: 0,
             batches: 0,
+            rejected_full: 0,
+            ejected_deadline: 0,
+            worker_faults: 0,
+            queue_depth_peak: 0,
             batch_hist: vec![0; max_batch + 1],
             latencies: Vec::with_capacity(reservoir),
             reservoir,
         }
+    }
+
+    pub fn record_rejected_full(&mut self) {
+        self.rejected_full += 1;
+    }
+
+    pub fn record_ejection(&mut self) {
+        self.ejected_deadline += 1;
+    }
+
+    pub fn record_worker_fault(&mut self) {
+        self.worker_faults += 1;
+    }
+
+    /// Track the admission queue's high-water mark.
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depth_peak = self.queue_depth_peak.max(depth);
     }
 
     pub fn record_batch(&mut self, batch_size: usize) {
@@ -70,12 +103,17 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.2} p50={:?} p99={:?}",
+            "requests={} batches={} mean_batch={:.2} p50={:?} p99={:?} \
+             rejected_full={} ejected_deadline={} worker_faults={} queue_depth_peak={}",
             self.requests,
             self.batches,
             self.mean_batch(),
             self.latency_percentile(50.0),
             self.latency_percentile(99.0),
+            self.rejected_full,
+            self.ejected_deadline,
+            self.worker_faults,
+            self.queue_depth_peak,
         )
     }
 }
@@ -108,6 +146,27 @@ mod tests {
         let p99 = m.latency_percentile(99.0).unwrap();
         assert!(p99 >= 0.098, "p99 {p99}");
         assert!(Metrics::default().latency_percentile(50.0).is_none());
+    }
+
+    #[test]
+    fn robustness_counters() {
+        let mut m = Metrics::new(4, 16);
+        m.record_rejected_full();
+        m.record_rejected_full();
+        m.record_ejection();
+        m.record_worker_fault();
+        m.record_queue_depth(3);
+        m.record_queue_depth(7);
+        m.record_queue_depth(2); // peak is a high-water mark
+        assert_eq!(m.rejected_full, 2);
+        assert_eq!(m.ejected_deadline, 1);
+        assert_eq!(m.worker_faults, 1);
+        assert_eq!(m.queue_depth_peak, 7);
+        let s = m.summary();
+        assert!(s.contains("rejected_full=2"), "{s}");
+        assert!(s.contains("ejected_deadline=1"), "{s}");
+        assert!(s.contains("worker_faults=1"), "{s}");
+        assert!(s.contains("queue_depth_peak=7"), "{s}");
     }
 
     #[test]

@@ -1,22 +1,36 @@
-//! L3 coordinator: the inference server behind the dynamic batcher.
+//! L3 coordinator: the fault-tolerant inference server behind the
+//! dynamic batcher.
 //!
 //! The paper's contribution is the accelerator architecture, so the
-//! coordinator is the serving shell around it: a request queue, a dynamic
-//! batcher, a worker thread owning the execution engine, and
-//! latency/throughput metrics.  Two engines plug in behind the same
-//! worker: the PJRT runtime driving the AOT artifacts (vgg_tiny_b4 /
-//! vgg_tiny_b1 picked per batch), and the native
-//! [`crate::executor::Session`] serving whole compiled graphs with
-//! per-conv cached sparse filter banks — the transform-domain sparse
-//! pipeline's serving path.
+//! coordinator is the serving shell around it: a **bounded** admission
+//! queue with typed refusals, per-request deadlines ejected before batch
+//! assembly, a dynamic batcher, a **supervised** worker thread owning
+//! the execution engine (panic isolation, bounded-backoff restart, and a
+//! circuit breaker), and latency/throughput/robustness metrics.  Two
+//! engines plug in behind the same worker: the PJRT runtime driving the
+//! AOT artifacts (vgg_tiny_b4 / vgg_tiny_b1 picked per batch), and the
+//! native [`crate::executor::Session`] serving whole compiled graphs
+//! with per-conv cached sparse filter banks — the transform-domain
+//! sparse pipeline's serving path.
 //!
-//! Thread model: std::thread + mpsc (the offline crate set has no tokio);
-//! one worker owns the engine, callers hold cloneable handles.
+//! Every admitted request receives exactly one completion — logits or a
+//! typed [`AdmissionError`] — even across injected panics, worker-thread
+//! death, deadline storms, and shutdown; the deterministic
+//! [`fault`]-injection harness and `tests/robustness.rs` prove it.
+//!
+//! Thread model: std::thread + mpsc + condvar (the offline crate set has
+//! no tokio); one worker owns the engine, callers hold the server handle.
 
 pub mod batcher;
+pub mod fault;
 pub mod metrics;
 pub mod server;
+pub mod supervisor;
 
 pub use batcher::{BatchPlan, Batcher};
+pub use fault::{render_log, FaultEvent, FaultPlan};
 pub use metrics::Metrics;
-pub use server::{InferenceServer, NativeServerConfig, ServerConfig};
+pub use server::{
+    AdmissionError, AdmissionPolicy, InferenceServer, NativeServerConfig, Reply, ServerConfig,
+};
+pub use supervisor::RestartPolicy;

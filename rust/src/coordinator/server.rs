@@ -1,5 +1,6 @@
-//! The inference server: a worker thread owning an execution engine, fed
-//! by a request channel, batching dynamically.
+//! The inference server: a supervised worker thread owning an execution
+//! engine, fed by a **bounded admission queue**, batching dynamically,
+//! and failing loudly instead of hanging.
 //!
 //! Two engines sit behind the same batching worker:
 //!
@@ -9,25 +10,154 @@
 //!   channels and `Vec<f32>` payloads.
 //! - **Native** — a compiled [`Session`] (typed graph + bound weights +
 //!   per-conv policies) running on the CPU plan engines with cached
-//!   (sparse) filter banks.  This is the transform-domain sparse
-//!   pipeline's serving path and works without the `pjrt` feature or
-//!   artifacts.  Build the session first (all compile errors surface as
-//!   typed [`crate::nn::graph::GraphError`]s at build time), then hand
-//!   it to [`InferenceServer::start_native`].
+//!   (sparse) filter banks.  Build the session first (all compile errors
+//!   surface as typed [`GraphError`]s at build time), then hand it to
+//!   [`InferenceServer::start_native`].
+//!
+//! # Failure model — the no-silent-drop guarantee
+//!
+//! Every request admitted by [`InferenceServer::infer_async`] receives
+//! **exactly one completion**: the logits, or a typed
+//! [`AdmissionError`].  The pipeline enforces this at each boundary:
+//!
+//! - **Admission** is bounded: a full queue rejects synchronously
+//!   ([`AdmissionError::QueueFull`]) or evicts the oldest queued request
+//!   ([`AdmissionPolicy::DropOldest`]), which then *completes* with
+//!   `QueueFull` — never a vanished reply.
+//! - **Deadlines** ride each request from enqueue through batching; the
+//!   batch assembler ejects expired requests *before* they occupy a
+//!   fused batch slot and completes them with
+//!   [`AdmissionError::DeadlineExpired`].
+//! - **Panics** are confined by the [`supervisor`](super::supervisor):
+//!   a caught engine panic fails only its own batch (typed
+//!   [`AdmissionError::WorkerFault`]), resets the workspace, restarts
+//!   with bounded exponential backoff, and — after
+//!   [`RestartPolicy::breaker_threshold`] consecutive faults — trips a
+//!   circuit breaker that fast-fails *new* admissions
+//!   ([`AdmissionError::CircuitOpen`]) instead of queueing into a dead
+//!   engine.
+//! - **Shutdown** drains or rejects deterministically
+//!   ([`InferenceServer::shutdown`]); a dying worker thread completes
+//!   every stranded request with [`AdmissionError::WorkerFault`] on its
+//!   way down, and a disconnected reply channel maps to a typed error,
+//!   never a hang.
 
 use super::batcher::Batcher;
+use super::fault::FaultEvent;
+#[cfg(feature = "fault-injection")]
+use super::fault::FaultPlan;
 use super::metrics::Metrics;
+use super::supervisor::{BatchFailure, Engine, RestartPolicy, Supervisor};
 use crate::executor::Session;
-use crate::runtime::{LoadedModel, Runtime};
+use crate::nn::graph::GraphError;
+use crate::runtime::Runtime;
 use crate::tuner::TuneProfile;
 use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::error::Error as StdError;
+use std::fmt;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Server configuration.
+/// Default bound on the admission queue (requests waiting for a batch
+/// slot, not counting the batch in flight).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// How long the idle worker sleeps between queue polls (it is woken
+/// immediately by the admission condvar; this only bounds the shutdown
+/// latency of a completely idle server).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------------
+// Typed serving errors
+// ---------------------------------------------------------------------------
+
+/// What to do with a new request when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Refuse the new request synchronously with
+    /// [`AdmissionError::QueueFull`] (callers see backpressure).
+    RejectNew,
+    /// Admit the new request and complete the **oldest queued** request
+    /// with [`AdmissionError::QueueFull`] (freshest traffic wins — the
+    /// right shape when stale results are worthless anyway).
+    DropOldest,
+}
+
+/// Typed error for every way a request can fail to produce logits.
+/// Every admitted request completes with its result or exactly one of
+/// these; admission-time refusals return synchronously from
+/// [`InferenceServer::infer_async`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionError {
+    /// The bounded admission queue is at capacity.  Under
+    /// [`AdmissionPolicy::RejectNew`] the *new* request gets this
+    /// synchronously; under [`AdmissionPolicy::DropOldest`] the evicted
+    /// oldest request gets it through its reply channel.
+    QueueFull { capacity: usize },
+    /// The server is shutting down (or already has) and is not
+    /// accepting work; under reject-shutdown, queued requests complete
+    /// with this too.
+    ShuttingDown,
+    /// The request's deadline elapsed while it waited in the queue; it
+    /// was ejected before occupying a fused batch slot.
+    DeadlineExpired { deadline: Duration, waited: Duration },
+    /// The circuit breaker is open: the engine faulted on
+    /// `consecutive_faults` consecutive batches, so new admissions
+    /// fast-fail until the cooldown lets traffic probe again.
+    CircuitOpen { consecutive_faults: u32 },
+    /// The worker faulted while serving (engine panic — caught and
+    /// restarted — or worker-thread death with this request in flight).
+    WorkerFault { msg: String },
+    /// The engine refused the request with a typed error (wrong input
+    /// size at admission, over-capacity batch, PJRT refusal, ...).
+    Engine(GraphError),
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::QueueFull { capacity } => {
+                write!(f, "admission queue full (capacity {capacity}) — retry with backoff")
+            }
+            AdmissionError::ShuttingDown => write!(f, "server is shutting down"),
+            AdmissionError::DeadlineExpired { deadline, waited } => write!(
+                f,
+                "deadline {deadline:?} expired after waiting {waited:?}; \
+                 request ejected before dispatch"
+            ),
+            AdmissionError::CircuitOpen { consecutive_faults } => write!(
+                f,
+                "circuit breaker open after {consecutive_faults} consecutive worker \
+                 faults — admissions fast-fail until the cooldown elapses"
+            ),
+            AdmissionError::WorkerFault { msg } => write!(f, "worker fault: {msg}"),
+            AdmissionError::Engine(e) => write!(f, "engine refused the request: {e}"),
+        }
+    }
+}
+
+impl StdError for AdmissionError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match self {
+            AdmissionError::Engine(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// The reply side of one admitted request: yields exactly one
+/// completion (logits or a typed [`AdmissionError`]).
+pub type Reply = mpsc::Receiver<Result<Vec<f32>, AdmissionError>>;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Server configuration (PJRT engine).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub artifact_dir: PathBuf,
@@ -50,7 +180,44 @@ impl ServerConfig {
 
 /// Configuration for the native (in-process [`Session`]) serving path.
 /// The session is built by the caller — compile errors are typed
-/// [`crate::nn::graph::GraphError`]s *before* any server thread exists.
+/// [`GraphError`]s *before* any server thread exists.
+///
+/// The robustness knobs all have conservative defaults; the example
+/// pins every one of them:
+///
+/// ```
+/// use std::time::Duration;
+/// use swcnn::coordinator::{
+///     AdmissionPolicy, InferenceServer, NativeServerConfig, RestartPolicy,
+/// };
+/// use swcnn::executor::{ExecPolicy, Session};
+/// use swcnn::nn::{graph::Synthetic, vgg_tiny};
+///
+/// let session = Session::uniform(
+///     vgg_tiny(),
+///     &mut Synthetic::new(7),
+///     ExecPolicy::sparse(2, 0.7),
+/// )
+/// .unwrap();
+/// let cfg = NativeServerConfig::new(session)
+///     // Bounded admission: at most 32 queued requests; a full queue
+///     // evicts the stalest one instead of refusing fresh traffic.
+///     .with_queue(32, AdmissionPolicy::DropOldest)
+///     // Every request expires 250ms after enqueue unless it carries
+///     // its own deadline; expired work is ejected pre-dispatch.
+///     .with_default_deadline(Some(Duration::from_millis(250)))
+///     // Supervisor: trip the breaker after 4 consecutive engine
+///     // faults, backing off 10ms → 20ms → ... capped at 100ms.
+///     .with_restart(RestartPolicy {
+///         breaker_threshold: 4,
+///         backoff_base: Duration::from_millis(10),
+///         backoff_max: Duration::from_millis(100),
+///         breaker_cooldown: Duration::from_millis(200),
+///     });
+/// let server = InferenceServer::start_native(cfg).unwrap();
+/// let logits = server.infer(vec![0.1; server.input_elements()]).unwrap();
+/// assert_eq!(logits.len(), 10);
+/// ```
 pub struct NativeServerConfig {
     /// The compiled graph the worker serves.
     pub session: Session,
@@ -66,6 +233,21 @@ pub struct NativeServerConfig {
     /// session from [`TuneProfile::policies_for`] so the executors
     /// actually run the tuned configurations.
     pub profile: Option<TuneProfile>,
+    /// Bound on the admission queue; a request beyond it is refused or
+    /// evicts the oldest, per `admission`.
+    pub queue_capacity: usize,
+    /// What a full queue does to new traffic.
+    pub admission: AdmissionPolicy,
+    /// Deadline stamped on requests that don't carry their own (from
+    /// enqueue time).  `None` = requests wait indefinitely.
+    pub default_deadline: Option<Duration>,
+    /// Supervisor restart/backoff/circuit-breaker policy.
+    pub restart: RestartPolicy,
+    /// Deterministic fault schedule for the robustness harness; `None`
+    /// in production.  Only present with the `fault-injection` feature
+    /// — without it the serving path has no injection hooks at all.
+    #[cfg(feature = "fault-injection")]
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl NativeServerConfig {
@@ -75,6 +257,12 @@ impl NativeServerConfig {
             window: Duration::from_millis(2),
             max_batch: 4,
             profile: None,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            admission: AdmissionPolicy::RejectNew,
+            default_deadline: None,
+            restart: RestartPolicy::default(),
+            #[cfg(feature = "fault-injection")]
+            fault_plan: None,
         }
     }
 
@@ -84,15 +272,134 @@ impl NativeServerConfig {
         self.profile = Some(profile);
         self
     }
+
+    /// Bound the admission queue and pick the full-queue policy.
+    pub fn with_queue(mut self, capacity: usize, admission: AdmissionPolicy) -> Self {
+        self.queue_capacity = capacity.max(1);
+        self.admission = admission;
+        self
+    }
+
+    /// Default per-request deadline (measured from enqueue).
+    pub fn with_default_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.default_deadline = deadline;
+        self
+    }
+
+    /// Supervisor restart / circuit-breaker policy.
+    pub fn with_restart(mut self, restart: RestartPolicy) -> Self {
+        self.restart = restart;
+        self
+    }
+
+    /// Attach a deterministic fault schedule (robustness tests only).
+    #[cfg(feature = "fault-injection")]
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
 }
 
-enum Msg {
-    Infer {
-        image: Vec<f32>,
-        resp: mpsc::Sender<Result<Vec<f32>>>,
-    },
-    Shutdown,
+// ---------------------------------------------------------------------------
+// Shared queue state
+// ---------------------------------------------------------------------------
+
+/// Whether the server is accepting, flushing, or rejecting work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RunMode {
+    /// Serving normally.
+    Open,
+    /// Shutdown requested: no new admissions; queued requests are
+    /// flushed immediately (the batching window is bypassed).
+    Draining,
+    /// Shutdown requested: no new admissions; queued requests complete
+    /// with [`AdmissionError::ShuttingDown`].
+    Rejecting,
 }
+
+/// One admitted request waiting for (or riding in) a batch.
+struct Pending {
+    image: Vec<f32>,
+    resp: mpsc::Sender<Result<Vec<f32>, AdmissionError>>,
+    enqueued: Instant,
+    /// Deadline relative to `enqueued`; `None` waits indefinitely.
+    deadline: Option<Duration>,
+}
+
+impl Pending {
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| self.enqueued.elapsed() > d)
+    }
+
+    /// Deliver the single completion this request is owed.  A send on a
+    /// disconnected channel means the caller walked away — their
+    /// prerogative, not a drop on our side.
+    fn complete(self, result: Result<Vec<f32>, AdmissionError>) {
+        let _ = self.resp.send(result);
+    }
+}
+
+/// State shared between admission (caller threads) and the worker.
+struct QueueState {
+    queue: VecDeque<Pending>,
+    mode: RunMode,
+    /// Set by the worker's drop guard if the thread dies for real.
+    worker_dead: bool,
+    /// `Some(when)` while the circuit breaker is open.
+    breaker_tripped_at: Option<Instant>,
+    /// Mirror of the supervisor's consecutive-fault streak (admissions
+    /// report it in [`AdmissionError::CircuitOpen`]).
+    consecutive_faults: u32,
+    /// Append-only fault journal (see [`FaultEvent`]).
+    events: Vec<FaultEvent>,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl Shared {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            q: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                mode: RunMode::Open,
+                worker_dead: false,
+                breaker_tripped_at: None,
+                consecutive_faults: 0,
+                events: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Lock the queue state, recovering from poisoning: the state's
+    /// invariants hold at every unlock point, and serving must outlive
+    /// a panicking peer thread.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.q.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wait<'a>(
+        &self,
+        guard: MutexGuard<'a, QueueState>,
+        timeout: Duration,
+    ) -> MutexGuard<'a, QueueState> {
+        match self.cv.wait_timeout(guard, timeout) {
+            Ok((g, _)) => g,
+            Err(poisoned) => poisoned.into_inner().0,
+        }
+    }
+}
+
+fn lock_metrics(metrics: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+    metrics.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// The server handle
+// ---------------------------------------------------------------------------
 
 /// Info the worker reports back once the artifacts are compiled.
 struct Ready {
@@ -102,21 +409,26 @@ struct Ready {
 
 /// Handle to a running inference server.
 pub struct InferenceServer {
-    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
     worker: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<Metrics>>,
     input_elems: usize,
     output_elems: usize,
+    queue_capacity: usize,
+    admission: AdmissionPolicy,
+    default_deadline: Option<Duration>,
+    breaker_cooldown: Duration,
 }
 
 impl InferenceServer {
-    /// Start the worker: it compiles the artifacts, reports readiness,
-    /// then serves until the handle is dropped.
+    /// Start the PJRT worker: it compiles the artifacts, reports
+    /// readiness, then serves until the handle is dropped.
     pub fn start(cfg: ServerConfig) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Shared::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
         let metrics = Arc::new(Mutex::new(Metrics::new(16, 4096)));
         let metrics_worker = metrics.clone();
+        let shared_worker = Arc::clone(&shared);
 
         let worker = std::thread::spawn(move || {
             match setup(&cfg) {
@@ -135,8 +447,12 @@ impl InferenceServer {
                         input_elems,
                         output_elems,
                     }));
-                    let engine = Engine::Pjrt { models, sizes };
-                    worker_loop(rx, engine, batcher, metrics_worker, input_elems);
+                    let sup = Supervisor::new(
+                        Engine::Pjrt { models, sizes },
+                        RestartPolicy::default(),
+                        None,
+                    );
+                    worker_loop(shared_worker, sup, batcher, metrics_worker);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -148,11 +464,15 @@ impl InferenceServer {
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))??;
         Ok(Self {
-            tx,
+            shared,
             worker: Some(worker),
             metrics,
             input_elems: ready.input_elems,
             output_elems: ready.output_elems,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            admission: AdmissionPolicy::RejectNew,
+            default_deadline: None,
+            breaker_cooldown: RestartPolicy::default().breaker_cooldown,
         })
     }
 
@@ -162,11 +482,22 @@ impl InferenceServer {
     /// profile (if any) is validated against the session's graph before
     /// any thread spawns, so a mismatch is a typed refusal.
     pub fn start_native(cfg: NativeServerConfig) -> Result<Self> {
+        #[cfg(feature = "fault-injection")]
+        let mut cfg = cfg;
+        #[cfg(feature = "fault-injection")]
+        let fault_plan = cfg.fault_plan.take();
+        #[cfg(not(feature = "fault-injection"))]
+        let fault_plan = None;
         let NativeServerConfig {
             mut session,
             window,
             max_batch,
             profile,
+            queue_capacity,
+            admission,
+            default_deadline,
+            restart,
+            ..
         } = cfg;
         // A tuned profile may ask for a larger fused batch than the
         // config default — the batcher and workspace follow the profile.
@@ -184,20 +515,30 @@ impl InferenceServer {
         session.grow_max_batch(fused_batch);
         let input_elems = session.input_elements();
         let output_elems = session.output_elements();
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let shared = Shared::new();
+        let shared_worker = Arc::clone(&shared);
         let metrics = Arc::new(Mutex::new(Metrics::new(fused_batch.max(16), 4096)));
         let metrics_worker = metrics.clone();
         let batcher = Batcher::contiguous(fused_batch, window);
+        let breaker_cooldown = restart.breaker_cooldown;
         let worker = std::thread::spawn(move || {
-            let engine = Engine::Native(Box::new(session));
-            worker_loop(rx, engine, batcher, metrics_worker, input_elems);
+            let sup = Supervisor::new(
+                Engine::Native(Box::new(session)),
+                restart,
+                fault_plan,
+            );
+            worker_loop(shared_worker, sup, batcher, metrics_worker);
         });
         Ok(Self {
-            tx,
+            shared,
             worker: Some(worker),
             metrics,
             input_elems,
             output_elems,
+            queue_capacity: queue_capacity.max(1),
+            admission,
+            default_deadline,
+            breaker_cooldown,
         })
     }
 
@@ -209,79 +550,326 @@ impl InferenceServer {
         self.output_elems
     }
 
-    /// Enqueue one image; returns a receiver for the logits.
-    pub fn infer_async(&self, image: Vec<f32>) -> mpsc::Receiver<Result<Vec<f32>>> {
-        let (resp_tx, resp_rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Infer {
-            image,
-            resp: resp_tx,
-        });
-        resp_rx
+    /// Requests currently waiting for a batch slot.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.lock_state().queue.len()
     }
 
-    /// Blocking single-image inference.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.infer_async(image)
-            .recv()
-            .map_err(|_| anyhow!("server dropped the request"))?
+    /// True while the circuit breaker is tripped (admissions fast-fail
+    /// until the cooldown lets a probe through).
+    pub fn breaker_open(&self) -> bool {
+        self.shared.lock_state().breaker_tripped_at.is_some()
+    }
+
+    /// Snapshot of the fault journal: everything the supervisor
+    /// injected, caught, or tripped, in order.
+    pub fn fault_events(&self) -> Vec<FaultEvent> {
+        self.shared.lock_state().events.clone()
+    }
+
+    /// Enqueue one image under the server's default deadline; returns
+    /// the reply channel, or a synchronous typed refusal when the
+    /// request was never admitted (full queue, open breaker, shutdown,
+    /// wrong input size).
+    pub fn infer_async(&self, image: Vec<f32>) -> Result<Reply, AdmissionError> {
+        self.infer_async_deadline(image, self.default_deadline)
+    }
+
+    /// Enqueue one image with an explicit deadline (measured from now;
+    /// `None` waits indefinitely).  If the deadline elapses before the
+    /// batch assembler dispatches the request, it is ejected — it never
+    /// occupies a fused batch slot — and completes with
+    /// [`AdmissionError::DeadlineExpired`].
+    pub fn infer_async_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Reply, AdmissionError> {
+        let (resp, reply) = mpsc::channel();
+        let mut st = self.shared.lock_state();
+        if st.worker_dead {
+            return Err(AdmissionError::WorkerFault {
+                msg: "worker thread died; the server cannot serve".to_string(),
+            });
+        }
+        if st.mode != RunMode::Open {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        if let Some(tripped) = st.breaker_tripped_at {
+            // Half-open after the cooldown: admissions flow again and
+            // probe the engine; one success closes the breaker, one
+            // more fault re-trips it immediately.
+            if tripped.elapsed() < self.breaker_cooldown {
+                return Err(AdmissionError::CircuitOpen {
+                    consecutive_faults: st.consecutive_faults,
+                });
+            }
+        }
+        if image.len() != self.input_elems {
+            return Err(AdmissionError::Engine(GraphError::Input {
+                index: 0,
+                expected: self.input_elems,
+                got: image.len(),
+            }));
+        }
+        let mut evicted = None;
+        if st.queue.len() >= self.queue_capacity {
+            match self.admission {
+                AdmissionPolicy::RejectNew => {
+                    drop(st);
+                    lock_metrics(&self.metrics).record_rejected_full();
+                    return Err(AdmissionError::QueueFull {
+                        capacity: self.queue_capacity,
+                    });
+                }
+                AdmissionPolicy::DropOldest => evicted = st.queue.pop_front(),
+            }
+        }
+        st.queue.push_back(Pending {
+            image,
+            resp,
+            enqueued: Instant::now(),
+            deadline,
+        });
+        let depth = st.queue.len();
+        drop(st);
+        self.shared.cv.notify_all();
+        let mut m = lock_metrics(&self.metrics);
+        m.record_queue_depth(depth);
+        if let Some(old) = evicted {
+            m.record_rejected_full();
+            drop(m);
+            old.complete(Err(AdmissionError::QueueFull {
+                capacity: self.queue_capacity,
+            }));
+        }
+        Ok(reply)
+    }
+
+    /// Blocking single-image inference.  A reply channel that
+    /// disconnects without a completion — the worker thread died with
+    /// this request in flight — maps to a typed error, never a hang or
+    /// an anonymous `RecvError`.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>, AdmissionError> {
+        match self.infer_async(image)?.recv() {
+            Ok(result) => result,
+            Err(mpsc::RecvError) => {
+                let st = self.shared.lock_state();
+                if st.worker_dead {
+                    Err(AdmissionError::WorkerFault {
+                        msg: "worker thread died with this request in flight".to_string(),
+                    })
+                } else {
+                    Err(AdmissionError::ShuttingDown)
+                }
+            }
+        }
+    }
+
+    /// Stop accepting new work.  `drain = true` flushes the queued
+    /// requests immediately (the batching window is bypassed — a
+    /// request admitted just before shutdown never waits out the full
+    /// window); `drain = false` completes every queued request with
+    /// [`AdmissionError::ShuttingDown`].  Idempotent; `drop` performs a
+    /// draining shutdown.
+    pub fn shutdown(&self, drain: bool) {
+        let mut st = self.shared.lock_state();
+        st.mode = match (st.mode, drain) {
+            (RunMode::Open, true) => RunMode::Draining,
+            (RunMode::Open, false) | (RunMode::Draining, false) => RunMode::Rejecting,
+            (mode, _) => mode,
+        };
+        drop(st);
+        self.shared.cv.notify_all();
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.shutdown(true);
         if let Some(w) = self.worker.take() {
+            // A worker that died of an (injected) kill returns Err here;
+            // its drop guard already completed every stranded request.
             let _ = w.join();
         }
     }
 }
 
-type Models = Vec<Arc<LoadedModel>>;
+// ---------------------------------------------------------------------------
+// The worker
+// ---------------------------------------------------------------------------
 
-/// The execution engine behind the batching worker: compiled PJRT
-/// executables (one per batch size) or the native `Session` running
-/// whole compiled graphs on the CPU plan engines.
-enum Engine {
-    Pjrt { models: Models, sizes: Vec<usize> },
-    Native(Box<Session>),
+/// Completes every queued request if the worker thread dies — the
+/// no-silent-drop guarantee's last line of defense.  On a normal return
+/// the loop has already drained the queue and this is a no-op.
+struct WorkerGuard {
+    shared: Arc<Shared>,
 }
 
-impl Engine {
-    /// Run one planned batch; returns one output vector per image.
-    fn run_batch(&mut self, images: &[&Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        match self {
-            Engine::Pjrt { models, sizes } => {
-                let idx = sizes
-                    .iter()
-                    .position(|&s| s == images.len())
-                    .ok_or_else(|| anyhow!("no executable for batch size {}", images.len()))?;
-                let model = &models[idx];
-                let outs = if images.len() == 1 {
-                    // Single-image launches pass the owned request buffer
-                    // straight through — no copy on the common path.
-                    model.run(std::slice::from_ref(images[0]))?
-                } else {
-                    let mut stacked =
-                        Vec::with_capacity(images.iter().map(|im| im.len()).sum());
-                    for im in images {
-                        stacked.extend_from_slice(im);
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        let mut st = self.shared.lock_state();
+        st.worker_dead = true;
+        st.mode = RunMode::Rejecting;
+        st.events.push(FaultEvent::WorkerDied);
+        let stranded: Vec<Pending> = st.queue.drain(..).collect();
+        drop(st);
+        for p in stranded {
+            p.complete(Err(AdmissionError::WorkerFault {
+                msg: "worker thread died with this request queued".to_string(),
+            }));
+        }
+    }
+}
+
+/// Completes a dispatched batch's requests if the worker thread dies
+/// mid-dispatch (an injected kill, or a panic that escapes the
+/// supervisor).  These requests left the queue, so [`WorkerGuard`]
+/// cannot see them — without this guard their reply channels would
+/// disconnect with no completion ever sent.
+struct InFlight {
+    items: Vec<Pending>,
+}
+
+impl Drop for InFlight {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        for p in self.items.drain(..) {
+            p.complete(Err(AdmissionError::WorkerFault {
+                msg: "worker thread died while serving this batch".to_string(),
+            }));
+        }
+    }
+}
+
+/// Eject every expired request from the queue, completing each with
+/// [`AdmissionError::DeadlineExpired`] — always called before batch
+/// assembly, so expired work never occupies a fused batch slot.
+fn eject_expired(st: &mut QueueState, metrics: &Mutex<Metrics>) {
+    let mut i = 0;
+    while i < st.queue.len() {
+        if st.queue[i].expired() {
+            let p = st.queue.remove(i).expect("index in bounds");
+            lock_metrics(metrics).record_ejection();
+            let waited = p.enqueued.elapsed();
+            let deadline = p.deadline.expect("expired implies a deadline");
+            p.complete(Err(AdmissionError::DeadlineExpired { deadline, waited }));
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    mut sup: Supervisor,
+    batcher: Batcher,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let _guard = WorkerGuard {
+        shared: Arc::clone(&shared),
+    };
+    let breaker_threshold = sup.policy().breaker_threshold;
+    loop {
+        // Phase 1: assemble one batch (or finish shutdown) under the
+        // queue lock.  Deadline ejection always runs before assembly.
+        let items: Vec<Pending> = {
+            let mut st = shared.lock_state();
+            loop {
+                eject_expired(&mut st, &metrics);
+                if st.mode == RunMode::Rejecting {
+                    let stranded: Vec<Pending> = st.queue.drain(..).collect();
+                    drop(st);
+                    for p in stranded {
+                        p.complete(Err(AdmissionError::ShuttingDown));
                     }
-                    model.run(&[stacked])?
-                };
-                let flat = &outs[0];
-                let per = flat.len() / images.len();
-                Ok((0..images.len())
-                    .map(|i| flat[i * per..(i + 1) * per].to_vec())
-                    .collect())
+                    return;
+                }
+                let draining = st.mode != RunMode::Open;
+                if st.queue.is_empty() {
+                    if draining {
+                        return; // drained clean
+                    }
+                    st = shared.wait(st, IDLE_POLL);
+                    continue;
+                }
+                // The batching window opens at the **first enqueue into
+                // the empty queue** (the head request's age) — any
+                // earlier origin silently expires the window while
+                // nothing is pending and degenerates steady-state
+                // batches to size 1.  A drain flushes immediately.
+                let waited = st.queue[0].enqueued.elapsed();
+                if batcher.should_wait(st.queue.len(), waited, draining) {
+                    let remaining = batcher.window.saturating_sub(waited);
+                    st = shared.wait(st, remaining.max(Duration::from_micros(100)));
+                    continue;
+                }
+                let take = batcher.plan(st.queue.len())[0].batch_size;
+                break st.queue.drain(..take).collect();
             }
-            Engine::Native(session) => {
-                // One fused batched launch per plan: every cached filter
-                // bank streams once for the whole batch instead of once
-                // per image (bit-identical to the per-image path).  A
-                // typed GraphError becomes a per-request failure, never
-                // a dead worker.
-                let imgs: Vec<&[f32]> = images.iter().map(|im| im.as_slice()).collect();
-                Ok(session.forward_batch(&imgs)?)
+        };
+
+        // Phase 2: run the batch outside the lock — admissions and
+        // deadline bookkeeping proceed while the engine computes.
+        let mut in_flight = InFlight { items };
+        let result = {
+            let images: Vec<&Vec<f32>> = in_flight.items.iter().map(|p| &p.image).collect();
+            sup.run_batch(&images)
+        };
+        let items = std::mem::take(&mut in_flight.items);
+        drop(in_flight);
+
+        // Phase 3: sync the fault journal and breaker, then complete
+        // every request in the batch exactly once.
+        {
+            let mut st = shared.lock_state();
+            st.events.append(&mut sup.drain_events());
+            match &result {
+                Ok(_) | Err(BatchFailure::Refused(_)) => {
+                    st.consecutive_faults = 0;
+                    if st.breaker_tripped_at.take().is_some() {
+                        st.events.push(FaultEvent::BreakerClosed);
+                    }
+                }
+                Err(BatchFailure::Fault { .. }) => {
+                    st.consecutive_faults = sup.consecutive_faults();
+                    if st.consecutive_faults >= breaker_threshold
+                        && st.breaker_tripped_at.is_none()
+                    {
+                        st.breaker_tripped_at = Some(Instant::now());
+                        st.events.push(FaultEvent::BreakerTripped {
+                            consecutive: st.consecutive_faults,
+                        });
+                    }
+                }
+            }
+        }
+        let mut m = lock_metrics(&metrics);
+        m.record_batch(items.len());
+        match result {
+            Ok(outs) => {
+                for (p, out) in items.into_iter().zip(outs) {
+                    m.record_latency(p.enqueued.elapsed());
+                    p.complete(Ok(out));
+                }
+            }
+            Err(BatchFailure::Fault { msg }) => {
+                m.record_worker_fault();
+                drop(m);
+                for p in items {
+                    p.complete(Err(AdmissionError::WorkerFault { msg: msg.clone() }));
+                }
+            }
+            Err(BatchFailure::Refused(e)) => {
+                drop(m);
+                for p in items {
+                    p.complete(Err(AdmissionError::Engine(e.clone())));
+                }
             }
         }
     }
@@ -289,7 +877,10 @@ impl Engine {
 
 /// Build the runtime and compile all `<family>_b<N>` artifacts (worker
 /// thread only — PJRT handles never cross threads).
-fn setup(cfg: &ServerConfig) -> Result<(Models, Vec<usize>, usize, usize)> {
+#[allow(clippy::type_complexity)]
+fn setup(
+    cfg: &ServerConfig,
+) -> Result<(Vec<Arc<crate::runtime::LoadedModel>>, Vec<usize>, usize, usize)> {
     let mut runtime = Runtime::new(&cfg.artifact_dir)?;
     let mut sizes: Vec<usize> = runtime
         .manifest
@@ -308,7 +899,7 @@ fn setup(cfg: &ServerConfig) -> Result<(Models, Vec<usize>, usize, usize)> {
             sizes
         ));
     }
-    let models: Models = sizes
+    let models: Vec<Arc<crate::runtime::LoadedModel>> = sizes
         .iter()
         .map(|&s| runtime.load(&format!("{}_b{}", cfg.family, s)))
         .collect::<Result<_>>()?;
@@ -321,97 +912,6 @@ fn setup(cfg: &ServerConfig) -> Result<(Models, Vec<usize>, usize, usize)> {
         .elements();
     let output_elems = b1.spec.output_shapes[0].iter().product();
     Ok((models, sizes, input_elems, output_elems))
-}
-
-struct Pending {
-    image: Vec<f32>,
-    resp: mpsc::Sender<Result<Vec<f32>>>,
-    enqueued: Instant,
-}
-
-fn worker_loop(
-    rx: mpsc::Receiver<Msg>,
-    mut engine: Engine,
-    batcher: Batcher,
-    metrics: Arc<Mutex<Metrics>>,
-    input_elems: usize,
-) {
-    let mut queue: Vec<Pending> = Vec::new();
-    let mut open = true;
-    while open || !queue.is_empty() {
-        // Drain or wait according to the batching window.  The window is
-        // measured from the **first enqueue into the empty queue** (the
-        // head request's timestamp) — measuring from before the idle
-        // recv would burn the window while nothing is pending, so under
-        // steady load every launch would degenerate to batch 1.
-        loop {
-            let timeout = match queue.first() {
-                None => Duration::from_millis(50),
-                Some(head) => batcher.window.saturating_sub(head.enqueued.elapsed()),
-            };
-            match rx.recv_timeout(timeout) {
-                Ok(Msg::Infer { image, resp }) => {
-                    if image.len() != input_elems {
-                        let _ = resp.send(Err(anyhow!(
-                            "input has {} elements, expected {input_elems}",
-                            image.len()
-                        )));
-                        continue;
-                    }
-                    queue.push(Pending {
-                        image,
-                        resp,
-                        enqueued: Instant::now(),
-                    });
-                    if !batcher.should_wait(queue.len(), queue[0].enqueued.elapsed()) {
-                        break;
-                    }
-                }
-                Ok(Msg::Shutdown) => {
-                    open = false;
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if !queue.is_empty() || !open {
-                        break;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    open = false;
-                    break;
-                }
-            }
-        }
-        if queue.is_empty() {
-            continue;
-        }
-        // Launch the planned batches.
-        for plan in batcher.plan(queue.len()) {
-            let items: Vec<Pending> = queue.drain(..plan.batch_size).collect();
-            let images: Vec<&Vec<f32>> = items.iter().map(|it| &it.image).collect();
-            let result = engine.run_batch(&images);
-            // Lock can only be poisoned if a caller thread panicked while
-            // reading metrics; serving must survive that.
-            let mut m = match metrics.lock() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            m.record_batch(plan.batch_size);
-            match result {
-                Ok(outs) => {
-                    for (it, out) in items.iter().zip(outs) {
-                        m.record_latency(it.enqueued.elapsed());
-                        let _ = it.resp.send(Ok(out));
-                    }
-                }
-                Err(e) => {
-                    for it in &items {
-                        let _ = it.resp.send(Err(anyhow!("execute failed: {e}")));
-                    }
-                }
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -440,20 +940,22 @@ mod tests {
         let mut rng = Rng::new(9);
         // A burst of async requests exercises the dynamic batching path.
         let rxs: Vec<_> = (0..5)
-            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .map(|_| {
+                server
+                    .infer_async(rng.gaussian_vec(3 * 32 * 32))
+                    .expect("admitted")
+            })
             .collect();
         for rx in rxs {
             let y = rx.recv().expect("response").expect("inference");
             assert_eq!(y.len(), 10);
             assert!(y.iter().all(|v| v.is_finite()));
         }
-        let m = match server.metrics.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
+        let m = lock_metrics(&server.metrics);
         assert_eq!(m.requests, 5);
         assert!(m.batches <= 5);
         assert!(m.mean_batch() >= 1.0);
+        assert!(m.queue_depth_peak >= 1, "admission must track queue depth");
     }
 
     #[test]
@@ -470,16 +972,17 @@ mod tests {
         let server = InferenceServer::start_native(cfg).expect("start");
         let mut rng = Rng::new(13);
         let rxs: Vec<_> = (0..4)
-            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .map(|_| {
+                server
+                    .infer_async(rng.gaussian_vec(3 * 32 * 32))
+                    .expect("admitted")
+            })
             .collect();
         for rx in rxs {
             let y = rx.recv().expect("response").expect("inference");
             assert_eq!(y.len(), 10);
         }
-        let m = match server.metrics.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
+        let m = lock_metrics(&server.metrics);
         assert_eq!(m.requests, 4);
         assert_eq!(m.batches, 1, "burst must coalesce into one fused launch");
         assert_eq!(m.batch_histogram()[4], 1);
@@ -490,6 +993,13 @@ mod tests {
     fn native_server_rejects_bad_input_size() {
         let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
         let err = server.infer(vec![0.0; 7]).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                AdmissionError::Engine(GraphError::Input { got: 7, .. })
+            ),
+            "{err:?}"
+        );
         assert!(err.to_string().contains("expected"), "{err}");
     }
 
@@ -519,7 +1029,11 @@ mod tests {
         let mut rng = Rng::new(21);
         let n = profile_batch.max(2);
         let rxs: Vec<_> = (0..n)
-            .map(|_| server.infer_async(rng.gaussian_vec(3 * 32 * 32)))
+            .map(|_| {
+                server
+                    .infer_async(rng.gaussian_vec(3 * 32 * 32))
+                    .expect("admitted")
+            })
             .collect();
         for rx in rxs {
             let y = rx.recv().expect("response").expect("inference");
@@ -587,5 +1101,15 @@ mod tests {
         let s2 = InferenceServer::start_native(native_cfg(0.5)).expect("start");
         let c = s2.infer(image).expect("infer");
         assert_eq!(a, c, "across-server determinism");
+    }
+
+    #[test]
+    fn shutdown_refuses_new_admissions() {
+        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        server.shutdown(true);
+        let err = server.infer_async(vec![0.0; 3 * 32 * 32]).unwrap_err();
+        assert_eq!(err, AdmissionError::ShuttingDown);
+        let err = server.infer(vec![0.0; 3 * 32 * 32]).unwrap_err();
+        assert_eq!(err, AdmissionError::ShuttingDown);
     }
 }

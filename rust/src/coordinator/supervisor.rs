@@ -1,0 +1,387 @@
+//! The worker supervisor: panic isolation, bounded-backoff restart, and
+//! circuit-breaker accounting around the execution engine.
+//!
+//! The serving worker used to call the engine bare: a panicking kernel
+//! unwound through the worker thread, the reply senders dropped, and
+//! every in-flight caller hung on a dead channel.  The [`Supervisor`]
+//! rebuilds that boundary as an explicit failure domain:
+//!
+//! - every engine dispatch runs under `catch_unwind`, so a panic
+//!   poisons exactly **one batch** — its requests fail with a typed
+//!   [`super::AdmissionError::WorkerFault`] and every other request
+//!   (queued or future) is untouched;
+//! - after a caught panic the engine is restarted in place: the native
+//!   [`Session`]'s workspace is reset (see
+//!   [`Session::reset_workspace`]), the incarnation counter bumps, and
+//!   the next dispatch waits out a bounded exponential backoff;
+//! - consecutive-fault and incarnation counters drive the
+//!   [`RestartPolicy`] circuit breaker: once `breaker_threshold` faults
+//!   happen in a row the server fast-fails *new* admissions instead of
+//!   queueing them into a dead engine (queued work keeps probing, so a
+//!   recovered engine closes the breaker by serving a batch).
+//!
+//! The supervisor is deliberately ignorant of the queue: it owns the
+//! engine, the fault plan, and the restart bookkeeping, and the worker
+//! loop in [`super::server`] glues its outcomes to the shared admission
+//! state.  All injected faults ([`FaultPlan`]) pass through the *same*
+//! catch scope as genuine engine panics, so the robustness suite proves
+//! the real machinery, not a test shim.
+
+use super::fault::{FaultEvent, FaultPlan};
+#[cfg(feature = "fault-injection")]
+use super::fault::{KILL_MARKER, PANIC_MARKER};
+use crate::executor::Session;
+use crate::nn::graph::GraphError;
+use crate::runtime::LoadedModel;
+use anyhow::anyhow;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Restart and circuit-breaker policy for the serving worker.
+///
+/// The defaults are tuned for an in-process engine where a restart is a
+/// workspace reset (cheap): short backoff, a breaker that trips after a
+/// small burst of consecutive faults, and a cooldown after which one
+/// probing admission is let back through (half-open).
+#[derive(Debug, Clone)]
+pub struct RestartPolicy {
+    /// Consecutive caught faults that trip the circuit breaker.
+    pub breaker_threshold: u32,
+    /// First-restart backoff; doubles per consecutive fault.
+    pub backoff_base: Duration,
+    /// Upper bound on the exponential backoff.
+    pub backoff_max: Duration,
+    /// How long a tripped breaker fast-fails new admissions before
+    /// letting traffic probe the engine again (half-open).
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        Self {
+            breaker_threshold: 3,
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(200),
+            breaker_cooldown: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Backoff before the dispatch following the `consecutive`-th fault
+    /// in a row: `base * 2^(n-1)`, clamped to `backoff_max`.
+    pub fn backoff_for(&self, consecutive: u32) -> Duration {
+        let doublings = consecutive.saturating_sub(1).min(16);
+        self.backoff_base
+            .saturating_mul(1u32 << doublings)
+            .min(self.backoff_max)
+    }
+}
+
+/// The execution engine behind the batching worker: compiled PJRT
+/// executables (one per batch size) or the native `Session` running
+/// whole compiled graphs on the CPU plan engines.
+pub(crate) enum Engine {
+    Pjrt {
+        models: Vec<Arc<LoadedModel>>,
+        sizes: Vec<usize>,
+    },
+    Native(Box<Session>),
+}
+
+impl Engine {
+    /// Run one planned batch; returns one output vector per image.  All
+    /// failures are typed — panics are the caller's (supervisor's)
+    /// department.
+    fn run_batch(&mut self, images: &[&Vec<f32>]) -> Result<Vec<Vec<f32>>, GraphError> {
+        match self {
+            Engine::Pjrt { models, sizes } => {
+                let idx = sizes.iter().position(|&s| s == images.len()).ok_or_else(|| {
+                    GraphError::Config(format!(
+                        "no executable for batch size {}",
+                        images.len()
+                    ))
+                })?;
+                let model = &models[idx];
+                let outs = if images.len() == 1 {
+                    // Single-image launches pass the owned request buffer
+                    // straight through — no copy on the common path.
+                    model.run(std::slice::from_ref(images[0]))
+                } else {
+                    let mut stacked =
+                        Vec::with_capacity(images.iter().map(|im| im.len()).sum());
+                    for im in images {
+                        stacked.extend_from_slice(im);
+                    }
+                    model.run(&[stacked])
+                }
+                .map_err(|e| GraphError::Config(format!("pjrt execute failed: {e}")))?;
+                let flat = &outs[0];
+                let per = flat.len() / images.len();
+                Ok((0..images.len())
+                    .map(|i| flat[i * per..(i + 1) * per].to_vec())
+                    .collect())
+            }
+            Engine::Native(session) => {
+                // One fused batched launch per plan: every cached filter
+                // bank streams once for the whole batch instead of once
+                // per image (bit-identical to the per-image path).  The
+                // caught entry converts an engine panic into a typed
+                // [`GraphError::Panic`] with the workspace quarantined —
+                // the supervisor turns that into a restart.
+                let imgs: Vec<&[f32]> = images.iter().map(|im| im.as_slice()).collect();
+                session.forward_batch_caught(&imgs)
+            }
+        }
+    }
+
+    /// Restart the engine after a caught panic.  For the native session
+    /// this resets the (possibly poisoned) ping-pong workspace so
+    /// recovery resumes from a bit-identical clean state; the PJRT
+    /// executables hold no cross-batch state to reset.
+    fn restart(&mut self) {
+        if let Engine::Native(session) = self {
+            session.reset_workspace();
+        }
+    }
+}
+
+/// Outcome of a supervised dispatch that did not produce outputs.
+#[derive(Debug)]
+pub(crate) enum BatchFailure {
+    /// The engine panicked; the panic was caught, the engine restarted,
+    /// and only this batch's requests must fail (typed `WorkerFault`).
+    Fault { msg: String },
+    /// The engine refused the batch with a typed error — a per-request
+    /// failure with no restart (the engine is healthy).
+    Refused(GraphError),
+}
+
+/// Runs the engine one batch at a time inside a panic-isolated scope,
+/// applying the [`FaultPlan`] (if any), the restart backoff, and the
+/// fault bookkeeping the server's circuit breaker reads.
+pub(crate) struct Supervisor {
+    engine: Engine,
+    policy: RestartPolicy,
+    /// Injection schedule — only exists with the `fault-injection`
+    /// feature; production builds carry no hooks at all.
+    #[cfg(feature = "fault-injection")]
+    plan: Option<FaultPlan>,
+    /// Global dispatch counter — the fault plan's batch key.
+    batches: u64,
+    consecutive_faults: u32,
+    incarnations: u32,
+    events: Vec<FaultEvent>,
+}
+
+impl Supervisor {
+    pub(crate) fn new(engine: Engine, policy: RestartPolicy, plan: Option<FaultPlan>) -> Self {
+        #[cfg(not(feature = "fault-injection"))]
+        let _ = plan;
+        Self {
+            engine,
+            policy,
+            #[cfg(feature = "fault-injection")]
+            plan,
+            batches: 0,
+            consecutive_faults: 0,
+            incarnations: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Apply the fault plan for batch `k`: inject latency, die for real
+    /// on a scheduled kill, and report whether a panic is due inside
+    /// the catch scope.
+    #[cfg(feature = "fault-injection")]
+    fn apply_plan(&mut self, k: u64) -> bool {
+        let (delay, kills, panics) = match &self.plan {
+            Some(p) => (p.latency_for(k), p.kills_on(k), p.panics_on(k)),
+            None => return false,
+        };
+        if let Some(delay) = delay {
+            self.events.push(FaultEvent::InjectedLatency { batch: k, delay });
+            std::thread::sleep(delay);
+        }
+        if kills {
+            // Outside the catch scope: the worker dies for real.
+            panic!("{KILL_MARKER} at batch {k}");
+        }
+        if panics {
+            self.events.push(FaultEvent::InjectedPanic { batch: k });
+        }
+        panics
+    }
+
+    pub(crate) fn policy(&self) -> &RestartPolicy {
+        &self.policy
+    }
+
+    pub(crate) fn consecutive_faults(&self) -> u32 {
+        self.consecutive_faults
+    }
+
+    /// Move the accumulated fault journal out (the worker loop appends
+    /// it to the shared, caller-visible event log).
+    pub(crate) fn drain_events(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Dispatch one batch under `catch_unwind`.  Exactly one of three
+    /// things happens: outputs come back, the batch is refused with a
+    /// typed error, or a panic is caught and converted into
+    /// [`BatchFailure::Fault`] after restarting the engine and sleeping
+    /// the bounded backoff.  An injected *kill* deliberately panics
+    /// outside the catch scope so the worker thread genuinely dies —
+    /// that path is what the admission layer's dead-worker handling is
+    /// tested against.
+    pub(crate) fn run_batch(
+        &mut self,
+        images: &[&Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>, BatchFailure> {
+        let k = self.batches;
+        self.batches += 1;
+        #[cfg(feature = "fault-injection")]
+        let inject_panic = self.apply_plan(k);
+        let engine = &mut self.engine;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(feature = "fault-injection")]
+            if inject_panic {
+                panic!("{PANIC_MARKER} at batch {k}");
+            }
+            engine.run_batch(images)
+        }));
+        // Two catch scopes feed one fault path: the session's own
+        // catch-unwind entry reports engine panics as typed
+        // `GraphError::Panic`, while injected panics (and any PJRT
+        // panic) land in the supervisor's outer `catch_unwind`.
+        let fault_msg = match outcome {
+            Ok(Ok(outs)) => {
+                self.consecutive_faults = 0;
+                return Ok(outs);
+            }
+            Ok(Err(GraphError::Panic(msg))) => msg,
+            Ok(Err(e)) => return Err(BatchFailure::Refused(e)),
+            Err(payload) => panic_message(payload.as_ref()),
+        };
+        self.consecutive_faults += 1;
+        self.incarnations += 1;
+        self.events.push(FaultEvent::CaughtPanic {
+            batch: k,
+            msg: fault_msg.clone(),
+        });
+        // Restart: reset the (possibly poisoned) workspace, then hold
+        // the next dispatch back by the bounded backoff.
+        self.engine.restart();
+        let backoff = self.policy.backoff_for(self.consecutive_faults);
+        self.events.push(FaultEvent::Restarted {
+            incarnation: self.incarnations,
+            backoff,
+        });
+        std::thread::sleep(backoff);
+        Err(BatchFailure::Fault { msg: fault_msg })
+    }
+}
+
+/// Best-effort stringification of a panic payload (panics carry `&str`
+/// or `String` in practice; anything else is reported opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        anyhow!("non-string panic payload").to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::ExecPolicy;
+    use crate::nn::graph::{GraphBuilder, Synthetic};
+
+    fn tiny_session() -> Session {
+        let g = GraphBuilder::new("tiny", (2, 8, 8))
+            .pad(1)
+            .conv2d("c0", 4, 3)
+            .relu()
+            .flatten()
+            .fc("head", 3)
+            .build()
+            .unwrap();
+        Session::uniform(g, &mut Synthetic::new(3), ExecPolicy::dense(2))
+            .unwrap()
+            .with_max_batch(2)
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = RestartPolicy {
+            backoff_base: Duration::from_millis(4),
+            backoff_max: Duration::from_millis(20),
+            ..RestartPolicy::default()
+        };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(4));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(8));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(16));
+        assert_eq!(p.backoff_for(4), Duration::from_millis(20), "clamped");
+        assert_eq!(p.backoff_for(40), Duration::from_millis(20), "no overflow");
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn injected_panic_fails_one_batch_and_recovers_bit_identically() {
+        let fast = RestartPolicy {
+            backoff_base: Duration::from_micros(100),
+            ..RestartPolicy::default()
+        };
+        let image = vec![0.25f32; 2 * 8 * 8];
+        let mut clean = Supervisor::new(
+            Engine::Native(Box::new(tiny_session())),
+            fast.clone(),
+            None,
+        );
+        let want = clean.run_batch(&[&image]).expect("clean run");
+
+        let plan = FaultPlan::seeded(1).panic_on_batch(1);
+        let mut sup = Supervisor::new(Engine::Native(Box::new(tiny_session())), fast, Some(plan));
+        let first = sup.run_batch(&[&image]).expect("batch 0 serves");
+        assert_eq!(first, want);
+        match sup.run_batch(&[&image]) {
+            Err(BatchFailure::Fault { msg }) => assert!(msg.contains(PANIC_MARKER), "{msg}"),
+            _ => panic!("batch 1 must fault"),
+        }
+        assert_eq!(sup.consecutive_faults(), 1);
+        let events = sup.drain_events();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, FaultEvent::InjectedPanic { batch: 1 })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, FaultEvent::Restarted { incarnation: 1, .. })));
+        // Post-recovery output is bit-identical to the fault-free run.
+        let after = sup.run_batch(&[&image]).expect("batch 2 serves");
+        assert_eq!(after, want, "recovery must be bit-identical");
+        assert_eq!(sup.consecutive_faults(), 0, "success clears the streak");
+    }
+
+    #[test]
+    fn typed_engine_refusal_is_not_a_fault() {
+        // An over-capacity batch is a healthy engine saying no — it must
+        // come back as a typed refusal, not enter the restart path.
+        let mut sup = Supervisor::new(
+            Engine::Native(Box::new(tiny_session())),
+            RestartPolicy::default(),
+            None,
+        );
+        let image = vec![0.0f32; 2 * 8 * 8];
+        let over: Vec<&Vec<f32>> = (0..3).map(|_| &image).collect();
+        match sup.run_batch(&over) {
+            Err(BatchFailure::Refused(GraphError::BatchTooLarge { got: 3, max: 2 })) => {}
+            _ => panic!("over-capacity batch must be a typed refusal"),
+        }
+        assert_eq!(sup.consecutive_faults(), 0, "refusal is not a fault");
+    }
+}

@@ -63,6 +63,10 @@ pub struct Session {
     conv_policies: Vec<ExecPolicy>,
     max_batch: usize,
     ws: Workspace,
+    /// Set while a forward pass is in flight; a panic that unwinds out
+    /// of the pass leaves it set, so the workspace is known-torn until
+    /// [`Session::reset_workspace`] runs.
+    poisoned: bool,
 }
 
 impl Session {
@@ -125,6 +129,7 @@ impl Session {
             conv_policies,
             max_batch: 0,
             ws: Workspace::default(),
+            poisoned: false,
         };
         sess.size_workspace(1);
         Ok(sess)
@@ -213,6 +218,59 @@ impl Session {
             .expect("one output per image"))
     }
 
+    /// True while the workspace is known-torn: a panic unwound out of a
+    /// forward pass and [`Session::reset_workspace`] has not run yet.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Clear a poisoned workspace: zero both ping-pong buffers and
+    /// re-arm the session.  Recovery is bit-identical to a fresh build
+    /// because the cached filter banks are immutable after prepare and
+    /// every stage fully overwrites its output region — zeroing removes
+    /// even the torn intermediates a caught panic left behind.
+    pub fn reset_workspace(&mut self) {
+        self.ws.a.fill(0.0);
+        self.ws.b.fill(0.0);
+        self.poisoned = false;
+    }
+
+    /// Mark the workspace torn without a real panic — a deterministic
+    /// seam for tests that prove the [`GraphError::Poisoned`] guard.
+    #[doc(hidden)]
+    pub fn poison_workspace_for_test(&mut self) {
+        self.poisoned = true;
+    }
+
+    /// The catch-unwind-safe serving entry: run [`Session::forward_batch`]
+    /// with any panic caught and converted into a typed
+    /// [`GraphError::Panic`], leaving the workspace flagged poisoned.
+    /// The serving supervisor restarts through this boundary; embedders
+    /// that drive a `Session` directly get the same no-unwind contract.
+    pub fn forward_batch_caught(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>, GraphError> {
+        // `&mut self` across `catch_unwind` is exactly the unwind-safety
+        // hazard the poison flag exists for: on a caught panic the
+        // workspace stays flagged torn until `reset_workspace` runs, so
+        // the broken-invariant state can never serve a request.
+        let this = std::panic::AssertUnwindSafe(&mut *self);
+        match std::panic::catch_unwind(move || {
+            let this = this;
+            this.0.forward_batch(images)
+        }) {
+            Ok(result) => result,
+            Err(payload) => {
+                let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                Err(GraphError::Panic(msg))
+            }
+        }
+    }
+
     /// Full batched forward pass: one fused launch per node over all
     /// `images`, on the build-time-sized ping-pong workspace.
     ///
@@ -221,6 +279,9 @@ impl Session {
     /// dimension only widens each stage, it never reorders any
     /// per-output accumulation.
     pub fn forward_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>, GraphError> {
+        if self.poisoned {
+            return Err(GraphError::Poisoned);
+        }
         let n = images.len();
         if n == 0 {
             return Err(GraphError::EmptyBatch);
@@ -241,6 +302,9 @@ impl Session {
                 });
             }
         }
+        // Armed for the fused compute below: any panic that unwinds out
+        // of a stage leaves the flag set and the workspace quarantined.
+        self.poisoned = true;
         let Self {
             graph,
             prepared,
@@ -288,7 +352,9 @@ impl Session {
             cur = out;
         }
         let oe = cur.elements();
-        Ok((0..n).map(|i| a[i * oe..(i + 1) * oe].to_vec()).collect())
+        let outs: Vec<Vec<f32>> = (0..n).map(|i| a[i * oe..(i + 1) * oe].to_vec()).collect();
+        self.poisoned = false;
+        Ok(outs)
     }
 }
 
@@ -354,6 +420,55 @@ mod tests {
             sess.forward_batch(&refs).unwrap_err(),
             GraphError::BatchTooLarge { got: 3, max: 2 }
         );
+    }
+
+    #[test]
+    fn poisoned_workspace_refuses_until_reset() {
+        let g = GraphBuilder::new("p", (2, 8, 8))
+            .pad(1)
+            .conv2d("c0", 4, 3)
+            .relu()
+            .flatten()
+            .fc("head", 3)
+            .build()
+            .unwrap();
+        let mut sess =
+            Session::uniform(g, &mut Synthetic::new(4), ExecPolicy::dense(2)).unwrap();
+        let image = vec![0.5f32; 2 * 8 * 8];
+        let want = sess.forward(&image).unwrap();
+        assert!(!sess.is_poisoned(), "a clean pass must disarm the flag");
+        sess.poison_workspace_for_test();
+        assert!(sess.is_poisoned());
+        assert_eq!(sess.forward(&image).unwrap_err(), GraphError::Poisoned);
+        assert_eq!(
+            sess.forward_batch_caught(&[&image]).unwrap_err(),
+            GraphError::Poisoned,
+            "the caught entry honors the same quarantine"
+        );
+        sess.reset_workspace();
+        assert!(!sess.is_poisoned());
+        assert_eq!(
+            sess.forward(&image).unwrap(),
+            want,
+            "post-reset inference is bit-identical"
+        );
+    }
+
+    #[test]
+    fn forward_batch_caught_passes_typed_errors_through() {
+        let mut sess =
+            Session::uniform(vgg_tiny(), &mut Synthetic::new(5), ExecPolicy::dense(2))
+                .unwrap();
+        // Typed refusals flow through unchanged (no panic, no poison).
+        assert_eq!(
+            sess.forward_batch_caught(&[]).unwrap_err(),
+            GraphError::EmptyBatch
+        );
+        assert!(!sess.is_poisoned());
+        let image = vec![0.1f32; 3 * 32 * 32];
+        let direct = sess.forward(&image).unwrap();
+        let caught = sess.forward_batch_caught(&[&image]).unwrap();
+        assert_eq!(caught, vec![direct], "caught entry is bit-identical");
     }
 
     #[test]

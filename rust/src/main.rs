@@ -246,7 +246,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(42);
     let t0 = std::time::Instant::now();
     let pending: Vec<_> = (0..n_requests)
-        .map(|_| server.infer_async(rng.gaussian_vec(elems)))
+        .map(|_| server.infer_async(rng.gaussian_vec(elems)).expect("admitted"))
         .collect();
     let mut ok = 0;
     for p in pending {

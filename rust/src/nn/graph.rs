@@ -84,6 +84,14 @@ pub enum GraphError {
     /// A configuration value (batcher sizes, profile contents, ...) is
     /// invalid for the graph it is applied to.
     Config(String),
+    /// The engine panicked mid-batch; the panic was caught at the
+    /// serving boundary (the message is the stringified payload).  The
+    /// session's workspace is left poisoned until
+    /// `Session::reset_workspace` runs.
+    Panic(String),
+    /// The session was used after a caught panic without resetting the
+    /// workspace — results would run on torn intermediate state.
+    Poisoned,
 }
 
 impl fmt::Display for GraphError {
@@ -112,6 +120,14 @@ impl fmt::Display for GraphError {
             GraphError::Weights(msg) => write!(f, "weight source: {msg}"),
             GraphError::Io(msg) => write!(f, "weight file: {msg}"),
             GraphError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            GraphError::Panic(msg) => {
+                write!(f, "engine panicked mid-batch (workspace poisoned): {msg}")
+            }
+            GraphError::Poisoned => write!(
+                f,
+                "session used after a caught panic — call reset_workspace() \
+                 before serving again"
+            ),
         }
     }
 }

@@ -170,7 +170,7 @@ fn server_end_to_end_with_batching() {
     let imgs: Vec<Vec<f32>> = (0..10).map(|_| rng.gaussian_vec(elems)).collect();
     let rxs: Vec<_> = imgs
         .iter()
-        .map(|img| server.infer_async(img.clone()))
+        .map(|img| server.infer_async(img.clone()).expect("admitted"))
         .collect();
     let burst: Vec<Vec<f32>> = rxs
         .into_iter()
@@ -277,7 +277,7 @@ fn native_server_end_to_end_sparse_pipeline() {
     let imgs: Vec<Vec<f32>> = (0..6).map(|_| rng.gaussian_vec(elems)).collect();
     let rxs: Vec<_> = imgs
         .iter()
-        .map(|img| server.infer_async(img.clone()))
+        .map(|img| server.infer_async(img.clone()).expect("admitted"))
         .collect();
     let burst: Vec<Vec<f32>> = rxs
         .into_iter()

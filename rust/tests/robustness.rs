@@ -1,0 +1,666 @@
+//! Fault-tolerance proof suite for the serving pipeline.
+//!
+//! Every test drives the *real* server — admission queue, batcher,
+//! supervisor, engine — through a deterministic [`FaultPlan`] and
+//! asserts the three contracts from the robustness redesign:
+//!
+//! 1. **No silent drops**: every admitted request receives exactly one
+//!    completion (logits or a typed error), under injected panics,
+//!    deadline storms, queue-full bursts, worker death, and shutdown.
+//! 2. **Bit-identical recovery**: a restarted worker serves outputs
+//!    identical to a fault-free run.
+//! 3. **Deadline ejection is pre-dispatch**: expired requests never
+//!    occupy a fused batch slot (visible in the batch histogram).
+//!
+//! All schedules are seeded — a failing run replays exactly.  The
+//! `stress_supervisor_restart_100x` test (`--ignored`; CI's stress
+//! smoke) writes `FAULT_stress.log` via [`render_log`] on failure.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Once};
+use std::time::{Duration, Instant};
+
+use swcnn::coordinator::{
+    render_log, AdmissionError, AdmissionPolicy, FaultEvent, FaultPlan, InferenceServer,
+    NativeServerConfig, RestartPolicy,
+};
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::{GraphBuilder, GraphError, Synthetic};
+use swcnn::util::Rng;
+
+const IN_ELEMS: usize = 2 * 8 * 8;
+const OUT_ELEMS: usize = 3;
+
+/// Silence the default panic hook for *injected* panics (their payloads
+/// carry the "fault-injection" marker); genuine panics still print.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("fault-injection") {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A graph small enough that a faulted batch costs microseconds, with
+/// every op class the serving path exercises.
+fn tiny_session() -> Session {
+    let g = GraphBuilder::new("tiny", (2, 8, 8))
+        .pad(1)
+        .conv2d("c0", 4, 3)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("head", OUT_ELEMS)
+        .build()
+        .expect("tiny graph builds");
+    Session::uniform(g, &mut Synthetic::new(3), ExecPolicy::dense(2)).expect("tiny compiles")
+}
+
+/// Fast restart policy so faulted tests stay in the milliseconds.
+fn fast_restart() -> RestartPolicy {
+    RestartPolicy {
+        breaker_threshold: 1000, // breaker out of the way unless a test wants it
+        backoff_base: Duration::from_micros(200),
+        backoff_max: Duration::from_millis(2),
+        breaker_cooldown: Duration::from_millis(50),
+    }
+}
+
+fn tiny_cfg() -> NativeServerConfig {
+    let mut cfg = NativeServerConfig::new(tiny_session()).with_restart(fast_restart());
+    cfg.max_batch = 4;
+    cfg
+}
+
+fn image(seed: u64) -> Vec<f32> {
+    Rng::new(seed).gaussian_vec(IN_ELEMS)
+}
+
+/// Block until the worker has pulled everything queued into a dispatch
+/// (the timing-sensitive tests use this instead of fixed sleeps, so a
+/// slow runner cannot let a "stalling" batch absorb later traffic).
+fn wait_queue_drained(server: &InferenceServer) {
+    let t0 = Instant::now();
+    while server.queue_depth() > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "worker never picked up the queued batch"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contract 1: exactly one completion per admitted request
+// ---------------------------------------------------------------------------
+
+/// The no-silent-drop proof: concurrent bursts against a tiny bounded
+/// queue, with a random (seeded) panic schedule underneath, short
+/// deadlines on part of the traffic, and a drain at the end.  Every
+/// call either refuses synchronously or yields exactly one completion;
+/// nothing hangs and nothing completes twice.
+#[test]
+fn every_admission_gets_exactly_one_completion() {
+    quiet_injected_panics();
+    let plan = FaultPlan::seeded(42).with_random_panics(64, 0.3);
+    let bursts = plan.burst_sizes(6, 5);
+    let mut cfg = tiny_cfg()
+        .with_queue(8, AdmissionPolicy::RejectNew)
+        .with_fault_plan(plan);
+    cfg.window = Duration::from_micros(500);
+    let server = Arc::new(InferenceServer::start_native(cfg).expect("start"));
+
+    let admitted = Arc::new(AtomicU64::new(0));
+    let refused = Arc::new(AtomicU64::new(0));
+    let completed_ok = Arc::new(AtomicU64::new(0));
+    let completed_err = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let server = Arc::clone(&server);
+            let bursts = bursts.clone();
+            let admitted = Arc::clone(&admitted);
+            let refused = Arc::clone(&refused);
+            let completed_ok = Arc::clone(&completed_ok);
+            let completed_err = Arc::clone(&completed_err);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for (round, &burst) in bursts.iter().enumerate() {
+                    let mut replies = Vec::new();
+                    for i in 0..burst {
+                        // Every third request carries a tight deadline so
+                        // the storm also exercises pre-dispatch ejection.
+                        let deadline = if i % 3 == 0 {
+                            Some(Duration::from_micros(300))
+                        } else {
+                            None
+                        };
+                        match server.infer_async_deadline(rng.gaussian_vec(IN_ELEMS), deadline) {
+                            Ok(rx) => {
+                                admitted.fetch_add(1, Ordering::SeqCst);
+                                replies.push(rx);
+                            }
+                            Err(
+                                AdmissionError::QueueFull { .. }
+                                | AdmissionError::CircuitOpen { .. },
+                            ) => {
+                                refused.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(e) => panic!("unexpected synchronous refusal: {e}"),
+                        }
+                    }
+                    for rx in replies {
+                        // A hang here IS the bug this suite exists for.
+                        let result = rx
+                            .recv_timeout(Duration::from_secs(30))
+                            .expect("admitted request must complete, never hang");
+                        match result {
+                            Ok(y) => {
+                                assert_eq!(y.len(), OUT_ELEMS);
+                                completed_ok.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(
+                                AdmissionError::WorkerFault { .. }
+                                | AdmissionError::DeadlineExpired { .. }
+                                | AdmissionError::QueueFull { .. }
+                                | AdmissionError::ShuttingDown,
+                            ) => {
+                                completed_err.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(e) => panic!("untyped completion: {e}"),
+                        }
+                        // Exactly one: the channel must now be dead or empty.
+                        assert!(
+                            rx.try_recv().is_err(),
+                            "round {round}: a request completed twice"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("load thread");
+    }
+
+    let admitted = admitted.load(Ordering::SeqCst);
+    let refused = refused.load(Ordering::SeqCst);
+    let done = completed_ok.load(Ordering::SeqCst) + completed_err.load(Ordering::SeqCst);
+    assert_eq!(done, admitted, "every admission completes exactly once");
+    assert!(admitted > 0, "the load must actually admit something");
+
+    // The robustness counters were exercised and show up in summary().
+    let m = server.metrics.lock().unwrap();
+    assert!(m.queue_depth_peak >= 1);
+    // breaker_threshold is parked at 1000, so every synchronous refusal
+    // was a QueueFull — and each one was counted.
+    assert_eq!(m.rejected_full, refused);
+    let s = m.summary();
+    for key in [
+        "rejected_full=",
+        "ejected_deadline=",
+        "worker_faults=",
+        "queue_depth_peak=",
+    ] {
+        assert!(s.contains(key), "summary missing {key}: {s}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contract 2: supervised restart, bit-identical recovery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn supervisor_restarts_panicked_worker_bit_identically() {
+    quiet_injected_panics();
+    let x = image(7);
+    let clean = InferenceServer::start_native(tiny_cfg()).expect("start clean");
+    let want = clean.infer(x.clone()).expect("fault-free serve");
+
+    let cfg = tiny_cfg().with_fault_plan(FaultPlan::seeded(1).panic_on_batch(1));
+    let server = InferenceServer::start_native(cfg).expect("start faulty");
+    let first = server.infer(x.clone()).expect("batch 0 serves");
+    assert_eq!(first, want, "pre-fault output matches the clean server");
+    let err = server.infer(x.clone()).unwrap_err();
+    assert!(
+        matches!(err, AdmissionError::WorkerFault { .. }),
+        "the poisoned batch fails typed, got {err:?}"
+    );
+    let after = server.infer(x).expect("post-restart serve");
+    assert_eq!(after, want, "recovery must be bit-identical");
+
+    let events = server.fault_events();
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, FaultEvent::InjectedPanic { batch: 1 })));
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, FaultEvent::CaughtPanic { batch: 1, .. })));
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, FaultEvent::Restarted { incarnation: 1, .. })));
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.worker_faults, 1);
+}
+
+#[test]
+fn breaker_trips_after_consecutive_faults_and_recovers() {
+    quiet_injected_panics();
+    let mut restart = fast_restart();
+    restart.breaker_threshold = 2;
+    restart.breaker_cooldown = Duration::from_millis(150);
+    let cfg = tiny_cfg()
+        .with_restart(restart)
+        .with_fault_plan(FaultPlan::seeded(5).panic_on_batch(0).panic_on_batch(1));
+    let server = InferenceServer::start_native(cfg).expect("start");
+    let x = image(9);
+
+    for _ in 0..2 {
+        let err = server.infer(x.clone()).unwrap_err();
+        assert!(matches!(err, AdmissionError::WorkerFault { .. }), "{err:?}");
+    }
+    assert!(server.breaker_open(), "two consecutive faults trip it");
+    match server.infer_async(x.clone()) {
+        Err(AdmissionError::CircuitOpen { consecutive_faults }) => {
+            assert!(consecutive_faults >= 2)
+        }
+        other => panic!("open breaker must fast-fail admission, got {other:?}"),
+    }
+
+    // Half-open after the cooldown: a probe flows, succeeds (batch 2 is
+    // not scheduled to panic), and closes the breaker.
+    std::thread::sleep(Duration::from_millis(200));
+    let y = server.infer(x).expect("probe serves after cooldown");
+    assert_eq!(y.len(), OUT_ELEMS);
+    assert!(!server.breaker_open(), "a served batch closes the breaker");
+    let events = server.fault_events();
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, FaultEvent::BreakerTripped { consecutive: 2 })));
+    assert!(events.iter().any(|e| matches!(e, FaultEvent::BreakerClosed)));
+}
+
+// ---------------------------------------------------------------------------
+// Contract 3: deadlines eject before batch assembly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn expired_requests_never_occupy_a_fused_batch_slot() {
+    quiet_injected_panics();
+    // Batch 0 stalls 300ms; four short-deadline requests pile up behind
+    // it, expire while it crawls, and must be ejected at the next
+    // assembly — visible as: one batch of 1, zero batches of 4.
+    let mut cfg = tiny_cfg()
+        .with_fault_plan(FaultPlan::seeded(2).latency_on_batch(0, Duration::from_millis(300)));
+    cfg.window = Duration::ZERO;
+    let server = InferenceServer::start_native(cfg).expect("start");
+
+    let slow = server.infer_async(image(1)).expect("admitted");
+    // Once the queue drains, batch 0's membership is sealed — the worker
+    // is inside (or entering) the 300ms stall with exactly one slot used.
+    wait_queue_drained(&server);
+    let doomed: Vec<_> = (0..4)
+        .map(|i| {
+            server
+                .infer_async_deadline(image(2 + i), Some(Duration::from_millis(30)))
+                .expect("admitted")
+        })
+        .collect();
+    for rx in doomed {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("completes") {
+            Err(AdmissionError::DeadlineExpired { deadline, waited }) => {
+                assert_eq!(deadline, Duration::from_millis(30));
+                assert!(waited > deadline, "ejection reports the real wait");
+            }
+            other => panic!("expired request must eject, got {other:?}"),
+        }
+    }
+    let y = slow
+        .recv_timeout(Duration::from_secs(10))
+        .expect("completes")
+        .expect("slow batch still serves");
+    assert_eq!(y.len(), OUT_ELEMS);
+
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.ejected_deadline, 4, "all four ejected");
+    assert_eq!(m.batches, 1, "only the stalled batch ever dispatched");
+    assert_eq!(m.batch_histogram()[1], 1);
+    assert_eq!(
+        m.batch_histogram()[4],
+        0,
+        "expired requests must never form a fused batch"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Bounded admission
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_queue_rejects_new_requests_synchronously() {
+    quiet_injected_panics();
+    let mut cfg = tiny_cfg()
+        .with_queue(2, AdmissionPolicy::RejectNew)
+        .with_fault_plan(FaultPlan::seeded(3).latency_every_batch(Duration::from_millis(250)));
+    cfg.window = Duration::ZERO;
+    let server = InferenceServer::start_native(cfg).expect("start");
+
+    let in_flight = server.infer_async(image(1)).expect("admitted");
+    wait_queue_drained(&server); // worker now stalled in batch 0
+    let queued: Vec<_> = (0..2)
+        .map(|i| server.infer_async(image(2 + i)).expect("fills the queue"))
+        .collect();
+    assert_eq!(server.queue_depth(), 2);
+    match server.infer_async(image(9)) {
+        Err(AdmissionError::QueueFull { capacity: 2 }) => {}
+        other => panic!("full queue must refuse, got {other:?}"),
+    }
+    for rx in std::iter::once(in_flight).chain(queued) {
+        let y = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("completes")
+            .expect("admitted requests still serve");
+        assert_eq!(y.len(), OUT_ELEMS);
+    }
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.rejected_full, 1);
+}
+
+#[test]
+fn full_queue_drop_oldest_evicts_the_stalest_request() {
+    quiet_injected_panics();
+    let mut cfg = tiny_cfg()
+        .with_queue(2, AdmissionPolicy::DropOldest)
+        .with_fault_plan(FaultPlan::seeded(4).latency_every_batch(Duration::from_millis(250)));
+    cfg.window = Duration::ZERO;
+    let server = InferenceServer::start_native(cfg).expect("start");
+
+    let in_flight = server.infer_async(image(1)).expect("admitted");
+    wait_queue_drained(&server); // worker now stalled in batch 0
+    let oldest = server.infer_async(image(2)).expect("admitted");
+    let kept = server.infer_async(image(3)).expect("admitted");
+    // Queue is at capacity (2); the next admission evicts `oldest`,
+    // which must still complete — with a typed QueueFull, not silence.
+    let freshest = server.infer_async(image(4)).expect("admitted over eviction");
+    match oldest.recv_timeout(Duration::from_secs(10)).expect("completes") {
+        Err(AdmissionError::QueueFull { capacity: 2 }) => {}
+        other => panic!("evicted request must complete with QueueFull, got {other:?}"),
+    }
+    for rx in [in_flight, kept, freshest] {
+        let y = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("completes")
+            .expect("surviving requests serve");
+        assert_eq!(y.len(), OUT_ELEMS);
+    }
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.rejected_full, 1, "the eviction is counted");
+}
+
+// ---------------------------------------------------------------------------
+// Shutdown semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_or_rejects_deterministically() {
+    quiet_injected_panics();
+    // Reject-shutdown: in-flight work finishes, queued work completes
+    // with ShuttingDown, new admissions refuse synchronously.
+    let mut cfg = tiny_cfg()
+        .with_fault_plan(FaultPlan::seeded(6).latency_every_batch(Duration::from_millis(250)));
+    cfg.window = Duration::ZERO;
+    let server = InferenceServer::start_native(cfg).expect("start");
+    let in_flight = server.infer_async(image(1)).expect("admitted");
+    wait_queue_drained(&server); // worker now stalled in batch 0
+    let queued: Vec<_> = (0..3)
+        .map(|i| server.infer_async(image(2 + i)).expect("admitted"))
+        .collect();
+    server.shutdown(false);
+    assert_eq!(
+        server.infer_async(image(9)).unwrap_err(),
+        AdmissionError::ShuttingDown
+    );
+    in_flight
+        .recv_timeout(Duration::from_secs(10))
+        .expect("completes")
+        .expect("in-flight batch still serves");
+    for rx in queued {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("completes") {
+            Err(AdmissionError::ShuttingDown) => {}
+            other => panic!("queued request under reject-shutdown: {other:?}"),
+        }
+    }
+
+    // Drain-shutdown: everything queued serves.
+    let server = InferenceServer::start_native(tiny_cfg()).expect("start");
+    let queued: Vec<_> = (0..3)
+        .map(|i| server.infer_async(image(20 + i)).expect("admitted"))
+        .collect();
+    server.shutdown(true);
+    for rx in queued {
+        let y = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("completes")
+            .expect("drain serves queued work");
+        assert_eq!(y.len(), OUT_ELEMS);
+    }
+}
+
+/// Satellite regression: a request admitted just before shutdown must
+/// flush immediately — the drain bypasses the batching window instead
+/// of sitting it out.
+#[test]
+fn drain_bypasses_the_batching_window() {
+    quiet_injected_panics();
+    let mut cfg = tiny_cfg();
+    cfg.window = Duration::from_secs(5);
+    cfg.max_batch = 4;
+    let server = InferenceServer::start_native(cfg).expect("start");
+    let rx = server.infer_async(image(1)).expect("admitted");
+    let start = Instant::now();
+    server.shutdown(true);
+    let y = rx
+        .recv_timeout(Duration::from_secs(2))
+        .expect("a drained request must not wait out a 5s window")
+        .expect("serves");
+    assert_eq!(y.len(), OUT_ELEMS);
+    assert!(
+        start.elapsed() < Duration::from_secs(2),
+        "flush must be immediate, waited {:?}",
+        start.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Worker death (the pre-supervisor hang bug, now typed)
+// ---------------------------------------------------------------------------
+
+/// Satellite regression: before the redesign, a dead worker left
+/// `infer` blocked on (or erroring uselessly from) a disconnected
+/// channel.  An injected *kill* panics outside the supervisor's catch
+/// scope — the thread genuinely dies — and every caller must still get
+/// a typed `WorkerFault`, promptly.
+#[test]
+fn worker_death_is_a_typed_error_not_a_hang() {
+    quiet_injected_panics();
+    let cfg = tiny_cfg().with_fault_plan(FaultPlan::seeded(8).kill_on_batch(0));
+    let server = InferenceServer::start_native(cfg).expect("start");
+    let rx = server.infer_async(image(1)).expect("admitted");
+    match rx.recv_timeout(Duration::from_secs(10)) {
+        Ok(Err(AdmissionError::WorkerFault { msg })) => {
+            assert!(msg.contains("died"), "{msg}")
+        }
+        other => panic!("in-flight request on worker death: {other:?}"),
+    }
+    // The death is journaled and subsequent calls refuse synchronously.
+    assert!(server
+        .fault_events()
+        .iter()
+        .any(|e| matches!(e, FaultEvent::WorkerDied)));
+    match server.infer(image(2)) {
+        Err(AdmissionError::WorkerFault { .. }) => {}
+        other => panic!("dead server must refuse typed, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error surfaces (table-driven Display / source chains)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_error_variant_renders_a_useful_chain() {
+    use std::error::Error as _;
+    let graph_errors: Vec<(GraphError, &str)> = vec![
+        (
+            GraphError::Shape {
+                node: 2,
+                msg: "bad".into(),
+            },
+            "node 2",
+        ),
+        (GraphError::Policy("m out of range".into()), "ExecPolicy"),
+        (
+            GraphError::PolicyCount {
+                expected: 3,
+                got: 1,
+            },
+            "3 conv nodes",
+        ),
+        (
+            GraphError::Input {
+                index: 0,
+                expected: 128,
+                got: 7,
+            },
+            "expected 128",
+        ),
+        (GraphError::EmptyBatch, "at least one image"),
+        (
+            GraphError::BatchTooLarge { got: 9, max: 4 },
+            "workspace capacity 4",
+        ),
+        (GraphError::Weights("short tensor".into()), "weight source"),
+        (GraphError::Io("no such file".into()), "weight file"),
+        (GraphError::Config("bad profile".into()), "configuration"),
+        (GraphError::Panic("boom".into()), "poisoned"),
+        (GraphError::Poisoned, "reset_workspace"),
+    ];
+    for (e, needle) in &graph_errors {
+        let shown = e.to_string();
+        assert!(shown.contains(needle), "{e:?} renders {shown:?}");
+        assert!(e.source().is_none(), "GraphError is a leaf");
+    }
+
+    let admission_errors: Vec<(AdmissionError, &str)> = vec![
+        (AdmissionError::QueueFull { capacity: 8 }, "capacity 8"),
+        (AdmissionError::ShuttingDown, "shutting down"),
+        (
+            AdmissionError::DeadlineExpired {
+                deadline: Duration::from_millis(5),
+                waited: Duration::from_millis(9),
+            },
+            "before dispatch",
+        ),
+        (
+            AdmissionError::CircuitOpen {
+                consecutive_faults: 3,
+            },
+            "circuit breaker open",
+        ),
+        (
+            AdmissionError::WorkerFault { msg: "boom".into() },
+            "worker fault",
+        ),
+        (
+            AdmissionError::Engine(GraphError::EmptyBatch),
+            "engine refused",
+        ),
+    ];
+    for (e, needle) in &admission_errors {
+        let shown = e.to_string();
+        assert!(shown.contains(needle), "{e:?} renders {shown:?}");
+        match e {
+            AdmissionError::Engine(inner) => {
+                let src = e.source().expect("Engine carries its cause");
+                assert_eq!(src.to_string(), inner.to_string());
+            }
+            _ => assert!(e.source().is_none(), "{e:?} is a leaf"),
+        }
+    }
+    // The table is exhaustive: adding a variant without a row here must
+    // fail loudly.
+    assert_eq!(graph_errors.len(), 11);
+    assert_eq!(admission_errors.len(), 6);
+}
+
+// ---------------------------------------------------------------------------
+// Stress smoke (CI runs this with --ignored)
+// ---------------------------------------------------------------------------
+
+/// 100 seeds of random panic schedules; every successful completion
+/// must be bit-identical to the fault-free baseline and every failure
+/// typed.  On any violation the fault journal lands in
+/// `FAULT_stress.log` (the CI artifact).
+#[test]
+#[ignore = "stress smoke — run explicitly (CI does, with --ignored)"]
+fn stress_supervisor_restart_100x() {
+    quiet_injected_panics();
+    let x = image(77);
+    let baseline = InferenceServer::start_native(tiny_cfg())
+        .expect("baseline")
+        .infer(x.clone())
+        .expect("fault-free serve");
+
+    for seed in 0..100u64 {
+        let plan = FaultPlan::seeded(seed).with_random_panics(12, 0.3);
+        let cfg = tiny_cfg().with_fault_plan(plan);
+        let server = InferenceServer::start_native(cfg).expect("start");
+        for i in 0..12 {
+            match server.infer(x.clone()) {
+                Ok(y) => {
+                    if y != baseline {
+                        let log = render_log(&server.fault_events());
+                        std::fs::write("FAULT_stress.log", &log).ok();
+                        panic!("seed {seed} batch {i}: post-recovery output diverged\n{log}");
+                    }
+                }
+                Err(AdmissionError::WorkerFault { .. }) => {}
+                Err(e) => {
+                    let log = render_log(&server.fault_events());
+                    std::fs::write("FAULT_stress.log", &log).ok();
+                    panic!("seed {seed} batch {i}: untyped failure {e:?}\n{log}");
+                }
+            }
+        }
+        // Restarts happened and were journaled whenever the seed
+        // scheduled at least one panic.
+        let faults = plan_panics(seed);
+        if faults > 0 {
+            assert!(
+                server
+                    .fault_events()
+                    .iter()
+                    .any(|e| matches!(e, FaultEvent::Restarted { .. })),
+                "seed {seed}: {faults} scheduled panics but no restart journaled"
+            );
+        }
+    }
+}
+
+fn plan_panics(seed: u64) -> usize {
+    FaultPlan::seeded(seed)
+        .with_random_panics(12, 0.3)
+        .panic_batches()
+        .count()
+}
