@@ -25,7 +25,7 @@ use swcnn::tensor::Tensor;
 use swcnn::tuner::{TuneProfile, Tuner};
 use swcnn::util::json::Json;
 use swcnn::util::{eng, Rng, Stats};
-use swcnn::winograd::{direct_conv2d, winograd_conv2d_reference, WinogradPlan};
+use swcnn::winograd::{direct_conv2d, simd, winograd_conv2d_reference, VectorWidth, WinogradPlan};
 
 /// One recorded measurement: (name, stats, human note).
 struct Record {
@@ -500,6 +500,133 @@ fn main() {
                 "tuner kept the default configuration on every layer \
                  (no candidate cleared the calibration hysteresis)"
             );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // SIMD hot loops: forced-scalar vs the widest supported vector width
+    // on every vgg_tiny conv layer, dense and sparse.  The vector kernels
+    // are bit-identical to scalar by construction (same operation order,
+    // no FMA), so each pair is gated on `==` before it is timed; the
+    // speedup ratios land in BENCH_hotpath.json for the CI regression
+    // gate.  Acceptance bar: no layer may regress under the vector path,
+    // and with an 8-lane ISA present at least one layer must clear 1.5x.
+    // ------------------------------------------------------------------
+    {
+        let widest = simd::widest_supported();
+        println!(
+            "\nsimd: {} -> widest width {}{}",
+            simd::detected_features(),
+            widest,
+            if simd::force_scalar() {
+                " (SWCNN_FORCE_SCALAR set)"
+            } else {
+                ""
+            }
+        );
+        if widest == VectorWidth::Scalar || simd::force_scalar() {
+            rows.push(vec![
+                "simd scalar-vs-vector".into(),
+                "skipped".into(),
+                "no vector width available on this host".into(),
+            ]);
+        } else {
+            let seed = 7u64;
+            let mut src = Synthetic::new(seed);
+            let weights: Vec<Tensor> = vgg_tiny()
+                .weight_requests()
+                .iter()
+                .filter(|spec| spec.shape.len() == 4)
+                .map(|spec| src.tensor(spec).expect("synthetic weights"))
+                .collect();
+            let convs = vgg_tiny().conv_infos();
+            let mut best = (f64::MIN, String::new());
+            for (i, info) in convs.iter().enumerate() {
+                let p = nn::same_pad(info.shape.r);
+                let (hp, wp) = (info.shape.hw + 2 * p, info.shape.hw + 2 * p);
+                let xin = Tensor::from_vec(
+                    &[info.shape.in_ch, hp, wp],
+                    Rng::new(seed + i as u64).gaussian_vec(info.shape.in_ch * hp * wp),
+                );
+                for (backend, base) in [
+                    ("dense", ExecPolicy::dense(4)),
+                    ("sparse", ExecPolicy::sparse(4, 0.7)),
+                ] {
+                    let policy = base.for_conv(&info.shape);
+                    if backend == "sparse" && !policy.wants_sparse() {
+                        // conv0's 3 input channels sit under the
+                        // small-channel guard: no sparse row to measure.
+                        continue;
+                    }
+                    let prepare = |vw: VectorWidth| {
+                        ConvExecutor::prepare(&weights[i], &policy.with_vwidth(vw))
+                            .expect("prepare")
+                    };
+                    let mut ex_s = prepare(VectorWidth::Scalar);
+                    let mut ex_v = prepare(widest);
+                    assert_eq!(
+                        ex_v.conv2d(&xin),
+                        ex_s.conv2d(&xin),
+                        "{} {backend}: width {widest} must be bit-identical to scalar",
+                        info.name
+                    );
+                    let s_scalar = time_it(2, 9, || {
+                        std::hint::black_box(ex_s.conv2d(&xin));
+                    });
+                    let s_vec = time_it(2, 9, || {
+                        std::hint::black_box(ex_v.conv2d(&xin));
+                    });
+                    let speedup = s_scalar.median / s_vec.median;
+                    if speedup > best.0 {
+                        best = (speedup, format!("{} {backend}", info.name));
+                    }
+                    record(
+                        &mut records,
+                        &format!("simd_{backend}_{}", info.name),
+                        s_vec,
+                        format!("width {widest}, {speedup:.2}x vs forced scalar"),
+                    );
+                    extras.push((format!("simd_{backend}_speedup_{}", info.name), speedup));
+                    rows.push(vec![
+                        format!("simd {} {backend} ({widest})", info.name),
+                        format!(
+                            "{:.3} ms vs {:.3} ms scalar",
+                            s_vec.median * 1e3,
+                            s_scalar.median * 1e3
+                        ),
+                        format!("{speedup:.2}x"),
+                    ]);
+                    // Noise guard: the vector path must never lose to
+                    // scalar beyond shared-runner jitter.
+                    assert!(
+                        speedup >= 0.90,
+                        "{} {backend}: vector path {:.3} ms regressed vs scalar {:.3} ms",
+                        info.name,
+                        s_vec.median * 1e3,
+                        s_scalar.median * 1e3
+                    );
+                }
+            }
+            extras.push(("simd_best_layer_speedup".into(), best.0));
+            rows.push(vec![
+                "simd best layer speedup".into(),
+                format!("{:.2}x", best.0),
+                best.1.clone(),
+            ]);
+            if widest == VectorWidth::W8 {
+                assert!(
+                    best.0 >= 1.5,
+                    "8-lane kernels must clear 1.5x on some vgg_tiny layer \
+                     (best {:.2}x on {})",
+                    best.0,
+                    best.1
+                );
+            } else {
+                println!(
+                    "simd: widest width is {widest}; the 1.5x headline gate needs an \
+                     8-lane ISA and is skipped"
+                );
+            }
         }
     }
 

@@ -19,6 +19,11 @@ pub struct Metrics {
     pub worker_faults: u64,
     /// High-water mark of the admission queue depth.
     pub queue_depth_peak: usize,
+    /// Detected CPU SIMD feature string (recorded at server start so
+    /// perf artifacts are self-describing across machines).
+    pub simd_features: String,
+    /// Per-conv-layer vector width names actually served (graph order).
+    conv_vwidths: Vec<String>,
     /// `batch_hist[s]` = number of launches with batch size s.
     batch_hist: Vec<u64>,
     /// Request latencies (seconds), bounded reservoir.
@@ -41,6 +46,8 @@ impl Metrics {
             ejected_deadline: 0,
             worker_faults: 0,
             queue_depth_peak: 0,
+            simd_features: String::new(),
+            conv_vwidths: Vec::new(),
             batch_hist: vec![0; max_batch + 1],
             latencies: Vec::with_capacity(reservoir),
             reservoir,
@@ -62,6 +69,19 @@ impl Metrics {
     /// Track the admission queue's high-water mark.
     pub fn record_queue_depth(&mut self, depth: usize) {
         self.queue_depth_peak = self.queue_depth_peak.max(depth);
+    }
+
+    /// Record the vector configuration serving actually runs: the
+    /// machine's detected feature string and the per-conv-layer width
+    /// names (graph order).
+    pub fn record_simd(&mut self, features: &str, widths: Vec<String>) {
+        self.simd_features = features.to_string();
+        self.conv_vwidths = widths;
+    }
+
+    /// Per-conv-layer vector width names recorded by [`Metrics::record_simd`].
+    pub fn conv_vwidths(&self) -> &[String] {
+        &self.conv_vwidths
     }
 
     pub fn record_batch(&mut self, batch_size: usize) {
@@ -104,7 +124,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} p50={:?} p99={:?} \
-             rejected_full={} ejected_deadline={} worker_faults={} queue_depth_peak={}",
+             rejected_full={} ejected_deadline={} worker_faults={} queue_depth_peak={} \
+             simd={} vwidths=[{}]",
             self.requests,
             self.batches,
             self.mean_batch(),
@@ -114,6 +135,12 @@ impl Metrics {
             self.ejected_deadline,
             self.worker_faults,
             self.queue_depth_peak,
+            if self.simd_features.is_empty() {
+                "?"
+            } else {
+                &self.simd_features
+            },
+            self.conv_vwidths.join(","),
         )
     }
 }
@@ -167,6 +194,17 @@ mod tests {
         assert!(s.contains("ejected_deadline=1"), "{s}");
         assert!(s.contains("worker_faults=1"), "{s}");
         assert!(s.contains("queue_depth_peak=7"), "{s}");
+    }
+
+    #[test]
+    fn simd_recording_shows_in_summary() {
+        let mut m = Metrics::new(4, 16);
+        assert!(m.summary().contains("simd=?"), "{}", m.summary());
+        m.record_simd("x86_64:sse2+avx2", vec!["w8".into(), "scalar".into()]);
+        let s = m.summary();
+        assert!(s.contains("simd=x86_64:sse2+avx2"), "{s}");
+        assert!(s.contains("vwidths=[w8,scalar]"), "{s}");
+        assert_eq!(m.conv_vwidths(), ["w8", "scalar"]);
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::executor::Session;
 use crate::nn::graph::GraphError;
 use crate::runtime::Runtime;
 use crate::tuner::TuneProfile;
+use crate::winograd::simd;
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::error::Error as StdError;
@@ -427,6 +428,8 @@ impl InferenceServer {
         let shared = Shared::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Ready>>();
         let metrics = Arc::new(Mutex::new(Metrics::new(16, 4096)));
+        // PJRT executes off-crate; only the host features are knowable.
+        lock_metrics(&metrics).record_simd(simd::detected_features(), Vec::new());
         let metrics_worker = metrics.clone();
         let shared_worker = Arc::clone(&shared);
 
@@ -518,6 +521,14 @@ impl InferenceServer {
         let shared = Shared::new();
         let shared_worker = Arc::clone(&shared);
         let metrics = Arc::new(Mutex::new(Metrics::new(fused_batch.max(16), 4096)));
+        // Record the vector configuration this server actually serves,
+        // so a metrics summary from any machine names what ran.
+        let widths: Vec<String> = session
+            .conv_policies()
+            .iter()
+            .map(|p| p.vwidth.name().to_string())
+            .collect();
+        lock_metrics(&metrics).record_simd(simd::detected_features(), widths);
         let metrics_worker = metrics.clone();
         let batcher = Batcher::contiguous(fused_batch, window);
         let breaker_cooldown = restart.breaker_cooldown;

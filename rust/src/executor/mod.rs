@@ -27,7 +27,7 @@ use crate::nn::{ConvLayer, ConvShape, Network};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use crate::winograd::{tile_size, FilterBank, SparseFilterBank, WinogradPlan};
+use crate::winograd::{tile_size, FilterBank, SparseFilterBank, VectorWidth, WinogradPlan};
 
 /// Seed of the deterministic calibration sample the activation quantizer
 /// falls back to when [`ExecPolicy::act_scale`] is not set.
@@ -65,6 +65,12 @@ pub struct ExecPolicy {
     /// measured-best count per layer.  Results are bit-identical for any
     /// value — this knob is purely a performance choice.
     pub workers: Option<usize>,
+    /// SIMD vector width for the layer's plan engine.  `Auto` (the
+    /// default) picks the widest instruction set the CPU supports; the
+    /// tuner pins a measured-best width per layer.  Results are
+    /// bit-identical for any value — this knob is purely a performance
+    /// choice.
+    pub vwidth: VectorWidth,
 }
 
 impl ExecPolicy {
@@ -77,6 +83,7 @@ impl ExecPolicy {
             bits: None,
             act_scale: None,
             workers: None,
+            vwidth: VectorWidth::Auto,
         }
     }
 
@@ -111,6 +118,11 @@ impl ExecPolicy {
             workers: Some(workers),
             ..self
         }
+    }
+
+    /// Pin the layer's SIMD vector width (the tuner's per-layer choice).
+    pub fn with_vwidth(self, vwidth: VectorWidth) -> Self {
+        Self { vwidth, ..self }
     }
 
     /// Does this policy select the sparse backend?
@@ -225,6 +237,7 @@ impl ConvExecutor {
         if let Some(workers) = policy.workers {
             plan.set_threads(workers);
         }
+        plan.set_vector_width(policy.vwidth);
         // Pruning and quantization are always honored (quantization acts
         // on the *transform-domain* values — what the arrays see); the
         // threshold only selects whether the prepared weights execute on
@@ -527,6 +540,26 @@ mod tests {
             let want = ConvExecutor::prepare(&w, &float_policy).unwrap().conv2d(&x);
             let rel = got.max_abs_diff(&want) / want.max_abs().max(1e-6);
             assert!(rel < 1e-2, "{policy:?}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn vector_widths_bit_identical_across_backends() {
+        // The vwidth knob is a pure performance choice: every width must
+        // reproduce the scalar path bit for bit on both backends.
+        let mut rng = Rng::new(407);
+        let x = rand_tensor(&mut rng, &[8, 9, 11]);
+        let w = rand_tensor(&mut rng, &[8, 8, 3, 3]);
+        for base in [ExecPolicy::dense(4), ExecPolicy::sparse(4, 0.6)] {
+            let want = ConvExecutor::prepare(&w, &base.with_vwidth(VectorWidth::Scalar))
+                .unwrap()
+                .conv2d(&x);
+            for vw in VectorWidth::ALL {
+                let got = ConvExecutor::prepare(&w, &base.with_vwidth(vw))
+                    .unwrap()
+                    .conv2d(&x);
+                assert_eq!(got, want, "{base:?} width {vw}");
+            }
         }
     }
 

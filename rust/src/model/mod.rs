@@ -87,6 +87,31 @@ impl LayerModel {
         (self.l as f64 / self.m as f64).powi(2)
     }
 
+    /// Modeled throughput factor of running the fused hot loops with
+    /// `lanes`-wide SIMD vectors (the tuner's lane-width term).  The
+    /// element-wise work splits into two populations: the long
+    /// channel-reduction streams over the tile-lane dimension (M_W + S_W)
+    /// retire full vectors, while the short l-length transform rows
+    /// (S_B + S_A) only fill `ceil(l / lanes)` vectors each, so their
+    /// effective speedup saturates at `l / ceil(l / lanes)`.  The result
+    /// is the Amdahl-weighted speedup of the whole layer; `lanes = 1` is
+    /// exactly 1.0.
+    pub fn vector_speedup(&self, lanes: usize) -> f64 {
+        assert!(lanes >= 1, "lanes must be at least 1");
+        if lanes == 1 {
+            return 1.0;
+        }
+        let a = &self.arithmetic;
+        let long = (a.m_w + a.s_w) as f64;
+        let short = (a.s_b + a.s_a) as f64;
+        let total = long + short;
+        if total == 0.0 {
+            return 1.0;
+        }
+        let row_speedup = self.l as f64 / self.l.div_ceil(lanes) as f64;
+        total / (long / lanes as f64 + short / row_speedup)
+    }
+
     /// Per-image data volume when `batch` images share one weight stream:
     /// the transformed feature maps (D_wi + D_wo) are paid per image, the
     /// transformed weights D_wk amortize across the fused batch.  This is
@@ -307,6 +332,33 @@ mod tests {
         assert!(v4 < v1);
         // Diminishing returns: the 4 -> 8 gain is below the 1 -> 2 gain.
         assert!(v1 - lm.volume_per_image(2) > lm.volume_per_image(4) - lm.volume_per_image(8));
+    }
+
+    #[test]
+    fn vector_speedup_is_monotone_and_saturates_on_short_rows() {
+        let layer = ConvLayer {
+            name: "t",
+            stage: 1,
+            in_ch: 32,
+            out_ch: 32,
+            hw: 32,
+            r: 3,
+        };
+        for m in [2usize, 4, 6] {
+            let lm = LayerModel::new(&layer.shape(), m);
+            let s1 = lm.vector_speedup(1);
+            let s4 = lm.vector_speedup(4);
+            let s8 = lm.vector_speedup(8);
+            assert_eq!(s1, 1.0);
+            assert!(s4 > 1.0 && s8 >= s4, "m={m}: {s1} {s4} {s8}");
+            // The short transform rows cap the win below the pure lane
+            // count once lanes exceed the row length l.
+            assert!(s8 < 8.0, "m={m}: {s8}");
+        }
+        // F(2,3): l = 4, so 8 lanes gain nothing over 4 on the transform
+        // terms — the overall win must still not regress.
+        let lm = LayerModel::new(&layer.shape(), 2);
+        assert!(lm.vector_speedup(8) >= lm.vector_speedup(4));
     }
 
     #[test]

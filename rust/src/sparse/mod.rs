@@ -132,21 +132,6 @@ impl Bcoo {
         })
     }
 
-    /// Expand physical block `z` to a dense block-sized tile (the FIFO
-    /// decompressor of paper §4.2's sparse cluster).
-    #[deprecated(
-        since = "0.1.0",
-        note = "allocates per call; use `expand_block_into` with recycled scratch"
-    )]
-    pub fn expand_block(&self, z: u64) -> Option<Vec<f32>> {
-        let mut tile = vec![0.0f32; self.block * self.block];
-        if self.expand_block_into(z, &mut tile) {
-            Some(tile)
-        } else {
-            None
-        }
-    }
-
     /// Decompress physical block `z` into caller scratch (`out` must be
     /// zeroed, `block * block` elements).  Returns false when the block
     /// was pruned.  This is the allocation-free decompressor the cluster
@@ -307,8 +292,7 @@ mod tests {
     fn expand_block_into_reports_pruned_blocks() {
         // The `_into` decompressor is the hot-path contract: present
         // blocks fill the scratch and return true, pruned blocks return
-        // false without touching it (the deprecated allocating wrapper
-        // delegates here, so this covers both).
+        // false without touching it.
         let (mat, rows, cols) = dense_fixture();
         let bcoo = Bcoo::compress(&mat, rows, cols, 4);
         let mut scratch = vec![0.0f32; 16];

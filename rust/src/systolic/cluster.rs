@@ -43,20 +43,6 @@ impl<'a> BlockMatrix<'a> {
         self.cols.div_ceil(self.block)
     }
 
-    /// Materialize block (rb, cb), zero-padded outside the matrix.
-    ///
-    /// Allocates; the hot paths use [`BlockMatrix::get_into`] with FIFO-
-    /// recycled scratch instead.
-    #[deprecated(
-        since = "0.1.0",
-        note = "allocates per call; use `get_into` with recycled scratch"
-    )]
-    pub fn get(&self, rb: usize, cb: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.block * self.block];
-        self.get_into(rb, cb, &mut out);
-        out
-    }
-
     /// Copy block (rb, cb) into caller scratch (`out` must be zeroed,
     /// `block * block` elements); rows are copied as contiguous slices.
     /// Blocks outside the matrix stay all-zero (ragged-edge padding).

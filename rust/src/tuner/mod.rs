@@ -42,7 +42,7 @@ use crate::scheduler::{layer_energy, schedule_layer, AcceleratorConfig};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::Rng;
-use crate::winograd::{SparseFilterBank, WinogradPlan};
+use crate::winograd::{simd, SparseFilterBank, VectorWidth, WinogradPlan};
 use std::cmp::Ordering;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -56,6 +56,11 @@ pub struct TuneOptions {
     pub ms: Vec<usize>,
     /// Candidate plan worker counts.
     pub workers: Vec<usize>,
+    /// Candidate SIMD vector widths.  The default is every width that
+    /// resolves to a distinct kernel on this machine, so candidates are
+    /// never duplicates (and under `SWCNN_FORCE_SCALAR` the list
+    /// collapses to scalar alone).
+    pub vwidths: Vec<VectorWidth>,
     /// Candidate fused serving batch sizes (ascending).
     pub batches: Vec<usize>,
     /// Refine the model ranking with on-machine measurements.
@@ -80,9 +85,14 @@ impl Default for TuneOptions {
         let mut workers = vec![1, (default_threads / 2).max(1), default_threads];
         workers.sort_unstable();
         workers.dedup();
+        // Widths that clamp to the same kernel on this machine (e.g. W8
+        // on an SSE2-only core) are one candidate, not two.
+        let mut vwidths = vec![VectorWidth::Scalar, VectorWidth::W4, VectorWidth::W8];
+        vwidths.dedup_by_key(|w| w.lanes());
         Self {
             ms: vec![2, 4, 6],
             workers,
+            vwidths,
             batches: vec![1, 2, 4, 8],
             calibrate: true,
             calib_iters: 7,
@@ -107,6 +117,8 @@ pub struct LayerTune {
     pub workers: usize,
     /// Chosen backend: BCOO block-skipping (true) vs pruned-dense stream.
     pub sparse: bool,
+    /// Chosen SIMD vector width for the layer's fused hot loops.
+    pub vwidth: VectorWidth,
     /// Scheduler-predicted pipelined cycles of the chosen configuration.
     pub predicted_cycles: u64,
     /// Analytical energy of the chosen configuration (MAC units).
@@ -139,6 +151,10 @@ pub struct TuneProfile {
     pub bits: Option<u32>,
     /// Model-chosen fused serving batch granularity.
     pub batch: usize,
+    /// CPU feature string of the machine the profile was tuned on (see
+    /// [`simd::detected_features`]) — calibration evidence for a vector
+    /// width is machine-specific, so artifacts carry their provenance.
+    pub cpu_features: String,
     pub layers: Vec<LayerTune>,
 }
 
@@ -206,6 +222,12 @@ impl TuneProfile {
                 return bad(format!(
                     "node {} ({}): profile pinned {} workers, session compiled {:?}",
                     lt.node, lt.name, lt.workers, p.workers
+                ));
+            }
+            if p.vwidth != lt.vwidth {
+                return bad(format!(
+                    "node {} ({}): profile pinned vector width {}, session compiled {}",
+                    lt.node, lt.name, lt.vwidth, p.vwidth
                 ));
             }
             if p.wants_sparse() != lt.sparse {
@@ -304,13 +326,16 @@ impl TuneProfile {
             .map(|lt| ExecPolicy {
                 m: lt.m,
                 workers: Some(lt.workers),
+                vwidth: lt.vwidth,
                 sparse_threshold: if lt.sparse { 0.0 } else { 2.0 },
                 ..base
             })
             .collect()
     }
 
-    /// Serialize to the profile's JSON form (schema 2: node-keyed rows).
+    /// Serialize to the profile's JSON form (schema 3: node-keyed rows
+    /// with per-layer vector widths and the tuning machine's CPU
+    /// features; schema-2 profiles still load, defaulting both).
     pub fn to_json(&self) -> Json {
         let layers: Vec<Json> = self
             .layers
@@ -322,6 +347,10 @@ impl TuneProfile {
                     ("name".to_string(), Json::Str(lt.name.clone())),
                     ("m".to_string(), Json::Num(lt.m as f64)),
                     ("workers".to_string(), Json::Num(lt.workers as f64)),
+                    (
+                        "vwidth".to_string(),
+                        Json::Str(lt.vwidth.name().to_string()),
+                    ),
                     (
                         "backend".to_string(),
                         Json::Str(if lt.sparse { "sparse" } else { "dense" }.to_string()),
@@ -337,8 +366,12 @@ impl TuneProfile {
             })
             .collect();
         Json::Obj(BTreeMap::from([
-            ("schema".to_string(), Json::Num(2.0)),
+            ("schema".to_string(), Json::Num(3.0)),
             ("kind".to_string(), Json::Str("tune_profile".to_string())),
+            (
+                "cpu_features".to_string(),
+                Json::Str(self.cpu_features.clone()),
+            ),
             ("network".to_string(), Json::Str(self.network.clone())),
             ("base_m".to_string(), Json::Num(self.base_m as f64)),
             ("sparsity".to_string(), Json::Num(self.sparsity)),
@@ -419,12 +452,28 @@ impl TuneProfile {
                 if workers == 0 {
                     return Err(bad(format!("layer {name:?}: workers must be >= 1")));
                 }
+                // Schema-2 profiles predate the vector-width knob: a
+                // missing field means "whatever the machine does best",
+                // which is exactly `Auto`.  A present-but-unknown width
+                // is a corrupt profile and must fail at load.
+                let vwidth = match row.get("vwidth") {
+                    None | Some(Json::Null) => VectorWidth::Auto,
+                    Some(j) => {
+                        let s = j.as_str().ok_or_else(|| {
+                            bad(format!("layer {name:?}: vwidth must be a string"))
+                        })?;
+                        VectorWidth::parse(s).ok_or_else(|| {
+                            bad(format!("layer {name:?}: unknown vector width {s:?}"))
+                        })?
+                    }
+                };
                 Ok(LayerTune {
                     node: uint(row, "node")? as usize,
                     name,
                     m,
                     workers,
                     sparse,
+                    vwidth,
                     predicted_cycles: uint(row, "predicted_cycles")?,
                     model_energy: num(row, "model_energy")?,
                     measured_s: opt("measured_s")?,
@@ -458,6 +507,12 @@ impl TuneProfile {
             sparsity: num(v, "sparsity")?,
             bits,
             batch,
+            // Schema-2 profiles carry no provenance; empty = unknown.
+            cpu_features: v
+                .get("cpu_features")
+                .and_then(|f| f.as_str())
+                .unwrap_or_default()
+                .to_string(),
             layers,
         })
     }
@@ -505,18 +560,26 @@ struct Candidate {
     m: usize,
     workers: usize,
     sparse: bool,
+    vwidth: VectorWidth,
     predicted_cycles: u64,
     model_energy: f64,
 }
 
 impl Candidate {
     fn same_config(&self, other: &Candidate) -> bool {
-        self.m == other.m && self.workers == other.workers && self.sparse == other.sparse
+        self.m == other.m
+            && self.workers == other.workers
+            && self.sparse == other.sparse
+            // Widths that resolve to the same kernel on this machine
+            // (Auto vs the explicit widest, W8 clamped onto W4) are the
+            // same configuration — they run identical code.
+            && self.vwidth.lanes() == other.vwidth.lanes()
     }
 }
 
 /// Model rank: fewer predicted cycles, then lower analytical energy, then
-/// the smaller tile (less weight dilation), then fewer workers.
+/// the smaller tile (less weight dilation), then fewer workers, then the
+/// wider vectors (equal predicted cost spends fewer instructions wide).
 fn rank(a: &Candidate, b: &Candidate) -> Ordering {
     a.predicted_cycles
         .cmp(&b.predicted_cycles)
@@ -527,6 +590,7 @@ fn rank(a: &Candidate, b: &Candidate) -> Ordering {
         )
         .then(a.m.cmp(&b.m))
         .then(a.workers.cmp(&b.workers))
+        .then(b.vwidth.lanes().cmp(&a.vwidth.lanes()))
 }
 
 /// The per-conv-node autotuner.  Scores every (m, workers, backend)
@@ -609,6 +673,7 @@ impl Tuner {
                 c.m == self.base.m
                     && c.workers == default_workers
                     && c.sparse == default_sparse
+                    && c.vwidth.lanes() == self.base.vwidth.lanes()
             });
             let default = match default {
                 Some(d) => d,
@@ -619,6 +684,7 @@ impl Tuner {
                         self.base.m,
                         default_workers,
                         default_sparse,
+                        self.base.vwidth,
                         &table,
                     );
                     cands.push(d);
@@ -641,6 +707,7 @@ impl Tuner {
             sparsity: self.base.sparsity,
             bits: self.base.bits,
             batch,
+            cpu_features: simd::detected_features().to_string(),
             layers,
         })
     }
@@ -653,10 +720,10 @@ impl Tuner {
         ExecPolicy { m, ..self.base }.for_conv(shape).wants_sparse()
     }
 
-    /// Every candidate (m, workers, backend) of one conv, scored by the
-    /// analytical model on the node's **actual pruned banks**.  The bank
-    /// depends only on m, so it is transformed once per tile size and
-    /// shared across the worker-count candidates.
+    /// Every candidate (m, workers, backend, vector width) of one conv,
+    /// scored by the analytical model on the node's **actual pruned
+    /// banks**.  The bank depends only on m, so it is transformed once
+    /// per tile size and shared across the worker/width candidates.
     fn candidates(&self, shape: &ConvShape, w: &Tensor, table: &EnergyTable) -> Vec<Candidate> {
         let mut out = Vec::new();
         for &m in &self.opts.ms {
@@ -666,9 +733,11 @@ impl Tuner {
                 WinogradPlan::new(m, shape.r).transform_filters_sparse(w, self.base.sparsity)
             });
             for &workers in &self.opts.workers {
-                out.push(self.score_config(shape, m, workers, None, table));
-                if let Some(bank) = &bank {
-                    out.push(self.score_config(shape, m, workers, Some(bank), table));
+                for &vw in &self.opts.vwidths {
+                    out.push(self.score_config(shape, m, workers, None, vw, table));
+                    if let Some(bank) = &bank {
+                        out.push(self.score_config(shape, m, workers, Some(bank), vw, table));
+                    }
                 }
             }
         }
@@ -684,23 +753,27 @@ impl Tuner {
         m: usize,
         workers: usize,
         sparse: bool,
+        vwidth: VectorWidth,
         table: &EnergyTable,
     ) -> Candidate {
         let bank = sparse.then(|| {
             WinogradPlan::new(m, shape.r).transform_filters_sparse(w, self.base.sparsity)
         });
-        self.score_config(shape, m, workers, bank.as_ref(), table)
+        self.score_config(shape, m, workers, bank.as_ref(), vwidth, table)
     }
 
     /// Score one configuration on an already-built bank: scheduler cycles
-    /// (worker count mapped to the cluster dimension) + the §5.1 energy
-    /// model.
+    /// (worker count mapped to the cluster dimension, compute scaled by
+    /// the model's Amdahl-weighted lane term) + the §5.1 energy model —
+    /// SIMD width changes when work retires, not how much energy each op
+    /// costs, so only the cycle estimate is scaled.
     fn score_config(
         &self,
         shape: &ConvShape,
         m: usize,
         workers: usize,
         bank: Option<&SparseFilterBank>,
+        vwidth: VectorWidth,
         table: &EnergyTable,
     ) -> Candidate {
         let cfg = AcceleratorConfig {
@@ -709,11 +782,14 @@ impl Tuner {
             ..AcceleratorConfig::paper().with_clusters(workers)
         };
         let plan = schedule_layer(shape, &cfg, bank);
+        let speedup = LayerModel::new(shape, m).vector_speedup(vwidth.lanes());
+        let cycles = (plan.pipelined_cycles() as f64 / speedup).ceil() as u64;
         Candidate {
             m,
             workers,
             sparse: bank.is_some(),
-            predicted_cycles: plan.pipelined_cycles(),
+            vwidth,
+            predicted_cycles: cycles.max(1),
             model_energy: layer_energy(shape, &cfg, bank.map(|b| b.block_sparsity()), table),
         }
     }
@@ -777,6 +853,7 @@ impl Tuner {
         ExecPolicy {
             m: cand.m,
             workers: Some(cand.workers),
+            vwidth: cand.vwidth,
             sparse_threshold: if cand.sparse { 0.0 } else { 2.0 },
             ..self.base
         }
@@ -821,6 +898,7 @@ fn layer_tune(
         m: c.m,
         workers: c.workers,
         sparse: c.sparse,
+        vwidth: c.vwidth,
         predicted_cycles: c.predicted_cycles,
         model_energy: c.model_energy,
         measured_s,
@@ -884,6 +962,52 @@ mod tests {
         let text = profile.to_json().to_string();
         let back = TuneProfile::from_json(&Json::parse(&text).expect("parse")).expect("decode");
         assert_eq!(profile, back);
+    }
+
+    #[test]
+    fn profile_records_vector_width_and_cpu_features() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune()
+            .unwrap();
+        assert_eq!(profile.cpu_features, simd::detected_features());
+        assert!(!profile.cpu_features.is_empty());
+        for lt in &profile.layers {
+            assert!(lt.vwidth.lanes() >= 1, "{lt:?}");
+        }
+        // The JSON artifact is self-describing.
+        let text = profile.to_json().to_string();
+        assert!(text.contains("cpu_features"), "{text}");
+        assert!(text.contains("vwidth"), "{text}");
+    }
+
+    #[test]
+    fn schema2_profile_without_widths_still_loads() {
+        // A pre-simd profile has no vwidth / cpu_features: it must load
+        // with Auto widths (what those machines effectively ran).
+        let old = Json::parse(
+            r#"{"kind": "tune_profile", "network": "n", "base_m": 2,
+                "sparsity": 0.5, "batch": 4,
+                "layers": [{"node": 1, "name": "c0", "m": 2, "workers": 1,
+                            "backend": "dense", "predicted_cycles": 1,
+                            "model_energy": 1.0}]}"#,
+        )
+        .unwrap();
+        let profile = TuneProfile::from_json(&old).expect("schema-2 load");
+        assert_eq!(profile.layers[0].vwidth, VectorWidth::Auto);
+        assert_eq!(profile.cpu_features, "");
+        // An unknown width is a corrupt profile, not Auto.
+        let bad = Json::parse(
+            r#"{"kind": "tune_profile", "network": "n", "base_m": 2,
+                "sparsity": 0.5, "batch": 4,
+                "layers": [{"node": 1, "name": "c0", "m": 2, "workers": 1,
+                            "vwidth": "w16",
+                            "backend": "dense", "predicted_cycles": 1,
+                            "model_energy": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(TuneProfile::from_json(&bad).is_err());
     }
 
     #[test]

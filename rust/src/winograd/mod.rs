@@ -7,8 +7,10 @@
 
 pub mod plan;
 pub mod rational;
+pub mod simd;
 
 pub use plan::{FilterBank, SparseFilterBank, WinogradPlan};
+pub use simd::VectorWidth;
 
 use crate::tensor::Tensor;
 use rational::Rat;

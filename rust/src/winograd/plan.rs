@@ -47,9 +47,18 @@
 //! accumulation order is independent of N, so the batched paths are
 //! bit-identical to the single-image engines per image (and the N = 1
 //! batch *is* the single-image code path).
+//!
+//! The innermost loops of all four hot paths (input transform, output
+//! transform, dense channel-accumulate, BCOO block axpy) run through the
+//! element-wise SIMD kernels in [`super::simd`], selected per plan by the
+//! [`VectorWidth`] knob.  The kernels perform a separate multiply and add
+//! per lane — never an FMA — so **every width is bit-identical** to the
+//! scalar path; the knob is purely a speed choice, scored per layer by
+//! the tuner.
 
 #![allow(clippy::too_many_arguments)]
 
+use super::simd::{Resolved, VectorWidth};
 use super::{matrices_exact, num_tiles, tile_size};
 use crate::sparse::{prune_blocks, Bcoo};
 use crate::tensor::Tensor;
@@ -77,8 +86,11 @@ fn transpose(mat: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 /// out (m x n) = a (m x k) · b (k x n); out is fully overwritten.
 /// Zero entries of `a` are skipped — the transform matrices are sparse
 /// (the paper's nnz(B)/nnz(A) counts), so this matters on the hot path.
+/// Output rows accumulate via the width-`vw` broadcast-axpy kernel; the
+/// row walk over `p` is ascending for every width, so any two widths
+/// produce bit-identical results (the axpy itself is element-wise).
 #[inline]
-fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, vw: Resolved) {
     debug_assert!(a.len() >= m * k);
     debug_assert!(b.len() >= k * n);
     debug_assert!(out.len() >= m * n);
@@ -91,29 +103,7 @@ fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
                 continue;
             }
             let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += ap * bv;
-            }
-        }
-    }
-}
-
-/// out (m x n) = a (m x k) · bt^T, where `bt` is (n x k) row-major —
-/// i.e. multiply by the transpose without materializing it.
-#[inline]
-fn matmul_nt_into(out: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert!(a.len() >= m * k);
-    debug_assert!(bt.len() >= n * k);
-    debug_assert!(out.len() >= m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bt[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            out[i * n + j] = acc;
+            vw.axpy(orow, ap, brow);
         }
     }
 }
@@ -311,6 +301,7 @@ pub struct WinogradPlan {
     consts: PlanConsts,
     scratch: PlanScratch,
     threads: usize,
+    vwidth: VectorWidth,
 }
 
 impl WinogradPlan {
@@ -340,6 +331,7 @@ impl WinogradPlan {
             },
             scratch: PlanScratch::default(),
             threads,
+            vwidth: VectorWidth::Auto,
         }
     }
 
@@ -348,6 +340,26 @@ impl WinogradPlan {
     pub fn with_threads(mut self, n: usize) -> Self {
         self.set_threads(n);
         self
+    }
+
+    /// Override the SIMD vector width of the fused hot loops (results
+    /// are bit-identical for any value — see [`super::simd`]).
+    pub fn with_vector_width(mut self, w: VectorWidth) -> Self {
+        self.set_vector_width(w);
+        self
+    }
+
+    /// In-place vector-width override — the hook the tuner profile uses
+    /// to apply a per-layer width choice to an executor's plan.  Widths
+    /// the machine cannot satisfy clamp down inside the kernels, so any
+    /// value is safe and bit-identical.
+    pub fn set_vector_width(&mut self, w: VectorWidth) {
+        self.vwidth = w;
+    }
+
+    /// The plan's vector-width knob (as configured, before resolution).
+    pub fn vector_width(&self) -> VectorWidth {
+        self.vwidth
     }
 
     /// The worker count every new plan starts with (machine parallelism,
@@ -426,13 +438,14 @@ impl WinogradPlan {
         assert_eq!(w.shape()[3], r, "filter width != plan r");
         let sz = l * l;
         let wd = w.data();
+        let vw = self.vwidth.resolve();
         let mut u = vec![0.0f32; k * c * sz];
         let mut t = vec![0.0f32; l * r];
         for (idx, chunk) in u.chunks_exact_mut(sz).enumerate() {
             // (K, C, r, r) is row-major: filter (kk, cc) is contiguous.
             let gf = &wd[idx * r * r..(idx + 1) * r * r];
-            matmul_into(&mut t, &self.consts.g, gf, l, r, r);
-            matmul_nt_into(chunk, &t, &self.consts.g, l, r, l);
+            matmul_into(&mut t, &self.consts.g, gf, l, r, r, vw);
+            matmul_into(chunk, &t, &self.consts.gt, l, r, l, vw);
         }
         FilterBank { k, c, l, u }
     }
@@ -542,6 +555,7 @@ impl WinogradPlan {
         out: &mut [f32],
     ) {
         let threads = self.threads;
+        let vw = self.vwidth.resolve();
         let consts = &self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
@@ -567,7 +581,7 @@ impl WinogradPlan {
 
         // Stage 1: gather + B^T d B per (image, tile, channel), sharded
         // by global tile row.  Each worker owns a contiguous band of `v`.
-        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a);
+        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a, vw);
 
         // Stage 2 + 3: channel-accumulate and inverse-transform per
         // (output channel, image, tile), sharded by output channel.
@@ -593,6 +607,7 @@ impl WinogradPlan {
                 ntx,
                 oh,
                 ow,
+                vw,
             );
         } else {
             std::thread::scope(|s| {
@@ -619,6 +634,7 @@ impl WinogradPlan {
                             ntx,
                             oh,
                             ow,
+                            vw,
                         );
                     });
                 }
@@ -714,6 +730,7 @@ impl WinogradPlan {
         out: &mut [f32],
     ) {
         let threads = self.threads;
+        let vw = self.vwidth.resolve();
         let consts = &self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
@@ -741,14 +758,14 @@ impl WinogradPlan {
         let PlanScratch { v, vt, mm, yb, workers } = scratch;
 
         // Stage 1: identical to the dense engine.
-        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a);
+        run_input_stage(consts, workers, x, n, c, h, w_in, nty, ntx, v, n_a, vw);
 
         // Stage 2: per-coordinate transpose + block-sparse matmul,
         // sharded by coordinate.  Each worker owns contiguous `vt`/`mm`
         // coordinate bands; pruned blocks are never visited.
         let v_ro: &[f32] = v;
         if n_c == 1 {
-            coord_stage_ts(bank, v_ro, vt, mm, 0, sz, c, k, n_tiles);
+            coord_stage_ts(bank, v_ro, vt, mm, 0, sz, c, k, n_tiles, vw);
         } else {
             std::thread::scope(|s| {
                 let mut vt_rest: &mut [f32] = vt;
@@ -775,6 +792,7 @@ impl WinogradPlan {
                             c,
                             k,
                             n_tiles,
+                            vw,
                         );
                     });
                 }
@@ -803,6 +821,7 @@ impl WinogradPlan {
                 ntx,
                 oh,
                 ow,
+                vw,
             );
         } else {
             std::thread::scope(|s| {
@@ -828,6 +847,7 @@ impl WinogradPlan {
                             ntx,
                             oh,
                             ow,
+                            vw,
                         );
                     });
                 }
@@ -866,11 +886,12 @@ fn run_input_stage(
     ntx: usize,
     v: &mut [f32],
     n_a: usize,
+    vw: Resolved,
 ) {
     let sz = consts.l * consts.l;
     let rows_total = n * nty;
     if n_a == 1 {
-        input_stage_rows(consts, &mut workers[0], x, c, h, w_in, 0, rows_total, nty, ntx, v);
+        input_stage_rows(consts, &mut workers[0], x, c, h, w_in, 0, rows_total, nty, ntx, v, vw);
         return;
     }
     std::thread::scope(|s| {
@@ -883,7 +904,20 @@ fn run_input_stage(
             let start = g0;
             g0 += rows;
             s.spawn(move || {
-                input_stage_rows(consts, ws, x, c, h, w_in, start, start + rows, nty, ntx, chunk);
+                input_stage_rows(
+                    consts,
+                    ws,
+                    x,
+                    c,
+                    h,
+                    w_in,
+                    start,
+                    start + rows,
+                    nty,
+                    ntx,
+                    chunk,
+                    vw,
+                );
             });
         }
     });
@@ -906,6 +940,7 @@ fn coord_stage_ts(
     c: usize,
     k: usize,
     n_tiles: usize,
+    vw: Resolved,
 ) {
     let l = bank.l;
     let sz = l * l;
@@ -940,9 +975,9 @@ fn coord_stage_ts(
                 let val = bcoo.an[idx];
                 let row = &vt_t[cc * n_tiles..(cc + 1) * n_tiles];
                 let out = &mut mm_t[kk * n_tiles..(kk + 1) * n_tiles];
-                for (o, &x1) in out.iter_mut().zip(row) {
-                    *o += val * x1;
-                }
+                // One (batch-extended) tiles-length axpy per stored
+                // nonzero — the widest lane dimension of the stack.
+                vw.axpy(out, val, row);
             }
         }
     }
@@ -966,6 +1001,7 @@ fn inverse_stage_ks(
     ntx: usize,
     oh: usize,
     ow: usize,
+    vw: Resolved,
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
@@ -987,8 +1023,8 @@ fn inverse_stage_ks(
                     // Y = (A^T t) A -> (m, m), then scatter the valid
                     // window — identical arithmetic to the dense output
                     // stage.
-                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
-                    matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
+                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l, vw);
+                    matmul_into(&mut ws.y, &ws.t[..m * l], &consts.a, m, l, m, vw);
                     for i in 0..nrows {
                         out_k[(y0 + i) * ow + x0..][..ncols]
                             .copy_from_slice(&ws.y[i * m..i * m + ncols]);
@@ -1014,6 +1050,7 @@ fn input_stage_rows(
     nty: usize,
     ntx: usize,
     v: &mut [f32],
+    vw: Resolved,
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
@@ -1038,8 +1075,8 @@ fn input_stage_rows(
                     ws.d[i * l..i * l + ncols].copy_from_slice(src);
                 }
                 // V = (B^T d) B, written straight into the output band.
-                matmul_into(&mut ws.t, &consts.bt, &ws.d, l, l, l);
-                matmul_nt_into(&mut v[off..off + sz], &ws.t, &consts.bt, l, l, l);
+                matmul_into(&mut ws.t, &consts.bt, &ws.d, l, l, l, vw);
+                matmul_into(&mut v[off..off + sz], &ws.t, &consts.b, l, l, l, vw);
                 off += sz;
             }
         }
@@ -1065,6 +1102,7 @@ fn output_stage_ks(
     ntx: usize,
     oh: usize,
     ow: usize,
+    vw: Resolved,
 ) {
     let (m, l) = (consts.m, consts.l);
     let sz = l * l;
@@ -1087,14 +1125,12 @@ fn output_stage_ks(
                     for cc in 0..c {
                         let uu = &u_k[cc * sz..][..sz];
                         let vv = &v_t[cc * sz..][..sz];
-                        for (a, (&u1, &v1)) in ws.acc.iter_mut().zip(uu.iter().zip(vv)) {
-                            *a += u1 * v1;
-                        }
+                        vw.mul_acc(&mut ws.acc, uu, vv);
                     }
                     // Y = (A^T t) A -> (m, m), then scatter the valid
                     // window.
-                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l);
-                    matmul_nt_into(&mut ws.y, &ws.t[..m * l], &consts.at, m, l, m);
+                    matmul_into(&mut ws.t[..m * l], &consts.at, &ws.acc, m, l, l, vw);
+                    matmul_into(&mut ws.y, &ws.t[..m * l], &consts.a, m, l, m, vw);
                     for i in 0..nrows {
                         out_k[(y0 + i) * ow + x0..][..ncols]
                             .copy_from_slice(&ws.y[i * m..i * m + ncols]);
@@ -1188,6 +1224,39 @@ mod tests {
             let mut multi = WinogradPlan::new(4, 3).with_threads(threads);
             let b = multi.conv2d(&x, &w);
             assert_eq!(a, b, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn vector_widths_bit_identical_dense_and_sparse() {
+        // The acceptance contract of the simd module at plan level: every
+        // width (including clamped-down ones) reproduces the scalar path
+        // exactly, on a non-tile-aligned shape, for both engines.
+        let mut rng = Rng::new(322);
+        let x = rand_tensor(&mut rng, &[5, 13, 11]);
+        let w = rand_tensor(&mut rng, &[6, 5, 3, 3]);
+        for m in [2usize, 4, 6] {
+            let mut scalar = WinogradPlan::new(m, 3).with_vector_width(VectorWidth::Scalar);
+            let dbank = scalar.transform_filters(&w);
+            let sbank = scalar.transform_filters_sparse(&w, 0.5);
+            let want_d = scalar.conv2d_with_filters(&x, &dbank);
+            let want_s = scalar.conv2d_sparse_with_filters(&x, &sbank);
+            for vw in VectorWidth::ALL {
+                let mut plan = WinogradPlan::new(m, 3).with_vector_width(vw);
+                assert_eq!(plan.vector_width(), vw);
+                // The bank itself must transform identically too.
+                assert_eq!(plan.transform_filters(&w).data(), dbank.data(), "m={m} {vw}");
+                assert_eq!(
+                    plan.conv2d_with_filters(&x, &dbank),
+                    want_d,
+                    "dense m={m} {vw}"
+                );
+                assert_eq!(
+                    plan.conv2d_sparse_with_filters(&x, &sbank),
+                    want_s,
+                    "sparse m={m} {vw}"
+                );
+            }
         }
     }
 

@@ -1,0 +1,514 @@
+//! Arch-gated SIMD kernels for the fused Winograd hot loops.
+//!
+//! The four hot paths of the plan engine — the `B^T d B` input
+//! transform, the `A^T t A` output transform, the dense bank
+//! channel-accumulate, and the per-coordinate BCOO block axpy — all
+//! reduce to two **element-wise** primitives over a contiguous lane
+//! dimension (tile lanes, or batch-extended tile lanes):
+//!
+//! - broadcast-axpy: `out[i] += s * x[i]`
+//! - multiply-accumulate: `acc[i] += u[i] * v[i]`
+//!
+//! Those are the only operations this module vectorizes, and it
+//! vectorizes them as a **separate multiply and add per lane** — never a
+//! fused multiply-add, whose single rounding would change low bits — so
+//! every width performs exactly the arithmetic the scalar loop performs,
+//! lane by lane, in the same order.  Remainder lanes run the scalar
+//! tail.  The result: **every `VectorWidth` is bit-identical** to the
+//! scalar path on every input, which is what lets the tuner treat the
+//! width as a pure speed knob (a profile can never change what a layer
+//! computes) and lets the test suite assert `==` instead of `allclose`.
+//!
+//! Dispatch is per-plan: [`VectorWidth`] (the public knob on
+//! `WinogradPlan` / `ExecPolicy`) resolves once per launch to a
+//! [`Resolved`] width via runtime feature detection — AVX2 on x86_64
+//! (`is_x86_feature_detected!`), NEON on aarch64 (baseline), 128-bit
+//! SSE2 on any x86_64 (baseline) — and unsupported widths clamp down,
+//! never fail.  Setting `SWCNN_FORCE_SCALAR=1` in the environment forces
+//! the scalar path regardless of the knob (the CI fallback leg and the
+//! debugging escape hatch).
+
+use std::sync::OnceLock;
+
+/// The vector-width knob: how many f32 lanes the fused hot loops process
+/// per step.  Widths the machine cannot satisfy clamp down (W8 on an
+/// SSE2-only x86 runs 4-wide; any width on an arch without kernels runs
+/// scalar), so every value is valid everywhere — and every value is
+/// bit-identical, so this is purely a performance choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum VectorWidth {
+    /// Plain scalar loops (the reference path the others must match).
+    Scalar,
+    /// 4 lanes: SSE2 (x86_64 baseline) or NEON (aarch64 baseline).
+    W4,
+    /// 8 lanes: AVX2, runtime-detected; clamps to W4 where unavailable.
+    W8,
+    /// The widest width the running machine supports (the default).
+    #[default]
+    Auto,
+}
+
+impl VectorWidth {
+    pub const ALL: [VectorWidth; 4] = [
+        VectorWidth::Scalar,
+        VectorWidth::W4,
+        VectorWidth::W8,
+        VectorWidth::Auto,
+    ];
+
+    /// Stable lowercase name (the `TuneProfile` / bench-JSON encoding).
+    pub fn name(self) -> &'static str {
+        match self {
+            VectorWidth::Scalar => "scalar",
+            VectorWidth::W4 => "w4",
+            VectorWidth::W8 => "w8",
+            VectorWidth::Auto => "auto",
+        }
+    }
+
+    /// Inverse of [`VectorWidth::name`].
+    pub fn parse(s: &str) -> Option<VectorWidth> {
+        match s {
+            "scalar" => Some(VectorWidth::Scalar),
+            "w4" => Some(VectorWidth::W4),
+            "w8" => Some(VectorWidth::W8),
+            "auto" => Some(VectorWidth::Auto),
+            _ => None,
+        }
+    }
+
+    /// The f32 lane count this knob resolves to **on this machine**
+    /// (after clamping and the force-scalar override) — the number the
+    /// analytical model scales its element-wise arithmetic by.
+    pub fn lanes(self) -> usize {
+        self.resolve().lanes()
+    }
+
+    /// Resolve the knob against the running machine: clamp unsupported
+    /// widths down and honor `SWCNN_FORCE_SCALAR`.
+    pub(crate) fn resolve(self) -> Resolved {
+        if force_scalar() {
+            return Resolved::Scalar;
+        }
+        match self {
+            VectorWidth::Scalar => Resolved::Scalar,
+            VectorWidth::W4 => clamp_w4(),
+            VectorWidth::W8 | VectorWidth::Auto => clamp_w8(),
+        }
+    }
+}
+
+impl std::fmt::Display for VectorWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for VectorWidth {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        VectorWidth::parse(s).ok_or_else(|| format!("unknown vector width {s:?}"))
+    }
+}
+
+/// A machine-validated width: `W8` is only ever constructed after AVX2
+/// detection succeeded (the invariant the unchecked intrinsic calls rely
+/// on), which is why resolution is crate-internal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Resolved {
+    Scalar,
+    W4,
+    W8,
+}
+
+impl Resolved {
+    pub(crate) fn lanes(self) -> usize {
+        match self {
+            Resolved::Scalar => 1,
+            Resolved::W4 => 4,
+            Resolved::W8 => 8,
+        }
+    }
+
+    /// `out[i] += s * x[i]` over equal-length slices.
+    #[inline]
+    pub(crate) fn axpy(self, out: &mut [f32], s: f32, x: &[f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        match self {
+            Resolved::Scalar => axpy_scalar(out, s, x),
+            Resolved::W4 => axpy_w4(out, s, x),
+            Resolved::W8 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Resolved::W8 is only produced by resolve()
+                // after `is_x86_feature_detected!("avx2")` succeeded.
+                unsafe {
+                    axpy_avx2(out, s, x)
+                };
+                #[cfg(not(target_arch = "x86_64"))]
+                axpy_w4(out, s, x);
+            }
+        }
+    }
+
+    /// `acc[i] += u[i] * v[i]` over equal-length slices.
+    #[inline]
+    pub(crate) fn mul_acc(self, acc: &mut [f32], u: &[f32], v: &[f32]) {
+        debug_assert_eq!(acc.len(), u.len());
+        debug_assert_eq!(acc.len(), v.len());
+        match self {
+            Resolved::Scalar => mul_acc_scalar(acc, u, v),
+            Resolved::W4 => mul_acc_w4(acc, u, v),
+            Resolved::W8 => {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: Resolved::W8 is only produced by resolve()
+                // after `is_x86_feature_detected!("avx2")` succeeded.
+                unsafe {
+                    mul_acc_avx2(acc, u, v)
+                };
+                #[cfg(not(target_arch = "x86_64"))]
+                mul_acc_w4(acc, u, v);
+            }
+        }
+    }
+}
+
+/// The widest width this machine's kernels support (hardware capability;
+/// deliberately ignores `SWCNN_FORCE_SCALAR` so the CI smoke can name
+/// what it exercised).
+pub fn widest_supported() -> VectorWidth {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            VectorWidth::W8
+        } else {
+            VectorWidth::W4
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        VectorWidth::W4
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        VectorWidth::Scalar
+    }
+}
+
+/// Whether `SWCNN_FORCE_SCALAR` is set (read once per process).
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("SWCNN_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// The detected CPU feature string recorded in `TuneProfile` and
+/// `Metrics::summary()` so perf artifacts are self-describing across
+/// machines, e.g. `x86_64:sse2+sse4.2+avx+avx2+fma`.
+pub fn detected_features() -> &'static str {
+    static FEATURES: OnceLock<String> = OnceLock::new();
+    FEATURES.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let mut f = vec!["sse2"];
+            if std::arch::is_x86_feature_detected!("sse4.2") {
+                f.push("sse4.2");
+            }
+            if std::arch::is_x86_feature_detected!("avx") {
+                f.push("avx");
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                f.push("avx2");
+            }
+            if std::arch::is_x86_feature_detected!("fma") {
+                f.push("fma");
+            }
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                f.push("avx512f");
+            }
+            format!("x86_64:{}", f.join("+"))
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            "aarch64:neon".to_string()
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            format!("{}:scalar", std::env::consts::ARCH)
+        }
+    })
+}
+
+fn clamp_w4() -> Resolved {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        Resolved::W4
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Resolved::Scalar
+    }
+}
+
+fn clamp_w8() -> Resolved {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Resolved::W8;
+        }
+    }
+    clamp_w4()
+}
+
+// ---- scalar reference kernels (the bit-identity contract) ----
+
+#[inline]
+fn axpy_scalar(out: &mut [f32], s: f32, x: &[f32]) {
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += s * xv;
+    }
+}
+
+#[inline]
+fn mul_acc_scalar(acc: &mut [f32], u: &[f32], v: &[f32]) {
+    for (a, (&uv, &vv)) in acc.iter_mut().zip(u.iter().zip(v)) {
+        *a += uv * vv;
+    }
+}
+
+// ---- x86_64: SSE2 (baseline) and AVX2 (runtime-detected) ----
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(x.len());
+    let mut i = 0;
+    // SAFETY: SSE2 is part of the x86_64 baseline; every load/store
+    // stays within the first `n` elements of its slice.
+    unsafe {
+        let vs = _mm_set1_ps(s);
+        while i + 4 <= n {
+            let xv = _mm_loadu_ps(x.as_ptr().add(i));
+            let ov = _mm_loadu_ps(out.as_ptr().add(i));
+            // mul then add — no FMA contraction, matching the scalar path.
+            _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_add_ps(ov, _mm_mul_ps(vs, xv)));
+            i += 4;
+        }
+    }
+    axpy_scalar(&mut out[i..n], s, &x[i..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(u.len()).min(v.len());
+    let mut i = 0;
+    // SAFETY: SSE2 is part of the x86_64 baseline; every load/store
+    // stays within the first `n` elements of its slice.
+    unsafe {
+        while i + 4 <= n {
+            let uv = _mm_loadu_ps(u.as_ptr().add(i));
+            let vv = _mm_loadu_ps(v.as_ptr().add(i));
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(av, _mm_mul_ps(uv, vv)));
+            i += 4;
+        }
+    }
+    mul_acc_scalar(&mut acc[i..n], &u[i..n], &v[i..n]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by [`VectorWidth::resolve`] before a
+/// `Resolved::W8` can exist).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(out: &mut [f32], s: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(x.len());
+    let mut i = 0;
+    let vs = _mm256_set1_ps(s);
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        // mul then add — deliberately NOT _mm256_fmadd_ps: FMA's single
+        // rounding would break bit-identity with the scalar path.
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(ov, _mm256_mul_ps(vs, xv)));
+        i += 8;
+    }
+    // 4-wide tail step: keeps the short transform rows (l = 4, 6) on
+    // vector hardware even in W8 mode.  Still element-wise mul + add.
+    if i + 4 <= n {
+        let xv = _mm_loadu_ps(x.as_ptr().add(i));
+        let ov = _mm_loadu_ps(out.as_ptr().add(i));
+        _mm_storeu_ps(
+            out.as_mut_ptr().add(i),
+            _mm_add_ps(ov, _mm_mul_ps(_mm256_castps256_ps128(vs), xv)),
+        );
+        i += 4;
+    }
+    axpy_scalar(&mut out[i..n], s, &x[i..n]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by [`VectorWidth::resolve`] before a
+/// `Resolved::W8` can exist).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_acc_avx2(acc: &mut [f32], u: &[f32], v: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(u.len()).min(v.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(uv, vv)));
+        i += 8;
+    }
+    // 4-wide tail step (see axpy_avx2).
+    if i + 4 <= n {
+        let uv = _mm_loadu_ps(u.as_ptr().add(i));
+        let vv = _mm_loadu_ps(v.as_ptr().add(i));
+        let av = _mm_loadu_ps(acc.as_ptr().add(i));
+        _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(av, _mm_mul_ps(uv, vv)));
+        i += 4;
+    }
+    mul_acc_scalar(&mut acc[i..n], &u[i..n], &v[i..n]);
+}
+
+// ---- aarch64: NEON (baseline) ----
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = out.len().min(x.len());
+    let mut i = 0;
+    // SAFETY: NEON is part of the aarch64 baseline; every load/store
+    // stays within the first `n` elements of its slice.
+    unsafe {
+        let vs = vdupq_n_f32(s);
+        while i + 4 <= n {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let ov = vld1q_f32(out.as_ptr().add(i));
+            // mul then add — vfmaq would fuse the rounding.
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(ov, vmulq_f32(vs, xv)));
+            i += 4;
+        }
+    }
+    axpy_scalar(&mut out[i..n], s, &x[i..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = acc.len().min(u.len()).min(v.len());
+    let mut i = 0;
+    // SAFETY: NEON is part of the aarch64 baseline; every load/store
+    // stays within the first `n` elements of its slice.
+    unsafe {
+        while i + 4 <= n {
+            let uv = vld1q_f32(u.as_ptr().add(i));
+            let vv = vld1q_f32(v.as_ptr().add(i));
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(av, vmulq_f32(uv, vv)));
+            i += 4;
+        }
+    }
+    mul_acc_scalar(&mut acc[i..n], &u[i..n], &v[i..n]);
+}
+
+// ---- other architectures: scalar only ----
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
+    axpy_scalar(out, s, x);
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[inline]
+fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {
+    mul_acc_scalar(acc, u, v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn widths() -> Vec<Resolved> {
+        let mut ws = vec![Resolved::Scalar];
+        let w4 = clamp_w4();
+        if w4 != Resolved::Scalar {
+            ws.push(w4);
+        }
+        if clamp_w8() == Resolved::W8 {
+            ws.push(Resolved::W8);
+        }
+        ws
+    }
+
+    #[test]
+    fn kernels_bit_identical_to_scalar_all_lengths() {
+        // Every length from 0 through several vector blocks, so every
+        // remainder-lane count (1..=7) is exercised for every width.
+        let mut rng = Rng::new(401);
+        for n in 0..40usize {
+            let x = rng.gaussian_vec(n);
+            let u = rng.gaussian_vec(n);
+            let base = rng.gaussian_vec(n);
+            let s = rng.next_gaussian() as f32;
+            let mut want_axpy = base.clone();
+            axpy_scalar(&mut want_axpy, s, &x);
+            let mut want_mul = base.clone();
+            mul_acc_scalar(&mut want_mul, &u, &x);
+            for w in widths() {
+                let mut got = base.clone();
+                w.axpy(&mut got, s, &x);
+                assert_eq!(got, want_axpy, "axpy n={n} {w:?}");
+                let mut got = base.clone();
+                w.mul_acc(&mut got, &u, &x);
+                assert_eq!(got, want_mul, "mul_acc n={n} {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_clamps_and_never_fails() {
+        for w in VectorWidth::ALL {
+            let r = w.resolve();
+            assert!(r.lanes() >= 1);
+            assert_eq!(w.lanes(), r.lanes());
+        }
+        assert_eq!(VectorWidth::Scalar.resolve(), Resolved::Scalar);
+        if !force_scalar() {
+            // Auto is the widest the machine offers; W8 never resolves
+            // below W4's resolution.
+            assert_eq!(VectorWidth::Auto.resolve(), widest_supported().resolve());
+            assert!(VectorWidth::W8.lanes() >= VectorWidth::W4.lanes());
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for w in VectorWidth::ALL {
+            assert_eq!(VectorWidth::parse(w.name()), Some(w));
+            assert_eq!(w.name().parse::<VectorWidth>().ok(), Some(w));
+        }
+        assert!(VectorWidth::parse("w16").is_none());
+        assert!("".parse::<VectorWidth>().is_err());
+    }
+
+    #[test]
+    fn feature_string_names_the_arch() {
+        let f = detected_features();
+        assert!(f.contains(':'), "{f}");
+        assert!(!f.is_empty());
+    }
+}

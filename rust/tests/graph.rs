@@ -96,6 +96,35 @@ fn session_bit_identical_to_legacy_path_all_backends() {
 }
 
 #[test]
+fn session_logits_bit_identical_across_vector_widths() {
+    // The SIMD width knob is a pure performance choice: for every policy
+    // family the served logits must equal the forced-scalar logits bit
+    // for bit, at any width and with the threaded vector path too.
+    use swcnn::winograd::VectorWidth;
+    let seed = 11u64;
+    let mut rng = Rng::new(41);
+    let image = rng.gaussian_vec(3 * 32 * 32);
+    for (name, policy) in policy_families() {
+        let scalar = policy.with_vwidth(VectorWidth::Scalar);
+        let want = Session::uniform(vgg_tiny(), &mut Synthetic::new(seed), scalar)
+            .expect("scalar session")
+            .forward(&image)
+            .expect("forward");
+        assert_eq!(want, legacy_forward(scalar, seed, &image), "{name}: oracle");
+        for vw in VectorWidth::ALL {
+            for workers in [1, 3] {
+                let wide = policy.with_vwidth(vw).with_workers(workers);
+                let got = Session::uniform(vgg_tiny(), &mut Synthetic::new(seed), wide)
+                    .expect("vector session")
+                    .forward(&image)
+                    .expect("forward");
+                assert_eq!(got, want, "{name}: width {vw}, {workers} workers");
+            }
+        }
+    }
+}
+
+#[test]
 fn weights_roundtrip_preserves_logits_across_backends() {
     let seed = 9u64;
     let graph = vgg_tiny();

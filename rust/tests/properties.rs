@@ -188,6 +188,123 @@ fn prop_sparse_plan_threaded_bit_identical() {
 }
 
 #[test]
+fn prop_simd_widths_bit_identical_all_backends() {
+    // The vector-width knob must be invisible to the numerics: for every
+    // (m, width, backend) combination, on non-aligned H/W (edge tiles and
+    // remainder lanes always in play), the SIMD path reproduces the
+    // scalar path bit for bit — `==`, not `allclose`.
+    use swcnn::winograd::VectorWidth;
+    let mut rng = Rng::new(1021);
+    for &m in &[2usize, 4, 6] {
+        for case in 0..4 {
+            let c = 1 + rng.next_below(6);
+            let k = 1 + rng.next_below(6);
+            let h = 7 + rng.next_below(12);
+            let w = 7 + rng.next_below(12);
+            let sparsity = rng.next_f64() * 0.7;
+            let x = rand_tensor(&mut rng, &[c, h, w]);
+            let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+            let mut scalar = WinogradPlan::new(m, 3).with_vector_width(VectorWidth::Scalar);
+            let dbank = scalar.transform_filters(&wt);
+            let sbank = scalar.transform_filters_sparse(&wt, sparsity);
+            let want_d = scalar.conv2d_with_filters(&x, &dbank);
+            let want_s = scalar.conv2d_sparse_with_filters(&x, &sbank);
+            for vw in VectorWidth::ALL {
+                // Transform under the vector path too — the filter
+                // transform must also be bit-identical.
+                let mut plan = WinogradPlan::new(m, 3).with_vector_width(vw);
+                let dbank_w = plan.transform_filters(&wt);
+                let sbank_w = plan.transform_filters_sparse(&wt, sparsity);
+                let got_d = plan.conv2d_with_filters(&x, &dbank_w);
+                let got_s = plan.conv2d_sparse_with_filters(&x, &sbank_w);
+                assert_eq!(
+                    got_d, want_d,
+                    "case {case}: F({m},3) C={c} K={k} {h}x{w} width {vw} dense"
+                );
+                assert_eq!(
+                    got_s, want_s,
+                    "case {case}: F({m},3) C={c} K={k} {h}x{w} width {vw} sparse"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simd_threaded_determinism_under_vector_path() {
+    // Thread sharding and SIMD dispatch compose: any (threads, width)
+    // pair is bit-identical to the single-threaded run at that width —
+    // and, by the width property above, to the scalar path.
+    use swcnn::winograd::VectorWidth;
+    let mut rng = Rng::new(1022);
+    for case in 0..4 {
+        let m = [2usize, 4, 6][rng.next_below(3)];
+        let c = 1 + rng.next_below(6);
+        let k = 1 + rng.next_below(8);
+        let h = 8 + rng.next_below(17);
+        let w = 8 + rng.next_below(17);
+        let x = rand_tensor(&mut rng, &[c, h, w]);
+        let wt = rand_tensor(&mut rng, &[k, c, 3, 3]);
+        for vw in [VectorWidth::W4, VectorWidth::W8, VectorWidth::Auto] {
+            let mut single = WinogradPlan::new(m, 3)
+                .with_threads(1)
+                .with_vector_width(vw);
+            let bank = single.transform_filters_sparse(&wt, 0.5);
+            let want_dense = single.conv2d(&x, &wt);
+            let want_sparse = single.conv2d_sparse_with_filters(&x, &bank);
+            for threads in [2usize, 5] {
+                let mut multi = WinogradPlan::new(m, 3)
+                    .with_threads(threads)
+                    .with_vector_width(vw);
+                assert_eq!(
+                    multi.conv2d(&x, &wt),
+                    want_dense,
+                    "case {case}: F({m},3) {h}x{w} width {vw} threads={threads} dense"
+                );
+                assert_eq!(
+                    multi.conv2d_sparse_with_filters(&x, &bank),
+                    want_sparse,
+                    "case {case}: F({m},3) {h}x{w} width {vw} threads={threads} sparse"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+#[ignore = "CI simd-leg smoke: run with `cargo test --release --test properties -- --ignored widest`"]
+fn widest_width_smoke_bit_identical_on_vgg_sized_layer() {
+    // A vgg_tiny-sized conv on the widest vector hardware this machine
+    // offers, checked bit for bit against the scalar path on every tile
+    // size and both backends.
+    use swcnn::winograd::{simd, VectorWidth};
+    let widest = simd::widest_supported();
+    let mut rng = Rng::new(1023);
+    let x = rand_tensor(&mut rng, &[32, 17, 17]);
+    let wt = rand_tensor(&mut rng, &[32, 32, 3, 3]);
+    for &m in &[2usize, 4, 6] {
+        let mut scalar = WinogradPlan::new(m, 3).with_vector_width(VectorWidth::Scalar);
+        let mut wide = WinogradPlan::new(m, 3).with_vector_width(widest);
+        assert_eq!(
+            wide.conv2d(&x, &wt),
+            scalar.conv2d(&x, &wt),
+            "F({m},3) dense at {widest}"
+        );
+        let bank_s = scalar.transform_filters_sparse(&wt, 0.7);
+        let bank_w = wide.transform_filters_sparse(&wt, 0.7);
+        assert_eq!(
+            wide.conv2d_sparse_with_filters(&x, &bank_w),
+            scalar.conv2d_sparse_with_filters(&x, &bank_s),
+            "F({m},3) sparse at {widest}"
+        );
+    }
+    println!(
+        "widest width exercised: {widest} on {}",
+        simd::detected_features()
+    );
+}
+
+#[test]
 fn prop_tuner_eligible_configs_match_reference() {
     // Every configuration the tuner may emit — (m, workers, backend) over
     // the full candidate grid — must produce the same convolution as the
