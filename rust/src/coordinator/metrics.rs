@@ -116,7 +116,7 @@ impl Metrics {
             return None;
         }
         let mut v = self.latencies.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
         Some(v[idx.min(v.len() - 1)])
     }

@@ -251,6 +251,24 @@ pub struct NativeServerConfig {
     pub fault_plan: Option<FaultPlan>,
 }
 
+// Manual: the embedded Session keeps its own compact Debug, and the
+// fault-plan field is feature-gated.
+impl std::fmt::Debug for NativeServerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("NativeServerConfig");
+        d.field("session", &self.session)
+            .field("window", &self.window)
+            .field("max_batch", &self.max_batch)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
+            .field("default_deadline", &self.default_deadline)
+            .field("restart", &self.restart);
+        #[cfg(feature = "fault-injection")]
+        d.field("fault_plan", &self.fault_plan);
+        d.finish_non_exhaustive()
+    }
+}
+
 impl NativeServerConfig {
     pub fn new(session: Session) -> Self {
         Self {
@@ -328,10 +346,6 @@ struct Pending {
 }
 
 impl Pending {
-    fn expired(&self) -> bool {
-        self.deadline.is_some_and(|d| self.enqueued.elapsed() > d)
-    }
-
     /// Deliver the single completion this request is owed.  A send on a
     /// disconnected channel means the caller walked away — their
     /// prerogative, not a drop on our side.
@@ -419,6 +433,21 @@ pub struct InferenceServer {
     admission: AdmissionPolicy,
     default_deadline: Option<Duration>,
     breaker_cooldown: Duration,
+}
+
+// Manual: the shared queue state and worker handle are runtime innards;
+// the admission-facing configuration is what a dump needs.
+impl std::fmt::Debug for InferenceServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferenceServer")
+            .field("input_elems", &self.input_elems)
+            .field("output_elems", &self.output_elems)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
+            .field("default_deadline", &self.default_deadline)
+            .field("breaker_cooldown", &self.breaker_cooldown)
+            .finish_non_exhaustive()
+    }
 }
 
 impl InferenceServer {
@@ -764,14 +793,17 @@ impl Drop for InFlight {
 fn eject_expired(st: &mut QueueState, metrics: &Mutex<Metrics>) {
     let mut i = 0;
     while i < st.queue.len() {
-        if st.queue[i].expired() {
-            let p = st.queue.remove(i).expect("index in bounds");
-            lock_metrics(metrics).record_ejection();
-            let waited = p.enqueued.elapsed();
-            let deadline = p.deadline.expect("expired implies a deadline");
-            p.complete(Err(AdmissionError::DeadlineExpired { deadline, waited }));
-        } else {
-            i += 1;
+        // Matching the deadline directly (rather than `expired()` + a later
+        // `expect`) leaves no panic arm: `None` deadlines wait forever.
+        match st.queue[i].deadline {
+            Some(deadline) if st.queue[i].enqueued.elapsed() > deadline => {
+                if let Some(p) = st.queue.remove(i) {
+                    lock_metrics(metrics).record_ejection();
+                    let waited = p.enqueued.elapsed();
+                    p.complete(Err(AdmissionError::DeadlineExpired { deadline, waited }));
+                }
+            }
+            _ => i += 1,
         }
     }
 }

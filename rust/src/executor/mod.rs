@@ -206,6 +206,16 @@ pub struct ConvExecutor {
     qdq: Vec<f32>,
 }
 
+// Manual: the bank payloads are noise; plan dims + backend identify it.
+impl std::fmt::Debug for ConvExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConvExecutor")
+            .field("plan", &self.plan)
+            .field("backend", &self.backend_name())
+            .finish_non_exhaustive()
+    }
+}
+
 /// The fixed activation quantizer: an explicit scale from the policy, or
 /// a one-time calibration over a seeded gaussian sample.  Either way the
 /// scale is a property of the *prepared layer*, never of the request.
@@ -326,6 +336,7 @@ impl ConvExecutor {
     /// row-major (C, H, W) images back to back, `out` receives `n`
     /// (K, oh, ow) maps back to back.  Bit-identical per image to
     /// [`ConvExecutor::conv2d`]; no allocations beyond plan scratch.
+    // lint: hot
     pub fn conv2d_batch_into(
         &mut self,
         n: usize,
@@ -354,6 +365,7 @@ impl ConvExecutor {
 
 /// Fake-quantize `src` into the reusable staging buffer `dst` (resized,
 /// never reallocated in steady state).
+// lint: hot
 fn qdq_into(q: &Quantizer, src: &[f32], dst: &mut Vec<f32>) {
     dst.resize(src.len(), 0.0);
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -375,6 +387,16 @@ fn qdq_into(q: &Quantizer, src: &[f32], dst: &mut Vec<f32>) {
 pub struct NetworkExecutor {
     net: Network,
     session: Session,
+}
+
+// Manual: the deprecated shim simply wraps a Session.
+#[allow(deprecated)]
+impl std::fmt::Debug for NetworkExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetworkExecutor")
+            .field("session", &self.session)
+            .finish_non_exhaustive()
+    }
 }
 
 #[allow(deprecated)]

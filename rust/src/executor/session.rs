@@ -69,6 +69,19 @@ pub struct Session {
     poisoned: bool,
 }
 
+// Manual: prepared banks and workspace buffers are noise; what a dump
+// needs is the graph size, batch bound, policies, and poison state.
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("nodes", &self.graph.nodes().len())
+            .field("conv_policies", &self.conv_policies.len())
+            .field("max_batch", &self.max_batch)
+            .field("poisoned", &self.poisoned)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Session {
     /// Compile `graph` with one policy per conv node (in graph order).
     /// Weights are pulled from `source` in the canonical
@@ -110,7 +123,10 @@ impl Session {
             let w = &tensors
                 .iter()
                 .find(|(node, _)| *node == info.node)
-                .expect("weight bound for every conv node")
+                .ok_or_else(|| GraphError::Weights(format!(
+                    "no weight bound for conv node {}",
+                    info.node
+                )))?
                 .1;
             // The small-channel guard keeps narrow layers unpruned,
             // exactly as the legacy executor did.
@@ -212,10 +228,9 @@ impl Session {
     /// vector.  A batch of one through the batched engine — which at
     /// n = 1 *is* the single-image fused loop.
     pub fn forward(&mut self, image: &[f32]) -> Result<Vec<f32>, GraphError> {
-        Ok(self
-            .forward_batch(&[image])?
+        self.forward_batch(&[image])?
             .pop()
-            .expect("one output per image"))
+            .ok_or_else(|| GraphError::Panic("forward_batch returned no output".to_string()))
     }
 
     /// True while the workspace is known-torn: a panic unwound out of a
@@ -279,6 +294,42 @@ impl Session {
     /// dimension only widens each stage, it never reorders any
     /// per-output accumulation.
     pub fn forward_batch(&mut self, images: &[&[f32]]) -> Result<Vec<Vec<f32>>, GraphError> {
+        let oe = self.run_batch(images)?;
+        let a = &self.ws.a;
+        Ok((0..images.len())
+            .map(|i| a[i * oe..(i + 1) * oe].to_vec())
+            .collect())
+    }
+
+    /// [`Session::forward_batch`] into a caller-provided output buffer:
+    /// the fully zero-allocation serving path.  `out` must hold exactly
+    /// `images.len() * output_elements()` values; outputs land
+    /// image-major (image `i` at `i * output_elements()`), bit-identical
+    /// to [`Session::forward_batch`].
+    // lint: hot
+    pub fn forward_batch_into(
+        &mut self,
+        images: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<(), GraphError> {
+        let need = images.len() * self.graph.output_elements();
+        if out.len() != need {
+            return Err(GraphError::Output {
+                expected: need,
+                got: out.len(),
+            });
+        }
+        let oe = self.run_batch(images)?;
+        out.copy_from_slice(&self.ws.a[..images.len() * oe]);
+        Ok(())
+    }
+
+    /// The shared fused engine behind both batch entries: validate,
+    /// stream every node over the ping-pong workspace, and leave the
+    /// image-major outputs at the front of `ws.a`.  Returns the per-image
+    /// output element count.
+    // lint: hot
+    fn run_batch(&mut self, images: &[&[f32]]) -> Result<usize, GraphError> {
         if self.poisoned {
             return Err(GraphError::Poisoned);
         }
@@ -351,10 +402,8 @@ impl Session {
             }
             cur = out;
         }
-        let oe = cur.elements();
-        let outs: Vec<Vec<f32>> = (0..n).map(|i| a[i * oe..(i + 1) * oe].to_vec()).collect();
         self.poisoned = false;
-        Ok(outs)
+        Ok(cur.elements())
     }
 }
 

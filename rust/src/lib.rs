@@ -20,6 +20,27 @@
 //! with one [`executor::ExecPolicy`] per conv node, and serve it through
 //! [`coordinator::InferenceServer::start_native`].  Every fallible
 //! boundary returns a typed [`nn::graph::GraphError`].
+//!
+//! Repo-specific invariants (SAFETY comments on every `unsafe`, no
+//! allocation in `// lint: hot` fns, no `.unwrap()` in library code, no
+//! wall-clock outside the coordinator) are enforced by the `swcnn-lint`
+//! workspace tool — see the "Correctness tooling" section of
+//! `rust/README.md`.
+
+// Every `unsafe` operation inside an `unsafe fn` must sit in an explicit
+// inner `unsafe {}` block with its own SAFETY comment — the fn-level
+// contract covers the call, not each operation.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Public types must be debuggable: serving-state dumps and test failure
+// output both lean on `{:?}`.
+#![warn(missing_debug_implementations)]
+
+// With `--features alloc-count`, route all heap traffic through the
+// counting allocator so tests can assert zero-allocation steady state
+// (see `util::alloc_count` and `rust/tests/alloc.rs`).
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc_count::CountingAllocator = util::alloc_count::CountingAllocator;
 
 pub mod accelerator;
 pub mod bench;

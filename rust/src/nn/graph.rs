@@ -73,6 +73,9 @@ pub enum GraphError {
         expected: usize,
         got: usize,
     },
+    /// A caller-provided output buffer has the wrong number of elements
+    /// for the requested batch.
+    Output { expected: usize, got: usize },
     /// `forward_batch` was called with no images.
     EmptyBatch,
     /// A batch exceeds the session's build-time workspace capacity.
@@ -110,6 +113,10 @@ impl fmt::Display for GraphError {
             } => write!(
                 f,
                 "image {index} has {got} elements, expected {expected}"
+            ),
+            GraphError::Output { expected, got } => write!(
+                f,
+                "output buffer has {got} elements, batch needs {expected}"
             ),
             GraphError::EmptyBatch => write!(f, "forward_batch needs at least one image"),
             GraphError::BatchTooLarge { got, max } => write!(
@@ -560,6 +567,7 @@ pub trait WeightSource {
 /// let w = Synthetic::new(5).tensor(spec).unwrap();
 /// assert_eq!(w.shape(), &[16, 3, 3, 3]);
 /// ```
+#[derive(Debug)]
 pub struct Synthetic {
     rng: Rng,
 }
@@ -597,6 +605,7 @@ impl WeightSource for Synthetic {
 
 /// An in-memory weight table — the loaded form of a weight file, and a
 /// handy source for tests that bind explicit tensors.
+#[derive(Debug)]
 pub struct MapWeights {
     tensors: BTreeMap<String, Tensor>,
 }

@@ -178,6 +178,16 @@ mod exec {
         weights: Vec<xla::Literal>,
     }
 
+    // Manual: the PJRT executable handle carries no Debug.
+    impl std::fmt::Debug for LoadedModel {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("LoadedModel")
+                .field("spec", &self.spec)
+                .field("weights", &self.weights.len())
+                .finish_non_exhaustive()
+        }
+    }
+
     impl LoadedModel {
         /// Execute with request-time inputs (flat f32 per input, in
         /// manifest order).  Returns the flat f32 outputs.
@@ -196,10 +206,14 @@ mod exec {
             for spec in &self.spec.inputs {
                 if spec.data_file.is_some() {
                     // Weight literals are cached; clone is a host copy.
-                    let w = w_iter.next().expect("weight literal");
+                    let Some(w) = w_iter.next() else {
+                        bail!("{}: manifest lists more weights than loaded", self.spec.name);
+                    };
                     args.push(clone_literal(w)?);
                 } else {
-                    let data = req_iter.next().expect("request input");
+                    let Some(data) = req_iter.next() else {
+                        bail!("{}: manifest lists more request inputs than given", self.spec.name);
+                    };
                     if data.len() != spec.elements() {
                         bail!(
                             "{}: input {} has {} elements, expected {}",
@@ -242,6 +256,16 @@ mod exec {
         client: xla::PjRtClient,
         pub manifest: Manifest,
         models: HashMap<String, Arc<LoadedModel>>,
+    }
+
+    // Manual: the PJRT client handle carries no Debug.
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime")
+                .field("manifest", &self.manifest)
+                .field("loaded", &self.models.len())
+                .finish_non_exhaustive()
+        }
     }
 
     impl Runtime {
@@ -298,6 +322,7 @@ mod exec {
     use std::sync::Arc;
 
     /// Stub model: carries the parsed spec, cannot execute.
+    #[derive(Debug)]
     pub struct LoadedModel {
         pub spec: ArtifactSpec,
     }
@@ -314,6 +339,7 @@ mod exec {
 
     /// Stub runtime: manifest parsing works, compilation does not (so
     /// nothing is ever loaded and `loaded_names` is always empty).
+    #[derive(Debug)]
     pub struct Runtime {
         pub manifest: Manifest,
     }

@@ -96,7 +96,7 @@ impl LayerPlan {
             self.matmul_cycles,
             self.inverse_cycles,
         ];
-        let bottleneck = *stages.iter().max().unwrap();
+        let bottleneck = stages.iter().copied().max().unwrap_or(0);
         let fill: u64 = stages
             .iter()
             .filter(|&&s| s != bottleneck)
@@ -520,11 +520,10 @@ pub fn schedule_waves(per_matmul: &[u64], clusters: usize, policy: WavePolicy) -
             sorted.sort_unstable_by(|a, b| b.cmp(a));
             let mut loads = vec![0u64; clusters];
             for c in sorted {
-                let min = loads
-                    .iter_mut()
-                    .min_by_key(|x| **x)
-                    .expect("clusters > 0");
-                *min += c;
+                // Zero clusters degenerates to zero load rather than a panic.
+                if let Some(min) = loads.iter_mut().min_by_key(|x| **x) {
+                    *min += c;
+                }
             }
             loads.into_iter().max().unwrap_or(0)
         }

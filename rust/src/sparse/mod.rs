@@ -159,6 +159,7 @@ impl Bcoo {
 }
 
 /// Borrowed view of one block's nonzeros.
+#[derive(Debug)]
 pub struct BlockEntries<'a> {
     pub ai: &'a [u8],
     pub aj: &'a [u8],
@@ -189,7 +190,9 @@ pub fn prune_blocks(
             scores.push((s, rb, cb));
         }
     }
-    scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Scores are sums of |x|, always finite and non-negative, so total_cmp
+    // orders identically to partial_cmp here (prune sets are bit-stable).
+    scores.sort_by(|a, b| a.0.total_cmp(&b.0));
     let n_prune = (sparsity * scores.len() as f64).round() as usize;
     for &(_, rb, cb) in scores.iter().take(n_prune) {
         for i in 0..block {

@@ -16,6 +16,7 @@ use super::fifo::CircularFifo;
 use crate::sparse::Bcoo;
 
 /// Row-major matrix viewed as a grid of l x l blocks (zero-padded edges).
+#[derive(Debug)]
 pub struct BlockMatrix<'a> {
     pub data: &'a [f32],
     pub rows: usize,
@@ -97,6 +98,7 @@ impl ClusterStats {
 }
 
 /// Four unified systolic arrays + shared FIFOs.
+#[derive(Debug)]
 pub struct Cluster {
     l: usize,
     arrays: Vec<SystolicArray>,

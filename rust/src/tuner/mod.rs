@@ -603,6 +603,16 @@ pub struct Tuner {
     opts: TuneOptions,
 }
 
+// Manual: the graph is noise; seed + options identify a tuner run.
+impl std::fmt::Debug for Tuner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tuner")
+            .field("seed", &self.seed)
+            .field("opts", &self.opts)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Tuner {
     /// `base` is the untuned serving policy (its m is the comparison
     /// default; its pruning / quantization knobs are preserved in every
@@ -836,7 +846,13 @@ impl Tuner {
                 best = Some((t, *cand));
             }
         }
-        let (best_t, best_c) = best.expect("at least one measured candidate");
+        let Some((best_t, best_c)) = best else {
+            // Unreachable by construction (the default is always measured),
+            // but a typed error beats a panic arm in library code.
+            return Err(GraphError::Config(
+                "calibration measured no candidates".to_string(),
+            ));
+        };
         let (chosen, chosen_t) =
             if !best_c.same_config(default) && best_t < default_s * (1.0 - self.opts.min_gain) {
                 (best_c, best_t)

@@ -1,0 +1,154 @@
+//! Counting global allocator — the dynamic half of the zero-allocation
+//! invariant (`alloc-count` feature).
+//!
+//! `swcnn-lint`'s `hot-no-alloc` rule bans allocation *idioms* in
+//! `// lint: hot` fns, but a static scan cannot see allocation reached
+//! through calls.  This module closes the gap: built with
+//! `--features alloc-count`, a counting [`GlobalAlloc`] wraps [`System`]
+//! and [`assert_no_alloc`] proves at runtime that a closure performed
+//! zero heap traffic (see `rust/tests/alloc.rs`, which pins the fused
+//! dense/sparse batch loops and `Session::forward_batch_into` steady
+//! state at exactly zero).
+//!
+//! Counters are **thread-local**, for two reasons: the test harness runs
+//! tests on several threads, so a process-global counter would pick up
+//! unrelated traffic; and the guard's contract is about the *calling*
+//! thread's steady state — plans configured with `workers > 1` spawn
+//! scoped threads (which allocate), so guard tests run `workers(1)`
+//! policies where the whole forward pass executes on the caller.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // `const` init: the TLS slot needs no lazy initializer, so reading it
+    // inside the allocator cannot itself allocate or recurse.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper that counts this thread's allocation calls
+/// and bytes.  Installed as `#[global_allocator]` by the `alloc-count`
+/// feature (see `lib.rs`); deallocations are deliberately not tracked —
+/// the guard's question is "did anything allocate", and frees without
+/// allocations cannot occur in a leak-free steady state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CountingAllocator;
+
+fn record(bytes: usize) {
+    ALLOCS.with(|a| a.set(a.get().wrapping_add(1)));
+    BYTES.with(|b| b.set(b.get().wrapping_add(bytes as u64)));
+}
+
+// SAFETY: pure pass-through to `System`, which upholds the `GlobalAlloc`
+// contract; the only addition is thread-local counter bumps, which never
+// allocate (const-initialized `Cell<u64>`, no destructor) and never touch
+// the returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: delegates to `System.alloc` under the caller's contract.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        // SAFETY: `layout` is forwarded unchanged from our own caller,
+        // who guarantees it is non-zero-sized per the trait contract.
+        unsafe { System.alloc(layout) }
+    }
+
+    // SAFETY: delegates to `System.dealloc` under the caller's contract.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: `ptr`/`layout` are forwarded unchanged; our `alloc`
+        // returns `System` pointers, so the pair matches what `System`
+        // handed out.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    // SAFETY: delegates to `System.realloc` under the caller's contract.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        // SAFETY: forwarded unchanged from our caller per the trait
+        // contract (`ptr` from this allocator, `layout` its current
+        // layout, `new_size` non-zero).
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+/// This thread's running (allocation count, bytes requested) totals.
+pub fn snapshot() -> (u64, u64) {
+    (ALLOCS.with(Cell::get), BYTES.with(Cell::get))
+}
+
+/// Heap traffic performed by the calling thread during one closure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocDelta {
+    /// `alloc`/`realloc` calls.
+    pub allocs: u64,
+    /// Bytes requested across those calls.
+    pub bytes: u64,
+}
+
+/// Runs `f` and reports the calling thread's heap traffic during it.
+///
+/// Only meaningful when [`CountingAllocator`] is installed (the
+/// `alloc-count` feature); otherwise the delta is always zero.
+pub fn count_allocations<T>(f: impl FnOnce() -> T) -> (T, AllocDelta) {
+    let (a0, b0) = snapshot();
+    let out = f();
+    let (a1, b1) = snapshot();
+    (
+        out,
+        AllocDelta {
+            allocs: a1.wrapping_sub(a0),
+            bytes: b1.wrapping_sub(b0),
+        },
+    )
+}
+
+/// Runs `f`, panicking (with `label` and the measured delta) if the
+/// calling thread allocated at all.  The zero-allocation guard used by
+/// `rust/tests/alloc.rs` on the fused batch loops.
+pub fn assert_no_alloc<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let (out, delta) = count_allocations(f);
+    assert!(
+        delta.allocs == 0,
+        "{label}: expected zero allocations, measured {} allocs / {} bytes",
+        delta.allocs,
+        delta.bytes,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_monotonic_per_thread() {
+        let (a0, _) = snapshot();
+        let v: Vec<u64> = (0..64).collect();
+        std::hint::black_box(&v);
+        let (a1, _) = snapshot();
+        // Counting only happens with the feature's global allocator
+        // installed; either way the counter never goes backwards.
+        assert!(a1 >= a0);
+    }
+
+    #[cfg(feature = "alloc-count")]
+    #[test]
+    fn counts_a_vec_allocation() {
+        let (_, delta) = count_allocations(|| std::hint::black_box(vec![0u8; 4096]));
+        assert!(delta.allocs >= 1, "vec! must register: {delta:?}");
+        assert!(delta.bytes >= 4096, "vec! bytes must register: {delta:?}");
+    }
+
+    #[cfg(feature = "alloc-count")]
+    #[test]
+    fn pure_arithmetic_is_alloc_free() {
+        let sum = assert_no_alloc("stack-only arithmetic", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(sum > 0);
+    }
+}

@@ -89,6 +89,7 @@ fn transpose(mat: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 /// Output rows accumulate via the width-`vw` broadcast-axpy kernel; the
 /// row walk over `p` is ascending for every width, so any two widths
 /// produce bit-identical results (the axpy itself is element-wise).
+// lint: hot
 #[inline]
 fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, vw: Resolved) {
     debug_assert!(a.len() >= m * k);
@@ -181,6 +182,17 @@ pub struct FilterBank {
     u: Vec<f32>,
 }
 
+// Manual: the transformed-weight payload would drown the useful dims.
+impl std::fmt::Debug for FilterBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FilterBank")
+            .field("k", &self.k)
+            .field("c", &self.c)
+            .field("l", &self.l)
+            .finish_non_exhaustive()
+    }
+}
+
 impl FilterBank {
     /// The transformed (l x l) tile for output channel `kk`, input
     /// channel `cc`.
@@ -215,6 +227,20 @@ pub struct SparseFilterBank {
     /// The block sparsity the bank was pruned at (the paper's knob).
     pub target_sparsity: f64,
     coords: Vec<Bcoo>,
+}
+
+// Manual: the BCOO directories would drown the useful dims.
+impl std::fmt::Debug for SparseFilterBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SparseFilterBank")
+            .field("k", &self.k)
+            .field("c", &self.c)
+            .field("l", &self.l)
+            .field("kp", &self.kp)
+            .field("cp", &self.cp)
+            .field("target_sparsity", &self.target_sparsity)
+            .finish_non_exhaustive()
+    }
 }
 
 impl SparseFilterBank {
@@ -302,6 +328,20 @@ pub struct WinogradPlan {
     scratch: PlanScratch,
     threads: usize,
     vwidth: VectorWidth,
+}
+
+// Manual: transform matrices and scratch are noise; the identity of a
+// plan is its F(m, r) and execution knobs.
+impl std::fmt::Debug for WinogradPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WinogradPlan")
+            .field("m", &self.consts.m)
+            .field("r", &self.consts.r)
+            .field("l", &self.consts.l)
+            .field("threads", &self.threads)
+            .field("vwidth", &self.vwidth)
+            .finish_non_exhaustive()
+    }
 }
 
 impl WinogradPlan {
@@ -527,6 +567,7 @@ impl WinogradPlan {
     /// holds `n` row-major (C, H, W) images back to back, `out` receives
     /// `n` (K, oh, ow) feature maps back to back.  No allocations beyond
     /// plan-owned scratch.
+    // lint: hot
     pub fn conv2d_with_filters_batch_into(
         &mut self,
         n: usize,
@@ -545,6 +586,7 @@ impl WinogradPlan {
     /// the stage target; for n > 1 the k-sharded workers write the
     /// contiguous `[k][n][oh*ow]` staging layout which is then scattered
     /// to `[n][k][oh*ow]`.
+    // lint: hot
     fn dense_batch_into(
         &mut self,
         n: usize,
@@ -704,6 +746,7 @@ impl WinogradPlan {
     /// Slice-level batched sparse entry point (the serving workspace
     /// path); layout contract as in
     /// [`WinogradPlan::conv2d_with_filters_batch_into`].
+    // lint: hot
     pub fn conv2d_sparse_with_filters_batch_into(
         &mut self,
         n: usize,
@@ -720,6 +763,7 @@ impl WinogradPlan {
     /// for the n == 1 / staging contract).  Stage 2 is untouched by
     /// batching: the coordinate-major operand simply grows to
     /// `n * tiles` columns, so one BCOO directory walk serves the batch.
+    // lint: hot
     fn sparse_batch_into(
         &mut self,
         n: usize,
@@ -861,6 +905,7 @@ impl WinogradPlan {
 
 /// Scatter the stage-owned `[k][n][plane]` staging layout into the
 /// caller's `[n][k][plane]` batched output (contiguous memcpy per plane).
+// lint: hot
 fn scatter_kn_to_nk(src: &[f32], dst: &mut [f32], k: usize, n: usize, plane: usize) {
     for kk in 0..k {
         for img in 0..n {
@@ -930,6 +975,7 @@ fn run_input_stage(
 /// Z-Morton order — one tiles-length axpy per stored nonzero.  Entries
 /// land in ascending-channel order per output row, so the accumulation
 /// order per output element matches the dense engine exactly.
+// lint: hot
 fn coord_stage_ts(
     bank: &SparseFilterBank,
     v: &[f32],
@@ -988,6 +1034,7 @@ fn coord_stage_ts(
 /// `[coord][k][image*tiles]` products, inverse-transform (`A^T t A`),
 /// and scatter into the caller's output band (layout
 /// `[k - k0][image][oh*ow]` — for n == 1 the plain single-image band).
+// lint: hot
 fn inverse_stage_ks(
     consts: &PlanConsts,
     ws: &mut TileScratch,
@@ -1038,6 +1085,7 @@ fn inverse_stage_ks(
 /// Stage 1 worker: transform global tile rows `[g0, g1)` (row `g % nty`
 /// of image `g / nty`) into the caller's `v` band (layout
 /// `[tile][channel][l*l]`, tile-major within the band).
+// lint: hot
 fn input_stage_rows(
     consts: &PlanConsts,
     ws: &mut TileScratch,
@@ -1088,6 +1136,7 @@ fn input_stage_rows(
 /// scatter into the caller's output band (layout `[k - k0][image][oh*ow]`
 /// — for n == 1 the plain single-image band).  Each bank row `u_k` is
 /// read once and streamed against every image's tiles.
+// lint: hot
 fn output_stage_ks(
     consts: &PlanConsts,
     ws: &mut TileScratch,

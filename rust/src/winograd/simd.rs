@@ -131,6 +131,7 @@ impl Resolved {
     }
 
     /// `out[i] += s * x[i]` over equal-length slices.
+    // lint: hot
     #[inline]
     pub(crate) fn axpy(self, out: &mut [f32], s: f32, x: &[f32]) {
         debug_assert_eq!(out.len(), x.len());
@@ -139,8 +140,15 @@ impl Resolved {
             Resolved::W4 => axpy_w4(out, s, x),
             Resolved::W8 => {
                 #[cfg(target_arch = "x86_64")]
-                // SAFETY: Resolved::W8 is only produced by resolve()
-                // after `is_x86_feature_detected!("avx2")` succeeded.
+                // SAFETY: `Resolved` cannot be constructed outside this
+                // crate, and the only W8 producer is `clamp_w8()`, which
+                // returns W8 strictly after `is_x86_feature_detected!`
+                // ("avx2") succeeded on this machine — so the
+                // `#[target_feature(enable = "avx2")]` precondition of
+                // `axpy_avx2` holds for the lifetime of the process.
+                // In-bounds access is the callee's own invariant: it
+                // derives every pointer from the slices it receives and
+                // clamps to their shared length.
                 unsafe {
                     axpy_avx2(out, s, x)
                 };
@@ -151,6 +159,7 @@ impl Resolved {
     }
 
     /// `acc[i] += u[i] * v[i]` over equal-length slices.
+    // lint: hot
     #[inline]
     pub(crate) fn mul_acc(self, acc: &mut [f32], u: &[f32], v: &[f32]) {
         debug_assert_eq!(acc.len(), u.len());
@@ -160,8 +169,11 @@ impl Resolved {
             Resolved::W4 => mul_acc_w4(acc, u, v),
             Resolved::W8 => {
                 #[cfg(target_arch = "x86_64")]
-                // SAFETY: Resolved::W8 is only produced by resolve()
-                // after `is_x86_feature_detected!("avx2")` succeeded.
+                // SAFETY: as in `axpy` above — W8 exists only after AVX2
+                // detection succeeded (`clamp_w8` is the sole producer),
+                // satisfying `mul_acc_avx2`'s target-feature contract;
+                // the callee keeps all accesses inside the slices it is
+                // handed.
                 unsafe {
                     mul_acc_avx2(acc, u, v)
                 };
@@ -264,6 +276,7 @@ fn clamp_w8() -> Resolved {
 
 // ---- scalar reference kernels (the bit-identity contract) ----
 
+// lint: hot
 #[inline]
 fn axpy_scalar(out: &mut [f32], s: f32, x: &[f32]) {
     for (o, &xv) in out.iter_mut().zip(x) {
@@ -271,6 +284,7 @@ fn axpy_scalar(out: &mut [f32], s: f32, x: &[f32]) {
     }
 }
 
+// lint: hot
 #[inline]
 fn mul_acc_scalar(acc: &mut [f32], u: &[f32], v: &[f32]) {
     for (a, (&uv, &vv)) in acc.iter_mut().zip(u.iter().zip(v)) {
@@ -280,6 +294,7 @@ fn mul_acc_scalar(acc: &mut [f32], u: &[f32], v: &[f32]) {
 
 // ---- x86_64: SSE2 (baseline) and AVX2 (runtime-detected) ----
 
+// lint: hot
 #[cfg(target_arch = "x86_64")]
 #[inline]
 fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
@@ -301,6 +316,7 @@ fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
     axpy_scalar(&mut out[i..n], s, &x[i..n]);
 }
 
+// lint: hot
 #[cfg(target_arch = "x86_64")]
 #[inline]
 fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {
@@ -324,31 +340,37 @@ fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {
 /// # Safety
 /// Requires AVX2 (guaranteed by [`VectorWidth::resolve`] before a
 /// `Resolved::W8` can exist).
+// lint: hot
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(out: &mut [f32], s: f32, x: &[f32]) {
     use std::arch::x86_64::*;
     let n = out.len().min(x.len());
     let mut i = 0;
-    let vs = _mm256_set1_ps(s);
-    while i + 8 <= n {
-        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
-        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
-        // mul then add — deliberately NOT _mm256_fmadd_ps: FMA's single
-        // rounding would break bit-identity with the scalar path.
-        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(ov, _mm256_mul_ps(vs, xv)));
-        i += 8;
-    }
-    // 4-wide tail step: keeps the short transform rows (l = 4, 6) on
-    // vector hardware even in W8 mode.  Still element-wise mul + add.
-    if i + 4 <= n {
-        let xv = _mm_loadu_ps(x.as_ptr().add(i));
-        let ov = _mm_loadu_ps(out.as_ptr().add(i));
-        _mm_storeu_ps(
-            out.as_mut_ptr().add(i),
-            _mm_add_ps(ov, _mm_mul_ps(_mm256_castps256_ps128(vs), xv)),
-        );
-        i += 4;
+    // SAFETY: the fn-level contract provides AVX2; every unaligned
+    // load/store below targets `slice.as_ptr().add(i)` with `i + lanes
+    // <= n <= slice.len()`, so all accesses are in bounds.
+    unsafe {
+        let vs = _mm256_set1_ps(s);
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+            // mul then add — deliberately NOT _mm256_fmadd_ps: FMA's single
+            // rounding would break bit-identity with the scalar path.
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(ov, _mm256_mul_ps(vs, xv)));
+            i += 8;
+        }
+        // 4-wide tail step: keeps the short transform rows (l = 4, 6) on
+        // vector hardware even in W8 mode.  Still element-wise mul + add.
+        if i + 4 <= n {
+            let xv = _mm_loadu_ps(x.as_ptr().add(i));
+            let ov = _mm_loadu_ps(out.as_ptr().add(i));
+            _mm_storeu_ps(
+                out.as_mut_ptr().add(i),
+                _mm_add_ps(ov, _mm_mul_ps(_mm256_castps256_ps128(vs), xv)),
+            );
+            i += 4;
+        }
     }
     axpy_scalar(&mut out[i..n], s, &x[i..n]);
 }
@@ -356,32 +378,39 @@ unsafe fn axpy_avx2(out: &mut [f32], s: f32, x: &[f32]) {
 /// # Safety
 /// Requires AVX2 (guaranteed by [`VectorWidth::resolve`] before a
 /// `Resolved::W8` can exist).
+// lint: hot
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn mul_acc_avx2(acc: &mut [f32], u: &[f32], v: &[f32]) {
     use std::arch::x86_64::*;
     let n = acc.len().min(u.len()).min(v.len());
     let mut i = 0;
-    while i + 8 <= n {
-        let uv = _mm256_loadu_ps(u.as_ptr().add(i));
-        let vv = _mm256_loadu_ps(v.as_ptr().add(i));
-        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
-        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(uv, vv)));
-        i += 8;
-    }
-    // 4-wide tail step (see axpy_avx2).
-    if i + 4 <= n {
-        let uv = _mm_loadu_ps(u.as_ptr().add(i));
-        let vv = _mm_loadu_ps(v.as_ptr().add(i));
-        let av = _mm_loadu_ps(acc.as_ptr().add(i));
-        _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(av, _mm_mul_ps(uv, vv)));
-        i += 4;
+    // SAFETY: the fn-level contract provides AVX2; every unaligned
+    // load/store below targets `slice.as_ptr().add(i)` with `i + lanes
+    // <= n <= slice.len()`, so all accesses are in bounds.
+    unsafe {
+        while i + 8 <= n {
+            let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(uv, vv)));
+            i += 8;
+        }
+        // 4-wide tail step (see axpy_avx2).
+        if i + 4 <= n {
+            let uv = _mm_loadu_ps(u.as_ptr().add(i));
+            let vv = _mm_loadu_ps(v.as_ptr().add(i));
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(av, _mm_mul_ps(uv, vv)));
+            i += 4;
+        }
     }
     mul_acc_scalar(&mut acc[i..n], &u[i..n], &v[i..n]);
 }
 
 // ---- aarch64: NEON (baseline) ----
 
+// lint: hot
 #[cfg(target_arch = "aarch64")]
 #[inline]
 fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
@@ -403,6 +432,7 @@ fn axpy_w4(out: &mut [f32], s: f32, x: &[f32]) {
     axpy_scalar(&mut out[i..n], s, &x[i..n]);
 }
 
+// lint: hot
 #[cfg(target_arch = "aarch64")]
 #[inline]
 fn mul_acc_w4(acc: &mut [f32], u: &[f32], v: &[f32]) {

@@ -1,0 +1,118 @@
+//! Zero-allocation guards for the fused serving paths (`alloc-count`).
+//!
+//! `swcnn-lint`'s `hot-no-alloc` rule bans allocation *idioms* inside
+//! `// lint: hot` fns, but a static scan cannot see allocation reached
+//! through calls.  These tests close the gap dynamically: with the
+//! `alloc-count` feature the crate installs a counting global allocator
+//! (`util::alloc_count`), and after one warm-up call — which sizes the
+//! plan scratch and the session workspace — the dense batch loop, the
+//! sparse batch loop, and `Session::forward_batch_into` must perform
+//! **zero** heap allocations on the calling thread.
+//!
+//! Everything runs single-worker (`with_threads(1)` / `with_workers(1)`):
+//! multi-worker plans spawn scoped threads, and spawning allocates on the
+//! caller — that is a known, accepted cost of the threaded mode, not a
+//! steady-state leak (see `util::alloc_count`'s module docs).
+//!
+//! Run with: `cargo test --features alloc-count --test alloc`
+#![cfg(feature = "alloc-count")]
+
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::Synthetic;
+use swcnn::nn::vgg_tiny;
+use swcnn::tensor::Tensor;
+use swcnn::util::alloc_count::{assert_no_alloc, count_allocations};
+use swcnn::util::Rng;
+use swcnn::winograd::WinogradPlan;
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, rng.gaussian_vec(n))
+}
+
+#[test]
+fn dense_batch_loop_is_alloc_free_after_warmup() {
+    let mut rng = Rng::new(801);
+    let w = rand_tensor(&mut rng, &[8, 6, 3, 3]);
+    let x = rng.gaussian_vec(2 * 6 * 10 * 12);
+    let mut plan = WinogradPlan::new(2, 3).with_threads(1);
+    let bank = plan.transform_filters(&w);
+    let mut out = vec![0.0f32; 2 * 8 * 8 * 10];
+    // Warm-up: sizes the plan's tile/V/Y scratch for these dims.
+    plan.conv2d_with_filters_batch_into(2, &x, 10, 12, &bank, &mut out);
+    let warm = out.clone();
+    out.fill(0.0);
+    assert_no_alloc("dense fused batch loop", || {
+        plan.conv2d_with_filters_batch_into(2, &x, 10, 12, &bank, &mut out);
+    });
+    assert_eq!(out, warm, "steady-state call must also be bit-identical");
+}
+
+#[test]
+fn sparse_batch_loop_is_alloc_free_after_warmup() {
+    let mut rng = Rng::new(802);
+    let w = rand_tensor(&mut rng, &[8, 6, 3, 3]);
+    let x = rng.gaussian_vec(2 * 6 * 10 * 12);
+    let mut plan = WinogradPlan::new(2, 3).with_threads(1);
+    let bank = plan.transform_filters_sparse(&w, 0.6);
+    let mut out = vec![0.0f32; 2 * 8 * 8 * 10];
+    // Warm-up: sizes the plan's V/V^T/MM/Y scratch for these dims.
+    plan.conv2d_sparse_with_filters_batch_into(2, &x, 10, 12, &bank, &mut out);
+    let warm = out.clone();
+    out.fill(0.0);
+    assert_no_alloc("sparse fused batch loop", || {
+        plan.conv2d_sparse_with_filters_batch_into(2, &x, 10, 12, &bank, &mut out);
+    });
+    assert_eq!(out, warm, "steady-state call must also be bit-identical");
+}
+
+#[test]
+fn session_forward_batch_into_is_alloc_free_after_warmup() {
+    for policy in [
+        ExecPolicy::dense(2).with_workers(1),
+        ExecPolicy::sparse(2, 0.7).with_workers(1),
+    ] {
+        let mut sess = Session::uniform(vgg_tiny(), &mut Synthetic::new(5), policy)
+            .unwrap()
+            .with_max_batch(2);
+        let mut rng = Rng::new(803);
+        let images: Vec<Vec<f32>> = (0..2).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 2 * sess.output_elements()];
+        sess.forward_batch_into(&refs, &mut out).unwrap();
+        let warm = out.clone();
+        out.fill(0.0);
+        assert_no_alloc("Session::forward_batch_into steady state", || {
+            sess.forward_batch_into(&refs, &mut out).unwrap();
+        });
+        assert_eq!(out, warm, "steady-state call must also be bit-identical");
+        assert_eq!(
+            out[..sess.output_elements()],
+            sess.forward(&images[0]).unwrap()[..],
+            "the into path matches the allocating path"
+        );
+    }
+}
+
+#[test]
+fn session_forward_batch_allocates_only_its_outputs() {
+    let mut sess = Session::uniform(
+        vgg_tiny(),
+        &mut Synthetic::new(5),
+        ExecPolicy::sparse(2, 0.7).with_workers(1),
+    )
+    .unwrap()
+    .with_max_batch(2);
+    let mut rng = Rng::new(804);
+    let images: Vec<Vec<f32>> = (0..2).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
+    let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+    sess.forward_batch(&refs).unwrap();
+    let (outs, delta) = count_allocations(|| sess.forward_batch(&refs).unwrap());
+    assert_eq!(outs.len(), 2);
+    // The engine itself is alloc-free; the only heap traffic is the
+    // returned containers (one outer Vec + one Vec per image).
+    assert!(
+        delta.allocs <= 3,
+        "forward_batch may only allocate its return value: {delta:?}"
+    );
+}

@@ -1,0 +1,846 @@
+//! `swcnn-lint` — repo-specific static analysis for the swcnn engine.
+//!
+//! The engine's core guarantees are invariants ordinary rustc/clippy cannot
+//! see: fused Winograd loops must not allocate, every `unsafe` region must
+//! justify itself, library code must surface errors as typed values rather
+//! than panic, and nothing outside the coordinator may read wall-clock time
+//! (the deterministic fault-injection plan depends on it).  This crate checks
+//! those invariants at the source level so they survive refactors.
+//!
+//! Four rules, each keyed by a stable id used in `allow.list`:
+//!
+//! | id              | invariant                                              |
+//! |-----------------|--------------------------------------------------------|
+//! | `unsafe-safety` | every `unsafe` fn/block/impl carries a `// SAFETY:`    |
+//! |                 | comment (or a `# Safety` doc section for `unsafe fn`)  |
+//! | `hot-no-alloc`  | fns annotated `// lint: hot` contain no allocation     |
+//! |                 | idioms (`Vec::new`, `vec![`, `.to_vec(`, `.collect(`,  |
+//! |                 | `.clone(`, `Box::new`, `format!`)                      |
+//! | `no-unwrap`     | no `.unwrap()` / `.expect(` in library code outside    |
+//! |                 | `#[cfg(test)]` (binaries `main.rs`/`bin/` exempt)      |
+//! | `no-wall-clock` | no `Instant::now` / `SystemTime` outside               |
+//! |                 | `coordinator/` and the bench modules                   |
+//!
+//! The scan is line-based but comment- and string-aware: each file is first
+//! "scrubbed" into parallel code/comment views so needles inside string
+//! literals or prose never fire, and `#[cfg(test)]` regions are tracked by
+//! brace depth so test code is exempt where a rule says so.  Findings that
+//! are genuinely fine (e.g. `try_into().unwrap()` on a fixed-size slice)
+//! are suppressed by `allow.list` entries of the form
+//! `rule-id path-suffix line-substring` — no line numbers, so entries
+//! tolerate drift and unused entries are reported.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The four invariants, keyed by stable ids used in findings and allowlists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `unsafe` fn/block/impl without an adjacent `// SAFETY:` justification.
+    UnsafeSafety,
+    /// Allocation idiom inside a fn annotated `// lint: hot`.
+    HotNoAlloc,
+    /// `.unwrap()` / `.expect(` in non-test library code.
+    NoUnwrap,
+    /// Wall-clock read outside `coordinator/` and the benches.
+    NoWallClock,
+}
+
+impl Rule {
+    /// Stable id used in output lines and `allow.list`.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::HotNoAlloc => "hot-no-alloc",
+            Rule::NoUnwrap => "no-unwrap",
+            Rule::NoWallClock => "no-wall-clock",
+        }
+    }
+
+    /// Inverse of [`Rule::id`], for allowlist validation.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "unsafe-safety" => Some(Rule::UnsafeSafety),
+            "hot-no-alloc" => Some(Rule::HotNoAlloc),
+            "no-unwrap" => Some(Rule::NoUnwrap),
+            "no-wall-clock" => Some(Rule::NoWallClock),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One rule violation at a specific line of a scanned file.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Scan-root-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// The raw source line, used for allowlist substring matching.
+    pub raw_line: String,
+}
+
+/// One suppression: `rule path-suffix line-substring` from `allow.list`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub needle: String,
+}
+
+/// Result of scanning a directory tree.
+#[derive(Debug)]
+pub struct TreeScan {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+// ---------------------------------------------------------------------------
+// Source scrubbing: split a file into parallel code / comment views.
+// ---------------------------------------------------------------------------
+
+/// Per-line views of one source file, aligned line-for-line with the input.
+#[derive(Debug)]
+struct Scrubbed {
+    /// Source lines with comments, string/char literal contents, and raw
+    /// strings blanked to spaces.  Needle searches run against these.
+    code: Vec<String>,
+    /// The complement: comment text only (everything else blanked).
+    comment: Vec<String>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && is_ident(cs[i - 1])
+}
+
+/// Strips comments and literal contents while preserving line structure.
+///
+/// Handles line/nested-block comments, plain and raw (`r#"…"#`) string
+/// literals, byte strings, char literals, and the char-vs-lifetime
+/// ambiguity (`'a'` vs `&'a`).  Escaped newlines inside string literals
+/// keep their `\n` so line numbers stay aligned.
+fn scrub(src: &str) -> Scrubbed {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u8),
+        Char,
+    }
+
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut code = String::with_capacity(n);
+    let mut com = String::with_capacity(n);
+    let mut st = St::Code;
+    let mut i = 0;
+
+    // Push helpers: every input char maps to exactly one output char in both
+    // views, so line/column structure is preserved.
+    macro_rules! push_code {
+        ($c:expr) => {{
+            code.push($c);
+            com.push(if $c == '\n' { '\n' } else { ' ' });
+        }};
+    }
+    macro_rules! push_com {
+        ($c:expr) => {{
+            com.push($c);
+            code.push(if $c == '\n' { '\n' } else { ' ' });
+        }};
+    }
+    macro_rules! push_none {
+        ($c:expr) => {{
+            let keep = if $c == '\n' { '\n' } else { ' ' };
+            code.push(keep);
+            com.push(keep);
+        }};
+    }
+
+    while i < n {
+        let c = cs[i];
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+                    st = St::LineComment;
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    st = St::BlockComment(1);
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    push_none!(c);
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&cs, i) {
+                    // Raw string r"…" / r#"…"# (any hash depth).
+                    let mut j = i + 1;
+                    let mut hashes = 0u8;
+                    while j < n && cs[j] == '#' {
+                        hashes = hashes.saturating_add(1);
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        st = St::RawStr(hashes);
+                        for k in i..=j {
+                            push_none!(cs[k]);
+                        }
+                        i = j + 1;
+                    } else {
+                        push_code!(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && !prev_is_ident(&cs, i) && i + 1 < n && cs[i + 1] == '"' {
+                    st = St::Str;
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else if c == 'b'
+                    && !prev_is_ident(&cs, i)
+                    && i + 1 < n
+                    && cs[i + 1] == 'r'
+                {
+                    let mut j = i + 2;
+                    let mut hashes = 0u8;
+                    while j < n && cs[j] == '#' {
+                        hashes = hashes.saturating_add(1);
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        st = St::RawStr(hashes);
+                        for k in i..=j {
+                            push_none!(cs[k]);
+                        }
+                        i = j + 1;
+                    } else {
+                        push_code!(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if i + 1 < n && cs[i + 1] == '\\' {
+                        // Escaped char literal: '\n', '\'', '\u{…}'.
+                        st = St::Char;
+                        push_none!(c);
+                        push_none!(cs[i + 1]);
+                        i += 2;
+                    } else if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                        // Plain char literal 'x'.
+                        push_none!(c);
+                        push_none!(cs[i + 1]);
+                        push_none!(cs[i + 2]);
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the tick as code.
+                        push_code!(c);
+                        i += 1;
+                    }
+                } else {
+                    push_code!(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                if c == '\n' {
+                    st = St::Code;
+                    push_none!(c);
+                } else {
+                    push_com!(c);
+                }
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    st = if depth <= 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    st = St::BlockComment(depth + 1);
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else {
+                    push_com!(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n {
+                    push_none!(c);
+                    push_none!(cs[i + 1]);
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    push_none!(c);
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u8;
+                    while j < n && cs[j] == '#' && seen < hashes {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        for k in i..j {
+                            push_none!(cs[k]);
+                        }
+                        st = St::Code;
+                        i = j;
+                        continue;
+                    }
+                }
+                push_none!(c);
+                i += 1;
+            }
+            St::Char => {
+                if c == '\'' {
+                    st = St::Code;
+                }
+                push_none!(c);
+                i += 1;
+            }
+        }
+    }
+
+    let code_lines = code.split('\n').map(str::to_string).collect();
+    let com_lines = com.split('\n').map(str::to_string).collect();
+    Scrubbed {
+        code: code_lines,
+        comment: com_lines,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Needle search with identifier-boundary awareness.
+// ---------------------------------------------------------------------------
+
+/// Finds `needle` in `hay` starting at byte `from`, requiring identifier
+/// boundaries only on needle edges that are themselves identifier chars
+/// (so `.unwrap()` matches after any receiver, but `SystemTime` does not
+/// match inside `MySystemTimeish`).
+fn find_needle(hay: &str, needle: &str, from: usize) -> Option<usize> {
+    let first_ident = needle.chars().next().is_some_and(is_ident);
+    let last_ident = needle.chars().next_back().is_some_and(is_ident);
+    let mut start = from;
+    while start <= hay.len() {
+        let pos = hay[start..].find(needle)?;
+        let abs = start + pos;
+        let before_ok =
+            !first_ident || !hay[..abs].chars().next_back().is_some_and(is_ident);
+        let after_ok =
+            !last_ident || !hay[abs + needle.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return Some(abs);
+        }
+        start = abs + needle.len().max(1);
+    }
+    None
+}
+
+fn contains_needle(hay: &str, needle: &str) -> bool {
+    find_needle(hay, needle, 0).is_some()
+}
+
+// ---------------------------------------------------------------------------
+// `#[cfg(test)]` region tracking.
+// ---------------------------------------------------------------------------
+
+/// Marks each line that falls inside a `#[cfg(test)]`-gated item's braces
+/// (including the attribute line and the item header itself).
+fn test_regions(scrubbed: &Scrubbed) -> Vec<bool> {
+    let mut in_test = vec![false; scrubbed.code.len()];
+    let mut depth: i64 = 0;
+    // Brace depths at which a #[cfg(test)] item body opened.
+    let mut stack: Vec<i64> = Vec::new();
+    let mut pending_attr = false;
+
+    for (li, line) in scrubbed.code.iter().enumerate() {
+        let at_start = !stack.is_empty() || pending_attr;
+        let attr_pos = line
+            .find("cfg(test)")
+            .or_else(|| line.find("cfg(all(test"));
+        for (ci, c) in line.char_indices() {
+            if let Some(p) = attr_pos {
+                if ci == p {
+                    pending_attr = true;
+                }
+            }
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_attr {
+                        stack.push(depth);
+                        pending_attr = false;
+                    }
+                }
+                '}' => {
+                    if stack.last() == Some(&depth) {
+                        stack.pop();
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        in_test[li] = at_start || !stack.is_empty() || pending_attr;
+    }
+    in_test
+}
+
+// ---------------------------------------------------------------------------
+// Rule implementations.
+// ---------------------------------------------------------------------------
+
+/// Allocation idioms banned inside `// lint: hot` fns.  `.collect` appears
+/// twice to catch both call and turbofish forms.
+const ALLOC_NEEDLES: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec(",
+    ".collect(",
+    ".collect::<",
+    ".clone(",
+    "Box::new",
+    "format!",
+];
+
+fn is_comment_only(scrubbed: &Scrubbed, li: usize) -> bool {
+    scrubbed.code[li].trim().is_empty() && !scrubbed.comment[li].trim().is_empty()
+}
+
+fn is_attr_only(scrubbed: &Scrubbed, li: usize) -> bool {
+    let code = scrubbed.code[li].trim();
+    code.starts_with("#[") || code.starts_with("#![")
+}
+
+/// True if line `li`'s `unsafe` is justified: a `SAFETY:` comment on the
+/// same line, or in the contiguous run of comment/attribute lines directly
+/// above (no blank-line gap), or — for `unsafe fn` declarations — a
+/// `# Safety` doc section in that run.
+fn has_safety_justification(scrubbed: &Scrubbed, li: usize, accept_doc: bool) -> bool {
+    if scrubbed.comment[li].contains("SAFETY:") {
+        return true;
+    }
+    let mut i = li;
+    while i > 0 {
+        i -= 1;
+        if !(is_comment_only(scrubbed, i) || is_attr_only(scrubbed, i)) {
+            break;
+        }
+        let com = &scrubbed.comment[i];
+        if com.contains("SAFETY:") {
+            return true;
+        }
+        if accept_doc && com.contains("# Safety") {
+            return true;
+        }
+    }
+    false
+}
+
+fn rule_unsafe_safety(
+    rel: &str,
+    raw: &[&str],
+    scrubbed: &Scrubbed,
+    in_test: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    for li in 0..scrubbed.code.len() {
+        if in_test[li] {
+            continue;
+        }
+        let line = &scrubbed.code[li];
+        let Some(pos) = find_needle(line, "unsafe", 0) else {
+            continue;
+        };
+        // `unsafe fn` declarations may justify via a `# Safety` doc section;
+        // blocks and `unsafe impl` need an explicit `// SAFETY:`.
+        let is_fn_decl = find_needle(line, "fn", pos).is_some();
+        if !has_safety_justification(scrubbed, li, is_fn_decl) {
+            let kind = if is_fn_decl {
+                "unsafe fn without a `# Safety` doc section or `// SAFETY:` comment"
+            } else {
+                "unsafe block/impl without a `// SAFETY:` comment on or above it"
+            };
+            out.push(Finding {
+                rule: Rule::UnsafeSafety,
+                path: rel.to_string(),
+                line: li + 1,
+                message: kind.to_string(),
+                raw_line: raw.get(li).copied().unwrap_or("").to_string(),
+            });
+        }
+    }
+}
+
+/// Extracts the fn name following a `fn` keyword on `line`, for messages.
+fn fn_name(line: &str) -> &str {
+    let Some(pos) = find_needle(line, "fn", 0) else {
+        return "?";
+    };
+    let rest = line[pos + 2..].trim_start();
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| !is_ident(*c))
+        .map_or(rest.len(), |(i, _)| i);
+    if end == 0 {
+        "?"
+    } else {
+        &rest[..end]
+    }
+}
+
+fn rule_hot_no_alloc(rel: &str, raw: &[&str], scrubbed: &Scrubbed, out: &mut Vec<Finding>) {
+    let nlines = scrubbed.code.len();
+    for li in 0..nlines {
+        // Exact match on the trimmed comment text: prose that merely
+        // *mentions* the marker (docs, this tool) must not arm the rule.
+        if scrubbed.comment[li].trim() != "lint: hot" {
+            continue;
+        }
+        // The annotated fn must start within the next few lines (doc
+        // comments and attributes may intervene).
+        let mut fn_line = None;
+        for fi in li + 1..nlines.min(li + 11) {
+            if find_needle(&scrubbed.code[fi], "fn", 0).is_some() {
+                fn_line = Some(fi);
+                break;
+            }
+        }
+        let Some(fi) = fn_line else {
+            out.push(Finding {
+                rule: Rule::HotNoAlloc,
+                path: rel.to_string(),
+                line: li + 1,
+                message: "dangling `// lint: hot` marker: no fn within 10 lines".to_string(),
+                raw_line: raw.get(li).copied().unwrap_or("").to_string(),
+            });
+            continue;
+        };
+        let name = fn_name(&scrubbed.code[fi]).to_string();
+        // Brace-match the fn body, then sweep it for allocation idioms.
+        let mut depth: i64 = 0;
+        let mut seen_open = false;
+        for bi in fi..nlines {
+            let line = &scrubbed.code[bi];
+            for needle in ALLOC_NEEDLES {
+                if contains_needle(line, needle) {
+                    out.push(Finding {
+                        rule: Rule::HotNoAlloc,
+                        path: rel.to_string(),
+                        line: bi + 1,
+                        message: format!(
+                            "allocation idiom `{needle}` in `// lint: hot` fn `{name}`"
+                        ),
+                        raw_line: raw.get(bi).copied().unwrap_or("").to_string(),
+                    });
+                }
+            }
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        seen_open = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if seen_open && depth <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+/// Binaries are exempt from `no-unwrap`: a CLI aborting on bad input is the
+/// desired behavior there.
+fn is_binary_path(rel: &str) -> bool {
+    rel == "main.rs"
+        || rel.ends_with("/main.rs")
+        || rel.starts_with("bin/")
+        || rel.contains("/bin/")
+}
+
+fn rule_no_unwrap(
+    rel: &str,
+    raw: &[&str],
+    scrubbed: &Scrubbed,
+    in_test: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if is_binary_path(rel) {
+        return;
+    }
+    for li in 0..scrubbed.code.len() {
+        if in_test[li] {
+            continue;
+        }
+        let line = &scrubbed.code[li];
+        for needle in [".unwrap()", ".expect("] {
+            if contains_needle(line, needle) {
+                out.push(Finding {
+                    rule: Rule::NoUnwrap,
+                    path: rel.to_string(),
+                    line: li + 1,
+                    message: format!(
+                        "`{needle}` in library code outside #[cfg(test)]; return a typed error \
+                         or allowlist with a justification"
+                    ),
+                    raw_line: raw.get(li).copied().unwrap_or("").to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Paths where wall-clock reads are legitimate: the serving coordinator
+/// (deadlines, metrics) and the bench harness.
+fn wall_clock_allowed(rel: &str) -> bool {
+    rel.starts_with("coordinator/")
+        || rel.contains("/coordinator/")
+        || rel == "bench.rs"
+        || rel.ends_with("/bench.rs")
+        || rel.starts_with("benches/")
+        || rel.contains("/benches/")
+}
+
+fn rule_no_wall_clock(
+    rel: &str,
+    raw: &[&str],
+    scrubbed: &Scrubbed,
+    in_test: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if wall_clock_allowed(rel) {
+        return;
+    }
+    for li in 0..scrubbed.code.len() {
+        if in_test[li] {
+            continue;
+        }
+        let line = &scrubbed.code[li];
+        for needle in ["Instant::now", "SystemTime"] {
+            if contains_needle(line, needle) {
+                out.push(Finding {
+                    rule: Rule::NoWallClock,
+                    path: rel.to_string(),
+                    line: li + 1,
+                    message: format!(
+                        "wall-clock read `{needle}` outside coordinator/ and benches breaks \
+                         deterministic replay"
+                    ),
+                    raw_line: raw.get(li).copied().unwrap_or("").to_string(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points.
+// ---------------------------------------------------------------------------
+
+/// Scans one file's source, returning raw (un-allowlisted) findings.
+///
+/// `rel` is the scan-root-relative, `/`-separated path; rule scoping
+/// (binary exemption for `no-unwrap`, coordinator/bench exemption for
+/// `no-wall-clock`) keys off it.
+pub fn scan_source(rel: &str, source: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = source.split('\n').collect();
+    let scrubbed = scrub(source);
+    let in_test = test_regions(&scrubbed);
+    let mut out = Vec::new();
+    rule_unsafe_safety(rel, &raw, &scrubbed, &in_test, &mut out);
+    rule_hot_no_alloc(rel, &raw, &scrubbed, &mut out);
+    rule_no_unwrap(rel, &raw, &scrubbed, &in_test, &mut out);
+    rule_no_wall_clock(rel, &raw, &scrubbed, &in_test, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule.id()).cmp(&(b.line, b.rule.id())));
+    out
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scans every `.rs` file under `root` (recursively, sorted order).
+pub fn scan_tree(root: &Path) -> io::Result<TreeScan> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(scan_source(&rel, &src));
+    }
+    Ok(TreeScan {
+        files: files.len(),
+        findings,
+    })
+}
+
+/// Parses `allow.list` text: one `rule-id path-suffix line-substring` entry
+/// per line; `#` comments and blank lines skipped.  The substring is the
+/// rest of the line and may contain spaces.
+pub fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((rule, rest)) = split_once_ws(line) else {
+            continue;
+        };
+        let Some((path_suffix, needle)) = split_once_ws(rest) else {
+            continue;
+        };
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            path_suffix: path_suffix.to_string(),
+            needle: needle.to_string(),
+        });
+    }
+    out
+}
+
+fn split_once_ws(s: &str) -> Option<(&str, &str)> {
+    let idx = s.find(char::is_whitespace)?;
+    Some((&s[..idx], s[idx..].trim_start()))
+}
+
+/// Filters findings through the allowlist.  Returns the surviving findings
+/// plus a per-entry use count (zero means the entry is stale).
+pub fn apply_allowlist(
+    findings: Vec<Finding>,
+    allow: &[AllowEntry],
+) -> (Vec<Finding>, Vec<usize>) {
+    let mut used = vec![0usize; allow.len()];
+    let kept = findings
+        .into_iter()
+        .filter(|f| {
+            for (i, e) in allow.iter().enumerate() {
+                if e.rule == f.rule.id()
+                    && f.path.ends_with(&e.path_suffix)
+                    && f.raw_line.contains(&e.needle)
+                {
+                    used[i] += 1;
+                    return false;
+                }
+            }
+            true
+        })
+        .collect();
+    (kept, used)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_masks_comments_and_strings() {
+        let src = "let a = \"unsafe .unwrap()\"; // SAFETY: not code\nlet b = 1;";
+        let s = scrub(src);
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(!s.code[0].contains("SAFETY"));
+        assert!(s.comment[0].contains("SAFETY: not code"));
+        assert_eq!(s.code[1].trim(), "let b = 1;");
+    }
+
+    #[test]
+    fn scrub_handles_lifetimes_and_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\'' }";
+        let s = scrub(src);
+        // Lifetimes survive as code; the char literal is blanked.
+        assert!(s.code[0].contains("<'a>"));
+        assert!(!s.code[0].contains("\\'"));
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings() {
+        let src = "let r = r#\"has .unwrap() inside\"#;\nlet x = y.unwrap();";
+        let s = scrub(src);
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(s.code[1].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn test_region_tracking() {
+        let src = "fn a() { b.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { c.unwrap(); }\n}\nfn d() {}\n";
+        let s = scrub(src);
+        let in_test = test_regions(&s);
+        assert!(!in_test[0]);
+        assert!(in_test[1]);
+        assert!(in_test[2]);
+        assert!(in_test[3]);
+        assert!(!in_test[5]);
+    }
+
+    #[test]
+    fn needle_boundaries() {
+        assert!(contains_needle("let t = Instant::now();", "Instant::now"));
+        assert!(!contains_needle("let t = MyInstant::nowish();", "Instant::now"));
+        assert!(contains_needle("x.unwrap()", ".unwrap()"));
+        assert!(!contains_needle("x.unwrap_or(0)", ".unwrap()"));
+    }
+
+    #[test]
+    fn allowlist_round_trip() {
+        let allow = parse_allowlist(
+            "# comment\n\nno-unwrap nn/graph.rs try_into().unwrap()\n",
+        );
+        assert_eq!(allow.len(), 1);
+        assert_eq!(allow[0].rule, "no-unwrap");
+        assert_eq!(allow[0].path_suffix, "nn/graph.rs");
+        assert_eq!(allow[0].needle, "try_into().unwrap()");
+        let findings = scan_source("nn/graph.rs", "fn f() { let x = b.try_into().unwrap(); }\n");
+        assert_eq!(findings.len(), 1);
+        let (kept, used) = apply_allowlist(findings, &allow);
+        assert!(kept.is_empty());
+        assert_eq!(used, vec![1]);
+    }
+}

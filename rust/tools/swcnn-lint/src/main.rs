@@ -1,0 +1,133 @@
+//! CLI for the swcnn repo lint: scans `rust/src` against the four
+//! engine invariants and exits non-zero on any non-allowlisted finding.
+//!
+//! ```sh
+//! cargo run -p swcnn-lint                 # scan rust/src with the checked-in allowlist
+//! cargo run -p swcnn-lint -- --root DIR   # scan a different tree
+//! ```
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use swcnn_lint::{apply_allowlist, parse_allowlist, scan_tree, Rule};
+
+const USAGE: &str = "\
+swcnn-lint: repo-specific static analysis for the swcnn engine
+
+USAGE:
+    cargo run -p swcnn-lint [-- OPTIONS]
+
+OPTIONS:
+    --root <dir>        directory tree to scan (default: rust/src)
+    --allowlist <file>  allowlist file (default: rust/tools/swcnn-lint/allow.list)
+    -h, --help          print this help
+
+RULES:
+    unsafe-safety   every unsafe fn/block/impl carries a // SAFETY: comment
+    hot-no-alloc    fns annotated `// lint: hot` contain no allocation idioms
+    no-unwrap       no .unwrap()/.expect( in non-test library code
+    no-wall-clock   no Instant::now/SystemTime outside coordinator/ and benches
+";
+
+fn main() -> ExitCode {
+    // The tool is a repo-internal xtask: default paths are anchored at its
+    // own manifest so `cargo run -p swcnn-lint` works from any cwd.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut root = manifest.join("../../src");
+    let mut allow_path = manifest.join("allow.list");
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => {
+                    eprintln!("swcnn-lint: --root requires a value");
+                    return ExitCode::from(2);
+                }
+            },
+            "--allowlist" => match args.next() {
+                Some(v) => allow_path = PathBuf::from(v),
+                None => {
+                    eprintln!("swcnn-lint: --allowlist requires a value");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("swcnn-lint: unknown argument `{other}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let allow = match fs::read_to_string(&allow_path) {
+        Ok(text) => parse_allowlist(&text),
+        Err(e) => {
+            eprintln!(
+                "swcnn-lint: cannot read allowlist {}: {e}",
+                allow_path.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+    for entry in &allow {
+        if Rule::from_id(&entry.rule).is_none() {
+            eprintln!(
+                "swcnn-lint: allowlist names unknown rule `{}` (see --help)",
+                entry.rule
+            );
+            return ExitCode::from(2);
+        }
+    }
+
+    let scan = match scan_tree(&root) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("swcnn-lint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let total = scan.findings.len();
+    let (kept, used) = apply_allowlist(scan.findings, &allow);
+    let suppressed = total - kept.len();
+
+    for f in &kept {
+        println!(
+            "{}/{}:{}: [{}] {}",
+            root.display(),
+            f.path,
+            f.line,
+            f.rule,
+            f.message
+        );
+    }
+    for (entry, count) in allow.iter().zip(&used) {
+        if *count == 0 {
+            eprintln!(
+                "swcnn-lint: warning: stale allowlist entry (matched nothing): {} {} {}",
+                entry.rule, entry.path_suffix, entry.needle
+            );
+        }
+    }
+
+    if kept.is_empty() {
+        println!(
+            "swcnn-lint: OK — {} files scanned, 0 findings ({suppressed} allowlisted)",
+            scan.files
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "swcnn-lint: {} finding(s) in {} files ({suppressed} allowlisted)",
+            kept.len(),
+            scan.files
+        );
+        ExitCode::FAILURE
+    }
+}

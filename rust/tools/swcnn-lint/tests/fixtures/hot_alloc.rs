@@ -1,0 +1,28 @@
+// Fixture for the `hot-no-alloc` rule.  Not compiled — scanned by
+// tests/rules.rs, which asserts exactly which lines fire.
+
+// lint: hot
+pub fn hot_allocates(n: usize) -> Vec<f32> {
+    let v = vec![0.0f32; n];
+    let w = v.clone();
+    w
+}
+
+// lint: hot
+#[inline]
+pub fn hot_clean(out: &mut [f32], scale: f32) {
+    for v in out.iter_mut() {
+        *v *= scale;
+    }
+}
+
+pub fn cold_allocates(n: usize) -> Vec<f32> {
+    vec![0.0f32; n]
+}
+
+// Prose that merely mentions the lint: hot marker must not arm the rule.
+pub fn prose_mention(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+// lint: hot

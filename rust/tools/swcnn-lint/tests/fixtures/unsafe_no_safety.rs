@@ -1,0 +1,30 @@
+// Fixture for the `unsafe-safety` rule.  Not compiled — scanned by
+// tests/rules.rs, which asserts exactly which lines fire.
+
+pub fn justified(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+
+pub fn bare(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+/// Reads a byte through `p`.
+///
+/// # Safety
+///
+/// `p` must be valid for reads.
+pub unsafe fn documented(p: *const u8) -> u8 {
+    // SAFETY: forwarded from the fn-level contract above.
+    unsafe { *p }
+}
+
+pub unsafe fn undocumented(p: *const u8) -> u8 {
+    // SAFETY: forwarded (justifies this inner block, not the bare decl).
+    unsafe { *p }
+}
+
+pub fn prose_only() -> &'static str {
+    "this string mentions unsafe but is not code"
+}

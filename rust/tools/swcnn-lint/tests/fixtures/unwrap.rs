@@ -1,0 +1,29 @@
+// Fixture for the `no-unwrap` rule.  Not compiled — scanned by
+// tests/rules.rs, which asserts exactly which lines fire.
+
+pub fn lib_unwrap(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn lib_expect(x: Option<u32>) -> u32 {
+    x.expect("boom")
+}
+
+pub fn boundary_is_respected(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}
+
+pub fn string_literal_is_ignored() -> &'static str {
+    "calling .unwrap() here is just prose"
+}
+
+// so is a comment mentioning .unwrap() or .expect(...)
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        Some(1u32).unwrap();
+        Some(2u32).expect("fine in tests");
+    }
+}

@@ -1,0 +1,27 @@
+// Fixture for the `no-wall-clock` rule.  Not compiled — scanned by
+// tests/rules.rs, which asserts exactly which lines fire.
+
+pub fn measure() -> std::time::Duration {
+    let t0 = std::time::Instant::now();
+    t0.elapsed()
+}
+
+pub fn stamp() -> u64 {
+    let now = std::time::SystemTime::now();
+    now.elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+
+// A comment mentioning Instant::now or SystemTime must not fire.
+
+pub fn look_alikes_are_ignored() {
+    struct MySystemTimeish;
+    let _ = MySystemTimeish;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_time() {
+        let _ = std::time::Instant::now();
+    }
+}

@@ -1,0 +1,150 @@
+//! Proves every swcnn-lint rule is live: each fixture must fire at
+//! exactly the expected lines (located by content, so fixtures can be
+//! edited without renumbering), negative cases must stay silent, and
+//! the real `rust/src` tree must scan clean under `allow.list` with no
+//! stale entries.
+
+use std::fs;
+use std::path::Path;
+
+use swcnn_lint::{apply_allowlist, parse_allowlist, scan_source, scan_tree, Finding, Rule};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// 1-based line of the first line containing `needle`.
+fn line_of(src: &str, needle: &str) -> usize {
+    src.lines()
+        .position(|l| l.contains(needle))
+        .unwrap_or_else(|| panic!("fixture lacks {needle:?}"))
+        + 1
+}
+
+fn lines_for(findings: &[Finding], rule: Rule) -> Vec<usize> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.line)
+        .collect()
+}
+
+#[test]
+fn unsafe_safety_fires_on_unjustified_sites_only() {
+    let src = fixture("unsafe_no_safety.rs");
+    let findings = scan_source("winograd/fixture.rs", &src);
+    let want = vec![
+        line_of(&src, "pub fn bare") + 1, // the bare `unsafe { *p }` body line
+        line_of(&src, "pub unsafe fn undocumented"),
+    ];
+    assert_eq!(lines_for(&findings, Rule::UnsafeSafety), want, "{findings:#?}");
+}
+
+#[test]
+fn hot_no_alloc_fires_inside_hot_fns_only() {
+    let src = fixture("hot_alloc.rs");
+    let findings = scan_source("winograd/fixture.rs", &src);
+    let want = vec![
+        line_of(&src, "vec![0.0f32; n];"), // inside hot_allocates
+        line_of(&src, "v.clone()"),
+        src.trim_end().lines().count(), // the trailing dangling marker
+    ];
+    assert_eq!(lines_for(&findings, Rule::HotNoAlloc), want, "{findings:#?}");
+    let msgs: Vec<&str> = findings
+        .iter()
+        .filter(|f| f.rule == Rule::HotNoAlloc)
+        .map(|f| f.message.as_str())
+        .collect();
+    assert!(msgs[0].contains("vec!") && msgs[0].contains("hot_allocates"), "{msgs:?}");
+    assert!(msgs[2].contains("dangling"), "{msgs:?}");
+}
+
+#[test]
+fn no_unwrap_fires_outside_tests_and_respects_boundaries() {
+    let src = fixture("unwrap.rs");
+    let findings = scan_source("nn/fixture.rs", &src);
+    let want = vec![line_of(&src, "x.unwrap()"), line_of(&src, "x.expect(")];
+    assert_eq!(lines_for(&findings, Rule::NoUnwrap), want, "{findings:#?}");
+}
+
+#[test]
+fn no_unwrap_exempts_binaries() {
+    let src = fixture("unwrap.rs");
+    for rel in ["main.rs", "bin/swcnn-cli.rs", "tools/bin/gen.rs"] {
+        let findings = scan_source(rel, &src);
+        assert!(
+            lines_for(&findings, Rule::NoUnwrap).is_empty(),
+            "{rel} must be exempt: {findings:#?}"
+        );
+    }
+}
+
+#[test]
+fn no_wall_clock_fires_outside_coordinator_and_benches() {
+    let src = fixture("wall_clock.rs");
+    let findings = scan_source("model/fixture.rs", &src);
+    let want = vec![
+        line_of(&src, "Instant::now();"),
+        line_of(&src, "SystemTime::now();"),
+    ];
+    assert_eq!(lines_for(&findings, Rule::NoWallClock), want, "{findings:#?}");
+    for rel in ["coordinator/server.rs", "bench.rs", "benches/e2e.rs"] {
+        let findings = scan_source(rel, &src);
+        assert!(
+            lines_for(&findings, Rule::NoWallClock).is_empty(),
+            "{rel} must be exempt: {findings:#?}"
+        );
+    }
+}
+
+#[test]
+fn allowlist_suppresses_by_rule_path_and_substring() {
+    let src = fixture("unwrap.rs");
+    let allow = parse_allowlist("no-unwrap nn/fixture.rs x.unwrap()\n");
+    let (kept, used) = apply_allowlist(scan_source("nn/fixture.rs", &src), &allow);
+    assert_eq!(used, vec![1]);
+    // The `.expect(` finding survives: the entry only covers `.unwrap()`.
+    assert_eq!(kept.len(), 1, "{kept:#?}");
+    assert_eq!(kept[0].line, line_of(&src, "x.expect("));
+    // Same entry against a different path suppresses nothing.
+    let (kept, used) = apply_allowlist(scan_source("tuner/fixture.rs", &src), &allow);
+    assert_eq!(used, vec![0]);
+    assert_eq!(kept.len(), 2, "{kept:#?}");
+}
+
+/// The self-check the CLI runs in CI: the real library tree must be
+/// clean under the checked-in allowlist, and every allowlist entry must
+/// still be earning its keep.
+#[test]
+fn live_tree_scans_clean_under_allowlist() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.join("../../src");
+    let scan = scan_tree(&root).expect("scan rust/src");
+    assert!(
+        scan.files >= 30,
+        "expected the full library tree under {}, scanned only {} files",
+        root.display(),
+        scan.files
+    );
+    let allow_text =
+        fs::read_to_string(manifest.join("allow.list")).expect("read allow.list");
+    let allow = parse_allowlist(&allow_text);
+    for e in &allow {
+        assert!(
+            Rule::from_id(&e.rule).is_some(),
+            "allow.list names unknown rule {:?}",
+            e.rule
+        );
+    }
+    let (kept, used) = apply_allowlist(scan.findings, &allow);
+    assert!(
+        kept.is_empty(),
+        "rust/src has un-allowlisted findings:\n{kept:#?}"
+    );
+    for (e, u) in allow.iter().zip(&used) {
+        assert!(*u > 0, "stale allow.list entry (no longer matches): {e:?}");
+    }
+}
