@@ -10,7 +10,7 @@
 //! roundtrip that ships a model to disk and back bit-identically.
 
 use anyhow::{bail, Result};
-use swcnn::coordinator::{InferenceServer, NativeServerConfig};
+use swcnn::coordinator::ServeBuilder;
 use swcnn::executor::{ExecPolicy, Session};
 use swcnn::nn::graph::{load_weights, save_weights, GraphBuilder, Synthetic};
 use swcnn::nn::vgg_tiny;
@@ -80,9 +80,8 @@ fn main() -> Result<()> {
     println!("weights roundtripped through {} bit-identically", path.display());
 
     // -- serve ------------------------------------------------------------
-    let server = InferenceServer::start_native(NativeServerConfig::new(
-        Session::uniform(vgg, &mut Synthetic::new(7), policy)?,
-    ))?;
+    let server =
+        ServeBuilder::new(Session::uniform(vgg, &mut Synthetic::new(7), policy)?).start()?;
     let solo = server.infer(image.clone())?;
     if solo != logits {
         bail!("served logits diverged from the direct session");

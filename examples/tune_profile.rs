@@ -9,7 +9,7 @@
 //! it back with `TuneProfile::load`, expands it through
 //! `profile.policies_for(&graph, &base)` into the per-conv policy list a
 //! `Session` compiles, and passes the profile to
-//! `NativeServerConfig::with_profile` so the batcher adopts its fused
+//! `ServeBuilder::profile` so the batcher adopts its fused
 //! batch.
 
 use swcnn::bench::print_table;

@@ -1,0 +1,324 @@
+//! Network-serving load bench: the TCP front-end on sparse vgg_tiny,
+//! driven closed-loop and open-loop over a real socket.
+//!
+//!   cargo bench --bench serving_net
+//!
+//! Three load shapes against one `NetServer` (loopback, fused batches
+//! of up to 8 over a 2 ms window):
+//!
+//! - **closed-loop depth 1**: one request in flight — the per-request
+//!   floor a synchronous caller sees (latency includes the batching
+//!   window);
+//! - **closed-loop depth 8**: eight requests pipelined on one
+//!   connection — admission-ordered responses let the batcher fuse
+//!   them, which is the whole point of the front-end;
+//! - **open-loop** at two offered rates (50% and 90% of the pipelined
+//!   throughput): a paced sender thread and a receiving main thread,
+//!   so queueing delay shows up in the percentiles instead of being
+//!   absorbed by the load generator.
+//!
+//! Results go to `BENCH_serving_net.json` (bench working directory).
+//! CI gates the headline `pipelined_speedup_vs_closed` against a
+//! committed floor, and the bench itself asserts the acceptance gates:
+//! served logits bit-identical to a local `Session::forward`, and
+//! pipelined throughput strictly above closed-loop depth 1.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use swcnn::bench::print_table;
+use swcnn::coordinator::net::{wire, NetClient, NetServer};
+use swcnn::coordinator::ServeBuilder;
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::Synthetic;
+use swcnn::nn::vgg_tiny;
+use swcnn::util::json::Json;
+use swcnn::util::Rng;
+
+const SPARSITY: f64 = 0.7;
+const WARMUP: usize = 8;
+const CLOSED_N: usize = 64;
+const DEPTH: usize = 8;
+const PIPELINED_N: usize = 64;
+const OPEN_N: usize = 64;
+const OPEN_FRACTIONS: [f64; 2] = [0.5, 0.9];
+
+/// One measured load shape, ready for the table and the JSON.
+struct Run {
+    name: String,
+    offered_rps: Option<f64>,
+    achieved_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    errors: u64,
+}
+
+fn main() {
+    let policy = ExecPolicy::sparse(2, SPARSITY);
+    let mut direct =
+        Session::uniform(vgg_tiny(), &mut Synthetic::new(7), policy).expect("vgg_tiny compiles");
+    let mut rng = Rng::new(42);
+    let image = rng.gaussian_vec(direct.input_elements());
+    let want = direct.forward(&image).expect("direct forward");
+
+    let server = ServeBuilder::new(
+        Session::uniform(vgg_tiny(), &mut Synthetic::new(7), policy).expect("vgg_tiny compiles"),
+    )
+    .max_batch(DEPTH)
+    .window(Duration::from_millis(2))
+    .start()
+    .expect("server starts");
+    let net = NetServer::bind("127.0.0.1:0", server).expect("bind loopback");
+    let addr = net.local_addr();
+
+    // Correctness gate first: a fast-but-wrong front-end must fail the
+    // bench.  The served logits must equal the local session's bit for
+    // bit.
+    let mut client = NetClient::connect(addr).expect("connect");
+    let got = client.infer(&image).expect("served");
+    assert_eq!(got, want, "network serving must be bit-identical");
+    for _ in 0..WARMUP {
+        client.infer(&image).expect("warmup");
+    }
+
+    // -- closed loop, depth 1 --------------------------------------------
+    let mut lats = Vec::with_capacity(CLOSED_N);
+    let t0 = Instant::now();
+    for _ in 0..CLOSED_N {
+        let t = Instant::now();
+        client.infer(&image).expect("closed-loop request");
+        lats.push(t.elapsed().as_secs_f64());
+    }
+    let closed = Run {
+        name: "net_closed_depth1".into(),
+        offered_rps: None,
+        achieved_rps: CLOSED_N as f64 / t0.elapsed().as_secs_f64(),
+        p50_ms: percentile_ms(&mut lats, 0.50),
+        p99_ms: percentile_ms(&mut lats, 0.99),
+        errors: 0,
+    };
+
+    // -- closed loop, depth 8 (pipelined) --------------------------------
+    let mut lats = Vec::with_capacity(PIPELINED_N);
+    let t0 = Instant::now();
+    for _ in 0..PIPELINED_N / DEPTH {
+        let mut sent = Vec::with_capacity(DEPTH);
+        for _ in 0..DEPTH {
+            let id = client.send_infer(&image, 0).expect("pipelined send");
+            sent.push((id, Instant::now()));
+        }
+        for (id, t_send) in sent {
+            match client.recv().expect("pipelined response") {
+                wire::Response::Logits { id: got, .. } => {
+                    assert_eq!(got, id, "responses must arrive in request order");
+                    lats.push(t_send.elapsed().as_secs_f64());
+                }
+                other => panic!("pipelined request {id} failed: {other:?}"),
+            }
+        }
+    }
+    let pipelined = Run {
+        name: format!("net_pipelined_depth{DEPTH}"),
+        offered_rps: None,
+        achieved_rps: PIPELINED_N as f64 / t0.elapsed().as_secs_f64(),
+        p50_ms: percentile_ms(&mut lats, 0.50),
+        p99_ms: percentile_ms(&mut lats, 0.99),
+        errors: 0,
+    };
+
+    // -- open loop at two offered rates ----------------------------------
+    let mut runs = vec![closed, pipelined];
+    for frac in OPEN_FRACTIONS {
+        let offered = runs[1].achieved_rps * frac;
+        runs.push(open_loop(addr, &image, offered, frac));
+    }
+
+    // Batch-size distribution straight from the server's own counters.
+    let metrics = Json::parse(&client.metrics_json().expect("metrics over TCP"))
+        .expect("metrics endpoint serves valid JSON");
+    let mean_batch = metrics
+        .req("mean_batch")
+        .ok()
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let histogram = metrics
+        .get("batch_histogram")
+        .cloned()
+        .unwrap_or(Json::Arr(Vec::new()));
+
+    let speedup = runs[1].achieved_rps / runs[0].achieved_rps;
+    let table: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.offered_rps
+                    .map(|o| format!("{o:.1} req/s"))
+                    .unwrap_or_else(|| "closed".into()),
+                format!("{:.1} req/s", r.achieved_rps),
+                format!("{:.2} ms", r.p50_ms),
+                format!("{:.2} ms", r.p99_ms),
+                r.errors.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "network serving (sparse {SPARSITY} vgg_tiny over loopback, \
+             fused batches <= {DEPTH}, mean batch {mean_batch:.2})"
+        ),
+        &["load shape", "offered", "achieved", "p50", "p99", "errors"],
+        &table,
+    );
+    println!("pipelined vs closed-loop depth 1: {speedup:.2}x throughput");
+    write_json(&runs, speedup, mean_batch, histogram);
+
+    // The batching gate (CI runs this bench): pipelined traffic through
+    // the same socket must beat one-at-a-time round trips, or the
+    // front-end is adding a network hop without buying batch fusion.
+    assert!(
+        speedup > 1.0,
+        "pipelined depth-{DEPTH} must beat closed-loop depth 1 (got {speedup:.2}x)"
+    );
+    net.shutdown();
+}
+
+/// Open-loop shape: a sender thread paces `OPEN_N` requests at
+/// `offered` req/s on its own half of the connection while the caller
+/// receives; latency spans send -> response, so queueing shows up.
+fn open_loop(addr: std::net::SocketAddr, image: &[f32], offered: f64, frac: f64) -> Run {
+    let stream = TcpStream::connect(addr).expect("open-loop connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut wstream = stream.try_clone().expect("clone for sender");
+    let mut rstream = stream;
+    let (times_tx, times_rx) = mpsc::channel::<(u64, Instant)>();
+    let interval = Duration::from_secs_f64(1.0 / offered);
+    let image = image.to_vec();
+    let sender = std::thread::spawn(move || {
+        let mut frame = Vec::new();
+        let start = Instant::now();
+        for i in 0..OPEN_N as u64 {
+            let due = start + interval.mul_f64(i as f64);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            frame.clear();
+            wire::encode_request(
+                &wire::Request::Infer {
+                    id: i,
+                    deadline_ms: 0,
+                    image: image.clone(),
+                },
+                &mut frame,
+            );
+            if times_tx.send((i, Instant::now())).is_err() {
+                return;
+            }
+            if wstream.write_all(&frame).is_err() {
+                return;
+            }
+        }
+    });
+
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 16384];
+    let mut lats = Vec::with_capacity(OPEN_N);
+    let mut errors = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..OPEN_N {
+        let (id, t_send) = times_rx.recv().expect("sender alive");
+        let resp = loop {
+            match wire::decode_response(&buf) {
+                Ok(Some((resp, used))) => {
+                    buf.drain(..used);
+                    break resp;
+                }
+                Ok(None) => {
+                    let n = rstream.read(&mut chunk).expect("open-loop read");
+                    assert!(n > 0, "server closed mid-bench");
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) => panic!("open-loop wire error: {e}"),
+            }
+        };
+        match resp {
+            wire::Response::Logits { id: got, .. } => {
+                assert_eq!(got, id, "responses must arrive in request order");
+                lats.push(t_send.elapsed().as_secs_f64());
+            }
+            wire::Response::Error { id: got, .. } => {
+                assert_eq!(got, id);
+                errors += 1;
+            }
+            other => panic!("open-loop request {id}: unexpected {other:?}"),
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    sender.join().expect("sender thread");
+    Run {
+        name: format!("net_open_{:.0}pct", frac * 100.0),
+        offered_rps: Some(offered),
+        achieved_rps: (OPEN_N as u64 - errors) as f64 / elapsed,
+        p50_ms: percentile_ms(&mut lats, 0.50),
+        p99_ms: percentile_ms(&mut lats, 0.99),
+        errors,
+    }
+}
+
+/// Nearest-rank percentile in milliseconds; sorts in place.
+fn percentile_ms(lats: &mut [f64], p: f64) -> f64 {
+    if lats.is_empty() {
+        return f64::NAN;
+    }
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
+    lats[idx.min(lats.len() - 1)] * 1e3
+}
+
+/// `BENCH_serving_net.json`: one row per load shape with achieved
+/// req/s and p50/p99 milliseconds, the server-side batch distribution,
+/// and the headline pipelined-vs-closed throughput multiple CI gates.
+fn write_json(runs: &[Run], speedup: f64, mean_batch: f64, histogram: Json) {
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut row = BTreeMap::from([
+                ("name".to_string(), Json::Str(r.name.clone())),
+                ("achieved_rps".to_string(), Json::Num(r.achieved_rps)),
+                ("p50_ms".to_string(), Json::Num(r.p50_ms)),
+                ("p99_ms".to_string(), Json::Num(r.p99_ms)),
+                ("errors".to_string(), Json::Num(r.errors as f64)),
+            ]);
+            if let Some(o) = r.offered_rps {
+                row.insert("offered_rps".to_string(), Json::Num(o));
+            }
+            Json::Obj(row)
+        })
+        .collect();
+    let top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("serving_net".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("network".to_string(), Json::Str("vgg_tiny".to_string())),
+        (
+            "policy".to_string(),
+            Json::Str(format!("sparse F(2,3) p={SPARSITY}")),
+        ),
+        ("transport".to_string(), Json::Str("tcp loopback".to_string())),
+        ("results".to_string(), Json::Arr(rows)),
+        ("mean_batch".to_string(), Json::Num(mean_batch)),
+        ("batch_histogram".to_string(), histogram),
+        (
+            "pipelined_speedup_vs_closed".to_string(),
+            Json::Num(speedup),
+        ),
+    ]);
+    let path = "BENCH_serving_net.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

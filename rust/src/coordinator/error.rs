@@ -1,0 +1,227 @@
+//! [`ServeError`]: the single error surface a serving front-end speaks.
+//!
+//! The serving stack produces two typed error families — admission-time
+//! refusals ([`AdmissionError`]) and engine refusals ([`GraphError`]) —
+//! plus one wire-level policy error (non-finite request payloads).
+//! `ServeError` unifies them behind a **stable numeric code**
+//! ([`ServeError::code`]) that the network protocol carries verbatim in
+//! its error frames, so a remote client can branch on failures without
+//! parsing prose.
+//!
+//! # Code stability contract
+//!
+//! Codes are append-only: a published code never renumbers and is never
+//! reused for a different meaning (see `PROTOCOL.md`).  The table-driven
+//! test in `tests/robustness.rs` pins every code and fails on any
+//! collision or renumbering.  The numbering leaves gaps on purpose:
+//!
+//! - `1..=15`   — admission-time refusals (queue, shutdown, deadline,
+//!   breaker, worker fault);
+//! - `16..=47`  — engine ([`GraphError`]) refusals;
+//! - `48..`     — wire-protocol policy errors.
+
+use super::server::AdmissionError;
+use crate::nn::graph::GraphError;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Every way a served request can fail, unified behind one stable
+/// [`code`](ServeError::code) for the wire protocol.  In-process callers
+/// keep the inner typed error (via the variant payload or
+/// [`source`](std::error::Error::source)); remote callers get the code
+/// plus the rendered message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The serving pipeline refused or failed the request (admission
+    /// queue, deadline, breaker, supervisor, or the engine behind them —
+    /// [`AdmissionError::Engine`] recurses into the [`GraphError`] codes
+    /// so the wire code always names the root cause).
+    Admission(AdmissionError),
+    /// The engine refused the request directly (a [`Session`]
+    /// used without the server in front of it).
+    ///
+    /// [`Session`]: crate::executor::Session
+    Graph(GraphError),
+    /// The request payload carried a non-finite value (NaN/Inf) at the
+    /// given element.  The wire protocol serves finite f32 tensors only:
+    /// NaN payloads are structurally valid frames, so they fail with a
+    /// typed per-request error instead of a connection drop.
+    NonFinitePayload { index: usize },
+}
+
+impl ServeError {
+    /// The stable wire code for this error.  Codes never collide and
+    /// never renumber; the network protocol's error frames carry this
+    /// value verbatim.
+    pub fn code(&self) -> u16 {
+        match self {
+            ServeError::Admission(e) => admission_code(e),
+            ServeError::Graph(e) => graph_code(e),
+            ServeError::NonFinitePayload { .. } => 48,
+        }
+    }
+
+    /// The stable identifier for a wire code (the `PROTOCOL.md` error
+    /// table), or `None` for an unassigned code.  Useful for logging on
+    /// the client side, where only the numeric code crosses the wire.
+    pub fn code_name(code: u16) -> Option<&'static str> {
+        Some(match code {
+            1 => "queue_full",
+            2 => "shutting_down",
+            3 => "deadline_expired",
+            4 => "circuit_open",
+            5 => "worker_fault",
+            16 => "graph_shape",
+            17 => "graph_policy",
+            18 => "graph_policy_count",
+            19 => "graph_input",
+            20 => "graph_output",
+            21 => "graph_empty_batch",
+            22 => "graph_batch_too_large",
+            23 => "graph_weights",
+            24 => "graph_io",
+            25 => "graph_config",
+            26 => "graph_panic",
+            27 => "graph_poisoned",
+            48 => "non_finite_payload",
+            _ => return None,
+        })
+    }
+}
+
+fn admission_code(e: &AdmissionError) -> u16 {
+    match e {
+        AdmissionError::QueueFull { .. } => 1,
+        AdmissionError::ShuttingDown => 2,
+        AdmissionError::DeadlineExpired { .. } => 3,
+        AdmissionError::CircuitOpen { .. } => 4,
+        AdmissionError::WorkerFault { .. } => 5,
+        // The engine's refusal is the root cause — surface its code, not
+        // a generic "engine said no".
+        AdmissionError::Engine(g) => graph_code(g),
+    }
+}
+
+fn graph_code(e: &GraphError) -> u16 {
+    match e {
+        GraphError::Shape { .. } => 16,
+        GraphError::Policy(_) => 17,
+        GraphError::PolicyCount { .. } => 18,
+        GraphError::Input { .. } => 19,
+        GraphError::Output { .. } => 20,
+        GraphError::EmptyBatch => 21,
+        GraphError::BatchTooLarge { .. } => 22,
+        GraphError::Weights(_) => 23,
+        GraphError::Io(_) => 24,
+        GraphError::Config(_) => 25,
+        GraphError::Panic(_) => 26,
+        GraphError::Poisoned => 27,
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Admission(e) => e.fmt(f),
+            ServeError::Graph(e) => e.fmt(f),
+            ServeError::NonFinitePayload { index } => write!(
+                f,
+                "request payload has a non-finite value at element {index}; \
+                 the wire protocol serves finite f32 tensors only"
+            ),
+        }
+    }
+}
+
+impl StdError for ServeError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match self {
+            ServeError::Admission(e) => Some(e),
+            ServeError::Graph(e) => Some(e),
+            ServeError::NonFinitePayload { .. } => None,
+        }
+    }
+}
+
+impl From<AdmissionError> for ServeError {
+    fn from(e: AdmissionError) -> Self {
+        ServeError::Admission(e)
+    }
+}
+
+impl From<GraphError> for ServeError {
+    fn from(e: GraphError) -> Self {
+        ServeError::Graph(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn engine_refusals_surface_the_graph_code() {
+        let direct = ServeError::Graph(GraphError::EmptyBatch);
+        let wrapped = ServeError::Admission(AdmissionError::Engine(GraphError::EmptyBatch));
+        assert_eq!(direct.code(), wrapped.code());
+        assert_eq!(direct.code(), 21);
+    }
+
+    #[test]
+    fn every_assigned_code_has_a_name() {
+        let errors: Vec<ServeError> = vec![
+            AdmissionError::QueueFull { capacity: 1 }.into(),
+            AdmissionError::ShuttingDown.into(),
+            AdmissionError::DeadlineExpired {
+                deadline: Duration::from_millis(1),
+                waited: Duration::from_millis(2),
+            }
+            .into(),
+            AdmissionError::CircuitOpen {
+                consecutive_faults: 1,
+            }
+            .into(),
+            AdmissionError::WorkerFault { msg: "x".into() }.into(),
+            GraphError::Shape {
+                node: 0,
+                msg: "x".into(),
+            }
+            .into(),
+            GraphError::Policy("x".into()).into(),
+            GraphError::PolicyCount {
+                expected: 1,
+                got: 2,
+            }
+            .into(),
+            GraphError::Input {
+                index: 0,
+                expected: 1,
+                got: 2,
+            }
+            .into(),
+            GraphError::Output {
+                expected: 1,
+                got: 2,
+            }
+            .into(),
+            GraphError::EmptyBatch.into(),
+            GraphError::BatchTooLarge { got: 9, max: 4 }.into(),
+            GraphError::Weights("x".into()).into(),
+            GraphError::Io("x".into()).into(),
+            GraphError::Config("x".into()).into(),
+            GraphError::Panic("x".into()).into(),
+            GraphError::Poisoned.into(),
+            ServeError::NonFinitePayload { index: 3 },
+        ];
+        for e in &errors {
+            assert!(
+                ServeError::code_name(e.code()).is_some(),
+                "code {} of {e:?} has no name",
+                e.code()
+            );
+        }
+        assert!(ServeError::code_name(0).is_none(), "0 is reserved for ok");
+        assert!(ServeError::code_name(999).is_none());
+    }
+}

@@ -2,6 +2,8 @@
 //! percentiles over a bounded reservoir, and the robustness counters
 //! (rejections, deadline ejections, worker faults, peak queue depth).
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 #[derive(Debug, Clone)]
@@ -143,6 +145,62 @@ impl Metrics {
             self.conv_vwidths.join(","),
         )
     }
+
+    /// Machine-readable twin of [`Metrics::summary`] with a **stable key
+    /// schema**: every `key=value` counter in `summary()` appears under
+    /// the same key here (the test below enforces it), so the network
+    /// metrics endpoint and the human log line can never drift apart.
+    ///
+    /// Schema notes (`schema` bumps if any of this changes):
+    /// - percentiles are seconds, `null` while no latency was recorded;
+    /// - `simd` is the empty string until [`Metrics::record_simd`] runs
+    ///   (the summary's `?` placeholder is display-only);
+    /// - `vwidths` is an array of width names in graph order;
+    /// - `batch_histogram[s]` = launches with batch size `s` (extra key,
+    ///   not part of the summary line).
+    pub fn summary_json(&self) -> Json {
+        let pct = |p: f64| match self.latency_percentile(p) {
+            Some(v) => Json::Num(v),
+            None => Json::Null,
+        };
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        obj.insert("schema".into(), Json::Num(1.0));
+        obj.insert("requests".into(), Json::Num(self.requests as f64));
+        obj.insert("batches".into(), Json::Num(self.batches as f64));
+        obj.insert("mean_batch".into(), Json::Num(self.mean_batch()));
+        obj.insert("p50".into(), pct(50.0));
+        obj.insert("p99".into(), pct(99.0));
+        obj.insert("rejected_full".into(), Json::Num(self.rejected_full as f64));
+        obj.insert(
+            "ejected_deadline".into(),
+            Json::Num(self.ejected_deadline as f64),
+        );
+        obj.insert("worker_faults".into(), Json::Num(self.worker_faults as f64));
+        obj.insert(
+            "queue_depth_peak".into(),
+            Json::Num(self.queue_depth_peak as f64),
+        );
+        obj.insert("simd".into(), Json::Str(self.simd_features.clone()));
+        obj.insert(
+            "vwidths".into(),
+            Json::Arr(
+                self.conv_vwidths
+                    .iter()
+                    .map(|w| Json::Str(w.clone()))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "batch_histogram".into(),
+            Json::Arr(
+                self.batch_hist
+                    .iter()
+                    .map(|&n| Json::Num(n as f64))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +263,50 @@ mod tests {
         assert!(s.contains("simd=x86_64:sse2+avx2"), "{s}");
         assert!(s.contains("vwidths=[w8,scalar]"), "{s}");
         assert_eq!(m.conv_vwidths(), ["w8", "scalar"]);
+    }
+
+    #[test]
+    fn summary_json_covers_every_summary_counter() {
+        let mut m = Metrics::new(4, 16);
+        m.record_batch(4);
+        m.record_batch(2);
+        m.record_latency(Duration::from_millis(3));
+        m.record_rejected_full();
+        m.record_ejection();
+        m.record_worker_fault();
+        m.record_queue_depth(5);
+        m.record_simd("x86_64:sse2", vec!["w4".into()]);
+
+        let json = m.summary_json();
+        let obj = json.as_obj().expect("summary_json is an object");
+
+        // Stable-schema contract: every `key=value` token of the human
+        // summary line has a JSON twin under the same key.
+        for token in m.summary().split_whitespace() {
+            let key = token.split('=').next().unwrap();
+            assert!(
+                obj.contains_key(key),
+                "summary key {key:?} missing from summary_json: {json}"
+            );
+        }
+
+        // The document round-trips through our own parser and the
+        // counters survive.
+        let parsed = Json::parse(&json.to_string()).expect("self-parse");
+        assert_eq!(parsed.req("requests").unwrap().as_f64(), Some(6.0));
+        assert_eq!(parsed.req("batches").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.req("mean_batch").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.req("rejected_full").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.req("queue_depth_peak").unwrap().as_f64(), Some(5.0));
+        assert_eq!(parsed.req("simd").unwrap().as_str(), Some("x86_64:sse2"));
+        let hist = parsed.req("batch_histogram").unwrap().as_arr().unwrap();
+        assert_eq!(hist[4].as_f64(), Some(1.0));
+        assert_eq!(hist[2].as_f64(), Some(1.0));
+        // No latency recorded → p50 is null, not a fake zero.
+        assert!(matches!(
+            Metrics::new(4, 16).summary_json().req("p50").unwrap(),
+            &Json::Null
+        ));
     }
 
     #[test]

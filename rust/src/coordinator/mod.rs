@@ -20,17 +20,29 @@
 //!
 //! Thread model: std::thread + mpsc + condvar (the offline crate set has
 //! no tokio); one worker owns the engine, callers hold the server handle.
+//!
+//! The [`net`] module puts a TCP front-end in front of the same
+//! admission queue: a length-prefixed binary protocol (`PROTOCOL.md`)
+//! whose error frames carry the stable [`ServeError`] codes, plus an
+//! in-band metrics endpoint serving [`Metrics::summary_json`].  Servers
+//! are configured through [`ServeBuilder`], which validates the knob
+//! combination at build time.
 
 pub mod batcher;
+pub mod error;
 pub mod fault;
 pub mod metrics;
+pub mod net;
 pub mod server;
 pub mod supervisor;
 
 pub use batcher::{BatchPlan, Batcher};
+pub use error::ServeError;
 pub use fault::{render_log, FaultEvent, FaultPlan};
 pub use metrics::Metrics;
+pub use net::{NetClient, NetError, NetServer};
 pub use server::{
-    AdmissionError, AdmissionPolicy, InferenceServer, NativeServerConfig, Reply, ServerConfig,
+    AdmissionError, AdmissionPolicy, InferenceServer, NativeServerConfig, Reply, ServeBuilder,
+    ServerConfig,
 };
 pub use supervisor::RestartPolicy;

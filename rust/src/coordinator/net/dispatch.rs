@@ -1,0 +1,109 @@
+//! The dispatch layer: decoded [`wire`](super::wire) frames onto the
+//! [`InferenceServer`]'s bounded-admission path, and typed serving
+//! errors onto stable wire codes.
+//!
+//! This layer owns no socket and no thread — it is a pair of pure-ish
+//! functions over a server handle, so the whole error-code contract is
+//! testable with an in-memory server and no listener:
+//!
+//! - [`dispatch`] applies the wire payload policy (finite tensors only),
+//!   converts the frame's deadline field, and enqueues through
+//!   [`InferenceServer::infer_async_deadline`].  Synchronous refusals
+//!   (full queue, open breaker, shutdown, wrong input size, NaN policy)
+//!   come back immediately as [`Dispatched::Now`] error frames; admitted
+//!   requests come back as [`Dispatched::Pending`] with the reply
+//!   channel.
+//! - [`resolve`] blocks on an admitted request's completion and wraps it
+//!   as the wire response — logits, or the error frame carrying
+//!   [`ServeError::code`] verbatim.
+//!
+//! The listener (one writer thread per connection) resolves pending
+//! replies in admission order, which keeps responses in request order
+//! per connection while stayed-open connections pipeline freely.
+
+use super::super::error::ServeError;
+use super::super::server::{AdmissionError, InferenceServer, Reply};
+use super::wire::{Request, Response};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// The immediate outcome of dispatching one decoded frame.
+#[derive(Debug)]
+pub enum Dispatched {
+    /// Resolved synchronously: a metrics snapshot, a policy failure, or
+    /// an admission-time refusal.
+    Now(Response),
+    /// Admitted into the batcher: the completion arrives on `reply`
+    /// (resolve it with [`resolve`]).
+    Pending { id: u64, reply: Reply },
+}
+
+/// Wrap a typed serving error as the wire error frame for request `id`.
+/// The frame's code field is [`ServeError::code`] verbatim — the
+/// protocol's error-code table IS the `ServeError` table.
+pub fn error_response(id: u64, err: &ServeError) -> Response {
+    Response::Error {
+        id,
+        code: err.code(),
+        msg: err.to_string(),
+    }
+}
+
+/// Map one decoded request onto the serving pipeline.
+pub fn dispatch(server: &InferenceServer, req: Request) -> Dispatched {
+    match req {
+        Request::Metrics { id } => {
+            let json = server
+                .metrics
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .summary_json()
+                .to_string();
+            Dispatched::Now(Response::MetricsJson { id, json })
+        }
+        Request::Infer {
+            id,
+            deadline_ms,
+            image,
+        } => {
+            // The wire payload policy (see Request::first_non_finite):
+            // NaN/Inf tensors fail typed, per request, not per socket.
+            if let Some(index) = image.iter().position(|v| !v.is_finite()) {
+                let err = ServeError::NonFinitePayload { index };
+                return Dispatched::Now(error_response(id, &err));
+            }
+            // deadline_ms == 0 means "server default", so route through
+            // infer_async (which stamps the configured default); an
+            // explicit deadline overrides it.
+            let admitted = if deadline_ms == 0 {
+                server.infer_async(image)
+            } else {
+                server.infer_async_deadline(
+                    image,
+                    Some(Duration::from_millis(deadline_ms as u64)),
+                )
+            };
+            match admitted {
+                Ok(reply) => Dispatched::Pending { id, reply },
+                Err(e) => Dispatched::Now(error_response(id, &ServeError::Admission(e))),
+            }
+        }
+    }
+}
+
+/// Block on an admitted request's single completion and wrap it as the
+/// wire response.  A disconnected reply channel (the worker thread died
+/// with the request in flight, every stranded completion already sent)
+/// maps to a typed worker-fault frame, never a hang or a silent close.
+pub fn resolve(id: u64, reply: &Reply) -> Response {
+    match reply.recv() {
+        Ok(Ok(values)) => Response::Logits { id, values },
+        Ok(Err(e)) => error_response(id, &ServeError::Admission(e)),
+        Err(mpsc::RecvError) => error_response(
+            id,
+            &ServeError::Admission(AdmissionError::WorkerFault {
+                msg: "worker thread dropped the reply channel".to_string(),
+            }),
+        ),
+    }
+}

@@ -1,0 +1,453 @@
+//! `coordinator::net` — the network-attached serving front-end: a
+//! std-only TCP listener speaking the length-prefixed binary protocol of
+//! `PROTOCOL.md` in front of the bounded-admission batcher.
+//!
+//! The stack is three separately testable layers (the driver/simif
+//! split: keep the wire format, the mapping onto the engine, and the
+//! socket plumbing from ever being one untestable lump):
+//!
+//! - [`wire`] — the pure frame codec.  No sockets; property-testable on
+//!   byte slices.
+//! - [`dispatch`] — decoded frames onto
+//!   [`InferenceServer::infer_async_deadline`], typed errors onto the
+//!   stable [`ServeError`](super::ServeError) codes.  No sockets either.
+//! - [`NetServer`] (this module) — the accept loop and per-connection
+//!   reader/writer threads, plus graceful drain on shutdown reusing the
+//!   server's drain semantics.
+//!
+//! Thread model (std::thread + mpsc, no async runtime in the offline
+//! crate set): one accept thread; per connection, a **reader** that
+//! decodes frames and admits them into the batcher the moment they
+//! arrive, and a **writer** that resolves completions in admission
+//! order.  A client that pipelines N requests on one connection
+//! therefore fills fused batches — the whole point of putting a batcher
+//! behind the socket — while responses still arrive in request order.
+//!
+//! The metrics endpoint is in-band: a [`wire::KIND_METRICS`] frame on
+//! any connection answers with the
+//! [`Metrics::summary_json`](super::Metrics::summary_json) document.
+
+pub mod dispatch;
+pub mod wire;
+
+use super::server::InferenceServer;
+use dispatch::Dispatched;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often blocked accept/read loops re-check the shutdown flag.  Pure
+/// shutdown-latency bound; no data path waits on it.
+const POLL: Duration = Duration::from_millis(20);
+
+/// One response slot in a connection's in-order writer queue.
+enum WriterItem {
+    /// Already resolved (refusal, metrics, payload-policy failure).
+    Now(wire::Response),
+    /// Admitted into the batcher; the writer blocks on the reply.
+    Pending {
+        id: u64,
+        reply: super::server::Reply,
+    },
+}
+
+/// A running TCP front-end over an [`InferenceServer`].
+///
+/// Binding takes ownership of the server: every connection dispatches
+/// into the same bounded admission queue, so network clients and the
+/// breaker/deadline/drain machinery behind [`InferenceServer`] compose
+/// with zero new serving semantics.  [`NetServer::shutdown`] stops
+/// accepting, drains the engine (queued requests complete and flush to
+/// their sockets), then joins every connection thread; dropping the
+/// handle does the same.
+pub struct NetServer {
+    server: Arc<InferenceServer>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl std::fmt::Debug for NetServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetServer")
+            .field("addr", &self.addr)
+            .field("server", &self.server)
+            .finish_non_exhaustive()
+    }
+}
+
+impl NetServer {
+    /// Bind the listener and start accepting.  `addr` is any
+    /// `ToSocketAddrs` (use port 0 to let the OS pick; read the bound
+    /// address back with [`NetServer::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs, server: InferenceServer) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        // Non-blocking accept + poll: std has no timed accept, and a
+        // blocking one would pin the accept thread past shutdown.
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let server = Arc::new(server);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let server = Arc::clone(&server);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let server = Arc::clone(&server);
+                            let stop = Arc::clone(&stop);
+                            let handle =
+                                std::thread::spawn(move || serve_connection(stream, server, stop));
+                            lock_poisonless(&conns).push(handle);
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL);
+                        }
+                        // A transient accept failure (EMFILE, aborted
+                        // handshake) must not kill the listener.
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                }
+            })
+        };
+
+        Ok(Self {
+            server,
+            addr,
+            stop,
+            accept: Mutex::new(Some(accept)),
+            conns,
+        })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The inference server behind the listener (metrics, queue depth,
+    /// breaker state — the same handle in-process callers hold).
+    pub fn server(&self) -> &InferenceServer {
+        &self.server
+    }
+
+    /// The metrics document the in-band metrics endpoint serves, for
+    /// in-process consumers (same bytes a [`wire::KIND_METRICS`] frame
+    /// returns).
+    pub fn metrics_json(&self) -> String {
+        self.server
+            .metrics
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .summary_json()
+            .to_string()
+    }
+
+    /// Graceful drain: stop accepting, drain the engine (every queued
+    /// request completes — the server's drain bypasses the batching
+    /// window), flush the completions to their sockets, and join every
+    /// thread.  Idempotent; `drop` calls it.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Drain, don't reject: admitted network requests complete with
+        // logits; only *new* admissions see ShuttingDown.
+        self.server.shutdown(true);
+        if let Some(h) = lock_poisonless(&self.accept).take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = lock_poisonless(&self.conns).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn lock_poisonless<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One connection: reader half (this thread) + writer half (spawned).
+///
+/// The reader admits each decoded frame immediately and hands the writer
+/// an in-order queue of resolved-or-pending responses; the writer blocks
+/// on each pending reply in turn.  Requests therefore batch across the
+/// window while responses stay in request order per connection.
+fn serve_connection(stream: TcpStream, server: Arc<InferenceServer>, stop: Arc<AtomicBool>) {
+    // Latency over throughput for small frames; best-effort.
+    let _ = stream.set_nodelay(true);
+    // Timed reads so the reader notices shutdown; reads buffer into
+    // `buf` ourselves, so a timeout can never tear a frame.
+    let _ = stream.set_read_timeout(Some(POLL));
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<WriterItem>();
+    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
+
+    read_loop(stream, &server, &stop, &tx);
+
+    // Reader done (peer closed, framing error, or shutdown): close the
+    // queue so the writer exits after flushing what is still pending.
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn read_loop(
+    mut stream: TcpStream,
+    server: &InferenceServer,
+    stop: &AtomicBool,
+    tx: &mpsc::Sender<WriterItem>,
+) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        // Drain every complete frame already buffered.
+        loop {
+            match wire::decode_request(&buf) {
+                Ok(Some((req, consumed))) => {
+                    buf.drain(..consumed);
+                    let item = match dispatch::dispatch(server, req) {
+                        Dispatched::Now(resp) => WriterItem::Now(resp),
+                        Dispatched::Pending { id, reply } => WriterItem::Pending { id, reply },
+                    };
+                    if tx.send(item).is_err() {
+                        return; // writer gone (peer closed its read half)
+                    }
+                }
+                Ok(None) => break, // incomplete — read more
+                // Structural corruption: there is no way to resync a
+                // byte stream after a bad header, so the connection
+                // dies.  (Content errors like NaN payloads never land
+                // here — dispatch answers those with a typed frame.)
+                Err(_) => return,
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue; // timed poll — re-check stop
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<WriterItem>) {
+    let mut out = Vec::new();
+    for item in rx {
+        let resp = match item {
+            WriterItem::Now(resp) => resp,
+            WriterItem::Pending { id, reply } => dispatch::resolve(id, &reply),
+        };
+        out.clear();
+        wire::encode_response(&resp, &mut out);
+        if stream.write_all(&out).is_err() {
+            // The peer is gone; keep draining replies so every admitted
+            // request is still resolved (no-silent-drop on our side).
+            for left in rx.iter() {
+                if let WriterItem::Pending { id, reply } = left {
+                    let _ = dispatch::resolve(id, &reply);
+                }
+            }
+            return;
+        }
+    }
+    let _ = stream.flush();
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side failure talking to a [`NetServer`].
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport failure (connect, read, write).
+    Io(io::Error),
+    /// The server sent bytes that do not decode as protocol frames.
+    Wire(wire::WireError),
+    /// The server answered with a typed error frame; `code` is the
+    /// stable [`ServeError::code`](super::ServeError::code) value.
+    Remote { code: u16, msg: String },
+    /// The server answered request `want` with a frame for `got` — a
+    /// protocol-order violation (responses are in request order per
+    /// connection).
+    OutOfOrder { want: u64, got: u64 },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "transport error: {e}"),
+            NetError::Wire(e) => write!(f, "protocol error: {e}"),
+            NetError::Remote { code, msg } => {
+                write!(f, "server refused (code {code}): {msg}")
+            }
+            NetError::OutOfOrder { want, got } => {
+                write!(f, "response for request {got} while waiting on {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetError::Io(e) => Some(e),
+            NetError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> Self {
+        NetError::Io(e)
+    }
+}
+
+impl From<wire::WireError> for NetError {
+    fn from(e: wire::WireError) -> Self {
+        NetError::Wire(e)
+    }
+}
+
+/// A minimal blocking client for the wire protocol — what the benches,
+/// the integration tests, and any external driver use.  One instance
+/// owns one connection; [`NetClient::send_infer`] / [`NetClient::recv`]
+/// are split so a load generator can pipeline (N outstanding requests on one
+/// connection is exactly what fills fused batches server-side).
+#[derive(Debug)]
+pub struct NetClient {
+    stream: TcpStream,
+    /// Undecoded bytes read past the last returned frame.
+    buf: Vec<u8>,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self {
+            stream,
+            buf: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    /// Send one inference request without waiting; returns its id.
+    /// `deadline_ms = 0` leaves the server's default deadline in force.
+    pub fn send_infer(&mut self, image: &[f32], deadline_ms: u32) -> Result<u64, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut out = Vec::with_capacity(wire::HEADER_LEN + image.len() * 4);
+        wire::encode_request(
+            &wire::Request::Infer {
+                id,
+                deadline_ms,
+                image: image.to_vec(),
+            },
+            &mut out,
+        );
+        self.stream.write_all(&out)?;
+        Ok(id)
+    }
+
+    /// Send one metrics request without waiting; returns its id.
+    pub fn send_metrics(&mut self) -> Result<u64, NetError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut out = Vec::with_capacity(wire::HEADER_LEN);
+        wire::encode_request(&wire::Request::Metrics { id }, &mut out);
+        self.stream.write_all(&out)?;
+        Ok(id)
+    }
+
+    /// Block until the next response frame arrives.
+    pub fn recv(&mut self) -> Result<wire::Response, NetError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some((resp, consumed)) = wire::decode_response(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok(resp);
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(NetError::Io(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "server closed the connection mid-frame",
+                    )))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(NetError::Io(e)),
+            }
+        }
+    }
+
+    /// One blocking inference round-trip under the server's default
+    /// deadline.
+    pub fn infer(&mut self, image: &[f32]) -> Result<Vec<f32>, NetError> {
+        self.infer_deadline(image, 0)
+    }
+
+    /// One blocking inference round-trip with an explicit deadline
+    /// (milliseconds; 0 = server default).
+    pub fn infer_deadline(
+        &mut self,
+        image: &[f32],
+        deadline_ms: u32,
+    ) -> Result<Vec<f32>, NetError> {
+        let id = self.send_infer(image, deadline_ms)?;
+        match self.recv()? {
+            wire::Response::Logits { id: got, values } if got == id => Ok(values),
+            wire::Response::Error { id: got, code, msg } if got == id => {
+                Err(NetError::Remote { code, msg })
+            }
+            other => Err(NetError::OutOfOrder {
+                want: id,
+                got: other.id(),
+            }),
+        }
+    }
+
+    /// One blocking metrics round-trip: the server's
+    /// [`Metrics::summary_json`](super::Metrics::summary_json) document.
+    pub fn metrics_json(&mut self) -> Result<String, NetError> {
+        let id = self.send_metrics()?;
+        match self.recv()? {
+            wire::Response::MetricsJson { id: got, json } if got == id => Ok(json),
+            wire::Response::Error { id: got, code, msg } if got == id => {
+                Err(NetError::Remote { code, msg })
+            }
+            other => Err(NetError::OutOfOrder {
+                want: id,
+                got: other.id(),
+            }),
+        }
+    }
+}

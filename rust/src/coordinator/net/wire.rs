@@ -1,0 +1,635 @@
+//! Pure frame codec for the serving wire protocol — no sockets, byte
+//! slices in, byte slices out, so the whole layer is property-testable
+//! (and fuzzable) without a listener.  See `PROTOCOL.md` for the
+//! normative spec.
+//!
+//! Both directions use one fixed 24-byte little-endian header followed
+//! by a variable payload:
+//!
+//! ```text
+//! request                              response
+//! [0..4)   magic  b"SWNP"              [0..4)   magic  b"SWNP"
+//! [4..6)   version u16 = 1             [4..6)   version u16 = 1
+//! [6]      kind: 0 infer, 1 metrics    [6]      kind: 0x80 logits,
+//! [7]      reserved = 0                         0x81 error, 0x82 metrics
+//! [8..16)  request id u64              [7]      reserved = 0
+//! [16..20) deadline millis u32         [8..16)  request id u64 (echoed)
+//!          (0 = server default)        [16..18) error code u16 (0 = ok)
+//! [20..24) payload f32 count u32       [18..20) reserved = 0
+//! payload: count * 4 bytes f32 LE      [20..24) payload byte length u32
+//!                                      payload: logits f32 LE / UTF-8
+//! ```
+//!
+//! Decoding is **streaming**: [`decode_request`] / [`decode_response`]
+//! return `Ok(None)` on an incomplete prefix (read more bytes and call
+//! again) and consume exactly one frame otherwise.  Structural errors
+//! ([`WireError`]) are fatal to a connection — after a bad magic or a
+//! lying length field there is no way to resynchronize a byte stream.
+//! Content policy (finite payloads) is deliberately *not* enforced here:
+//! a NaN payload is a well-formed frame, and the dispatcher fails it
+//! with a typed per-request error code instead of killing the socket
+//! (see [`super::dispatch`]).
+
+use std::fmt;
+
+/// Frame magic: every frame in either direction starts with these bytes.
+pub const MAGIC: [u8; 4] = *b"SWNP";
+
+/// Protocol version this build speaks.  The versioning rule (see
+/// `PROTOCOL.md`): the header layout for a given version never changes;
+/// any layout change bumps the version, and a decoder refuses versions
+/// it does not know with [`WireError::BadVersion`].
+pub const VERSION: u16 = 1;
+
+/// Fixed header length, both directions.
+pub const HEADER_LEN: usize = 24;
+
+/// Upper bound on a request payload, in f32 elements (16 MiB of tensor).
+/// A length field beyond it is treated as structural corruption, not an
+/// allocation request.
+pub const MAX_PAYLOAD_ELEMS: u32 = 1 << 22;
+
+/// Upper bound on a response payload, in bytes.
+pub const MAX_PAYLOAD_BYTES: u32 = MAX_PAYLOAD_ELEMS * 4;
+
+/// Request kind byte: run inference on the payload tensor.
+pub const KIND_INFER: u8 = 0;
+/// Request kind byte: stream the server metrics as JSON.
+pub const KIND_METRICS: u8 = 1;
+/// Response kind byte: the output tensor.
+pub const KIND_LOGITS: u8 = 0x80;
+/// Response kind byte: a typed failure (stable [`code`] in the header).
+///
+/// [`code`]: crate::coordinator::ServeError::code
+pub const KIND_ERROR: u8 = 0x81;
+/// Response kind byte: the metrics JSON document.
+pub const KIND_METRICS_JSON: u8 = 0x82;
+
+/// One decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run the image through the batcher.  `deadline_ms == 0` means the
+    /// server's default deadline applies.
+    Infer {
+        id: u64,
+        deadline_ms: u32,
+        image: Vec<f32>,
+    },
+    /// Read-only metrics snapshot (served as JSON).
+    Metrics { id: u64 },
+}
+
+impl Request {
+    /// The request id echoed back in the matching response.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Infer { id, .. } | Request::Metrics { id } => *id,
+        }
+    }
+
+    /// The wire payload policy: inference tensors must be finite.
+    /// Returns the index of the first non-finite element, if any.
+    pub fn first_non_finite(&self) -> Option<usize> {
+        match self {
+            Request::Infer { image, .. } => image.iter().position(|v| !v.is_finite()),
+            Request::Metrics { .. } => None,
+        }
+    }
+}
+
+/// One decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// The output tensor for request `id`.
+    Logits { id: u64, values: Vec<f32> },
+    /// Request `id` failed with a stable [`ServeError`] code; `msg` is
+    /// the rendered error for humans, `code` is the contract.
+    ///
+    /// [`ServeError`]: crate::coordinator::ServeError
+    Error { id: u64, code: u16, msg: String },
+    /// The metrics snapshot for request `id`, as a JSON document.
+    MetricsJson { id: u64, json: String },
+}
+
+impl Response {
+    /// The request id this response answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Logits { id, .. }
+            | Response::Error { id, .. }
+            | Response::MetricsJson { id, .. } => *id,
+        }
+    }
+}
+
+/// Structural decode failure.  Every variant is fatal to the connection
+/// that produced it: a byte stream with a corrupt header cannot be
+/// resynchronized.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Strict decoding (`decode_*_exact`) found fewer bytes than one
+    /// complete frame needs.
+    Truncated { need: usize, got: usize },
+    /// The frame does not start with [`MAGIC`].
+    BadMagic { got: [u8; 4] },
+    /// The peer speaks a protocol version this build does not.
+    BadVersion { got: u16 },
+    /// Unassigned kind byte for this direction.
+    UnknownKind { got: u8 },
+    /// The length field exceeds the protocol bound — corruption, not a
+    /// request to allocate gigabytes.
+    Oversized { bytes: u64, max: u64 },
+    /// A structurally inconsistent payload (a metrics request carrying a
+    /// tensor, a logits payload not a multiple of 4 bytes, ...).
+    BadPayload { kind: u8, detail: &'static str },
+    /// Strict decoding found bytes after the frame.
+    TrailingBytes { extra: usize },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            WireError::BadMagic { got } => {
+                write!(f, "bad frame magic {got:?} (want {MAGIC:?})")
+            }
+            WireError::BadVersion { got } => {
+                write!(f, "unsupported protocol version {got} (this build speaks {VERSION})")
+            }
+            WireError::UnknownKind { got } => write!(f, "unknown frame kind {got:#04x}"),
+            WireError::Oversized { bytes, max } => {
+                write!(f, "payload length {bytes} exceeds the protocol bound {max}")
+            }
+            WireError::BadPayload { kind, detail } => {
+                write!(f, "inconsistent payload for kind {kind:#04x}: {detail}")
+            }
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} unexpected bytes after the frame")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn push_header(out: &mut Vec<u8>, kind: u8, id: u64, h16: u32, h20: u32) {
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0); // reserved
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&h16.to_le_bytes());
+    out.extend_from_slice(&h20.to_le_bytes());
+}
+
+/// Append one encoded request frame to `out`.
+pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
+    match req {
+        Request::Infer {
+            id,
+            deadline_ms,
+            image,
+        } => {
+            push_header(out, KIND_INFER, *id, *deadline_ms, image.len() as u32);
+            for v in image {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Request::Metrics { id } => push_header(out, KIND_METRICS, *id, 0, 0),
+    }
+}
+
+/// Append one encoded response frame to `out`.
+pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
+    match resp {
+        Response::Logits { id, values } => {
+            push_header(out, KIND_LOGITS, *id, 0, (values.len() * 4) as u32);
+            for v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Response::Error { id, code, msg } => {
+            push_header(out, KIND_ERROR, *id, *code as u32, msg.len() as u32);
+            out.extend_from_slice(msg.as_bytes());
+        }
+        Response::MetricsJson { id, json } => {
+            push_header(out, KIND_METRICS_JSON, *id, 0, json.len() as u32);
+            out.extend_from_slice(json.as_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+fn u16_at(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([b[off], b[off + 1]])
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(raw)
+}
+
+/// Validate the fixed header prefix shared by both directions; returns
+/// the kind byte.  Reserved bytes are ignored on read (writers must zero
+/// them) so a future minor revision can use them without breaking v1
+/// decoders.
+fn check_header(buf: &[u8]) -> Result<u8, WireError> {
+    if buf[0..4] != MAGIC {
+        return Err(WireError::BadMagic {
+            got: [buf[0], buf[1], buf[2], buf[3]],
+        });
+    }
+    let version = u16_at(buf, 4);
+    if version != VERSION {
+        return Err(WireError::BadVersion { got: version });
+    }
+    Ok(buf[6])
+}
+
+/// Streaming request decode: `Ok(None)` means the buffer holds an
+/// incomplete frame prefix (read more and retry); `Ok(Some((frame, n)))`
+/// consumed exactly `n` bytes.  Any `Err` is fatal to the stream.
+pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, WireError> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let kind = check_header(buf)?;
+    let id = u64_at(buf, 8);
+    let deadline_ms = u32_at(buf, 16);
+    let elems = u32_at(buf, 20);
+    match kind {
+        KIND_INFER => {
+            if elems > MAX_PAYLOAD_ELEMS {
+                return Err(WireError::Oversized {
+                    bytes: elems as u64 * 4,
+                    max: MAX_PAYLOAD_BYTES as u64,
+                });
+            }
+            let need = HEADER_LEN + elems as usize * 4;
+            if buf.len() < need {
+                return Ok(None);
+            }
+            let image: Vec<f32> = buf[HEADER_LEN..need]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Some((
+                Request::Infer {
+                    id,
+                    deadline_ms,
+                    image,
+                },
+                need,
+            )))
+        }
+        KIND_METRICS => {
+            if elems != 0 {
+                return Err(WireError::BadPayload {
+                    kind,
+                    detail: "metrics requests carry no payload",
+                });
+            }
+            Ok(Some((Request::Metrics { id }, HEADER_LEN)))
+        }
+        other => Err(WireError::UnknownKind { got: other }),
+    }
+}
+
+/// Streaming response decode; same contract as [`decode_request`].
+pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>, WireError> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let kind = check_header(buf)?;
+    let id = u64_at(buf, 8);
+    let code = u16_at(buf, 16);
+    let nbytes = u32_at(buf, 20);
+    if nbytes > MAX_PAYLOAD_BYTES {
+        return Err(WireError::Oversized {
+            bytes: nbytes as u64,
+            max: MAX_PAYLOAD_BYTES as u64,
+        });
+    }
+    let need = HEADER_LEN + nbytes as usize;
+    if buf.len() < need {
+        return Ok(None);
+    }
+    let payload = &buf[HEADER_LEN..need];
+    let resp = match kind {
+        KIND_LOGITS => {
+            if nbytes % 4 != 0 {
+                return Err(WireError::BadPayload {
+                    kind,
+                    detail: "logits payload must be a whole number of f32s",
+                });
+            }
+            Response::Logits {
+                id,
+                values: payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            }
+        }
+        // Lossy UTF-8: the message is for humans, the code is the
+        // contract — a mangled message must not kill the frame.
+        KIND_ERROR => Response::Error {
+            id,
+            code,
+            msg: String::from_utf8_lossy(payload).into_owned(),
+        },
+        KIND_METRICS_JSON => Response::MetricsJson {
+            id,
+            json: String::from_utf8_lossy(payload).into_owned(),
+        },
+        other => return Err(WireError::UnknownKind { got: other }),
+    };
+    Ok(Some((resp, need)))
+}
+
+/// Strict decode of exactly one request frame: truncation and trailing
+/// bytes are errors.  The streaming form is what a connection uses; this
+/// is for tests and one-shot buffers.
+pub fn decode_request_exact(buf: &[u8]) -> Result<Request, WireError> {
+    match decode_request(buf)? {
+        Some((req, n)) if n == buf.len() => Ok(req),
+        Some((_, n)) => Err(WireError::TrailingBytes {
+            extra: buf.len() - n,
+        }),
+        None => Err(WireError::Truncated {
+            need: HEADER_LEN.max(expected_len_request(buf)),
+            got: buf.len(),
+        }),
+    }
+}
+
+/// Strict decode of exactly one response frame (see
+/// [`decode_request_exact`]).
+pub fn decode_response_exact(buf: &[u8]) -> Result<Response, WireError> {
+    match decode_response(buf)? {
+        Some((resp, n)) if n == buf.len() => Ok(resp),
+        Some((_, n)) => Err(WireError::TrailingBytes {
+            extra: buf.len() - n,
+        }),
+        None => Err(WireError::Truncated {
+            need: HEADER_LEN.max(expected_len_response(buf)),
+            got: buf.len(),
+        }),
+    }
+}
+
+fn expected_len_request(buf: &[u8]) -> usize {
+    if buf.len() < HEADER_LEN {
+        return HEADER_LEN;
+    }
+    HEADER_LEN + u32_at(buf, 20) as usize * 4
+}
+
+fn expected_len_response(buf: &[u8]) -> usize {
+    if buf.len() < HEADER_LEN {
+        return HEADER_LEN;
+    }
+    HEADER_LEN + u32_at(buf, 20) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn encode_req(req: &Request) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_request(req, &mut out);
+        out
+    }
+
+    fn encode_resp(resp: &Response) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_response(resp, &mut out);
+        out
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        // Seeded sweep over arbitrary frames: encode -> decode is the
+        // identity, with the streaming decoder consuming exactly the
+        // frame at every split point of the byte stream.
+        let mut rng = Rng::new(0x51aB);
+        for case in 0..200 {
+            let req = if case % 5 == 4 {
+                Request::Metrics {
+                    id: rng.next_u64(),
+                }
+            } else {
+                let n = (rng.next_u64() % 300) as usize;
+                Request::Infer {
+                    id: rng.next_u64(),
+                    deadline_ms: (rng.next_u64() % 100_000) as u32,
+                    image: (0..n).map(|_| rng.next_f32_symmetric()).collect(),
+                }
+            };
+            let bytes = encode_req(&req);
+            assert_eq!(decode_request_exact(&bytes).expect("decodes"), req);
+            // Every strict prefix is "incomplete", never an error.
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode_request(&bytes[..cut]).expect("prefix is not corrupt"),
+                    None,
+                    "case {case} cut {cut}"
+                );
+            }
+            // A concatenated stream decodes frame by frame.
+            let mut stream = bytes.clone();
+            stream.extend_from_slice(&bytes);
+            let (first, n) = decode_request(&stream).expect("ok").expect("complete");
+            assert_eq!(first, req);
+            assert_eq!(n, bytes.len());
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_property() {
+        let mut rng = Rng::new(0xF00D);
+        for case in 0..200 {
+            let resp = match case % 3 {
+                0 => Response::Logits {
+                    id: rng.next_u64(),
+                    values: (0..(rng.next_u64() % 40) as usize)
+                        .map(|_| rng.next_f32_symmetric())
+                        .collect(),
+                },
+                1 => Response::Error {
+                    id: rng.next_u64(),
+                    code: (rng.next_u64() % 60) as u16,
+                    msg: format!("failure #{case} — det λ≤1"),
+                },
+                _ => Response::MetricsJson {
+                    id: rng.next_u64(),
+                    json: format!("{{\"requests\":{case}}}"),
+                },
+            };
+            let bytes = encode_resp(&resp);
+            assert_eq!(decode_response_exact(&bytes).expect("decodes"), resp);
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode_response(&bytes[..cut]).expect("prefix is not corrupt"),
+                    None
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_header_is_incomplete_not_corrupt() {
+        // A short read is normal on a socket: the streaming decoder asks
+        // for more bytes; only the strict form calls it an error.
+        let bytes = encode_req(&Request::Metrics { id: 7 });
+        assert_eq!(decode_request(&bytes[..HEADER_LEN - 1]).expect("ok"), None);
+        match decode_request_exact(&bytes[..HEADER_LEN - 1]) {
+            Err(WireError::Truncated { need, got }) => {
+                assert_eq!(need, HEADER_LEN);
+                assert_eq!(got, HEADER_LEN - 1);
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_reports_the_full_frame_length() {
+        let req = Request::Infer {
+            id: 1,
+            deadline_ms: 0,
+            image: vec![1.0; 10],
+        };
+        let bytes = encode_req(&req);
+        match decode_request_exact(&bytes[..bytes.len() - 3]) {
+            Err(WireError::Truncated { need, got }) => {
+                assert_eq!(need, HEADER_LEN + 40);
+                assert_eq!(got, bytes.len() - 3);
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_fatal() {
+        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        bytes[0] = b'X';
+        match decode_request(&bytes) {
+            Err(WireError::BadMagic { got }) => assert_eq!(&got[1..], &MAGIC[1..]),
+            other => panic!("want BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_refused() {
+        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        bytes[4] = 0xFF;
+        assert_eq!(
+            decode_request(&bytes),
+            Err(WireError::BadVersion { got: 0x00FF })
+        );
+    }
+
+    #[test]
+    fn unknown_kind_is_refused_per_direction() {
+        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        bytes[6] = 9;
+        assert_eq!(decode_request(&bytes), Err(WireError::UnknownKind { got: 9 }));
+        // A *request* kind arriving on the response direction is equally
+        // unknown: the kind spaces are disjoint on purpose.
+        let bytes = encode_req(&Request::Metrics { id: 7 });
+        assert_eq!(
+            decode_response(&bytes),
+            Err(WireError::UnknownKind { got: KIND_METRICS })
+        );
+    }
+
+    #[test]
+    fn oversized_length_is_corruption_not_an_allocation() {
+        let mut bytes = encode_req(&Request::Infer {
+            id: 1,
+            deadline_ms: 0,
+            image: vec![0.0; 4],
+        });
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode_request(&bytes) {
+            Err(WireError::Oversized { bytes: b, max }) => {
+                assert_eq!(b, u32::MAX as u64 * 4);
+                assert_eq!(max, MAX_PAYLOAD_BYTES as u64);
+            }
+            other => panic!("want Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_request_with_payload_is_inconsistent() {
+        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        bytes[20] = 1;
+        assert!(matches!(
+            decode_request(&bytes),
+            Err(WireError::BadPayload { .. })
+        ));
+    }
+
+    #[test]
+    fn nan_payload_decodes_but_fails_the_finite_policy() {
+        // NaN is a structurally valid frame — the connection survives;
+        // the dispatcher fails the request with a typed code instead.
+        let req = Request::Infer {
+            id: 3,
+            deadline_ms: 0,
+            image: vec![1.0, f32::NAN, 2.0],
+        };
+        let bytes = encode_req(&req);
+        let decoded = decode_request_exact(&bytes).expect("NaN is not a framing error");
+        assert_eq!(decoded.first_non_finite(), Some(1));
+        let ok = Request::Infer {
+            id: 3,
+            deadline_ms: 0,
+            image: vec![1.0, f32::INFINITY],
+        };
+        assert_eq!(ok.first_non_finite(), Some(1), "infinities fail too");
+        assert_eq!(Request::Metrics { id: 1 }.first_non_finite(), None);
+    }
+
+    #[test]
+    fn trailing_bytes_only_fail_strict_decoding() {
+        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        bytes.push(0xAA);
+        assert_eq!(
+            decode_request_exact(&bytes),
+            Err(WireError::TrailingBytes { extra: 1 })
+        );
+        // The streaming decoder leaves the extra byte for the next frame.
+        let (req, n) = decode_request(&bytes).expect("ok").expect("complete");
+        assert_eq!(req, Request::Metrics { id: 7 });
+        assert_eq!(n, bytes.len() - 1);
+    }
+
+    #[test]
+    fn error_frames_carry_the_code_in_the_header() {
+        let resp = Response::Error {
+            id: 9,
+            code: 21,
+            msg: "empty batch".into(),
+        };
+        let bytes = encode_resp(&resp);
+        assert_eq!(u16_at(&bytes, 16), 21, "code lives at header offset 16");
+        assert_eq!(decode_response_exact(&bytes).expect("decodes"), resp);
+    }
+}

@@ -179,46 +179,15 @@ impl ServerConfig {
     }
 }
 
-/// Configuration for the native (in-process [`Session`]) serving path.
+/// Validated configuration for the native (in-process [`Session`])
+/// serving path — what [`InferenceServer::start_native`] consumes.
 /// The session is built by the caller — compile errors are typed
 /// [`GraphError`]s *before* any server thread exists.
 ///
-/// The robustness knobs all have conservative defaults; the example
-/// pins every one of them:
-///
-/// ```
-/// use std::time::Duration;
-/// use swcnn::coordinator::{
-///     AdmissionPolicy, InferenceServer, NativeServerConfig, RestartPolicy,
-/// };
-/// use swcnn::executor::{ExecPolicy, Session};
-/// use swcnn::nn::{graph::Synthetic, vgg_tiny};
-///
-/// let session = Session::uniform(
-///     vgg_tiny(),
-///     &mut Synthetic::new(7),
-///     ExecPolicy::sparse(2, 0.7),
-/// )
-/// .unwrap();
-/// let cfg = NativeServerConfig::new(session)
-///     // Bounded admission: at most 32 queued requests; a full queue
-///     // evicts the stalest one instead of refusing fresh traffic.
-///     .with_queue(32, AdmissionPolicy::DropOldest)
-///     // Every request expires 250ms after enqueue unless it carries
-///     // its own deadline; expired work is ejected pre-dispatch.
-///     .with_default_deadline(Some(Duration::from_millis(250)))
-///     // Supervisor: trip the breaker after 4 consecutive engine
-///     // faults, backing off 10ms → 20ms → ... capped at 100ms.
-///     .with_restart(RestartPolicy {
-///         breaker_threshold: 4,
-///         backoff_base: Duration::from_millis(10),
-///         backoff_max: Duration::from_millis(100),
-///         breaker_cooldown: Duration::from_millis(200),
-///     });
-/// let server = InferenceServer::start_native(cfg).unwrap();
-/// let logits = server.infer(vec![0.1; server.input_elements()]).unwrap();
-/// assert_eq!(logits.len(), 10);
-/// ```
+/// Build one through [`ServeBuilder`], which checks the knob
+/// combination at build time; the legacy `new()` / `with_*`
+/// constructors remain as deprecated shims for one release and perform
+/// no validation.
 pub struct NativeServerConfig {
     /// The compiled graph the worker serves.
     pub session: Session,
@@ -270,6 +239,11 @@ impl std::fmt::Debug for NativeServerConfig {
 }
 
 impl NativeServerConfig {
+    #[deprecated(
+        since = "0.9.0",
+        note = "use ServeBuilder::new(session), which validates the knob \
+                combination at build time"
+    )]
     pub fn new(session: Session) -> Self {
         Self {
             session,
@@ -287,12 +261,14 @@ impl NativeServerConfig {
 
     /// Serve with a tuned per-node profile (from [`crate::tuner::Tuner`]
     /// or [`TuneProfile::load`]).
+    #[deprecated(since = "0.9.0", note = "use ServeBuilder::profile")]
     pub fn with_profile(mut self, profile: TuneProfile) -> Self {
         self.profile = Some(profile);
         self
     }
 
     /// Bound the admission queue and pick the full-queue policy.
+    #[deprecated(since = "0.9.0", note = "use ServeBuilder::queue")]
     pub fn with_queue(mut self, capacity: usize, admission: AdmissionPolicy) -> Self {
         self.queue_capacity = capacity.max(1);
         self.admission = admission;
@@ -300,12 +276,14 @@ impl NativeServerConfig {
     }
 
     /// Default per-request deadline (measured from enqueue).
+    #[deprecated(since = "0.9.0", note = "use ServeBuilder::default_deadline")]
     pub fn with_default_deadline(mut self, deadline: Option<Duration>) -> Self {
         self.default_deadline = deadline;
         self
     }
 
     /// Supervisor restart / circuit-breaker policy.
+    #[deprecated(since = "0.9.0", note = "use ServeBuilder::restart")]
     pub fn with_restart(mut self, restart: RestartPolicy) -> Self {
         self.restart = restart;
         self
@@ -313,9 +291,225 @@ impl NativeServerConfig {
 
     /// Attach a deterministic fault schedule (robustness tests only).
     #[cfg(feature = "fault-injection")]
+    #[deprecated(since = "0.9.0", note = "use ServeBuilder::fault_plan")]
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
         self.fault_plan = Some(plan);
         self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServeBuilder — the one validated way to configure the native server
+// ---------------------------------------------------------------------------
+
+/// Builder for the native serving path: every knob the server has —
+/// batching, tuned profile, bounded admission, deadlines, supervisor
+/// policy, fault injection — in one place, **validated at build time**.
+/// An invalid combination is a typed [`GraphError::Config`] from
+/// [`ServeBuilder::build`], not a mystery at serve time.
+///
+/// ```
+/// use std::time::Duration;
+/// use swcnn::coordinator::{AdmissionPolicy, RestartPolicy, ServeBuilder};
+/// use swcnn::executor::{ExecPolicy, Session};
+/// use swcnn::nn::{graph::Synthetic, vgg_tiny};
+///
+/// let session = Session::uniform(
+///     vgg_tiny(),
+///     &mut Synthetic::new(7),
+///     ExecPolicy::sparse(2, 0.7),
+/// )
+/// .unwrap();
+/// let server = ServeBuilder::new(session)
+///     // Fused launches of up to 8, accumulated over a 2ms window.
+///     .max_batch(8)
+///     .window(Duration::from_millis(2))
+///     // Bounded admission: at most 32 queued requests; a full queue
+///     // evicts the stalest one instead of refusing fresh traffic.
+///     .queue(32, AdmissionPolicy::DropOldest)
+///     // Every request expires 250ms after enqueue unless it carries
+///     // its own deadline; expired work is ejected pre-dispatch.
+///     .default_deadline(Some(Duration::from_millis(250)))
+///     // Supervisor: trip the breaker after 4 consecutive engine
+///     // faults, backing off 10ms → 20ms → ... capped at 100ms.
+///     .restart(RestartPolicy {
+///         breaker_threshold: 4,
+///         backoff_base: Duration::from_millis(10),
+///         backoff_max: Duration::from_millis(100),
+///         breaker_cooldown: Duration::from_millis(200),
+///     })
+///     .start()
+///     .unwrap();
+/// let logits = server.infer(vec![0.1; server.input_elements()]).unwrap();
+/// assert_eq!(logits.len(), 10);
+/// ```
+pub struct ServeBuilder {
+    session: Session,
+    window: Duration,
+    max_batch: usize,
+    profile: Option<TuneProfile>,
+    queue_capacity: usize,
+    admission: AdmissionPolicy,
+    default_deadline: Option<Duration>,
+    restart: RestartPolicy,
+    #[cfg(feature = "fault-injection")]
+    fault_plan: Option<FaultPlan>,
+}
+
+impl std::fmt::Debug for ServeBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("ServeBuilder");
+        d.field("session", &self.session)
+            .field("window", &self.window)
+            .field("max_batch", &self.max_batch)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
+            .field("default_deadline", &self.default_deadline)
+            .field("restart", &self.restart);
+        #[cfg(feature = "fault-injection")]
+        d.field("fault_plan", &self.fault_plan);
+        d.finish_non_exhaustive()
+    }
+}
+
+impl ServeBuilder {
+    /// Start from a compiled session and the conservative defaults
+    /// (batch ≤ 4 over a 2ms window, 256-deep reject-new queue, no
+    /// default deadline, default supervisor policy).
+    pub fn new(session: Session) -> Self {
+        Self {
+            session,
+            window: Duration::from_millis(2),
+            max_batch: 4,
+            profile: None,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            admission: AdmissionPolicy::RejectNew,
+            default_deadline: None,
+            restart: RestartPolicy::default(),
+            #[cfg(feature = "fault-injection")]
+            fault_plan: None,
+        }
+    }
+
+    /// Batch-accumulation window (zero = dispatch immediately).
+    pub fn window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Largest batch one launch may run (a tuned profile's fused batch
+    /// still grows the workspace past this).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Serve with a tuned per-node profile (from [`crate::tuner::Tuner`]
+    /// or [`TuneProfile::load`]); validated against the session's graph
+    /// and compiled policies by [`ServeBuilder::build`].
+    pub fn profile(mut self, profile: TuneProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Bound the admission queue and pick the full-queue policy.
+    pub fn queue(mut self, capacity: usize, admission: AdmissionPolicy) -> Self {
+        self.queue_capacity = capacity;
+        self.admission = admission;
+        self
+    }
+
+    /// Default per-request deadline (measured from enqueue); `None`
+    /// waits indefinitely.
+    pub fn default_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.default_deadline = deadline;
+        self
+    }
+
+    /// Supervisor restart / circuit-breaker policy.
+    pub fn restart(mut self, restart: RestartPolicy) -> Self {
+        self.restart = restart;
+        self
+    }
+
+    /// Attach a deterministic fault schedule (robustness tests only).
+    #[cfg(feature = "fault-injection")]
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Validate the knob combination and produce the config
+    /// [`InferenceServer::start_native`] consumes.  Refusals are typed:
+    /// [`GraphError::Config`] for an inconsistent combination, the
+    /// profile's own [`GraphError`] when it does not describe this
+    /// session.
+    pub fn build(self) -> Result<NativeServerConfig, GraphError> {
+        if self.max_batch == 0 {
+            return Err(GraphError::Config(
+                "max_batch must be at least 1 (a zero-size launch can never fire)".into(),
+            ));
+        }
+        if self.queue_capacity == 0 {
+            return Err(GraphError::Config(
+                "queue_capacity must be at least 1 (a zero-capacity queue refuses \
+                 every request)"
+                    .into(),
+            ));
+        }
+        if let Some(d) = self.default_deadline {
+            if d.is_zero() {
+                return Err(GraphError::Config(
+                    "default_deadline of zero expires every request at enqueue; \
+                     use None to wait indefinitely"
+                        .into(),
+                ));
+            }
+            if d < self.window {
+                return Err(GraphError::Config(format!(
+                    "default_deadline {d:?} is shorter than the batching window \
+                     {:?}; every request would be ejected while the window \
+                     accumulates",
+                    self.window
+                )));
+            }
+        }
+        if self.restart.breaker_threshold == 0 {
+            return Err(GraphError::Config(
+                "restart.breaker_threshold must be at least 1 (zero trips the \
+                 breaker before any fault)"
+                    .into(),
+            ));
+        }
+        if self.restart.backoff_base > self.restart.backoff_max {
+            return Err(GraphError::Config(format!(
+                "restart.backoff_base {:?} exceeds backoff_max {:?}",
+                self.restart.backoff_base, self.restart.backoff_max
+            )));
+        }
+        if let Some(profile) = &self.profile {
+            // Same contract start_native enforces: the profile must
+            // describe this graph and be what the session compiled.
+            profile.matches_graph(self.session.graph())?;
+            profile.matches_policies(self.session.conv_policies())?;
+        }
+        Ok(NativeServerConfig {
+            session: self.session,
+            window: self.window,
+            max_batch: self.max_batch,
+            profile: self.profile,
+            queue_capacity: self.queue_capacity,
+            admission: self.admission,
+            default_deadline: self.default_deadline,
+            restart: self.restart,
+            #[cfg(feature = "fault-injection")]
+            fault_plan: self.fault_plan,
+        })
+    }
+
+    /// Validate and start the server in one step.
+    pub fn start(self) -> Result<InferenceServer> {
+        InferenceServer::start_native(self.build()?)
     }
 }
 
@@ -965,19 +1159,19 @@ mod tests {
     use crate::nn::vgg_tiny;
     use crate::util::Rng;
 
-    fn native_cfg(sparsity: f64) -> NativeServerConfig {
+    fn native_cfg(sparsity: f64) -> ServeBuilder {
         let session = Session::uniform(
             vgg_tiny(),
             &mut Synthetic::new(7),
             ExecPolicy::sparse(2, sparsity),
         )
         .expect("vgg_tiny compiles");
-        NativeServerConfig::new(session)
+        ServeBuilder::new(session)
     }
 
     #[test]
     fn native_server_serves_sparse_vgg_tiny() {
-        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        let server = native_cfg(0.7).start().expect("start");
         assert_eq!(server.input_elements(), 3 * 32 * 32);
         assert_eq!(server.output_elements(), 10);
         let mut rng = Rng::new(9);
@@ -1009,10 +1203,11 @@ mod tests {
         // expired and every launch degenerates to batch 1.  The window is
         // generous; the launch still fires immediately once the queue
         // reaches max_batch, so this stays fast.
-        let mut cfg = native_cfg(0.7);
-        cfg.window = Duration::from_secs(1);
-        cfg.max_batch = 4;
-        let server = InferenceServer::start_native(cfg).expect("start");
+        let server = native_cfg(0.7)
+            .window(Duration::from_secs(1))
+            .max_batch(4)
+            .start()
+            .expect("start");
         let mut rng = Rng::new(13);
         let rxs: Vec<_> = (0..4)
             .map(|_| {
@@ -1034,7 +1229,7 @@ mod tests {
 
     #[test]
     fn native_server_rejects_bad_input_size() {
-        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        let server = native_cfg(0.7).start().expect("start");
         let err = server.infer(vec![0.0; 7]).unwrap_err();
         assert!(
             matches!(
@@ -1065,8 +1260,10 @@ mod tests {
             .expect("profile matches");
         let session = Session::build(vgg_tiny(), &mut Synthetic::new(7), &policies)
             .expect("tuned session compiles");
-        let cfg = NativeServerConfig::new(session).with_profile(profile);
-        let server = InferenceServer::start_native(cfg).expect("start tuned");
+        let server = ServeBuilder::new(session)
+            .profile(profile)
+            .start()
+            .expect("start tuned");
         assert_eq!(server.input_elements(), 3 * 32 * 32);
         assert_eq!(server.output_elements(), 10);
         let mut rng = Rng::new(21);
@@ -1101,8 +1298,7 @@ mod tests {
             .expect("tune");
         let session = Session::uniform(vgg_tiny(), &mut Synthetic::new(7), ExecPolicy::dense(4))
             .expect("session");
-        let cfg = NativeServerConfig::new(session).with_profile(profile);
-        let err = match InferenceServer::start_native(cfg) {
+        let err = match ServeBuilder::new(session).profile(profile).build() {
             Err(e) => e,
             Ok(_) => panic!("profile over an untuned session must be refused"),
         };
@@ -1123,8 +1319,7 @@ mod tests {
         profile.layers.pop(); // no longer describes vgg_tiny
         let session =
             Session::uniform(vgg_tiny(), &mut Synthetic::new(7), base).expect("session");
-        let cfg = NativeServerConfig::new(session).with_profile(profile);
-        let err = match InferenceServer::start_native(cfg) {
+        let err = match ServeBuilder::new(session).profile(profile).build() {
             Err(e) => e,
             Ok(_) => panic!("mismatched profile must be refused"),
         };
@@ -1137,22 +1332,102 @@ mod tests {
         // server (cached banks) and across servers (deterministic build).
         let mut rng = Rng::new(11);
         let image = rng.gaussian_vec(3 * 32 * 32);
-        let s1 = InferenceServer::start_native(native_cfg(0.5)).expect("start");
+        let s1 = native_cfg(0.5).start().expect("start");
         let a = s1.infer(image.clone()).expect("infer");
         let b = s1.infer(image.clone()).expect("infer");
         assert_eq!(a, b, "within-server determinism");
-        let s2 = InferenceServer::start_native(native_cfg(0.5)).expect("start");
+        let s2 = native_cfg(0.5).start().expect("start");
         let c = s2.infer(image).expect("infer");
         assert_eq!(a, c, "across-server determinism");
     }
 
     #[test]
     fn shutdown_refuses_new_admissions() {
-        let server = InferenceServer::start_native(native_cfg(0.7)).expect("start");
+        let server = native_cfg(0.7).start().expect("start");
         server.shutdown(true);
         let err = server.infer_async(vec![0.0; 3 * 32 * 32]).unwrap_err();
         assert_eq!(err, AdmissionError::ShuttingDown);
         let err = server.infer(vec![0.0; 3 * 32 * 32]).unwrap_err();
         assert_eq!(err, AdmissionError::ShuttingDown);
+    }
+
+    #[test]
+    fn builder_refuses_invalid_combinations_typed() {
+        // Each invalid combination is a GraphError::Config at build
+        // time, with a message naming the offending knob.
+        let cases: Vec<(ServeBuilder, &str)> = vec![
+            (native_cfg(0.7).max_batch(0), "max_batch"),
+            (native_cfg(0.7).queue(0, AdmissionPolicy::RejectNew), "queue_capacity"),
+            (
+                native_cfg(0.7).default_deadline(Some(Duration::ZERO)),
+                "default_deadline",
+            ),
+            (
+                native_cfg(0.7)
+                    .window(Duration::from_millis(50))
+                    .default_deadline(Some(Duration::from_millis(10))),
+                "shorter than the batching window",
+            ),
+            (
+                native_cfg(0.7).restart(RestartPolicy {
+                    breaker_threshold: 0,
+                    ..RestartPolicy::default()
+                }),
+                "breaker_threshold",
+            ),
+            (
+                native_cfg(0.7).restart(RestartPolicy {
+                    backoff_base: Duration::from_millis(100),
+                    backoff_max: Duration::from_millis(10),
+                    ..RestartPolicy::default()
+                }),
+                "backoff_base",
+            ),
+        ];
+        for (builder, needle) in cases {
+            match builder.build() {
+                Err(GraphError::Config(msg)) => {
+                    assert!(msg.contains(needle), "{msg:?} should mention {needle:?}")
+                }
+                Err(other) => panic!("expected Config error mentioning {needle:?}, got {other:?}"),
+                Ok(_) => panic!("combination mentioning {needle:?} must be refused"),
+            }
+        }
+        // The valid default combination still builds.
+        assert!(native_cfg(0.7).build().is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_match_builder_defaults() {
+        // Shim contract for the deprecation release: the legacy
+        // constructors produce exactly what the builder's defaults
+        // validate to, so migrating cannot change behavior.
+        let session = || {
+            Session::uniform(
+                vgg_tiny(),
+                &mut Synthetic::new(7),
+                ExecPolicy::sparse(2, 0.7),
+            )
+            .expect("vgg_tiny compiles")
+        };
+        let old = NativeServerConfig::new(session())
+            .with_queue(32, AdmissionPolicy::DropOldest)
+            .with_default_deadline(Some(Duration::from_millis(250)));
+        let new = ServeBuilder::new(session())
+            .queue(32, AdmissionPolicy::DropOldest)
+            .default_deadline(Some(Duration::from_millis(250)))
+            .build()
+            .expect("valid combination");
+        assert_eq!(old.window, new.window);
+        assert_eq!(old.max_batch, new.max_batch);
+        assert_eq!(old.queue_capacity, new.queue_capacity);
+        assert_eq!(old.admission, new.admission);
+        assert_eq!(old.default_deadline, new.default_deadline);
+        // RestartPolicy carries no PartialEq; compare field by field.
+        assert_eq!(old.restart.breaker_threshold, new.restart.breaker_threshold);
+        assert_eq!(old.restart.backoff_base, new.restart.backoff_base);
+        assert_eq!(old.restart.backoff_max, new.restart.backoff_max);
+        assert_eq!(old.restart.breaker_cooldown, new.restart.breaker_cooldown);
     }
 }

@@ -15,15 +15,16 @@
 //! bound through a [`crate::nn::graph::WeightSource`], one policy per
 //! conv node) onto per-node executors and a zero-allocation ping-pong
 //! workspace — the engine behind the coordinator's native serving path.
-//! The legacy [`NetworkExecutor`] remains as a deprecated shim over
-//! `Session` for the fixed VGG-ladder [`Network`] descriptor.
+//! (The legacy `NetworkExecutor` shim over the fixed VGG-ladder
+//! descriptor was deprecated in favor of `Session` and has been
+//! removed; `Network::to_graph` + [`Session::build`] is the migration.)
 
 mod session;
 
 pub use session::Session;
 
-use crate::nn::graph::{GraphError, Synthetic};
-use crate::nn::{ConvLayer, ConvShape, Network};
+use crate::nn::graph::GraphError;
+use crate::nn::{ConvLayer, ConvShape};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -373,106 +374,10 @@ fn qdq_into(q: &Quantizer, src: &[f32], dst: &mut Vec<f32>) {
     }
 }
 
-/// A whole pruned network behind per-layer cached filter banks.
-///
-/// Deprecated thin shim: the [`Network`] ladder is lowered through
-/// [`Network::to_graph`] and compiled into a [`Session`] — which is what
-/// every method delegates to.  New code should build a `Session`
-/// directly (arbitrary graphs, typed errors, real weight sources);
-/// this shim keeps the historical synthetic-only, panicking contract.
-#[deprecated(
-    note = "build a graph with `nn::graph::GraphBuilder` (or `Network::to_graph`) and \
-            compile it into an `executor::Session`"
-)]
-pub struct NetworkExecutor {
-    net: Network,
-    session: Session,
-}
-
-// Manual: the deprecated shim simply wraps a Session.
-#[allow(deprecated)]
-impl std::fmt::Debug for NetworkExecutor {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("NetworkExecutor")
-            .field("session", &self.session)
-            .finish_non_exhaustive()
-    }
-}
-
-#[allow(deprecated)]
-impl NetworkExecutor {
-    /// Build from deterministic synthetic weights (He-scaled gaussians —
-    /// the stand-in for reference \[2\]'s pruned VGG weights, matching
-    /// the simulator's synthetic directories).  The first layer stays
-    /// dense when its channel count is below the block size, mirroring
-    /// the artifacts.
-    pub fn synthetic(net: Network, policy: ExecPolicy, seed: u64) -> Self {
-        let policies = vec![policy; net.convs.len()];
-        Self::synthetic_per_layer(net, &policies, seed)
-    }
-
-    /// Build with an **independent policy per conv layer** (see
-    /// [`Session::build`]).  Panics on invalid input — the historical
-    /// contract; `Session` returns typed errors instead.
-    pub fn synthetic_per_layer(net: Network, policies: &[ExecPolicy], seed: u64) -> Self {
-        let session = Session::build(net.to_graph(), &mut Synthetic::new(seed), policies)
-            .unwrap_or_else(|e| panic!("{e}"));
-        Self { net, session }
-    }
-
-    /// Pre-size the workspace for fused batches up to `n` images.
-    pub fn with_max_batch(self, n: usize) -> Self {
-        Self {
-            net: self.net,
-            session: self.session.with_max_batch(n),
-        }
-    }
-
-    pub fn max_batch(&self) -> usize {
-        self.session.max_batch()
-    }
-
-    pub fn network(&self) -> &Network {
-        &self.net
-    }
-
-    pub fn input_elements(&self) -> usize {
-        self.session.input_elements()
-    }
-
-    pub fn output_elements(&self) -> usize {
-        self.session.output_elements()
-    }
-
-    /// Per-layer backend names (executor selection, for reporting).
-    pub fn conv_backends(&self) -> Vec<&'static str> {
-        self.session.conv_backends()
-    }
-
-    /// Full forward pass: flat (C * H * W) image -> logits.
-    pub fn forward(&mut self, image: &[f32]) -> Vec<f32> {
-        self.session
-            .forward(image)
-            .unwrap_or_else(|e| panic!("{e}"))
-    }
-
-    /// Full batched forward pass (bit-identical per image to
-    /// [`NetworkExecutor::forward`]).
-    pub fn forward_batch(&mut self, images: &[&[f32]]) -> Vec<Vec<f32>> {
-        self.session
-            .forward_batch(images)
-            .unwrap_or_else(|e| panic!("{e}"))
-    }
-
-    /// The compiled session behind the shim.
-    pub fn into_session(self) -> Session {
-        self.session
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::graph::Synthetic;
     use crate::nn::vgg_tiny_network;
     use crate::winograd::direct_conv2d;
 
@@ -661,40 +566,6 @@ mod tests {
                     .conv2d(&x);
             assert_eq!(got, want, "workers={workers} must be bit-identical");
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_shim_matches_session() {
-        // The deprecated NetworkExecutor is a pure delegation shim: same
-        // graph, same synthetic stream, bit-identical logits.
-        let net = vgg_tiny_network();
-        let policy = ExecPolicy::sparse(2, 0.7);
-        let mut shim = NetworkExecutor::synthetic(net.clone(), policy, 5).with_max_batch(4);
-        let mut sess =
-            Session::uniform(net.to_graph(), &mut Synthetic::new(5), policy)
-                .unwrap()
-                .with_max_batch(4);
-        assert_eq!(shim.input_elements(), sess.input_elements());
-        assert_eq!(shim.conv_backends(), sess.conv_backends());
-        let mut rng = Rng::new(6);
-        let images: Vec<Vec<f32>> = (0..4).map(|_| rng.gaussian_vec(3 * 32 * 32)).collect();
-        for im in &images {
-            assert_eq!(shim.forward(im), sess.forward(im).unwrap());
-        }
-        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
-        assert_eq!(shim.forward_batch(&refs), sess.forward_batch(&refs).unwrap());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    #[should_panic(expected = "one policy per conv node")]
-    fn legacy_shim_keeps_panicking_contract() {
-        let _ = NetworkExecutor::synthetic_per_layer(
-            vgg_tiny_network(),
-            &[ExecPolicy::dense(2); 2],
-            5,
-        );
     }
 
     #[test]

@@ -3,13 +3,13 @@
 //!
 //! The pre-redesign pipeline is reproduced here from first principles
 //! (Tensor-level pad/conv/relu/pool over `Network::pool_after`, then the
-//! FC head with `nn::synthetic_weights` — exactly what the old
-//! `NetworkExecutor::forward` hard-wired), so the tests do not depend on
-//! the deprecated shim for their oracle.  Also covers the
+//! FC head with `nn::synthetic_weights` — exactly what the removed
+//! `NetworkExecutor::forward` shim hard-wired), so the tests never
+//! depended on the shim for their oracle.  Also covers the
 //! `save_weights`/`load_weights` roundtrip, the tuned-profile serving
 //! path over a `Session`, and a non-VGG odd-spatial graph end-to-end.
 
-use swcnn::coordinator::{InferenceServer, NativeServerConfig};
+use swcnn::coordinator::ServeBuilder;
 use swcnn::executor::{ConvExecutor, ExecPolicy, Session};
 use swcnn::nn::graph::{load_weights, save_weights, GraphBuilder, Synthetic};
 use swcnn::nn::{self, vgg_tiny, vgg_tiny_network};
@@ -164,7 +164,7 @@ fn served_session_bit_identical_to_legacy_default_config() {
     let want = legacy_forward(policy, seed, &image);
     let session =
         Session::uniform(vgg_tiny(), &mut Synthetic::new(seed), policy).expect("session");
-    let server = InferenceServer::start_native(NativeServerConfig::new(session)).expect("start");
+    let server = ServeBuilder::new(session).start().expect("start");
     let got = server.infer(image).expect("infer");
     assert_eq!(got, want, "served logits must match the pre-redesign path");
 }
@@ -188,10 +188,10 @@ fn served_session_bit_identical_under_tuned_profile() {
         .expect("profile matches");
     let session =
         Session::build(vgg_tiny(), &mut Synthetic::new(seed), &policies).expect("session");
-    let server = InferenceServer::start_native(
-        NativeServerConfig::new(session).with_profile(profile),
-    )
-    .expect("start tuned");
+    let server = ServeBuilder::new(session)
+        .profile(profile)
+        .start()
+        .expect("start tuned");
     let mut rng = Rng::new(37);
     let image = rng.gaussian_vec(3 * 32 * 32);
     // The oracle is the pre-redesign per-layer path under the SAME tuned
@@ -244,7 +244,7 @@ fn non_vgg_odd_graph_serves_end_to_end() {
     let session =
         Session::uniform(graph(), &mut Synthetic::new(3), ExecPolicy::sparse(2, 0.6))
             .expect("compiles");
-    let server = InferenceServer::start_native(NativeServerConfig::new(session)).expect("start");
+    let server = ServeBuilder::new(session).start().expect("start");
     assert_eq!(server.input_elements(), 3 * 9 * 9);
     assert_eq!(server.output_elements(), 4);
     assert_eq!(server.infer(a).expect("infer"), ya, "served == direct");

@@ -255,7 +255,7 @@ fn vgg16_conv5_layer_executes_at_paper_scale() {
 
 #[test]
 fn native_server_end_to_end_sparse_pipeline() {
-    use swcnn::coordinator::NativeServerConfig;
+    use swcnn::coordinator::ServeBuilder;
     use swcnn::executor::{ExecPolicy, Session};
     use swcnn::nn::graph::Synthetic;
     use swcnn::nn::vgg_tiny;
@@ -266,8 +266,7 @@ fn native_server_end_to_end_sparse_pipeline() {
         ExecPolicy::sparse(2, 0.8),
     )
     .unwrap();
-    let cfg = NativeServerConfig::new(session);
-    let server = InferenceServer::start_native(cfg).unwrap();
+    let server = ServeBuilder::new(session).start().unwrap();
     let mut rng = Rng::new(44);
     let elems = server.input_elements();
     assert_eq!(elems, 3 * 32 * 32);

@@ -1,0 +1,430 @@
+//! Network serving front-end: real-TCP round trips, the in-band metrics
+//! endpoint, protocol-level error codes, and socketless dispatch tests.
+//!
+//! Layered per the wire/dispatch/listener split:
+//!
+//! - the codec's own property and malformed-input tests live with the
+//!   codec (`src/coordinator/net/wire.rs`) — no socket there;
+//! - this file proves the **dispatch** mapping (frames onto the
+//!   admission path, `ServeError` codes onto wire frames) with an
+//!   in-memory server and no listener, then the **listener** end to end
+//!   over 127.0.0.1 — bit-identical logits, batching under pipelining,
+//!   typed refusals that never kill the connection, and drain-on-shutdown.
+//!
+//! Deterministic fault schedules (queue-full, deadline, panic codes)
+//! need the `fault-injection` feature; those tests are gated
+//! individually and CI's `net-serving` job runs them.
+
+use std::time::{Duration, Instant};
+
+use swcnn::coordinator::net::dispatch::{self, Dispatched};
+use swcnn::coordinator::net::{wire, NetClient, NetError, NetServer};
+use swcnn::coordinator::{InferenceServer, ServeBuilder, ServeError};
+use swcnn::executor::{ExecPolicy, Session};
+use swcnn::nn::graph::{GraphBuilder, GraphError, Synthetic};
+use swcnn::nn::vgg_tiny;
+use swcnn::util::json::Json;
+use swcnn::util::Rng;
+
+#[cfg(feature = "fault-injection")]
+use swcnn::coordinator::{AdmissionPolicy, FaultPlan};
+
+const IN_ELEMS: usize = 2 * 8 * 8;
+const OUT_ELEMS: usize = 3;
+
+/// A graph small enough that every test stays in the milliseconds.
+fn tiny_session() -> Session {
+    let g = GraphBuilder::new("tiny", (2, 8, 8))
+        .pad(1)
+        .conv2d("c0", 4, 3)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("head", OUT_ELEMS)
+        .build()
+        .expect("tiny graph builds");
+    Session::uniform(g, &mut Synthetic::new(3), ExecPolicy::dense(2)).expect("tiny compiles")
+}
+
+fn tiny_server() -> InferenceServer {
+    ServeBuilder::new(tiny_session())
+        .max_batch(4)
+        .start()
+        .expect("start")
+}
+
+fn image(seed: u64) -> Vec<f32> {
+    Rng::new(seed).gaussian_vec(IN_ELEMS)
+}
+
+// ---------------------------------------------------------------------------
+// Listener: real TCP, bit-identical serving
+// ---------------------------------------------------------------------------
+
+/// Acceptance gate: a real TCP client round-trips an inference through
+/// the batcher **bit-identically** to `Session::forward` on the paper's
+/// vgg_tiny network.
+#[test]
+fn tcp_round_trip_bit_identical_to_session_forward() {
+    let policy = ExecPolicy::sparse(2, 0.7);
+    let mut direct =
+        Session::uniform(vgg_tiny(), &mut Synthetic::new(7), policy).expect("session");
+    let mut rng = Rng::new(91);
+    let image = rng.gaussian_vec(direct.input_elements());
+    let want = direct.forward(&image).expect("direct forward");
+
+    let served =
+        Session::uniform(vgg_tiny(), &mut Synthetic::new(7), policy).expect("session");
+    let server = ServeBuilder::new(served).start().expect("start");
+    let net = NetServer::bind("127.0.0.1:0", server).expect("bind");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+    let got = client.infer(&image).expect("served over TCP");
+    assert_eq!(got, want, "network serving must be bit-identical");
+}
+
+/// Pipelining N requests on one connection keeps responses in request
+/// order, each bit-identical to the direct session — and the requests
+/// actually share fused batches (the whole point of the front-end).
+#[test]
+fn pipelined_requests_stay_in_order_and_share_batches() {
+    let mut direct = tiny_session();
+    let server = ServeBuilder::new(tiny_session())
+        .max_batch(4)
+        .window(Duration::from_millis(20))
+        .start()
+        .expect("start");
+    let net = NetServer::bind("127.0.0.1:0", server).expect("bind");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+
+    let images: Vec<Vec<f32>> = (0..8).map(|i| image(100 + i)).collect();
+    let ids: Vec<u64> = images
+        .iter()
+        .map(|im| client.send_infer(im, 0).expect("send"))
+        .collect();
+    for (im, id) in images.iter().zip(&ids) {
+        match client.recv().expect("response") {
+            wire::Response::Logits { id: got, values } => {
+                assert_eq!(got, *id, "responses arrive in request order");
+                assert_eq!(values, direct.forward(im).expect("direct"));
+            }
+            other => panic!("want logits for {id}, got {other:?}"),
+        }
+    }
+    let m = net.server().metrics.lock().unwrap();
+    assert_eq!(m.requests, 8);
+    assert!(
+        m.mean_batch() > 1.0,
+        "pipelined traffic must form fused batches, mean {}",
+        m.mean_batch()
+    );
+}
+
+#[test]
+fn metrics_endpoint_streams_summary_json_over_tcp() {
+    let net = NetServer::bind("127.0.0.1:0", tiny_server()).expect("bind");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+    for i in 0..3 {
+        client.infer(&image(i)).expect("served");
+    }
+    let doc = client.metrics_json().expect("metrics over TCP");
+    let parsed = Json::parse(&doc).expect("endpoint serves valid JSON");
+    assert_eq!(
+        parsed.req("requests").unwrap().as_f64(),
+        Some(3.0),
+        "{doc}"
+    );
+    for key in [
+        "batches",
+        "mean_batch",
+        "p50",
+        "p99",
+        "rejected_full",
+        "ejected_deadline",
+        "worker_faults",
+        "queue_depth_peak",
+        "simd",
+        "vwidths",
+        "batch_histogram",
+    ] {
+        assert!(parsed.get(key).is_some(), "metrics JSON missing {key}: {doc}");
+    }
+    // The in-band endpoint and the in-process accessor serve the same
+    // schema (counters may move between the two snapshots).
+    let local = Json::parse(&net.metrics_json()).expect("accessor JSON");
+    assert!(local.get("requests").is_some());
+}
+
+/// A typed per-request refusal must not kill the connection: the same
+/// socket keeps serving afterwards.
+#[test]
+fn typed_refusals_keep_the_connection_alive() {
+    let net = NetServer::bind("127.0.0.1:0", tiny_server()).expect("bind");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+
+    // Wrong input size -> the engine's Input code.
+    let err = client.infer(&[0.0; 7]).expect_err("wrong size refused");
+    match &err {
+        NetError::Remote { code, msg } => {
+            assert_eq!(
+                *code,
+                ServeError::from(GraphError::Input {
+                    index: 0,
+                    expected: IN_ELEMS,
+                    got: 7,
+                })
+                .code()
+            );
+            assert!(msg.contains("expected"), "{msg}");
+        }
+        other => panic!("want Remote, got {other:?}"),
+    }
+
+    // NaN payload -> the wire policy code, still per-request.
+    let mut bad = image(5);
+    bad[3] = f32::NAN;
+    match client.infer(&bad) {
+        Err(NetError::Remote { code, msg }) => {
+            assert_eq!(code, ServeError::NonFinitePayload { index: 3 }.code());
+            assert!(msg.contains("non-finite"), "{msg}");
+        }
+        other => panic!("want Remote(non_finite), got {other:?}"),
+    }
+
+    // Same connection, next request serves fine.
+    let y = client.infer(&image(6)).expect("connection survived");
+    assert_eq!(y.len(), OUT_ELEMS);
+}
+
+/// Shutdown drains: a request admitted before shutdown still flushes
+/// its logits to the socket (PR 6 drain semantics through the listener).
+#[test]
+fn shutdown_drains_admitted_requests_to_the_socket() {
+    let net = NetServer::bind("127.0.0.1:0", tiny_server()).expect("bind");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+    let id = client.send_infer(&image(8), 0).expect("send");
+    // Wait until the listener has actually admitted the request (the
+    // queue-depth high-water mark moves at admission), then drain.
+    let t0 = Instant::now();
+    loop {
+        let peak = net.server().metrics.lock().unwrap().queue_depth_peak;
+        if peak >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "listener never admitted the request"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    net.shutdown();
+    match client.recv().expect("drained completion reaches the socket") {
+        wire::Response::Logits { id: got, values } => {
+            assert_eq!(got, id);
+            assert_eq!(values.len(), OUT_ELEMS);
+        }
+        other => panic!("drain must serve the admitted request, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: socketless mapping of frames onto the admission path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dispatch_needs_no_socket_for_metrics_and_refusals() {
+    let server = tiny_server();
+    // Metrics resolve synchronously with the summary JSON.
+    match dispatch::dispatch(&server, wire::Request::Metrics { id: 4 }) {
+        Dispatched::Now(wire::Response::MetricsJson { id: 4, json }) => {
+            assert!(Json::parse(&json).is_ok(), "{json}");
+        }
+        other => panic!("want MetricsJson, got {other:?}"),
+    }
+    // A shut-down server refuses with the stable ShuttingDown code.
+    server.shutdown(false);
+    match dispatch::dispatch(
+        &server,
+        wire::Request::Infer {
+            id: 5,
+            deadline_ms: 0,
+            image: image(1),
+        },
+    ) {
+        Dispatched::Now(wire::Response::Error { id: 5, code, .. }) => {
+            assert_eq!(code, 2, "shutting_down");
+        }
+        other => panic!("want Error(shutting_down), got {other:?}"),
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+mod faulted_dispatch {
+    use super::*;
+
+    /// Block until the worker has pulled everything queued into a batch
+    /// dispatch (same idiom as tests/robustness.rs).
+    fn wait_queue_drained(server: &InferenceServer) {
+        let t0 = Instant::now();
+        while server.queue_depth() > 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "worker never picked up the queued batch"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn infer_frame(id: u64, deadline_ms: u32, seed: u64) -> wire::Request {
+        wire::Request::Infer {
+            id,
+            deadline_ms,
+            image: image(seed),
+        }
+    }
+
+    fn expect_error_code(d: Dispatched, want: u16) {
+        let resp = match d {
+            Dispatched::Now(resp) => resp,
+            Dispatched::Pending { id, reply } => dispatch::resolve(id, &reply),
+        };
+        match resp {
+            wire::Response::Error { code, .. } => assert_eq!(code, want),
+            other => panic!("want error code {want}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_full_surfaces_code_1() {
+        let server = ServeBuilder::new(tiny_session())
+            .queue(1, AdmissionPolicy::RejectNew)
+            .window(Duration::ZERO)
+            .fault_plan(FaultPlan::seeded(3).latency_every_batch(Duration::from_millis(250)))
+            .start()
+            .expect("start");
+        let stall = server.infer_async(image(1)).expect("admitted");
+        wait_queue_drained(&server); // worker now inside the stalled batch
+        let queued = server.infer_async(image(2)).expect("fills the queue");
+        expect_error_code(dispatch::dispatch(&server, infer_frame(7, 0, 3)), 1);
+        for rx in [stall, queued] {
+            rx.recv_timeout(Duration::from_secs(10))
+                .expect("completes")
+                .expect("admitted work still serves");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_surfaces_code_3() {
+        let server = ServeBuilder::new(tiny_session())
+            .window(Duration::ZERO)
+            .fault_plan(FaultPlan::seeded(2).latency_on_batch(0, Duration::from_millis(300)))
+            .start()
+            .expect("start");
+        let stall = server.infer_async(image(1)).expect("admitted");
+        wait_queue_drained(&server);
+        // A 30ms wire deadline expires while batch 0 crawls.
+        expect_error_code(dispatch::dispatch(&server, infer_frame(8, 30, 4)), 3);
+        stall
+            .recv_timeout(Duration::from_secs(10))
+            .expect("completes")
+            .expect("stalled batch still serves");
+    }
+
+    #[test]
+    fn worker_panic_surfaces_code_5() {
+        // Injected panic payloads are expected; silence their hook spam.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("fault-injection") {
+                prev(info);
+            }
+        }));
+        let server = ServeBuilder::new(tiny_session())
+            .fault_plan(FaultPlan::seeded(1).panic_on_batch(0))
+            .start()
+            .expect("start");
+        expect_error_code(dispatch::dispatch(&server, infer_frame(9, 0, 5)), 5);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-level coverage of the full ServeError code table
+// ---------------------------------------------------------------------------
+
+/// Every `ServeError` code crosses the wire verbatim: construct each
+/// variant, wrap it as the dispatch layer would, encode, decode, and
+/// check the code survives and stays collision-free.
+#[test]
+fn every_serve_error_code_crosses_the_wire_verbatim() {
+    use swcnn::coordinator::AdmissionError;
+    let errors: Vec<ServeError> = vec![
+        AdmissionError::QueueFull { capacity: 1 }.into(),
+        AdmissionError::ShuttingDown.into(),
+        AdmissionError::DeadlineExpired {
+            deadline: Duration::from_millis(1),
+            waited: Duration::from_millis(2),
+        }
+        .into(),
+        AdmissionError::CircuitOpen {
+            consecutive_faults: 1,
+        }
+        .into(),
+        AdmissionError::WorkerFault { msg: "x".into() }.into(),
+        GraphError::Shape {
+            node: 0,
+            msg: "x".into(),
+        }
+        .into(),
+        GraphError::Policy("x".into()).into(),
+        GraphError::PolicyCount {
+            expected: 1,
+            got: 2,
+        }
+        .into(),
+        GraphError::Input {
+            index: 0,
+            expected: 1,
+            got: 2,
+        }
+        .into(),
+        GraphError::Output {
+            expected: 1,
+            got: 2,
+        }
+        .into(),
+        GraphError::EmptyBatch.into(),
+        GraphError::BatchTooLarge { got: 9, max: 4 }.into(),
+        GraphError::Weights("x".into()).into(),
+        GraphError::Io("x".into()).into(),
+        GraphError::Config("x".into()).into(),
+        GraphError::Panic("x".into()).into(),
+        GraphError::Poisoned.into(),
+        ServeError::NonFinitePayload { index: 3 },
+    ];
+    assert_eq!(errors.len(), 18, "table must cover every variant");
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, err) in errors.iter().enumerate() {
+        let resp = dispatch::error_response(i as u64, err);
+        let mut bytes = Vec::new();
+        wire::encode_response(&resp, &mut bytes);
+        match wire::decode_response_exact(&bytes).expect("error frame decodes") {
+            wire::Response::Error { id, code, msg } => {
+                assert_eq!(id, i as u64);
+                assert_eq!(code, err.code(), "{err:?} code mangled in transit");
+                assert_ne!(code, 0, "0 is reserved for success");
+                assert!(
+                    ServeError::code_name(code).is_some(),
+                    "{err:?} -> unnamed code {code}"
+                );
+                assert_eq!(msg, err.to_string());
+                assert!(seen.insert(code), "{err:?} collides on code {code}");
+            }
+            other => panic!("{err:?} must encode as an error frame, got {other:?}"),
+        }
+    }
+}

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use swcnn::coordinator::{
     render_log, AdmissionError, AdmissionPolicy, FaultEvent, FaultPlan, InferenceServer,
-    NativeServerConfig, RestartPolicy,
+    RestartPolicy, ServeBuilder, ServeError,
 };
 use swcnn::executor::{ExecPolicy, Session};
 use swcnn::nn::graph::{GraphBuilder, GraphError, Synthetic};
@@ -78,10 +78,10 @@ fn fast_restart() -> RestartPolicy {
     }
 }
 
-fn tiny_cfg() -> NativeServerConfig {
-    let mut cfg = NativeServerConfig::new(tiny_session()).with_restart(fast_restart());
-    cfg.max_batch = 4;
-    cfg
+fn tiny_cfg() -> ServeBuilder {
+    ServeBuilder::new(tiny_session())
+        .restart(fast_restart())
+        .max_batch(4)
 }
 
 fn image(seed: u64) -> Vec<f32> {
@@ -116,11 +116,14 @@ fn every_admission_gets_exactly_one_completion() {
     quiet_injected_panics();
     let plan = FaultPlan::seeded(42).with_random_panics(64, 0.3);
     let bursts = plan.burst_sizes(6, 5);
-    let mut cfg = tiny_cfg()
-        .with_queue(8, AdmissionPolicy::RejectNew)
-        .with_fault_plan(plan);
-    cfg.window = Duration::from_micros(500);
-    let server = Arc::new(InferenceServer::start_native(cfg).expect("start"));
+    let server = Arc::new(
+        tiny_cfg()
+            .queue(8, AdmissionPolicy::RejectNew)
+            .fault_plan(plan)
+            .window(Duration::from_micros(500))
+            .start()
+            .expect("start"),
+    );
 
     let admitted = Arc::new(AtomicU64::new(0));
     let refused = Arc::new(AtomicU64::new(0));
@@ -225,11 +228,13 @@ fn every_admission_gets_exactly_one_completion() {
 fn supervisor_restarts_panicked_worker_bit_identically() {
     quiet_injected_panics();
     let x = image(7);
-    let clean = InferenceServer::start_native(tiny_cfg()).expect("start clean");
+    let clean = tiny_cfg().start().expect("start clean");
     let want = clean.infer(x.clone()).expect("fault-free serve");
 
-    let cfg = tiny_cfg().with_fault_plan(FaultPlan::seeded(1).panic_on_batch(1));
-    let server = InferenceServer::start_native(cfg).expect("start faulty");
+    let server = tiny_cfg()
+        .fault_plan(FaultPlan::seeded(1).panic_on_batch(1))
+        .start()
+        .expect("start faulty");
     let first = server.infer(x.clone()).expect("batch 0 serves");
     assert_eq!(first, want, "pre-fault output matches the clean server");
     let err = server.infer(x.clone()).unwrap_err();
@@ -260,10 +265,11 @@ fn breaker_trips_after_consecutive_faults_and_recovers() {
     let mut restart = fast_restart();
     restart.breaker_threshold = 2;
     restart.breaker_cooldown = Duration::from_millis(150);
-    let cfg = tiny_cfg()
-        .with_restart(restart)
-        .with_fault_plan(FaultPlan::seeded(5).panic_on_batch(0).panic_on_batch(1));
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .restart(restart)
+        .fault_plan(FaultPlan::seeded(5).panic_on_batch(0).panic_on_batch(1))
+        .start()
+        .expect("start");
     let x = image(9);
 
     for _ in 0..2 {
@@ -301,10 +307,11 @@ fn expired_requests_never_occupy_a_fused_batch_slot() {
     // Batch 0 stalls 300ms; four short-deadline requests pile up behind
     // it, expire while it crawls, and must be ejected at the next
     // assembly — visible as: one batch of 1, zero batches of 4.
-    let mut cfg = tiny_cfg()
-        .with_fault_plan(FaultPlan::seeded(2).latency_on_batch(0, Duration::from_millis(300)));
-    cfg.window = Duration::ZERO;
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .fault_plan(FaultPlan::seeded(2).latency_on_batch(0, Duration::from_millis(300)))
+        .window(Duration::ZERO)
+        .start()
+        .expect("start");
 
     let slow = server.infer_async(image(1)).expect("admitted");
     // Once the queue drains, batch 0's membership is sealed — the worker
@@ -350,11 +357,12 @@ fn expired_requests_never_occupy_a_fused_batch_slot() {
 #[test]
 fn full_queue_rejects_new_requests_synchronously() {
     quiet_injected_panics();
-    let mut cfg = tiny_cfg()
-        .with_queue(2, AdmissionPolicy::RejectNew)
-        .with_fault_plan(FaultPlan::seeded(3).latency_every_batch(Duration::from_millis(250)));
-    cfg.window = Duration::ZERO;
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .queue(2, AdmissionPolicy::RejectNew)
+        .fault_plan(FaultPlan::seeded(3).latency_every_batch(Duration::from_millis(250)))
+        .window(Duration::ZERO)
+        .start()
+        .expect("start");
 
     let in_flight = server.infer_async(image(1)).expect("admitted");
     wait_queue_drained(&server); // worker now stalled in batch 0
@@ -380,11 +388,12 @@ fn full_queue_rejects_new_requests_synchronously() {
 #[test]
 fn full_queue_drop_oldest_evicts_the_stalest_request() {
     quiet_injected_panics();
-    let mut cfg = tiny_cfg()
-        .with_queue(2, AdmissionPolicy::DropOldest)
-        .with_fault_plan(FaultPlan::seeded(4).latency_every_batch(Duration::from_millis(250)));
-    cfg.window = Duration::ZERO;
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .queue(2, AdmissionPolicy::DropOldest)
+        .fault_plan(FaultPlan::seeded(4).latency_every_batch(Duration::from_millis(250)))
+        .window(Duration::ZERO)
+        .start()
+        .expect("start");
 
     let in_flight = server.infer_async(image(1)).expect("admitted");
     wait_queue_drained(&server); // worker now stalled in batch 0
@@ -417,10 +426,11 @@ fn shutdown_drains_or_rejects_deterministically() {
     quiet_injected_panics();
     // Reject-shutdown: in-flight work finishes, queued work completes
     // with ShuttingDown, new admissions refuse synchronously.
-    let mut cfg = tiny_cfg()
-        .with_fault_plan(FaultPlan::seeded(6).latency_every_batch(Duration::from_millis(250)));
-    cfg.window = Duration::ZERO;
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .fault_plan(FaultPlan::seeded(6).latency_every_batch(Duration::from_millis(250)))
+        .window(Duration::ZERO)
+        .start()
+        .expect("start");
     let in_flight = server.infer_async(image(1)).expect("admitted");
     wait_queue_drained(&server); // worker now stalled in batch 0
     let queued: Vec<_> = (0..3)
@@ -443,7 +453,7 @@ fn shutdown_drains_or_rejects_deterministically() {
     }
 
     // Drain-shutdown: everything queued serves.
-    let server = InferenceServer::start_native(tiny_cfg()).expect("start");
+    let server = tiny_cfg().start().expect("start");
     let queued: Vec<_> = (0..3)
         .map(|i| server.infer_async(image(20 + i)).expect("admitted"))
         .collect();
@@ -463,10 +473,11 @@ fn shutdown_drains_or_rejects_deterministically() {
 #[test]
 fn drain_bypasses_the_batching_window() {
     quiet_injected_panics();
-    let mut cfg = tiny_cfg();
-    cfg.window = Duration::from_secs(5);
-    cfg.max_batch = 4;
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .window(Duration::from_secs(5))
+        .max_batch(4)
+        .start()
+        .expect("start");
     let rx = server.infer_async(image(1)).expect("admitted");
     let start = Instant::now();
     server.shutdown(true);
@@ -494,8 +505,10 @@ fn drain_bypasses_the_batching_window() {
 #[test]
 fn worker_death_is_a_typed_error_not_a_hang() {
     quiet_injected_panics();
-    let cfg = tiny_cfg().with_fault_plan(FaultPlan::seeded(8).kill_on_batch(0));
-    let server = InferenceServer::start_native(cfg).expect("start");
+    let server = tiny_cfg()
+        .fault_plan(FaultPlan::seeded(8).kill_on_batch(0))
+        .start()
+        .expect("start");
     let rx = server.infer_async(image(1)).expect("admitted");
     match rx.recv_timeout(Duration::from_secs(10)) {
         Ok(Err(AdmissionError::WorkerFault { msg })) => {
@@ -604,6 +617,128 @@ fn every_error_variant_renders_a_useful_chain() {
     assert_eq!(admission_errors.len(), 6);
 }
 
+/// The unified wire-facing error surface: every `ServeError` carries a
+/// **stable** numeric code the network protocol ships verbatim.  This
+/// table pins every assigned code and its `PROTOCOL.md` name — a
+/// renumbering, a collision, or a nameless code fails here, not in a
+/// remote client's error handler.
+#[test]
+fn serve_error_codes_are_stable_and_collision_free() {
+    use std::error::Error as _;
+    let table: Vec<(ServeError, u16, &str)> = vec![
+        (
+            AdmissionError::QueueFull { capacity: 8 }.into(),
+            1,
+            "queue_full",
+        ),
+        (AdmissionError::ShuttingDown.into(), 2, "shutting_down"),
+        (
+            AdmissionError::DeadlineExpired {
+                deadline: Duration::from_millis(5),
+                waited: Duration::from_millis(9),
+            }
+            .into(),
+            3,
+            "deadline_expired",
+        ),
+        (
+            AdmissionError::CircuitOpen {
+                consecutive_faults: 3,
+            }
+            .into(),
+            4,
+            "circuit_open",
+        ),
+        (
+            AdmissionError::WorkerFault { msg: "boom".into() }.into(),
+            5,
+            "worker_fault",
+        ),
+        (
+            GraphError::Shape {
+                node: 2,
+                msg: "bad".into(),
+            }
+            .into(),
+            16,
+            "graph_shape",
+        ),
+        (GraphError::Policy("m".into()).into(), 17, "graph_policy"),
+        (
+            GraphError::PolicyCount {
+                expected: 3,
+                got: 1,
+            }
+            .into(),
+            18,
+            "graph_policy_count",
+        ),
+        (
+            GraphError::Input {
+                index: 0,
+                expected: 128,
+                got: 7,
+            }
+            .into(),
+            19,
+            "graph_input",
+        ),
+        (
+            GraphError::Output {
+                expected: 3,
+                got: 1,
+            }
+            .into(),
+            20,
+            "graph_output",
+        ),
+        (GraphError::EmptyBatch.into(), 21, "graph_empty_batch"),
+        (
+            GraphError::BatchTooLarge { got: 9, max: 4 }.into(),
+            22,
+            "graph_batch_too_large",
+        ),
+        (GraphError::Weights("w".into()).into(), 23, "graph_weights"),
+        (GraphError::Io("f".into()).into(), 24, "graph_io"),
+        (GraphError::Config("c".into()).into(), 25, "graph_config"),
+        (GraphError::Panic("p".into()).into(), 26, "graph_panic"),
+        (GraphError::Poisoned.into(), 27, "graph_poisoned"),
+        (
+            ServeError::NonFinitePayload { index: 3 },
+            48,
+            "non_finite_payload",
+        ),
+    ];
+    let mut seen = std::collections::BTreeSet::new();
+    for (e, code, name) in &table {
+        assert_eq!(e.code(), *code, "{e:?} renumbered its stable code");
+        assert_eq!(
+            ServeError::code_name(*code),
+            Some(*name),
+            "code {code} lost its PROTOCOL.md name"
+        );
+        assert_ne!(*code, 0, "0 is reserved for success frames");
+        assert!(seen.insert(*code), "code {code} collides");
+        // Display renders something, and wrapped variants chain their
+        // cause while the wire-policy leaf does not.
+        assert!(!e.to_string().is_empty(), "{e:?}");
+        match e {
+            ServeError::NonFinitePayload { .. } => {
+                assert!(e.source().is_none(), "{e:?} is a leaf")
+            }
+            _ => assert!(e.source().is_some(), "{e:?} must chain its cause"),
+        }
+    }
+    // Engine-wrapped graph refusals surface the *graph* code on the
+    // wire — the root cause, not a generic engine bucket.
+    assert_eq!(
+        ServeError::from(AdmissionError::Engine(GraphError::EmptyBatch)).code(),
+        ServeError::from(GraphError::EmptyBatch).code(),
+    );
+    // Exhaustive: a new variant without a table row must fail loudly.
+    assert_eq!(table.len(), 18);
+}
+
 // ---------------------------------------------------------------------------
 // Stress smoke (CI runs this with --ignored)
 // ---------------------------------------------------------------------------
@@ -617,15 +752,15 @@ fn every_error_variant_renders_a_useful_chain() {
 fn stress_supervisor_restart_100x() {
     quiet_injected_panics();
     let x = image(77);
-    let baseline = InferenceServer::start_native(tiny_cfg())
+    let baseline = tiny_cfg()
+        .start()
         .expect("baseline")
         .infer(x.clone())
         .expect("fault-free serve");
 
     for seed in 0..100u64 {
         let plan = FaultPlan::seeded(seed).with_random_panics(12, 0.3);
-        let cfg = tiny_cfg().with_fault_plan(plan);
-        let server = InferenceServer::start_native(cfg).expect("start");
+        let server = tiny_cfg().fault_plan(plan).start().expect("start");
         for i in 0..12 {
             match server.infer(x.clone()) {
                 Ok(y) => {
