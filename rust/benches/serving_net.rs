@@ -210,6 +210,7 @@ fn open_loop(addr: std::net::SocketAddr, image: &[f32], offered: f64, frac: f64)
             wire::encode_request(
                 &wire::Request::Infer {
                     id: i,
+                    model: 0,
                     deadline_ms: 0,
                     image: image.clone(),
                 },

@@ -1,0 +1,220 @@
+//! Replica-pool serving bench: sharded dispatch over one shared
+//! compiled model, driven closed-loop at three pool widths.
+//!
+//!   cargo bench --bench serving_pool
+//!
+//! One `CompiledModel` (sparse vgg_tiny) is compiled **once** and the
+//! same `Arc` serves pools of 1, 2, and 4 replicas — the pool's whole
+//! premise is that replicas cost scratch memory, not filter banks.
+//! Each width is driven closed-loop with `WAVE` requests in flight
+//! (waves of async admissions, then a full drain), so the sharder has
+//! real concurrency to spread and every replica fuses full batches.
+//!
+//! Results go to `BENCH_serving_pool.json` (bench working directory).
+//! CI gates the headline `pool_speedup_r4_vs_r1` against a committed
+//! baseline, and the bench itself asserts the acceptance gates: pool
+//! outputs bit-identical to a direct `Session::forward` over the same
+//! model, and four replicas strictly out-serving one.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use swcnn::bench::print_table;
+use swcnn::coordinator::PoolBuilder;
+use swcnn::executor::{CompiledModel, ExecPolicy, Session};
+use swcnn::nn::graph::Synthetic;
+use swcnn::nn::vgg_tiny;
+use swcnn::util::json::Json;
+use swcnn::util::Rng;
+
+const SPARSITY: f64 = 0.7;
+const REPLICAS: [usize; 3] = [1, 2, 4];
+const MAX_BATCH: usize = 8;
+const WAVE: usize = 32;
+const WAVES: usize = 4;
+const WARMUP_WAVES: usize = 1;
+
+/// One measured pool width, ready for the table and the JSON.
+struct Run {
+    replicas: usize,
+    achieved_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    dispatch: Vec<u64>,
+    steals: Vec<u64>,
+}
+
+fn main() {
+    let policy = ExecPolicy::sparse(2, SPARSITY);
+    let model = Arc::new(
+        CompiledModel::uniform(vgg_tiny(), &mut Synthetic::new(7), policy)
+            .expect("vgg_tiny compiles"),
+    );
+    let mut direct = Session::from_model(Arc::clone(&model));
+    let mut rng = Rng::new(42);
+    let image = rng.gaussian_vec(direct.input_elements());
+    let want = direct.forward(&image).expect("direct forward");
+
+    let runs: Vec<Run> = REPLICAS
+        .iter()
+        .map(|&r| drive_pool(&model, r, &image, &want))
+        .collect();
+
+    let speedup_r4 = runs[2].achieved_rps / runs[0].achieved_rps;
+    let speedup_r2 = runs[1].achieved_rps / runs[0].achieved_rps;
+    let table: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![
+                format!("pool_r{}", r.replicas),
+                format!("{:.1} req/s", r.achieved_rps),
+                format!("{:.2} ms", r.p50_ms),
+                format!("{:.2} ms", r.p99_ms),
+                format!("{:.2}", r.mean_batch),
+                format!("{:?}", r.dispatch),
+                format!("{:?}", r.steals),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "replica-pool serving (sparse {SPARSITY} vgg_tiny, one shared \
+             CompiledModel, {WAVE} in flight, fused batches <= {MAX_BATCH})"
+        ),
+        &[
+            "pool", "achieved", "p50", "p99", "mean batch", "dispatch", "steals",
+        ],
+        &table,
+    );
+    println!("4 replicas vs 1: {speedup_r4:.2}x throughput ({speedup_r2:.2}x at 2)");
+    write_json(&runs, speedup_r2, speedup_r4);
+
+    // The scaling gate (CI runs this bench): four replicas over the
+    // same shared filter banks must out-serve one, or the pool is
+    // sharding overhead without buying parallel service.
+    assert!(
+        speedup_r4 > 1.0,
+        "a 4-replica pool must beat a 1-replica pool (got {speedup_r4:.2}x)"
+    );
+}
+
+/// Drive one pool width closed-loop and return its measured shape.
+///
+/// Gates correctness before measuring: the pool's logits must equal
+/// the direct forward bit for bit — a fast-but-wrong pool fails here.
+fn drive_pool(model: &Arc<CompiledModel>, replicas: usize, image: &[f32], want: &[f32]) -> Run {
+    let pool = PoolBuilder::new(Arc::clone(model), replicas)
+        .max_batch(MAX_BATCH)
+        .window(Duration::from_millis(2))
+        .start()
+        .expect("pool starts");
+
+    let got = pool.infer(image.to_vec()).expect("pool serves");
+    assert_eq!(
+        got, *want,
+        "pool serving must be bit-identical to a direct forward"
+    );
+
+    for _ in 0..WARMUP_WAVES {
+        let replies: Vec<_> = (0..WAVE)
+            .map(|_| pool.infer_async(image.to_vec()).expect("warmup admit"))
+            .collect();
+        for reply in replies {
+            reply.recv().expect("warmup reply").expect("warmup logits");
+        }
+    }
+
+    let mut lats = Vec::with_capacity(WAVES * WAVE);
+    let t0 = Instant::now();
+    for _ in 0..WAVES {
+        let sent: Vec<_> = (0..WAVE)
+            .map(|_| {
+                let t = Instant::now();
+                (pool.infer_async(image.to_vec()).expect("admit"), t)
+            })
+            .collect();
+        for (reply, t_send) in sent {
+            let logits = reply.recv().expect("reply").expect("logits");
+            assert_eq!(logits, *want, "every served request must match the direct forward");
+            lats.push(t_send.elapsed().as_secs_f64());
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let (mean_batch, dispatch, steals) = {
+        let m = pool.metrics.lock().expect("metrics lock");
+        (
+            m.mean_batch(),
+            m.replica_dispatch().to_vec(),
+            m.replica_steals().to_vec(),
+        )
+    };
+    pool.shutdown(true);
+
+    Run {
+        replicas,
+        achieved_rps: (WAVES * WAVE) as f64 / elapsed,
+        p50_ms: percentile_ms(&mut lats, 0.50),
+        p99_ms: percentile_ms(&mut lats, 0.99),
+        mean_batch,
+        dispatch,
+        steals,
+    }
+}
+
+/// Nearest-rank percentile in milliseconds; sorts in place.
+fn percentile_ms(lats: &mut [f64], p: f64) -> f64 {
+    if lats.is_empty() {
+        return f64::NAN;
+    }
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
+    lats[idx.min(lats.len() - 1)] * 1e3
+}
+
+/// `BENCH_serving_pool.json`: one row per pool width with achieved
+/// req/s, p50/p99 milliseconds, and the per-replica dispatch/steal
+/// counters, plus the headline 4-vs-1 throughput multiple CI gates.
+fn write_json(runs: &[Run], speedup_r2: f64, speedup_r4: f64) {
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(format!("pool_r{}", r.replicas))),
+                ("replicas".to_string(), Json::Num(r.replicas as f64)),
+                ("achieved_rps".to_string(), Json::Num(r.achieved_rps)),
+                ("p50_ms".to_string(), Json::Num(r.p50_ms)),
+                ("p99_ms".to_string(), Json::Num(r.p99_ms)),
+                ("mean_batch".to_string(), Json::Num(r.mean_batch)),
+                (
+                    "replica_dispatch".to_string(),
+                    Json::Arr(r.dispatch.iter().map(|&d| Json::Num(d as f64)).collect()),
+                ),
+                (
+                    "replica_steals".to_string(),
+                    Json::Arr(r.steals.iter().map(|&s| Json::Num(s as f64)).collect()),
+                ),
+            ]))
+        })
+        .collect();
+    let top = BTreeMap::from([
+        ("bench".to_string(), Json::Str("serving_pool".to_string())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("network".to_string(), Json::Str("vgg_tiny".to_string())),
+        (
+            "policy".to_string(),
+            Json::Str(format!("sparse F(2,3) p={SPARSITY}")),
+        ),
+        ("in_flight".to_string(), Json::Num(WAVE as f64)),
+        ("results".to_string(), Json::Arr(rows)),
+        ("pool_speedup_r2_vs_r1".to_string(), Json::Num(speedup_r2)),
+        ("pool_speedup_r4_vs_r1".to_string(), Json::Num(speedup_r4)),
+    ]);
+    let path = "BENCH_serving_pool.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -47,6 +47,12 @@ pub enum ServeError {
     /// NaN payloads are structurally valid frames, so they fail with a
     /// typed per-request error instead of a connection drop.
     NonFinitePayload { index: usize },
+    /// The request addressed a model id this server does not serve.
+    /// Like a NaN payload, a wrong model id is a structurally valid
+    /// frame: the request fails with a typed per-request error and the
+    /// connection stays up, so one misrouted client cannot take down a
+    /// multiplexed stream.
+    UnknownModel { model: u8 },
 }
 
 impl ServeError {
@@ -58,6 +64,7 @@ impl ServeError {
             ServeError::Admission(e) => admission_code(e),
             ServeError::Graph(e) => graph_code(e),
             ServeError::NonFinitePayload { .. } => 48,
+            ServeError::UnknownModel { .. } => 49,
         }
     }
 
@@ -84,6 +91,7 @@ impl ServeError {
             26 => "graph_panic",
             27 => "graph_poisoned",
             48 => "non_finite_payload",
+            49 => "unknown_model",
             _ => return None,
         })
     }
@@ -129,6 +137,11 @@ impl fmt::Display for ServeError {
                 "request payload has a non-finite value at element {index}; \
                  the wire protocol serves finite f32 tensors only"
             ),
+            ServeError::UnknownModel { model } => write!(
+                f,
+                "no model with id {model} is served here; \
+                 model 0 is the default on every server"
+            ),
         }
     }
 }
@@ -138,7 +151,7 @@ impl StdError for ServeError {
         match self {
             ServeError::Admission(e) => Some(e),
             ServeError::Graph(e) => Some(e),
-            ServeError::NonFinitePayload { .. } => None,
+            ServeError::NonFinitePayload { .. } | ServeError::UnknownModel { .. } => None,
         }
     }
 }
@@ -213,6 +226,7 @@ mod tests {
             GraphError::Panic("x".into()).into(),
             GraphError::Poisoned.into(),
             ServeError::NonFinitePayload { index: 3 },
+            ServeError::UnknownModel { model: 7 },
         ];
         for e in &errors {
             assert!(

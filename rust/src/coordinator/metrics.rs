@@ -26,6 +26,16 @@ pub struct Metrics {
     pub simd_features: String,
     /// Per-conv-layer vector width names actually served (graph order).
     conv_vwidths: Vec<String>,
+    /// Requests sharded to each replica at admission (`replica_id` →
+    /// count).  Empty for a single-worker server; sized by
+    /// [`Metrics::set_replicas`] when a pool starts.
+    replica_dispatch: Vec<u64>,
+    /// Requests each replica *stole* from a sibling's shard queue
+    /// (straggler rescue; credited to the thief).
+    replica_steals: Vec<u64>,
+    /// Batches each replica's supervisor failed on a caught engine
+    /// panic.
+    replica_faults: Vec<u64>,
     /// `batch_hist[s]` = number of launches with batch size s.
     batch_hist: Vec<u64>,
     /// Request latencies (seconds), bounded reservoir.
@@ -50,6 +60,9 @@ impl Metrics {
             queue_depth_peak: 0,
             simd_features: String::new(),
             conv_vwidths: Vec::new(),
+            replica_dispatch: Vec::new(),
+            replica_steals: Vec::new(),
+            replica_faults: Vec::new(),
             batch_hist: vec![0; max_batch + 1],
             latencies: Vec::with_capacity(reservoir),
             reservoir,
@@ -84,6 +97,56 @@ impl Metrics {
     /// Per-conv-layer vector width names recorded by [`Metrics::record_simd`].
     pub fn conv_vwidths(&self) -> &[String] {
         &self.conv_vwidths
+    }
+
+    /// Size the per-replica counters for an `n`-replica pool (call once
+    /// at pool start).  Until this runs the replica counters are empty
+    /// and the summary omits them — the single-server shape.
+    pub fn set_replicas(&mut self, n: usize) {
+        self.replica_dispatch.resize(n, 0);
+        self.replica_steals.resize(n, 0);
+        self.replica_faults.resize(n, 0);
+    }
+
+    /// One request sharded to `replica` at admission.
+    pub fn record_replica_dispatch(&mut self, replica: usize) {
+        if replica >= self.replica_dispatch.len() {
+            self.set_replicas(replica + 1);
+        }
+        self.replica_dispatch[replica] += 1;
+    }
+
+    /// `stolen` requests taken from a sibling's shard queue by
+    /// `replica` (the thief gets the credit).
+    pub fn record_replica_steal(&mut self, replica: usize, stolen: u64) {
+        if replica >= self.replica_steals.len() {
+            self.set_replicas(replica + 1);
+        }
+        self.replica_steals[replica] += stolen;
+    }
+
+    /// One batch failed by a caught engine panic on `replica`.
+    pub fn record_replica_fault(&mut self, replica: usize) {
+        if replica >= self.replica_faults.len() {
+            self.set_replicas(replica + 1);
+        }
+        self.replica_faults[replica] += 1;
+    }
+
+    /// Requests sharded to each replica at admission (empty for a
+    /// single-worker server).
+    pub fn replica_dispatch(&self) -> &[u64] {
+        &self.replica_dispatch
+    }
+
+    /// Requests each replica stole from a sibling's shard queue.
+    pub fn replica_steals(&self) -> &[u64] {
+        &self.replica_steals
+    }
+
+    /// Faulted batches per replica.
+    pub fn replica_faults(&self) -> &[u64] {
+        &self.replica_faults
     }
 
     pub fn record_batch(&mut self, batch_size: usize) {
@@ -124,7 +187,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} mean_batch={:.2} p50={:?} p99={:?} \
              rejected_full={} ejected_deadline={} worker_faults={} queue_depth_peak={} \
              simd={} vwidths=[{}]",
@@ -143,7 +206,25 @@ impl Metrics {
                 &self.simd_features
             },
             self.conv_vwidths.join(","),
-        )
+        );
+        // Replica counters appear only for a pool — a single-worker
+        // server keeps the historical line.  The values are joined
+        // without spaces so each stays one `key=value` token.
+        if !self.replica_dispatch.is_empty() {
+            let join = |v: &[u64]| {
+                v.iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            s.push_str(&format!(
+                " replica_dispatch=[{}] replica_steals=[{}] replica_faults=[{}]",
+                join(&self.replica_dispatch),
+                join(&self.replica_steals),
+                join(&self.replica_faults),
+            ));
+        }
+        s
     }
 
     /// Machine-readable twin of [`Metrics::summary`] with a **stable key
@@ -157,14 +238,17 @@ impl Metrics {
     ///   (the summary's `?` placeholder is display-only);
     /// - `vwidths` is an array of width names in graph order;
     /// - `batch_histogram[s]` = launches with batch size `s` (extra key,
-    ///   not part of the summary line).
+    ///   not part of the summary line);
+    /// - schema 2: `replica_dispatch` / `replica_steals` /
+    ///   `replica_faults` are `replica_id`-indexed arrays — empty for a
+    ///   single-worker server, sized by the replica pool at start.
     pub fn summary_json(&self) -> Json {
         let pct = |p: f64| match self.latency_percentile(p) {
             Some(v) => Json::Num(v),
             None => Json::Null,
         };
         let mut obj: BTreeMap<String, Json> = BTreeMap::new();
-        obj.insert("schema".into(), Json::Num(1.0));
+        obj.insert("schema".into(), Json::Num(2.0));
         obj.insert("requests".into(), Json::Num(self.requests as f64));
         obj.insert("batches".into(), Json::Num(self.batches as f64));
         obj.insert("mean_batch".into(), Json::Num(self.mean_batch()));
@@ -199,6 +283,10 @@ impl Metrics {
                     .collect(),
             ),
         );
+        let counts = |v: &[u64]| Json::Arr(v.iter().map(|&n| Json::Num(n as f64)).collect());
+        obj.insert("replica_dispatch".into(), counts(&self.replica_dispatch));
+        obj.insert("replica_steals".into(), counts(&self.replica_steals));
+        obj.insert("replica_faults".into(), counts(&self.replica_faults));
         Json::Obj(obj)
     }
 }
@@ -276,6 +364,14 @@ mod tests {
         m.record_worker_fault();
         m.record_queue_depth(5);
         m.record_simd("x86_64:sse2", vec!["w4".into()]);
+        // Pool shape: the per-replica counters must appear in the
+        // summary line AND under the same keys in the JSON twin.
+        m.set_replicas(2);
+        m.record_replica_dispatch(0);
+        m.record_replica_dispatch(1);
+        m.record_replica_dispatch(1);
+        m.record_replica_steal(0, 3);
+        m.record_replica_fault(1);
 
         let json = m.summary_json();
         let obj = json.as_obj().expect("summary_json is an object");
@@ -302,11 +398,43 @@ mod tests {
         let hist = parsed.req("batch_histogram").unwrap().as_arr().unwrap();
         assert_eq!(hist[4].as_f64(), Some(1.0));
         assert_eq!(hist[2].as_f64(), Some(1.0));
+        let dispatch = parsed.req("replica_dispatch").unwrap().as_arr().unwrap();
+        assert_eq!(dispatch[0].as_f64(), Some(1.0));
+        assert_eq!(dispatch[1].as_f64(), Some(2.0));
+        let steals = parsed.req("replica_steals").unwrap().as_arr().unwrap();
+        assert_eq!(steals[0].as_f64(), Some(3.0));
         // No latency recorded → p50 is null, not a fake zero.
         assert!(matches!(
             Metrics::new(4, 16).summary_json().req("p50").unwrap(),
             &Json::Null
         ));
+    }
+
+    #[test]
+    fn replica_counters_stay_out_of_the_single_server_summary() {
+        // A single-worker server never calls set_replicas; its summary
+        // line keeps the historical shape, while the JSON twin carries
+        // empty arrays under the stable keys.
+        let m = Metrics::new(4, 16);
+        assert!(!m.summary().contains("replica_"), "{}", m.summary());
+        let json = m.summary_json();
+        assert!(json.req("replica_dispatch").unwrap().as_arr().unwrap().is_empty());
+
+        let mut m = Metrics::new(4, 16);
+        m.set_replicas(3);
+        m.record_replica_dispatch(2);
+        m.record_replica_fault(0);
+        m.record_replica_steal(1, 4);
+        assert_eq!(m.replica_dispatch(), [0, 0, 1]);
+        assert_eq!(m.replica_faults(), [1, 0, 0]);
+        assert_eq!(m.replica_steals(), [0, 4, 0]);
+        let s = m.summary();
+        assert!(s.contains("replica_dispatch=[0,0,1]"), "{s}");
+        assert!(s.contains("replica_steals=[0,4,0]"), "{s}");
+        assert!(s.contains("replica_faults=[1,0,0]"), "{s}");
+        // Recording past the sized range grows rather than panics.
+        m.record_replica_dispatch(5);
+        assert_eq!(m.replica_dispatch().len(), 6);
     }
 
     #[test]

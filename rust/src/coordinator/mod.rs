@@ -21,6 +21,16 @@
 //! Thread model: std::thread + mpsc + condvar (the offline crate set has
 //! no tokio); one worker owns the engine, callers hold the server handle.
 //!
+//! The [`pool`] module scales the same contract horizontally: a
+//! [`ReplicaPool`] shards admitted requests across N supervised
+//! replicas that all serve **one** shared
+//! [`CompiledModel`](crate::executor::CompiledModel) — transformed
+//! filter banks are built once and shared read-only, mirroring the
+//! paper's clusters of small systolic arrays fed from one tailored
+//! memory layout.  Replicas steal work from stragglers, restart alone
+//! on panic, and the pool refuses admissions only when every replica is
+//! down.
+//!
 //! The [`net`] module puts a TCP front-end in front of the same
 //! admission queue: a length-prefixed binary protocol (`PROTOCOL.md`)
 //! whose error frames carry the stable [`ServeError`] codes, plus an
@@ -33,6 +43,7 @@ pub mod error;
 pub mod fault;
 pub mod metrics;
 pub mod net;
+pub mod pool;
 pub mod server;
 pub mod supervisor;
 
@@ -41,6 +52,7 @@ pub use error::ServeError;
 pub use fault::{render_log, FaultEvent, FaultPlan};
 pub use metrics::Metrics;
 pub use net::{NetClient, NetError, NetServer};
+pub use pool::{PoolBuilder, PoolConfig, ReplicaPool};
 pub use server::{
     AdmissionError, AdmissionPolicy, InferenceServer, NativeServerConfig, Reply, ServeBuilder,
     ServerConfig,

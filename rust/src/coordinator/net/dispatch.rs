@@ -20,11 +20,19 @@
 //! The listener (one writer thread per connection) resolves pending
 //! replies in admission order, which keeps responses in request order
 //! per connection while stayed-open connections pipeline freely.
+//!
+//! Multi-model serving adds one layer in front: a [`ModelTable`] maps
+//! the request's model id (header byte 7) to the [`InferenceServer`]
+//! keyed with it, and [`route`] is [`dispatch`] behind that lookup — an
+//! unknown id answers with a typed [`ServeError::UnknownModel`] frame
+//! and the connection lives on.
 
 use super::super::error::ServeError;
 use super::super::server::{AdmissionError, InferenceServer, Reply};
 use super::wire::{Request, Response};
+use crate::nn::graph::GraphError;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// The immediate outcome of dispatching one decoded frame.
@@ -49,10 +57,90 @@ pub fn error_response(id: u64, err: &ServeError) -> Response {
     }
 }
 
+/// The model-id → server routing table of a multi-model listener:
+/// every entry is one independently configured [`InferenceServer`]
+/// (its own queue, batcher, deadlines, supervisor) keyed by the id the
+/// wire protocol carries in request header byte 7.
+///
+/// The table is immutable once built — routing is a lock-free slice
+/// scan over at most 256 entries, and connection threads share it
+/// through an `Arc`.
+#[derive(Debug)]
+pub struct ModelTable {
+    /// Sorted by model id; the first entry is the default server a
+    /// single-model client (model 0, or whatever the lone id is)
+    /// reaches.
+    entries: Vec<(u8, Arc<InferenceServer>)>,
+}
+
+impl ModelTable {
+    /// Build the table from servers keyed by their own
+    /// [`model_id`](InferenceServer::model_id).  Refuses an empty set
+    /// and duplicate ids with a typed [`GraphError::Config`].
+    pub fn new(servers: Vec<InferenceServer>) -> Result<Self, GraphError> {
+        if servers.is_empty() {
+            return Err(GraphError::Config(
+                "a model table needs at least one server".into(),
+            ));
+        }
+        let mut entries: Vec<(u8, Arc<InferenceServer>)> = servers
+            .into_iter()
+            .map(|s| (s.model_id(), Arc::new(s)))
+            .collect();
+        entries.sort_by_key(|(id, _)| *id);
+        if let Some(w) = entries.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(GraphError::Config(format!(
+                "two servers claim model id {}; give each ServeBuilder a \
+                 distinct .model(id)",
+                w[0].0
+            )));
+        }
+        Ok(Self { entries })
+    }
+
+    /// The server keyed by `model`, if any.
+    pub fn get(&self, model: u8) -> Option<&Arc<InferenceServer>> {
+        self.entries
+            .iter()
+            .find(|(id, _)| *id == model)
+            .map(|(_, s)| s)
+    }
+
+    /// The lowest-id server — what single-model accessors
+    /// ([`NetServer::server`](super::NetServer::server)) expose.
+    pub fn default_server(&self) -> &Arc<InferenceServer> {
+        &self.entries[0].1
+    }
+
+    /// The model ids served, ascending.
+    pub fn models(&self) -> Vec<u8> {
+        self.entries.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// Every server in the table, ascending by model id.
+    pub fn servers(&self) -> impl Iterator<Item = &Arc<InferenceServer>> {
+        self.entries.iter().map(|(_, s)| s)
+    }
+}
+
+/// Route one decoded request through the model table and onto the
+/// serving pipeline.  An unknown model id is a per-request typed error
+/// ([`ServeError::UnknownModel`], code 49), never a connection kill —
+/// the frame was structurally fine, the address was wrong.
+pub fn route(table: &ModelTable, req: Request) -> Dispatched {
+    match table.get(req.model()) {
+        Some(server) => dispatch(server, req),
+        None => {
+            let err = ServeError::UnknownModel { model: req.model() };
+            Dispatched::Now(error_response(req.id(), &err))
+        }
+    }
+}
+
 /// Map one decoded request onto the serving pipeline.
 pub fn dispatch(server: &InferenceServer, req: Request) -> Dispatched {
     match req {
-        Request::Metrics { id } => {
+        Request::Metrics { id, .. } => {
             let json = server
                 .metrics
                 .lock()
@@ -65,6 +153,7 @@ pub fn dispatch(server: &InferenceServer, req: Request) -> Dispatched {
             id,
             deadline_ms,
             image,
+            ..
         } => {
             // The wire payload policy (see Request::first_non_finite):
             // NaN/Inf tensors fail typed, per request, not per socket.

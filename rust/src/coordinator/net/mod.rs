@@ -25,13 +25,21 @@
 //!
 //! The metrics endpoint is in-band: a [`wire::KIND_METRICS`] frame on
 //! any connection answers with the
-//! [`Metrics::summary_json`](super::Metrics::summary_json) document.
+//! [`Metrics::summary_json`](super::Metrics::summary_json) document of
+//! the model the frame addresses.
+//!
+//! One listener can serve **several models**: bind with
+//! [`NetServer::bind_models`] and a set of servers keyed by
+//! [`ServeBuilder::model`](super::ServeBuilder::model), and every frame
+//! routes on its model id (request header byte 7) through a
+//! [`dispatch::ModelTable`].  [`NetServer::bind`] stays the
+//! single-model sugar.
 
 pub mod dispatch;
 pub mod wire;
 
 use super::server::InferenceServer;
-use dispatch::Dispatched;
+use dispatch::{Dispatched, ModelTable};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -54,17 +62,20 @@ enum WriterItem {
     },
 }
 
-/// A running TCP front-end over an [`InferenceServer`].
+/// A running TCP front-end over one or more [`InferenceServer`]s.
 ///
-/// Binding takes ownership of the server: every connection dispatches
-/// into the same bounded admission queue, so network clients and the
+/// Binding takes ownership of the servers: every connection dispatches
+/// into their bounded admission queues, so network clients and the
 /// breaker/deadline/drain machinery behind [`InferenceServer`] compose
-/// with zero new serving semantics.  [`NetServer::shutdown`] stops
-/// accepting, drains the engine (queued requests complete and flush to
-/// their sockets), then joins every connection thread; dropping the
-/// handle does the same.
+/// with zero new serving semantics.  With several servers
+/// ([`NetServer::bind_models`]) each frame routes on its model id —
+/// every model keeps its own queue, batcher, and supervisor, sharing
+/// only the listener.  [`NetServer::shutdown`] stops accepting, drains
+/// every engine (queued requests complete and flush to their sockets),
+/// then joins every connection thread; dropping the handle does the
+/// same.
 pub struct NetServer {
-    server: Arc<InferenceServer>,
+    servers: Arc<ModelTable>,
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Mutex<Option<JoinHandle<()>>>,
@@ -75,37 +86,56 @@ impl std::fmt::Debug for NetServer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("NetServer")
             .field("addr", &self.addr)
-            .field("server", &self.server)
+            .field("models", &self.servers.models())
+            .field("server", &self.servers.default_server())
             .finish_non_exhaustive()
     }
 }
 
 impl NetServer {
-    /// Bind the listener and start accepting.  `addr` is any
-    /// `ToSocketAddrs` (use port 0 to let the OS pick; read the bound
-    /// address back with [`NetServer::local_addr`]).
+    /// Bind the listener and start accepting a single model.  `addr` is
+    /// any `ToSocketAddrs` (use port 0 to let the OS pick; read the
+    /// bound address back with [`NetServer::local_addr`]).  Frames
+    /// route to this server whatever its model id — the single-model
+    /// sugar over [`NetServer::bind_models`].
     pub fn bind(addr: impl ToSocketAddrs, server: InferenceServer) -> io::Result<Self> {
+        Self::bind_models(addr, vec![server])
+    }
+
+    /// Bind one listener over several models.  Each server carries its
+    /// own model id (set with
+    /// [`ServeBuilder::model`](super::ServeBuilder::model)); a frame
+    /// whose header byte 7 matches none of them answers with the stable
+    /// `unknown_model` error code, per request, without dropping the
+    /// connection.  Duplicate ids or an empty set refuse the bind.
+    pub fn bind_models(
+        addr: impl ToSocketAddrs,
+        servers: Vec<InferenceServer>,
+    ) -> io::Result<Self> {
+        let servers = Arc::new(
+            ModelTable::new(servers)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, e.to_string()))?,
+        );
         let listener = TcpListener::bind(addr)?;
         // Non-blocking accept + poll: std has no timed accept, and a
         // blocking one would pin the accept thread past shutdown.
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
-        let server = Arc::new(server);
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
         let accept = {
-            let server = Arc::clone(&server);
+            let servers = Arc::clone(&servers);
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             std::thread::spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            let server = Arc::clone(&server);
+                            let servers = Arc::clone(&servers);
                             let stop = Arc::clone(&stop);
                             let handle =
-                                std::thread::spawn(move || serve_connection(stream, server, stop));
+                                std::thread::spawn(move || serve_connection(stream, servers, stop));
                             lock_poisonless(&conns).push(handle);
                         }
                         Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -120,7 +150,7 @@ impl NetServer {
         };
 
         Ok(Self {
-            server,
+            servers,
             addr,
             stop,
             accept: Mutex::new(Some(accept)),
@@ -133,17 +163,29 @@ impl NetServer {
         self.addr
     }
 
-    /// The inference server behind the listener (metrics, queue depth,
-    /// breaker state — the same handle in-process callers hold).
+    /// The lowest-id inference server behind the listener — *the*
+    /// server on a single-model bind (metrics, queue depth, breaker
+    /// state: the same handle in-process callers hold).
     pub fn server(&self) -> &InferenceServer {
-        &self.server
+        self.servers.default_server()
     }
 
-    /// The metrics document the in-band metrics endpoint serves, for
-    /// in-process consumers (same bytes a [`wire::KIND_METRICS`] frame
-    /// returns).
+    /// The server keyed by `model`, if this listener serves it.
+    pub fn model_server(&self, model: u8) -> Option<&InferenceServer> {
+        self.servers.get(model).map(|s| s.as_ref())
+    }
+
+    /// The model ids this listener routes, ascending.
+    pub fn models(&self) -> Vec<u8> {
+        self.servers.models()
+    }
+
+    /// The metrics document the in-band metrics endpoint serves for the
+    /// default model, for in-process consumers (same bytes a
+    /// [`wire::KIND_METRICS`] frame returns).
     pub fn metrics_json(&self) -> String {
-        self.server
+        self.servers
+            .default_server()
             .metrics
             .lock()
             .unwrap_or_else(|p| p.into_inner())
@@ -151,7 +193,7 @@ impl NetServer {
             .to_string()
     }
 
-    /// Graceful drain: stop accepting, drain the engine (every queued
+    /// Graceful drain: stop accepting, drain every engine (every queued
     /// request completes — the server's drain bypasses the batching
     /// window), flush the completions to their sockets, and join every
     /// thread.  Idempotent; `drop` calls it.
@@ -159,7 +201,9 @@ impl NetServer {
         self.stop.store(true, Ordering::SeqCst);
         // Drain, don't reject: admitted network requests complete with
         // logits; only *new* admissions see ShuttingDown.
-        self.server.shutdown(true);
+        for server in self.servers.servers() {
+            server.shutdown(true);
+        }
         if let Some(h) = lock_poisonless(&self.accept).take() {
             let _ = h.join();
         }
@@ -186,7 +230,7 @@ fn lock_poisonless<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
 /// an in-order queue of resolved-or-pending responses; the writer blocks
 /// on each pending reply in turn.  Requests therefore batch across the
 /// window while responses stay in request order per connection.
-fn serve_connection(stream: TcpStream, server: Arc<InferenceServer>, stop: Arc<AtomicBool>) {
+fn serve_connection(stream: TcpStream, servers: Arc<ModelTable>, stop: Arc<AtomicBool>) {
     // Latency over throughput for small frames; best-effort.
     let _ = stream.set_nodelay(true);
     // Timed reads so the reader notices shutdown; reads buffer into
@@ -199,7 +243,7 @@ fn serve_connection(stream: TcpStream, server: Arc<InferenceServer>, stop: Arc<A
     let (tx, rx) = mpsc::channel::<WriterItem>();
     let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
 
-    read_loop(stream, &server, &stop, &tx);
+    read_loop(stream, &servers, &stop, &tx);
 
     // Reader done (peer closed, framing error, or shutdown): close the
     // queue so the writer exits after flushing what is still pending.
@@ -209,7 +253,7 @@ fn serve_connection(stream: TcpStream, server: Arc<InferenceServer>, stop: Arc<A
 
 fn read_loop(
     mut stream: TcpStream,
-    server: &InferenceServer,
+    servers: &ModelTable,
     stop: &AtomicBool,
     tx: &mpsc::Sender<WriterItem>,
 ) {
@@ -221,7 +265,7 @@ fn read_loop(
             match wire::decode_request(&buf) {
                 Ok(Some((req, consumed))) => {
                     buf.drain(..consumed);
-                    let item = match dispatch::dispatch(server, req) {
+                    let item = match dispatch::route(servers, req) {
                         Dispatched::Now(resp) => WriterItem::Now(resp),
                         Dispatched::Pending { id, reply } => WriterItem::Pending { id, reply },
                     };
@@ -346,6 +390,8 @@ pub struct NetClient {
     /// Undecoded bytes read past the last returned frame.
     buf: Vec<u8>,
     next_id: u64,
+    /// Model id stamped on every outgoing request (header byte 7).
+    model: u8,
 }
 
 impl NetClient {
@@ -356,7 +402,20 @@ impl NetClient {
             stream,
             buf: Vec::new(),
             next_id: 1,
+            model: 0,
         })
+    }
+
+    /// Address a model behind a multi-model server: every subsequent
+    /// request carries this id.  New connections start at 0, the
+    /// default model — so a single-model client never calls this.
+    pub fn set_model(&mut self, model: u8) {
+        self.model = model;
+    }
+
+    /// The model id outgoing requests currently carry.
+    pub fn model(&self) -> u8 {
+        self.model
     }
 
     /// Send one inference request without waiting; returns its id.
@@ -368,6 +427,7 @@ impl NetClient {
         wire::encode_request(
             &wire::Request::Infer {
                 id,
+                model: self.model,
                 deadline_ms,
                 image: image.to_vec(),
             },
@@ -382,7 +442,13 @@ impl NetClient {
         let id = self.next_id;
         self.next_id += 1;
         let mut out = Vec::with_capacity(wire::HEADER_LEN);
-        wire::encode_request(&wire::Request::Metrics { id }, &mut out);
+        wire::encode_request(
+            &wire::Request::Metrics {
+                id,
+                model: self.model,
+            },
+            &mut out,
+        );
         self.stream.write_all(&out)?;
         Ok(id)
     }

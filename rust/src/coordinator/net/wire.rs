@@ -11,7 +11,7 @@
 //! [0..4)   magic  b"SWNP"              [0..4)   magic  b"SWNP"
 //! [4..6)   version u16 = 1             [4..6)   version u16 = 1
 //! [6]      kind: 0 infer, 1 metrics    [6]      kind: 0x80 logits,
-//! [7]      reserved = 0                         0x81 error, 0x82 metrics
+//! [7]      model id u8 (0 = default)            0x81 error, 0x82 metrics
 //! [8..16)  request id u64              [7]      reserved = 0
 //! [16..20) deadline millis u32         [8..16)  request id u64 (echoed)
 //!          (0 = server default)        [16..18) error code u16 (0 = ok)
@@ -19,6 +19,12 @@
 //! payload: count * 4 bytes f32 LE      [20..24) payload byte length u32
 //!                                      payload: logits f32 LE / UTF-8
 //! ```
+//!
+//! Request byte \[7\] was "reserved = 0" in the first revision of v1;
+//! it now selects the **model** on a multi-model server.  This is a
+//! compatible reuse: v1 readers always ignored the byte, and v1 writers
+//! always zeroed it, so every old frame addresses model 0 — the default
+//! model every server exposes.
 //!
 //! Decoding is **streaming**: [`decode_request`] / [`decode_response`]
 //! return `Ok(None)` on an incomplete prefix (read more bytes and call
@@ -68,22 +74,31 @@ pub const KIND_METRICS_JSON: u8 = 0x82;
 /// One decoded request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Run the image through the batcher.  `deadline_ms == 0` means the
-    /// server's default deadline applies.
+    /// Run the image through the batcher of model `model`.
+    /// `deadline_ms == 0` means the server's default deadline applies.
     Infer {
         id: u64,
+        model: u8,
         deadline_ms: u32,
         image: Vec<f32>,
     },
-    /// Read-only metrics snapshot (served as JSON).
-    Metrics { id: u64 },
+    /// Read-only metrics snapshot of model `model` (served as JSON).
+    Metrics { id: u64, model: u8 },
 }
 
 impl Request {
     /// The request id echoed back in the matching response.
     pub fn id(&self) -> u64 {
         match self {
-            Request::Infer { id, .. } | Request::Metrics { id } => *id,
+            Request::Infer { id, .. } | Request::Metrics { id, .. } => *id,
+        }
+    }
+
+    /// The model this request addresses (header byte 7; 0 is the
+    /// default model, and the only one on a single-model server).
+    pub fn model(&self) -> u8 {
+        match self {
+            Request::Infer { model, .. } | Request::Metrics { model, .. } => *model,
         }
     }
 
@@ -178,11 +193,11 @@ impl std::error::Error for WireError {}
 // Encoding
 // ---------------------------------------------------------------------------
 
-fn push_header(out: &mut Vec<u8>, kind: u8, id: u64, h16: u32, h20: u32) {
+fn push_header(out: &mut Vec<u8>, kind: u8, byte7: u8, id: u64, h16: u32, h20: u32) {
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(kind);
-    out.push(0); // reserved
+    out.push(byte7); // requests: model id; responses: reserved = 0
     out.extend_from_slice(&id.to_le_bytes());
     out.extend_from_slice(&h16.to_le_bytes());
     out.extend_from_slice(&h20.to_le_bytes());
@@ -193,15 +208,23 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
     match req {
         Request::Infer {
             id,
+            model,
             deadline_ms,
             image,
         } => {
-            push_header(out, KIND_INFER, *id, *deadline_ms, image.len() as u32);
+            push_header(
+                out,
+                KIND_INFER,
+                *model,
+                *id,
+                *deadline_ms,
+                image.len() as u32,
+            );
             for v in image {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        Request::Metrics { id } => push_header(out, KIND_METRICS, *id, 0, 0),
+        Request::Metrics { id, model } => push_header(out, KIND_METRICS, *model, *id, 0, 0),
     }
 }
 
@@ -209,17 +232,17 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
 pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
     match resp {
         Response::Logits { id, values } => {
-            push_header(out, KIND_LOGITS, *id, 0, (values.len() * 4) as u32);
+            push_header(out, KIND_LOGITS, 0, *id, 0, (values.len() * 4) as u32);
             for v in values {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
         Response::Error { id, code, msg } => {
-            push_header(out, KIND_ERROR, *id, *code as u32, msg.len() as u32);
+            push_header(out, KIND_ERROR, 0, *id, *code as u32, msg.len() as u32);
             out.extend_from_slice(msg.as_bytes());
         }
         Response::MetricsJson { id, json } => {
-            push_header(out, KIND_METRICS_JSON, *id, 0, json.len() as u32);
+            push_header(out, KIND_METRICS_JSON, 0, *id, 0, json.len() as u32);
             out.extend_from_slice(json.as_bytes());
         }
     }
@@ -246,7 +269,8 @@ fn u64_at(b: &[u8], off: usize) -> u64 {
 /// Validate the fixed header prefix shared by both directions; returns
 /// the kind byte.  Reserved bytes are ignored on read (writers must zero
 /// them) so a future minor revision can use them without breaking v1
-/// decoders.
+/// decoders — exactly the path request byte \[7\] took when it became
+/// the model id.
 fn check_header(buf: &[u8]) -> Result<u8, WireError> {
     if buf[0..4] != MAGIC {
         return Err(WireError::BadMagic {
@@ -268,6 +292,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, WireError>
         return Ok(None);
     }
     let kind = check_header(buf)?;
+    let model = buf[7];
     let id = u64_at(buf, 8);
     let deadline_ms = u32_at(buf, 16);
     let elems = u32_at(buf, 20);
@@ -290,6 +315,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, WireError>
             Ok(Some((
                 Request::Infer {
                     id,
+                    model,
                     deadline_ms,
                     image,
                 },
@@ -303,7 +329,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, WireError>
                     detail: "metrics requests carry no payload",
                 });
             }
-            Ok(Some((Request::Metrics { id }, HEADER_LEN)))
+            Ok(Some((Request::Metrics { id, model }, HEADER_LEN)))
         }
         other => Err(WireError::UnknownKind { got: other }),
     }
@@ -433,11 +459,13 @@ mod tests {
             let req = if case % 5 == 4 {
                 Request::Metrics {
                     id: rng.next_u64(),
+                    model: (rng.next_u64() % 256) as u8,
                 }
             } else {
                 let n = (rng.next_u64() % 300) as usize;
                 Request::Infer {
                     id: rng.next_u64(),
+                    model: (rng.next_u64() % 256) as u8,
                     deadline_ms: (rng.next_u64() % 100_000) as u32,
                     image: (0..n).map(|_| rng.next_f32_symmetric()).collect(),
                 }
@@ -497,7 +525,7 @@ mod tests {
     fn truncated_header_is_incomplete_not_corrupt() {
         // A short read is normal on a socket: the streaming decoder asks
         // for more bytes; only the strict form calls it an error.
-        let bytes = encode_req(&Request::Metrics { id: 7 });
+        let bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         assert_eq!(decode_request(&bytes[..HEADER_LEN - 1]).expect("ok"), None);
         match decode_request_exact(&bytes[..HEADER_LEN - 1]) {
             Err(WireError::Truncated { need, got }) => {
@@ -512,6 +540,7 @@ mod tests {
     fn truncated_payload_reports_the_full_frame_length() {
         let req = Request::Infer {
             id: 1,
+            model: 0,
             deadline_ms: 0,
             image: vec![1.0; 10],
         };
@@ -527,7 +556,7 @@ mod tests {
 
     #[test]
     fn bad_magic_is_fatal() {
-        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        let mut bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         bytes[0] = b'X';
         match decode_request(&bytes) {
             Err(WireError::BadMagic { got }) => assert_eq!(&got[1..], &MAGIC[1..]),
@@ -537,7 +566,7 @@ mod tests {
 
     #[test]
     fn unknown_version_is_refused() {
-        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        let mut bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         bytes[4] = 0xFF;
         assert_eq!(
             decode_request(&bytes),
@@ -547,12 +576,12 @@ mod tests {
 
     #[test]
     fn unknown_kind_is_refused_per_direction() {
-        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        let mut bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         bytes[6] = 9;
         assert_eq!(decode_request(&bytes), Err(WireError::UnknownKind { got: 9 }));
         // A *request* kind arriving on the response direction is equally
         // unknown: the kind spaces are disjoint on purpose.
-        let bytes = encode_req(&Request::Metrics { id: 7 });
+        let bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         assert_eq!(
             decode_response(&bytes),
             Err(WireError::UnknownKind { got: KIND_METRICS })
@@ -563,6 +592,7 @@ mod tests {
     fn oversized_length_is_corruption_not_an_allocation() {
         let mut bytes = encode_req(&Request::Infer {
             id: 1,
+            model: 0,
             deadline_ms: 0,
             image: vec![0.0; 4],
         });
@@ -578,7 +608,7 @@ mod tests {
 
     #[test]
     fn metrics_request_with_payload_is_inconsistent() {
-        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        let mut bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         bytes[20] = 1;
         assert!(matches!(
             decode_request(&bytes),
@@ -592,6 +622,7 @@ mod tests {
         // the dispatcher fails the request with a typed code instead.
         let req = Request::Infer {
             id: 3,
+            model: 0,
             deadline_ms: 0,
             image: vec![1.0, f32::NAN, 2.0],
         };
@@ -600,16 +631,20 @@ mod tests {
         assert_eq!(decoded.first_non_finite(), Some(1));
         let ok = Request::Infer {
             id: 3,
+            model: 0,
             deadline_ms: 0,
             image: vec![1.0, f32::INFINITY],
         };
         assert_eq!(ok.first_non_finite(), Some(1), "infinities fail too");
-        assert_eq!(Request::Metrics { id: 1 }.first_non_finite(), None);
+        assert_eq!(
+            Request::Metrics { id: 1, model: 0 }.first_non_finite(),
+            None
+        );
     }
 
     #[test]
     fn trailing_bytes_only_fail_strict_decoding() {
-        let mut bytes = encode_req(&Request::Metrics { id: 7 });
+        let mut bytes = encode_req(&Request::Metrics { id: 7, model: 0 });
         bytes.push(0xAA);
         assert_eq!(
             decode_request_exact(&bytes),
@@ -617,8 +652,41 @@ mod tests {
         );
         // The streaming decoder leaves the extra byte for the next frame.
         let (req, n) = decode_request(&bytes).expect("ok").expect("complete");
-        assert_eq!(req, Request::Metrics { id: 7 });
+        assert_eq!(req, Request::Metrics { id: 7, model: 0 });
         assert_eq!(n, bytes.len() - 1);
+    }
+
+    #[test]
+    fn model_id_rides_request_header_byte_7() {
+        // The model id lives at the byte the first v1 revision reserved:
+        // a writer that still zeroes it (every pre-multi-model client)
+        // addresses model 0, and patching the byte retargets the frame
+        // without touching anything else.
+        let req = Request::Infer {
+            id: 11,
+            model: 3,
+            deadline_ms: 250,
+            image: vec![1.0, 2.0],
+        };
+        let mut bytes = encode_req(&req);
+        assert_eq!(bytes[7], 3, "model id lives at header offset 7");
+        bytes[7] = 0;
+        match decode_request_exact(&bytes).expect("still a valid v1 frame") {
+            Request::Infer {
+                id, model, image, ..
+            } => {
+                assert_eq!(id, 11);
+                assert_eq!(model, 0, "a zeroed byte 7 is the default model");
+                assert_eq!(image, vec![1.0, 2.0]);
+            }
+            other => panic!("want Infer, got {other:?}"),
+        }
+        let metrics = encode_req(&Request::Metrics { id: 12, model: 200 });
+        assert_eq!(metrics[7], 200);
+        assert_eq!(
+            decode_request_exact(&metrics).expect("decodes").model(),
+            200
+        );
     }
 
     #[test]

@@ -1,0 +1,1112 @@
+//! Replica-pool serving: N supervised workers over **one** shared
+//! compiled model.
+//!
+//! The paper's accelerator scales by feeding *clusters* of small-scale
+//! systolic arrays from one tailored memory layout — the transformed
+//! filters are the shared read-only resource and the compute units fan
+//! out around them.  This module is the serving-stack mirror of that
+//! split: the immutable compiled artifacts (transformed filter banks,
+//! quantizers, plan constants) live in a single [`Arc<CompiledModel>`],
+//! and each replica owns only its mutable ping-pong workspace and
+//! scratch ([`Session::from_model`]).  Starting a 4-replica pool
+//! transforms the filters exactly once.
+//!
+//! # Dispatch model
+//!
+//! Admission shards requests across per-replica queues with a
+//! round-robin cursor, skipping replicas that are dead or whose circuit
+//! breaker is open.  Each replica runs the same 3-phase worker loop as
+//! the single [`InferenceServer`](super::InferenceServer) — deadline
+//! ejection, window-accumulated batching, supervised execution — and
+//! when its own shard queue is empty it **steals** from the most loaded
+//! straggler (a sibling whose head request has already waited out the
+//! batching window, or whose queue has overflowed one fused batch).
+//!
+//! # Failure model
+//!
+//! Per-replica semantics are exactly the single server's: a panicked
+//! replica restarts alone with bounded backoff, trips only its *own*
+//! breaker, and fails only its own in-flight batch.  The pool refuses
+//! admissions only when **every** replica is down.  A genuinely dying
+//! replica thread (an injected kill) re-shards its queued and in-flight
+//! requests to the survivors — the no-silent-drop guarantee holds
+//! pool-wide: every admitted request gets exactly one completion.
+
+use super::batcher::Batcher;
+use super::fault::FaultEvent;
+#[cfg(feature = "fault-injection")]
+use super::fault::FaultPlan;
+use super::metrics::Metrics;
+use super::server::{
+    eject_expired, lock_metrics, AdmissionError, AdmissionPolicy, Pending, Reply, RunMode,
+    DEFAULT_QUEUE_CAPACITY, IDLE_POLL,
+};
+use super::supervisor::{BatchFailure, Engine, RestartPolicy, Supervisor};
+use crate::executor::{CompiledModel, Session};
+use crate::nn::graph::GraphError;
+use crate::winograd::simd;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Builder for a [`ReplicaPool`]: the pool-shaped twin of
+/// [`ServeBuilder`](super::ServeBuilder), validated the same way at
+/// build time.
+///
+/// ```
+/// use std::sync::Arc;
+/// use swcnn::coordinator::PoolBuilder;
+/// use swcnn::executor::{CompiledModel, ExecPolicy};
+/// use swcnn::nn::{graph::Synthetic, vgg_tiny};
+///
+/// let model = Arc::new(
+///     CompiledModel::uniform(
+///         vgg_tiny(),
+///         &mut Synthetic::new(7),
+///         ExecPolicy::sparse(2, 0.7),
+///     )
+///     .unwrap(),
+/// );
+/// // Two replicas share `model`'s transformed filter banks; each owns
+/// // only its private workspace.
+/// let pool = PoolBuilder::new(model, 2).max_batch(4).start().unwrap();
+/// let logits = pool.infer(vec![0.1; pool.input_elements()]).unwrap();
+/// assert_eq!(logits.len(), 10);
+/// ```
+pub struct PoolBuilder {
+    model: Arc<CompiledModel>,
+    replicas: usize,
+    window: Duration,
+    max_batch: usize,
+    queue_capacity: usize,
+    admission: AdmissionPolicy,
+    default_deadline: Option<Duration>,
+    restart: RestartPolicy,
+    #[cfg(feature = "fault-injection")]
+    fault_plans: Vec<Option<FaultPlan>>,
+}
+
+impl std::fmt::Debug for PoolBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("PoolBuilder");
+        d.field("model", &self.model)
+            .field("replicas", &self.replicas)
+            .field("window", &self.window)
+            .field("max_batch", &self.max_batch)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
+            .field("default_deadline", &self.default_deadline)
+            .field("restart", &self.restart);
+        #[cfg(feature = "fault-injection")]
+        d.field("fault_plans", &self.fault_plans);
+        d.finish_non_exhaustive()
+    }
+}
+
+impl PoolBuilder {
+    /// Start from a shared compiled model and a replica count, with the
+    /// single server's conservative defaults (batch ≤ 4 over a 2ms
+    /// window, 256-deep reject-new shard queues, no default deadline,
+    /// default supervisor policy).
+    pub fn new(model: Arc<CompiledModel>, replicas: usize) -> Self {
+        Self {
+            model,
+            replicas,
+            window: Duration::from_millis(2),
+            max_batch: 4,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            admission: AdmissionPolicy::RejectNew,
+            default_deadline: None,
+            restart: RestartPolicy::default(),
+            #[cfg(feature = "fault-injection")]
+            fault_plans: Vec::new(),
+        }
+    }
+
+    /// Size the pool from a tuner capacity plan
+    /// ([`crate::tuner::plan_capacity`] / `TuneProfile::capacity`): the
+    /// plan's replica count shapes the pool here; its per-replica worker
+    /// count is a compile-time knob the model's
+    /// [`ExecPolicy::workers`](crate::executor::ExecPolicy::workers)
+    /// must already carry.
+    pub fn from_capacity(model: Arc<CompiledModel>, plan: &crate::tuner::CapacityPlan) -> Self {
+        Self::new(model, plan.replicas)
+    }
+
+    /// Batch-accumulation window per replica (zero = dispatch
+    /// immediately).
+    pub fn window(mut self, window: Duration) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Largest batch one replica launch may run.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Bound each replica's shard queue and pick the full-queue policy.
+    /// The pool's total admission capacity is `replicas × capacity`;
+    /// a request is refused (or evicts the oldest on its shard) only
+    /// when every live replica's queue is full.
+    pub fn queue(mut self, capacity: usize, admission: AdmissionPolicy) -> Self {
+        self.queue_capacity = capacity;
+        self.admission = admission;
+        self
+    }
+
+    /// Default per-request deadline (measured from enqueue); `None`
+    /// waits indefinitely.
+    pub fn default_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.default_deadline = deadline;
+        self
+    }
+
+    /// Supervisor restart / circuit-breaker policy (applied to every
+    /// replica independently).
+    pub fn restart(mut self, restart: RestartPolicy) -> Self {
+        self.restart = restart;
+        self
+    }
+
+    /// Attach a deterministic fault schedule to **one** replica
+    /// (robustness tests only) — the others keep serving fault-free,
+    /// which is exactly what the killed-replica proofs need.
+    #[cfg(feature = "fault-injection")]
+    pub fn fault_plan(mut self, replica: usize, plan: FaultPlan) -> Self {
+        if self.fault_plans.len() <= replica {
+            self.fault_plans.resize(replica + 1, None);
+        }
+        self.fault_plans[replica] = Some(plan);
+        self
+    }
+
+    /// Validate the knob combination and produce the config
+    /// [`ReplicaPool::start`] consumes.  Refusals are typed
+    /// [`GraphError::Config`], mirroring
+    /// [`ServeBuilder::build`](super::ServeBuilder::build).
+    pub fn build(self) -> Result<PoolConfig, GraphError> {
+        if self.replicas == 0 {
+            return Err(GraphError::Config(
+                "replicas must be at least 1 (a zero-replica pool can never serve)".into(),
+            ));
+        }
+        if self.max_batch == 0 {
+            return Err(GraphError::Config(
+                "max_batch must be at least 1 (a zero-size launch can never fire)".into(),
+            ));
+        }
+        if self.queue_capacity == 0 {
+            return Err(GraphError::Config(
+                "queue_capacity must be at least 1 (a zero-capacity queue refuses \
+                 every request)"
+                    .into(),
+            ));
+        }
+        if let Some(d) = self.default_deadline {
+            if d.is_zero() {
+                return Err(GraphError::Config(
+                    "default_deadline of zero expires every request at enqueue; \
+                     use None to wait indefinitely"
+                        .into(),
+                ));
+            }
+            if d < self.window {
+                return Err(GraphError::Config(format!(
+                    "default_deadline {d:?} is shorter than the batching window \
+                     {:?}; every request would be ejected while the window \
+                     accumulates",
+                    self.window
+                )));
+            }
+        }
+        if self.restart.breaker_threshold == 0 {
+            return Err(GraphError::Config(
+                "restart.breaker_threshold must be at least 1 (zero trips the \
+                 breaker before any fault)"
+                    .into(),
+            ));
+        }
+        if self.restart.backoff_base > self.restart.backoff_max {
+            return Err(GraphError::Config(format!(
+                "restart.backoff_base {:?} exceeds backoff_max {:?}",
+                self.restart.backoff_base, self.restart.backoff_max
+            )));
+        }
+        #[cfg(feature = "fault-injection")]
+        if self.fault_plans.len() > self.replicas {
+            return Err(GraphError::Config(format!(
+                "fault plan attached to replica {} but the pool has only {} replicas",
+                self.fault_plans.len() - 1,
+                self.replicas
+            )));
+        }
+        Ok(PoolConfig {
+            model: self.model,
+            replicas: self.replicas,
+            window: self.window,
+            max_batch: self.max_batch,
+            queue_capacity: self.queue_capacity,
+            admission: self.admission,
+            default_deadline: self.default_deadline,
+            restart: self.restart,
+            #[cfg(feature = "fault-injection")]
+            fault_plans: self.fault_plans,
+        })
+    }
+
+    /// Validate and start the pool in one step.
+    pub fn start(self) -> Result<ReplicaPool, GraphError> {
+        ReplicaPool::start(self.build()?)
+    }
+}
+
+/// Validated replica-pool configuration — what [`ReplicaPool::start`]
+/// consumes.  Build one through [`PoolBuilder`].
+#[derive(Debug)]
+pub struct PoolConfig {
+    /// The shared compiled artifacts every replica serves.
+    pub model: Arc<CompiledModel>,
+    /// Number of replica workers (each owns one private workspace).
+    pub replicas: usize,
+    /// Batch-accumulation window per replica.
+    pub window: Duration,
+    /// Largest batch one replica launch may run.
+    pub max_batch: usize,
+    /// Bound on each replica's shard queue.
+    pub queue_capacity: usize,
+    /// What full shard queues do to new traffic.
+    pub admission: AdmissionPolicy,
+    /// Deadline stamped on requests that don't carry their own.
+    pub default_deadline: Option<Duration>,
+    /// Per-replica supervisor restart/backoff/circuit-breaker policy.
+    pub restart: RestartPolicy,
+    /// Per-replica deterministic fault schedules (robustness harness);
+    /// index = replica id, `None` entries serve fault-free.
+    #[cfg(feature = "fault-injection")]
+    pub fault_plans: Vec<Option<FaultPlan>>,
+}
+
+// ---------------------------------------------------------------------------
+// Shared pool state
+// ---------------------------------------------------------------------------
+
+/// One replica's slice of the shared dispatch state.
+struct ReplicaState {
+    /// This replica's shard of the admission queue.
+    queue: VecDeque<Pending>,
+    /// The worker thread genuinely died (its drop guard re-sharded the
+    /// queue to survivors).
+    dead: bool,
+    /// The worker returned cleanly during shutdown — it will never poll
+    /// its queue again, so re-sharding must skip it too.
+    exited: bool,
+    /// `Some(when)` while this replica's circuit breaker is open.
+    tripped_at: Option<Instant>,
+    /// Mirror of this replica's supervisor fault streak.
+    consecutive_faults: u32,
+}
+
+/// State shared between admission (caller threads) and all replica
+/// workers.  One lock + one condvar keeps the dispatch totally ordered:
+/// sharding, stealing, and death re-sharding are all atomic moves
+/// between queues, which is what makes exactly-one-completion provable.
+struct PoolState {
+    replicas: Vec<ReplicaState>,
+    mode: RunMode,
+    /// Round-robin shard cursor (next replica to try at admission).
+    cursor: usize,
+    /// Append-only pool-wide fault journal.
+    events: Vec<FaultEvent>,
+}
+
+struct PoolShared {
+    q: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl PoolShared {
+    fn new(replicas: usize) -> Arc<Self> {
+        Arc::new(Self {
+            q: Mutex::new(PoolState {
+                replicas: (0..replicas)
+                    .map(|_| ReplicaState {
+                        queue: VecDeque::new(),
+                        dead: false,
+                        exited: false,
+                        tripped_at: None,
+                        consecutive_faults: 0,
+                    })
+                    .collect(),
+                mode: RunMode::Open,
+                cursor: 0,
+                events: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Lock the pool state, recovering from poisoning — the state's
+    /// invariants hold at every unlock point, and the surviving
+    /// replicas must outlive a panicking sibling.
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.q.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn wait<'a>(
+        &self,
+        guard: MutexGuard<'a, PoolState>,
+        timeout: Duration,
+    ) -> MutexGuard<'a, PoolState> {
+        match self.cv.wait_timeout(guard, timeout) {
+            Ok((g, _)) => g,
+            Err(poisoned) => poisoned.into_inner().0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool handle
+// ---------------------------------------------------------------------------
+
+/// Handle to a running replica pool: N supervised workers sharing one
+/// [`CompiledModel`], behind one admission surface.
+pub struct ReplicaPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    replica_count: usize,
+    input_elems: usize,
+    output_elems: usize,
+    queue_capacity: usize,
+    admission: AdmissionPolicy,
+    default_deadline: Option<Duration>,
+    breaker_cooldown: Duration,
+}
+
+impl std::fmt::Debug for ReplicaPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplicaPool")
+            .field("replicas", &self.replica_count)
+            .field("input_elems", &self.input_elems)
+            .field("output_elems", &self.output_elems)
+            .field("queue_capacity", &self.queue_capacity)
+            .field("admission", &self.admission)
+            .field("default_deadline", &self.default_deadline)
+            .field("breaker_cooldown", &self.breaker_cooldown)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ReplicaPool {
+    /// Start N replica workers over the shared model.  Each replica
+    /// stamps a private [`Session`] from the same `Arc<CompiledModel>` —
+    /// no filter re-transform, no bank duplication — and runs the same
+    /// supervised worker loop as the single server.
+    pub fn start(cfg: PoolConfig) -> Result<Self, GraphError> {
+        let PoolConfig {
+            model,
+            replicas,
+            window,
+            max_batch,
+            queue_capacity,
+            admission,
+            default_deadline,
+            restart,
+            #[cfg(feature = "fault-injection")]
+            mut fault_plans,
+        } = cfg;
+        let fused_batch = max_batch.max(1);
+        let input_elems = model.input_elements();
+        let output_elems = model.output_elements();
+        let shared = PoolShared::new(replicas);
+        let metrics = Arc::new(Mutex::new(Metrics::new(fused_batch.max(16), 4096)));
+        {
+            let widths: Vec<String> = model
+                .conv_policies()
+                .iter()
+                .map(|p| p.vwidth.name().to_string())
+                .collect();
+            let mut m = lock_metrics(&metrics);
+            m.record_simd(simd::detected_features(), widths);
+            m.set_replicas(replicas);
+        }
+        let breaker_cooldown = restart.breaker_cooldown;
+        let mut workers = Vec::with_capacity(replicas);
+        for id in 0..replicas {
+            // The replica's private mutable state: workspace + scratch.
+            // The banks stay behind the shared Arc.
+            let mut session = Session::from_model(Arc::clone(&model));
+            session.grow_max_batch(fused_batch);
+            let batcher = Batcher::contiguous(fused_batch, window);
+            let shared_worker = Arc::clone(&shared);
+            let metrics_worker = Arc::clone(&metrics);
+            let restart = restart.clone();
+            #[cfg(feature = "fault-injection")]
+            let plan = fault_plans.get_mut(id).and_then(|p| p.take());
+            #[cfg(not(feature = "fault-injection"))]
+            let plan = None;
+            workers.push(std::thread::spawn(move || {
+                let sup = Supervisor::new(Engine::Native(Box::new(session)), restart, plan);
+                replica_loop(shared_worker, id, sup, batcher, metrics_worker);
+            }));
+        }
+        Ok(Self {
+            shared,
+            workers,
+            metrics,
+            replica_count: replicas,
+            input_elems,
+            output_elems,
+            queue_capacity: queue_capacity.max(1),
+            admission,
+            default_deadline,
+            breaker_cooldown,
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replica_count
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.input_elems
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.output_elems
+    }
+
+    /// Requests currently waiting across every shard queue.
+    pub fn queue_depth(&self) -> usize {
+        self.shared
+            .lock_state()
+            .replicas
+            .iter()
+            .map(|r| r.queue.len())
+            .sum()
+    }
+
+    /// Per-replica shard queue depths (index = replica id).
+    pub fn replica_queue_depths(&self) -> Vec<usize> {
+        self.shared
+            .lock_state()
+            .replicas
+            .iter()
+            .map(|r| r.queue.len())
+            .collect()
+    }
+
+    /// Ids of replicas whose worker thread genuinely died.
+    pub fn dead_replicas(&self) -> Vec<usize> {
+        self.shared
+            .lock_state()
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.dead)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Replicas currently accepting admissions: alive and not behind an
+    /// open (un-cooled) circuit breaker.  The pool refuses work only
+    /// when this hits zero — one down replica never blocks the others.
+    pub fn available_replicas(&self) -> usize {
+        let st = self.shared.lock_state();
+        st.replicas
+            .iter()
+            .filter(|r| {
+                !r.dead
+                    && !r.exited
+                    && !matches!(r.tripped_at,
+                                 Some(t) if t.elapsed() < self.breaker_cooldown)
+            })
+            .count()
+    }
+
+    /// Snapshot of the pool-wide fault journal (every replica's
+    /// injections, caught panics, restarts, breaker transitions, and
+    /// deaths, in dispatch order).
+    pub fn fault_events(&self) -> Vec<FaultEvent> {
+        self.shared.lock_state().events.clone()
+    }
+
+    /// Enqueue one image under the pool's default deadline.
+    pub fn infer_async(&self, image: Vec<f32>) -> Result<Reply, AdmissionError> {
+        self.infer_async_deadline(image, self.default_deadline)
+    }
+
+    /// Enqueue one image with an explicit deadline, sharding it to the
+    /// next live replica in round-robin order.  Synchronous refusals
+    /// mirror the single server's: [`AdmissionError::WorkerFault`] when
+    /// every replica died, [`AdmissionError::CircuitOpen`] when every
+    /// survivor's breaker is open, [`AdmissionError::QueueFull`] when
+    /// every live shard queue is at capacity (under
+    /// [`AdmissionPolicy::RejectNew`]).
+    pub fn infer_async_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Reply, AdmissionError> {
+        let (resp, reply) = mpsc::channel();
+        let mut st = self.shared.lock_state();
+        if st.mode != RunMode::Open {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        // Walk the replicas in cursor order: the first admittable one
+        // with queue room wins; the first admittable one at all is the
+        // drop-oldest fallback.
+        let n = st.replicas.len();
+        let mut target = None;
+        let mut fallback = None;
+        let mut any_alive = false;
+        let mut max_streak = 0;
+        for k in 0..n {
+            let i = (st.cursor + k) % n;
+            let r = &st.replicas[i];
+            if r.dead || r.exited {
+                continue;
+            }
+            any_alive = true;
+            if let Some(tripped) = r.tripped_at {
+                // Half-open after the cooldown: this replica takes
+                // traffic again and probes its engine.
+                if tripped.elapsed() < self.breaker_cooldown {
+                    max_streak = max_streak.max(r.consecutive_faults);
+                    continue;
+                }
+            }
+            if fallback.is_none() {
+                fallback = Some(i);
+            }
+            if r.queue.len() < self.queue_capacity {
+                target = Some(i);
+                break;
+            }
+        }
+        let Some(fallback) = fallback else {
+            // The pool-wide breaker: only when ALL replicas are down.
+            return Err(if any_alive {
+                AdmissionError::CircuitOpen {
+                    consecutive_faults: max_streak,
+                }
+            } else {
+                AdmissionError::WorkerFault {
+                    msg: "every replica worker died; the pool cannot serve".to_string(),
+                }
+            });
+        };
+        if image.len() != self.input_elems {
+            return Err(AdmissionError::Engine(GraphError::Input {
+                index: 0,
+                expected: self.input_elems,
+                got: image.len(),
+            }));
+        }
+        let mut evicted = None;
+        let target = match target {
+            Some(t) => t,
+            None => match self.admission {
+                AdmissionPolicy::RejectNew => {
+                    drop(st);
+                    lock_metrics(&self.metrics).record_rejected_full();
+                    return Err(AdmissionError::QueueFull {
+                        capacity: self.queue_capacity,
+                    });
+                }
+                AdmissionPolicy::DropOldest => {
+                    evicted = st.replicas[fallback].queue.pop_front();
+                    fallback
+                }
+            },
+        };
+        st.replicas[target].queue.push_back(Pending {
+            image,
+            resp,
+            enqueued: Instant::now(),
+            deadline,
+        });
+        st.cursor = (target + 1) % n;
+        let depth: usize = st.replicas.iter().map(|r| r.queue.len()).sum();
+        drop(st);
+        self.shared.cv.notify_all();
+        let mut m = lock_metrics(&self.metrics);
+        m.record_replica_dispatch(target);
+        m.record_queue_depth(depth);
+        if let Some(old) = evicted {
+            m.record_rejected_full();
+            drop(m);
+            old.complete(Err(AdmissionError::QueueFull {
+                capacity: self.queue_capacity,
+            }));
+        }
+        Ok(reply)
+    }
+
+    /// Blocking single-image inference through the pool.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>, AdmissionError> {
+        match self.infer_async(image)?.recv() {
+            Ok(result) => result,
+            Err(mpsc::RecvError) => {
+                let st = self.shared.lock_state();
+                if st.replicas.iter().all(|r| r.dead) {
+                    Err(AdmissionError::WorkerFault {
+                        msg: "every replica died with this request in flight".to_string(),
+                    })
+                } else {
+                    Err(AdmissionError::ShuttingDown)
+                }
+            }
+        }
+    }
+
+    /// Stop accepting new work, with the single server's shutdown
+    /// matrix: `drain = true` flushes every shard queue immediately
+    /// (windows bypassed); `drain = false` completes queued requests
+    /// with [`AdmissionError::ShuttingDown`].  Idempotent; `drop`
+    /// performs a draining shutdown.
+    pub fn shutdown(&self, drain: bool) {
+        let mut st = self.shared.lock_state();
+        st.mode = match (st.mode, drain) {
+            (RunMode::Open, true) => RunMode::Draining,
+            (RunMode::Open, false) | (RunMode::Draining, false) => RunMode::Rejecting,
+            (mode, _) => mode,
+        };
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        self.shutdown(true);
+        for w in self.workers.drain(..) {
+            // A replica that died of an (injected) kill returns Err
+            // here; its drop guards already re-sharded or completed
+            // every request it held.
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The replica workers
+// ---------------------------------------------------------------------------
+
+/// Last line of the no-silent-drop guarantee for one replica: if its
+/// thread genuinely dies, mark it dead and hand its shard queue to the
+/// survivors — or, with none left, complete everything typed.
+struct ReplicaGuard {
+    shared: Arc<PoolShared>,
+    id: usize,
+}
+
+impl Drop for ReplicaGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        let mut st = self.shared.lock_state();
+        st.replicas[self.id].dead = true;
+        st.events.push(FaultEvent::WorkerDied);
+        let orphans: Vec<Pending> = st.replicas[self.id].queue.drain(..).collect();
+        let survivors: Vec<usize> = st
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|&(i, r)| i != self.id && !r.dead && !r.exited)
+            .map(|(i, _)| i)
+            .collect();
+        if survivors.is_empty() {
+            drop(st);
+            for p in orphans {
+                p.complete(Err(AdmissionError::WorkerFault {
+                    msg: "replica died with this request queued and no replica survives"
+                        .to_string(),
+                }));
+            }
+            return;
+        }
+        for (k, p) in orphans.into_iter().enumerate() {
+            st.replicas[survivors[k % survivors.len()]].queue.push_back(p);
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Re-homes a dispatched batch if the replica thread dies mid-dispatch:
+/// the items left their shard queue, so [`ReplicaGuard`] cannot see
+/// them.  The shortest surviving queue inherits the whole batch at its
+/// *front* (order preserved, dispatched next) — an injected kill fires
+/// before the engine runs, so re-running on a sibling still yields
+/// exactly one completion, and a bit-identical one (shared model).
+struct PoolInFlight {
+    shared: Arc<PoolShared>,
+    id: usize,
+    items: Vec<Pending>,
+}
+
+impl Drop for PoolInFlight {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        let mut st = self.shared.lock_state();
+        let survivor = st
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|&(i, r)| i != self.id && !r.dead && !r.exited)
+            .min_by_key(|(_, r)| r.queue.len())
+            .map(|(i, _)| i);
+        match survivor {
+            Some(r) => {
+                for p in self.items.drain(..).rev() {
+                    st.replicas[r].queue.push_front(p);
+                }
+                drop(st);
+                self.shared.cv.notify_all();
+            }
+            None => {
+                drop(st);
+                for p in self.items.drain(..) {
+                    p.complete(Err(AdmissionError::WorkerFault {
+                        msg: "replica died serving this batch and no replica survives"
+                            .to_string(),
+                    }));
+                }
+            }
+        }
+    }
+}
+
+/// Pick a sibling to steal from: the most loaded replica whose work is
+/// actually *stuck* — it is dead or exited, its head request has waited
+/// out the batching window (the owner is busy in a batch: a straggler),
+/// or its shard has overflowed one full fused batch.  During a drain
+/// any pending sibling work is fair game.  Stealing never bypasses a
+/// healthy replica's accumulation window.
+fn steal_target(st: &PoolState, thief: usize, batcher: &Batcher, draining: bool) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None; // (queue_len, replica)
+    for (i, r) in st.replicas.iter().enumerate() {
+        if i == thief || r.queue.is_empty() {
+            continue;
+        }
+        let matured = r.queue[0].enqueued.elapsed() >= batcher.window;
+        let stuck =
+            draining || r.dead || r.exited || matured || r.queue.len() > batcher.max_batch();
+        if !stuck {
+            continue;
+        }
+        if best.map_or(true, |(len, _)| r.queue.len() > len) {
+            best = Some((r.queue.len(), i));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+fn replica_loop(
+    shared: Arc<PoolShared>,
+    id: usize,
+    mut sup: Supervisor,
+    batcher: Batcher,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let _guard = ReplicaGuard {
+        shared: Arc::clone(&shared),
+        id,
+    };
+    let breaker_threshold = sup.policy().breaker_threshold;
+    loop {
+        // Phase 1: take a batch from this replica's shard queue — or
+        // steal one from a stuck sibling — under the pool lock.
+        let items: Vec<Pending> = {
+            let mut st = shared.lock_state();
+            loop {
+                eject_expired(&mut st.replicas[id].queue, &metrics);
+                if st.mode == RunMode::Rejecting {
+                    st.replicas[id].exited = true;
+                    let stranded: Vec<Pending> = st.replicas[id].queue.drain(..).collect();
+                    drop(st);
+                    for p in stranded {
+                        p.complete(Err(AdmissionError::ShuttingDown));
+                    }
+                    return;
+                }
+                let draining = st.mode != RunMode::Open;
+                if st.replicas[id].queue.is_empty() {
+                    if let Some(victim) = steal_target(&st, id, &batcher, draining) {
+                        let len = st.replicas[victim].queue.len();
+                        let take = batcher.plan(len)[0].batch_size.min(len);
+                        let stolen: Vec<Pending> =
+                            st.replicas[victim].queue.drain(..take).collect();
+                        drop(st);
+                        lock_metrics(&metrics).record_replica_steal(id, stolen.len() as u64);
+                        break stolen;
+                    }
+                    if draining {
+                        // Shard drained clean; pending sibling work (if
+                        // any appears) belongs to its own replica now.
+                        st.replicas[id].exited = true;
+                        return;
+                    }
+                    st = shared.wait(st, IDLE_POLL);
+                    continue;
+                }
+                // Same window-origin contract as the single server: the
+                // window opens at the head request's enqueue.
+                let waited = st.replicas[id].queue[0].enqueued.elapsed();
+                if batcher.should_wait(st.replicas[id].queue.len(), waited, draining) {
+                    let remaining = batcher.window.saturating_sub(waited);
+                    st = shared.wait(st, remaining.max(Duration::from_micros(100)));
+                    continue;
+                }
+                let take = batcher.plan(st.replicas[id].queue.len())[0].batch_size;
+                break st.replicas[id].queue.drain(..take).collect();
+            }
+        };
+
+        // Phase 2: run the batch outside the lock — admissions, sibling
+        // replicas, and deadline bookkeeping proceed concurrently.
+        let mut in_flight = PoolInFlight {
+            shared: Arc::clone(&shared),
+            id,
+            items,
+        };
+        let result = {
+            let images: Vec<&Vec<f32>> = in_flight.items.iter().map(|p| &p.image).collect();
+            sup.run_batch(&images)
+        };
+        let items = std::mem::take(&mut in_flight.items);
+        drop(in_flight);
+
+        // Phase 3: sync this replica's breaker and the pool journal,
+        // then complete every request in the batch exactly once.
+        {
+            let mut st = shared.lock_state();
+            st.events.append(&mut sup.drain_events());
+            match &result {
+                Ok(_) | Err(BatchFailure::Refused(_)) => {
+                    st.replicas[id].consecutive_faults = 0;
+                    if st.replicas[id].tripped_at.take().is_some() {
+                        st.events.push(FaultEvent::BreakerClosed);
+                    }
+                }
+                Err(BatchFailure::Fault { .. }) => {
+                    st.replicas[id].consecutive_faults = sup.consecutive_faults();
+                    if st.replicas[id].consecutive_faults >= breaker_threshold
+                        && st.replicas[id].tripped_at.is_none()
+                    {
+                        st.replicas[id].tripped_at = Some(Instant::now());
+                        st.events.push(FaultEvent::BreakerTripped {
+                            consecutive: st.replicas[id].consecutive_faults,
+                        });
+                    }
+                }
+            }
+        }
+        let mut m = lock_metrics(&metrics);
+        m.record_batch(items.len());
+        match result {
+            Ok(outs) => {
+                for (p, out) in items.into_iter().zip(outs) {
+                    m.record_latency(p.enqueued.elapsed());
+                    p.complete(Ok(out));
+                }
+            }
+            Err(BatchFailure::Fault { msg }) => {
+                m.record_worker_fault();
+                m.record_replica_fault(id);
+                drop(m);
+                for p in items {
+                    p.complete(Err(AdmissionError::WorkerFault { msg: msg.clone() }));
+                }
+            }
+            Err(BatchFailure::Refused(e)) => {
+                drop(m);
+                for p in items {
+                    p.complete(Err(AdmissionError::Engine(e.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::ExecPolicy;
+    use crate::nn::graph::{GraphBuilder, Synthetic};
+    use crate::util::Rng;
+
+    const IN_ELEMS: usize = 2 * 8 * 8;
+    const OUT_ELEMS: usize = 3;
+
+    fn tiny_model(policy: ExecPolicy) -> Arc<CompiledModel> {
+        let g = GraphBuilder::new("tiny", (2, 8, 8))
+            .pad(1)
+            .conv2d("c0", 4, 3)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("head", OUT_ELEMS)
+            .build()
+            .expect("tiny graph builds");
+        Arc::new(
+            CompiledModel::uniform(g, &mut Synthetic::new(3), policy).expect("tiny compiles"),
+        )
+    }
+
+    fn image(seed: u64) -> Vec<f32> {
+        Rng::new(seed).gaussian_vec(IN_ELEMS)
+    }
+
+    #[test]
+    fn pool_shards_round_robin_and_serves() {
+        let pool = PoolBuilder::new(tiny_model(ExecPolicy::dense(2)), 2)
+            .max_batch(4)
+            .start()
+            .expect("start");
+        assert_eq!(pool.replicas(), 2);
+        assert_eq!(pool.input_elements(), IN_ELEMS);
+        assert_eq!(pool.output_elements(), OUT_ELEMS);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| pool.infer_async(image(i)).expect("admitted"))
+            .collect();
+        for rx in rxs {
+            let y = rx.recv().expect("completes").expect("serves");
+            assert_eq!(y.len(), OUT_ELEMS);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let m = lock_metrics(&pool.metrics);
+        assert_eq!(m.requests, 8);
+        // Strict round-robin over two healthy replicas: a 50/50 split.
+        assert_eq!(m.replica_dispatch(), [4, 4]);
+        assert_eq!(m.replica_faults(), [0, 0]);
+    }
+
+    #[test]
+    fn pool_matches_single_session_forward_for_every_backend() {
+        // Bit-identity across backends: the pool must serve exactly what
+        // a lone Session computes from the same shared model.
+        let policies = [
+            ExecPolicy::dense(2),
+            ExecPolicy::sparse(2, 0.7),
+            ExecPolicy::sparse(2, 0.7).with_bits(8),
+        ];
+        let x = image(11);
+        for policy in policies {
+            let model = tiny_model(policy);
+            let want = Session::from_model(Arc::clone(&model))
+                .forward(&x)
+                .expect("direct forward");
+            let pool = PoolBuilder::new(model, 3).start().expect("start");
+            for _ in 0..3 {
+                let got = pool.infer(x.clone()).expect("pool serve");
+                assert_eq!(got, want, "pool output diverged under {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_replicas_share_the_model_without_retransform() {
+        use crate::winograd::filter_transform_count;
+        let model = tiny_model(ExecPolicy::sparse(2, 0.7));
+        let before = filter_transform_count();
+        let pool = PoolBuilder::new(Arc::clone(&model), 4).start().expect("start");
+        let y = pool.infer(image(5)).expect("serves");
+        assert_eq!(y.len(), OUT_ELEMS);
+        assert_eq!(
+            filter_transform_count(),
+            before,
+            "starting a 4-replica pool must not re-transform filters on this thread"
+        );
+        drop(pool);
+        // Every replica's Arc is gone once the pool stops; only ours and
+        // the binding above remain.
+        assert_eq!(Arc::strong_count(&model), 1);
+    }
+
+    #[test]
+    fn pool_builder_refuses_invalid_combinations_typed() {
+        let mk = || PoolBuilder::new(tiny_model(ExecPolicy::dense(2)), 2);
+        let cases: Vec<(PoolBuilder, &str)> = vec![
+            (
+                PoolBuilder::new(tiny_model(ExecPolicy::dense(2)), 0),
+                "replicas",
+            ),
+            (mk().max_batch(0), "max_batch"),
+            (mk().queue(0, AdmissionPolicy::RejectNew), "queue_capacity"),
+            (
+                mk().default_deadline(Some(Duration::ZERO)),
+                "default_deadline",
+            ),
+            (
+                mk().window(Duration::from_millis(50))
+                    .default_deadline(Some(Duration::from_millis(10))),
+                "shorter than the batching window",
+            ),
+            (
+                mk().restart(RestartPolicy {
+                    breaker_threshold: 0,
+                    ..RestartPolicy::default()
+                }),
+                "breaker_threshold",
+            ),
+            (
+                mk().restart(RestartPolicy {
+                    backoff_base: Duration::from_millis(100),
+                    backoff_max: Duration::from_millis(10),
+                    ..RestartPolicy::default()
+                }),
+                "backoff_base",
+            ),
+        ];
+        for (builder, needle) in cases {
+            match builder.build() {
+                Err(GraphError::Config(msg)) => {
+                    assert!(msg.contains(needle), "{msg:?} should mention {needle:?}")
+                }
+                Err(other) => panic!("expected Config error mentioning {needle:?}, got {other:?}"),
+                Ok(_) => panic!("combination mentioning {needle:?} must be refused"),
+            }
+        }
+        assert!(mk().build().is_ok());
+    }
+
+    #[test]
+    fn pool_rejects_bad_input_size() {
+        let pool = PoolBuilder::new(tiny_model(ExecPolicy::dense(2)), 2)
+            .start()
+            .expect("start");
+        let err = pool.infer(vec![0.0; 7]).unwrap_err();
+        assert!(
+            matches!(&err, AdmissionError::Engine(GraphError::Input { got: 7, .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn pool_shutdown_refuses_new_admissions() {
+        let pool = PoolBuilder::new(tiny_model(ExecPolicy::dense(2)), 2)
+            .start()
+            .expect("start");
+        pool.shutdown(true);
+        assert_eq!(
+            pool.infer_async(vec![0.0; IN_ELEMS]).unwrap_err(),
+            AdmissionError::ShuttingDown
+        );
+        assert_eq!(
+            pool.infer(vec![0.0; IN_ELEMS]).unwrap_err(),
+            AdmissionError::ShuttingDown
+        );
+    }
+}

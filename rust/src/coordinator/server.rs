@@ -69,8 +69,9 @@ pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 
 /// How long the idle worker sleeps between queue polls (it is woken
 /// immediately by the admission condvar; this only bounds the shutdown
-/// latency of a completely idle server).
-const IDLE_POLL: Duration = Duration::from_millis(50);
+/// latency of a completely idle server).  The replica pool's workers
+/// share the same idle cadence.
+pub(crate) const IDLE_POLL: Duration = Duration::from_millis(50);
 
 // ---------------------------------------------------------------------------
 // Typed serving errors
@@ -185,9 +186,7 @@ impl ServerConfig {
 /// [`GraphError`]s *before* any server thread exists.
 ///
 /// Build one through [`ServeBuilder`], which checks the knob
-/// combination at build time; the legacy `new()` / `with_*`
-/// constructors remain as deprecated shims for one release and perform
-/// no validation.
+/// combination at build time.
 pub struct NativeServerConfig {
     /// The compiled graph the worker serves.
     pub session: Session,
@@ -213,6 +212,9 @@ pub struct NativeServerConfig {
     pub default_deadline: Option<Duration>,
     /// Supervisor restart/backoff/circuit-breaker policy.
     pub restart: RestartPolicy,
+    /// The wire-protocol model id this server answers to when several
+    /// models share one listener (request header byte 7; 0 = default).
+    pub model_id: u8,
     /// Deterministic fault schedule for the robustness harness; `None`
     /// in production.  Only present with the `fault-injection` feature
     /// — without it the serving path has no injection hooks at all.
@@ -231,70 +233,11 @@ impl std::fmt::Debug for NativeServerConfig {
             .field("queue_capacity", &self.queue_capacity)
             .field("admission", &self.admission)
             .field("default_deadline", &self.default_deadline)
-            .field("restart", &self.restart);
+            .field("restart", &self.restart)
+            .field("model_id", &self.model_id);
         #[cfg(feature = "fault-injection")]
         d.field("fault_plan", &self.fault_plan);
         d.finish_non_exhaustive()
-    }
-}
-
-impl NativeServerConfig {
-    #[deprecated(
-        since = "0.9.0",
-        note = "use ServeBuilder::new(session), which validates the knob \
-                combination at build time"
-    )]
-    pub fn new(session: Session) -> Self {
-        Self {
-            session,
-            window: Duration::from_millis(2),
-            max_batch: 4,
-            profile: None,
-            queue_capacity: DEFAULT_QUEUE_CAPACITY,
-            admission: AdmissionPolicy::RejectNew,
-            default_deadline: None,
-            restart: RestartPolicy::default(),
-            #[cfg(feature = "fault-injection")]
-            fault_plan: None,
-        }
-    }
-
-    /// Serve with a tuned per-node profile (from [`crate::tuner::Tuner`]
-    /// or [`TuneProfile::load`]).
-    #[deprecated(since = "0.9.0", note = "use ServeBuilder::profile")]
-    pub fn with_profile(mut self, profile: TuneProfile) -> Self {
-        self.profile = Some(profile);
-        self
-    }
-
-    /// Bound the admission queue and pick the full-queue policy.
-    #[deprecated(since = "0.9.0", note = "use ServeBuilder::queue")]
-    pub fn with_queue(mut self, capacity: usize, admission: AdmissionPolicy) -> Self {
-        self.queue_capacity = capacity.max(1);
-        self.admission = admission;
-        self
-    }
-
-    /// Default per-request deadline (measured from enqueue).
-    #[deprecated(since = "0.9.0", note = "use ServeBuilder::default_deadline")]
-    pub fn with_default_deadline(mut self, deadline: Option<Duration>) -> Self {
-        self.default_deadline = deadline;
-        self
-    }
-
-    /// Supervisor restart / circuit-breaker policy.
-    #[deprecated(since = "0.9.0", note = "use ServeBuilder::restart")]
-    pub fn with_restart(mut self, restart: RestartPolicy) -> Self {
-        self.restart = restart;
-        self
-    }
-
-    /// Attach a deterministic fault schedule (robustness tests only).
-    #[cfg(feature = "fault-injection")]
-    #[deprecated(since = "0.9.0", note = "use ServeBuilder::fault_plan")]
-    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
-        self.fault_plan = Some(plan);
-        self
     }
 }
 
@@ -352,6 +295,7 @@ pub struct ServeBuilder {
     admission: AdmissionPolicy,
     default_deadline: Option<Duration>,
     restart: RestartPolicy,
+    model_id: u8,
     #[cfg(feature = "fault-injection")]
     fault_plan: Option<FaultPlan>,
 }
@@ -365,7 +309,8 @@ impl std::fmt::Debug for ServeBuilder {
             .field("queue_capacity", &self.queue_capacity)
             .field("admission", &self.admission)
             .field("default_deadline", &self.default_deadline)
-            .field("restart", &self.restart);
+            .field("restart", &self.restart)
+            .field("model_id", &self.model_id);
         #[cfg(feature = "fault-injection")]
         d.field("fault_plan", &self.fault_plan);
         d.finish_non_exhaustive()
@@ -386,9 +331,19 @@ impl ServeBuilder {
             admission: AdmissionPolicy::RejectNew,
             default_deadline: None,
             restart: RestartPolicy::default(),
+            model_id: 0,
             #[cfg(feature = "fault-injection")]
             fault_plan: None,
         }
+    }
+
+    /// Key this server by a wire-protocol model id (request header
+    /// byte 7).  Only meaningful behind a multi-model
+    /// [`NetServer`](super::net::NetServer); the default 0 is what every
+    /// single-model client addresses.
+    pub fn model(mut self, model_id: u8) -> Self {
+        self.model_id = model_id;
+        self
     }
 
     /// Batch-accumulation window (zero = dispatch immediately).
@@ -502,6 +457,7 @@ impl ServeBuilder {
             admission: self.admission,
             default_deadline: self.default_deadline,
             restart: self.restart,
+            model_id: self.model_id,
             #[cfg(feature = "fault-injection")]
             fault_plan: self.fault_plan,
         })
@@ -518,8 +474,9 @@ impl ServeBuilder {
 // ---------------------------------------------------------------------------
 
 /// Whether the server is accepting, flushing, or rejecting work.
+/// Shared with the replica pool, which runs the same shutdown matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum RunMode {
+pub(crate) enum RunMode {
     /// Serving normally.
     Open,
     /// Shutdown requested: no new admissions; queued requests are
@@ -530,20 +487,22 @@ enum RunMode {
     Rejecting,
 }
 
-/// One admitted request waiting for (or riding in) a batch.
-struct Pending {
-    image: Vec<f32>,
-    resp: mpsc::Sender<Result<Vec<f32>, AdmissionError>>,
-    enqueued: Instant,
+/// One admitted request waiting for (or riding in) a batch.  Shared
+/// with the replica pool, whose per-replica shard queues hold the same
+/// shape.
+pub(crate) struct Pending {
+    pub(crate) image: Vec<f32>,
+    pub(crate) resp: mpsc::Sender<Result<Vec<f32>, AdmissionError>>,
+    pub(crate) enqueued: Instant,
     /// Deadline relative to `enqueued`; `None` waits indefinitely.
-    deadline: Option<Duration>,
+    pub(crate) deadline: Option<Duration>,
 }
 
 impl Pending {
     /// Deliver the single completion this request is owed.  A send on a
     /// disconnected channel means the caller walked away — their
     /// prerogative, not a drop on our side.
-    fn complete(self, result: Result<Vec<f32>, AdmissionError>) {
+    pub(crate) fn complete(self, result: Result<Vec<f32>, AdmissionError>) {
         let _ = self.resp.send(result);
     }
 }
@@ -602,7 +561,7 @@ impl Shared {
     }
 }
 
-fn lock_metrics(metrics: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+pub(crate) fn lock_metrics(metrics: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
     metrics.lock().unwrap_or_else(|p| p.into_inner())
 }
 
@@ -627,6 +586,7 @@ pub struct InferenceServer {
     admission: AdmissionPolicy,
     default_deadline: Option<Duration>,
     breaker_cooldown: Duration,
+    model_id: u8,
 }
 
 // Manual: the shared queue state and worker handle are runtime innards;
@@ -640,6 +600,7 @@ impl std::fmt::Debug for InferenceServer {
             .field("admission", &self.admission)
             .field("default_deadline", &self.default_deadline)
             .field("breaker_cooldown", &self.breaker_cooldown)
+            .field("model_id", &self.model_id)
             .finish_non_exhaustive()
     }
 }
@@ -699,6 +660,7 @@ impl InferenceServer {
             admission: AdmissionPolicy::RejectNew,
             default_deadline: None,
             breaker_cooldown: RestartPolicy::default().breaker_cooldown,
+            model_id: 0,
         })
     }
 
@@ -723,6 +685,7 @@ impl InferenceServer {
             admission,
             default_deadline,
             restart,
+            model_id,
             ..
         } = cfg;
         // A tuned profile may ask for a larger fused batch than the
@@ -773,11 +736,18 @@ impl InferenceServer {
             admission,
             default_deadline,
             breaker_cooldown,
+            model_id,
         })
     }
 
     pub fn input_elements(&self) -> usize {
         self.input_elems
+    }
+
+    /// The wire-protocol model id this server answers to behind a
+    /// multi-model [`NetServer`](super::net::NetServer) (0 = default).
+    pub fn model_id(&self) -> u8 {
+        self.model_id
     }
 
     pub fn output_elements(&self) -> usize {
@@ -981,17 +951,18 @@ impl Drop for InFlight {
     }
 }
 
-/// Eject every expired request from the queue, completing each with
+/// Eject every expired request from a queue, completing each with
 /// [`AdmissionError::DeadlineExpired`] — always called before batch
-/// assembly, so expired work never occupies a fused batch slot.
-fn eject_expired(st: &mut QueueState, metrics: &Mutex<Metrics>) {
+/// assembly, so expired work never occupies a fused batch slot.  Shared
+/// with the replica pool, which runs it per shard queue.
+pub(crate) fn eject_expired(queue: &mut VecDeque<Pending>, metrics: &Mutex<Metrics>) {
     let mut i = 0;
-    while i < st.queue.len() {
+    while i < queue.len() {
         // Matching the deadline directly (rather than `expired()` + a later
         // `expect`) leaves no panic arm: `None` deadlines wait forever.
-        match st.queue[i].deadline {
-            Some(deadline) if st.queue[i].enqueued.elapsed() > deadline => {
-                if let Some(p) = st.queue.remove(i) {
+        match queue[i].deadline {
+            Some(deadline) if queue[i].enqueued.elapsed() > deadline => {
+                if let Some(p) = queue.remove(i) {
                     lock_metrics(metrics).record_ejection();
                     let waited = p.enqueued.elapsed();
                     p.complete(Err(AdmissionError::DeadlineExpired { deadline, waited }));
@@ -1018,7 +989,7 @@ fn worker_loop(
         let items: Vec<Pending> = {
             let mut st = shared.lock_state();
             loop {
-                eject_expired(&mut st, &metrics);
+                eject_expired(&mut st.queue, &metrics);
                 if st.mode == RunMode::Rejecting {
                     let stranded: Vec<Pending> = st.queue.drain(..).collect();
                     drop(st);
@@ -1395,39 +1366,5 @@ mod tests {
         }
         // The valid default combination still builds.
         assert!(native_cfg(0.7).build().is_ok());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_constructors_match_builder_defaults() {
-        // Shim contract for the deprecation release: the legacy
-        // constructors produce exactly what the builder's defaults
-        // validate to, so migrating cannot change behavior.
-        let session = || {
-            Session::uniform(
-                vgg_tiny(),
-                &mut Synthetic::new(7),
-                ExecPolicy::sparse(2, 0.7),
-            )
-            .expect("vgg_tiny compiles")
-        };
-        let old = NativeServerConfig::new(session())
-            .with_queue(32, AdmissionPolicy::DropOldest)
-            .with_default_deadline(Some(Duration::from_millis(250)));
-        let new = ServeBuilder::new(session())
-            .queue(32, AdmissionPolicy::DropOldest)
-            .default_deadline(Some(Duration::from_millis(250)))
-            .build()
-            .expect("valid combination");
-        assert_eq!(old.window, new.window);
-        assert_eq!(old.max_batch, new.max_batch);
-        assert_eq!(old.queue_capacity, new.queue_capacity);
-        assert_eq!(old.admission, new.admission);
-        assert_eq!(old.default_deadline, new.default_deadline);
-        // RestartPolicy carries no PartialEq; compare field by field.
-        assert_eq!(old.restart.breaker_threshold, new.restart.breaker_threshold);
-        assert_eq!(old.restart.backoff_base, new.restart.backoff_base);
-        assert_eq!(old.restart.backoff_max, new.restart.backoff_max);
-        assert_eq!(old.restart.breaker_cooldown, new.restart.breaker_cooldown);
     }
 }

@@ -21,14 +21,17 @@
 
 mod session;
 
-pub use session::Session;
+pub use session::{CompiledModel, Session};
 
 use crate::nn::graph::GraphError;
 use crate::nn::{ConvLayer, ConvShape};
 use crate::quant::{quantize_sparse_bank, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use crate::winograd::{tile_size, FilterBank, SparseFilterBank, VectorWidth, WinogradPlan};
+use crate::winograd::{
+    tile_size, FilterBank, PlanConsts, SparseFilterBank, VectorWidth, WinogradPlan,
+};
+use std::sync::Arc;
 
 /// Seed of the deterministic calibration sample the activation quantizer
 /// falls back to when [`ExecPolicy::act_scale`] is not set.
@@ -197,21 +200,56 @@ enum Backend {
     QuantSparse { bank: SparseFilterBank, q: Quantizer },
 }
 
-/// One conv layer, ready to serve: a plan plus its prepared weight bank
-/// (plus a reusable qdq staging buffer on the quantized paths).
-pub struct ConvExecutor {
-    plan: WinogradPlan,
+/// The **immutable** compiled artifacts of one conv layer: the prepared
+/// weight bank (transformed, optionally pruned / quantized), the fixed
+/// activation quantizer, and the shared plan constants plus knobs.
+/// Everything here is read-only after [`CompiledConv::prepare`], so N
+/// serving replicas hold one `Arc<CompiledConv>` each and never duplicate
+/// the transformed filters; each replica pairs it with its own mutable
+/// [`ConvState`] (plan scratch + qdq staging).
+pub struct CompiledConv {
+    consts: Arc<PlanConsts>,
+    threads: usize,
+    vwidth: VectorWidth,
     backend: Backend,
+}
+
+// Manual: the bank payloads are noise; knobs + backend identify it.
+impl std::fmt::Debug for CompiledConv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledConv")
+            .field("threads", &self.threads)
+            .field("vwidth", &self.vwidth)
+            .field("backend", &self.backend_name())
+            .finish_non_exhaustive()
+    }
+}
+
+/// The **mutable** per-replica execution state of one conv layer: the
+/// plan (shared constants + private scratch) and the qdq staging buffer.
+/// Cheap to create — [`CompiledConv::new_state`] performs no transform
+/// work — and sized lazily by the first launch.
+pub(crate) struct ConvState {
+    plan: WinogradPlan,
     /// Fake-quantized activation staging (quant backends only) — reused
     /// across calls so the serving steady state never allocates for qdq.
     qdq: Vec<f32>,
+}
+
+/// One conv layer, ready to serve: shared compiled artifacts plus this
+/// executor's private state.  The standalone single-layer API; [`Session`]
+/// composes [`CompiledConv`] / [`ConvState`] directly so replicas can
+/// share one compiled model.
+pub struct ConvExecutor {
+    compiled: Arc<CompiledConv>,
+    state: ConvState,
 }
 
 // Manual: the bank payloads are noise; plan dims + backend identify it.
 impl std::fmt::Debug for ConvExecutor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ConvExecutor")
-            .field("plan", &self.plan)
+            .field("plan", &self.state.plan)
             .field("backend", &self.backend_name())
             .finish_non_exhaustive()
     }
@@ -230,11 +268,11 @@ fn activation_quantizer(bits: u32, act_scale: Option<f32>) -> Quantizer {
     }
 }
 
-impl ConvExecutor {
+impl CompiledConv {
     /// Prepare one layer: transform (and prune / quantize) the spatial
     /// weights (K, C, r, r) once, and fix the activation-quantizer scale.
-    /// Every `conv2d` / `conv2d_batch_into` call reuses both.  A bad
-    /// policy or weight shape is a typed [`GraphError`].
+    /// Every launch through any [`ConvState`] reuses both.  A bad policy
+    /// or weight shape is a typed [`GraphError`].
     pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Result<Self, GraphError> {
         policy.validate()?;
         if w.shape().len() != 4 {
@@ -277,10 +315,24 @@ impl ConvExecutor {
             },
         };
         Ok(Self {
-            plan,
+            consts: plan.shared_consts(),
+            threads: plan.threads(),
+            vwidth: plan.vector_width(),
             backend,
-            qdq: Vec::new(),
         })
+    }
+
+    /// Fresh mutable state for one replica of this layer: a plan over the
+    /// **shared** constants (no rational construction, no transform) plus
+    /// an empty qdq staging buffer.
+    pub(crate) fn new_state(&self) -> ConvState {
+        let mut plan = WinogradPlan::from_consts(Arc::clone(&self.consts));
+        plan.set_threads(self.threads);
+        plan.set_vector_width(self.vwidth);
+        ConvState {
+            plan,
+            qdq: Vec::new(),
+        }
     }
 
     /// Which backend the policy selected for this layer.
@@ -320,15 +372,78 @@ impl ConvExecutor {
         }
     }
 
+    /// Run the layer over a batch in one fused launch on `state`'s
+    /// scratch: `x` holds `n` row-major (C, H, W) images back to back,
+    /// `out` receives `n` (K, oh, ow) maps back to back.  Bit-identical
+    /// per image and across replicas; no allocations beyond plan scratch.
+    // lint: hot
+    pub(crate) fn conv2d_batch_into(
+        &self,
+        state: &mut ConvState,
+        n: usize,
+        x: &[f32],
+        h: usize,
+        w: usize,
+        out: &mut [f32],
+    ) {
+        let ConvState { plan, qdq } = state;
+        match &self.backend {
+            Backend::Dense(bank) => plan.conv2d_with_filters_batch_into(n, x, h, w, bank, out),
+            Backend::Sparse(bank) => {
+                plan.conv2d_sparse_with_filters_batch_into(n, x, h, w, bank, out)
+            }
+            Backend::QuantDense { bank, q } => {
+                qdq_into(q, x, qdq);
+                plan.conv2d_with_filters_batch_into(n, qdq, h, w, bank, out)
+            }
+            Backend::QuantSparse { bank, q } => {
+                qdq_into(q, x, qdq);
+                plan.conv2d_sparse_with_filters_batch_into(n, qdq, h, w, bank, out)
+            }
+        }
+    }
+}
+
+impl ConvExecutor {
+    /// Prepare one layer — see [`CompiledConv::prepare`].
+    pub fn prepare(w: &Tensor, policy: &ExecPolicy) -> Result<Self, GraphError> {
+        Ok(Self::from_compiled(Arc::new(CompiledConv::prepare(
+            w, policy,
+        )?)))
+    }
+
+    /// An executor over already-compiled artifacts: shares the banks,
+    /// builds only this executor's private state.
+    pub fn from_compiled(compiled: Arc<CompiledConv>) -> Self {
+        let state = compiled.new_state();
+        Self { compiled, state }
+    }
+
+    /// Which backend the policy selected for this layer.
+    pub fn backend_name(&self) -> &'static str {
+        self.compiled.backend_name()
+    }
+
+    /// Measured block sparsity of the prepared weights (0.0 when dense).
+    pub fn block_sparsity(&self) -> f64 {
+        self.compiled.block_sparsity()
+    }
+
+    /// The fixed activation quantizer of a quantized backend (`None` on
+    /// the float paths).
+    pub fn activation_quantizer(&self) -> Option<&Quantizer> {
+        self.compiled.activation_quantizer()
+    }
+
     /// Run the layer: x (C, H, W) -> (K, H - r + 1, W - r + 1).  A batch
     /// of one through the batched engine — which at n = 1 *is* the
     /// single-image fused loop.
     pub fn conv2d(&mut self, x: &Tensor) -> Tensor {
         assert_eq!(x.shape().len(), 3, "input must be (C, H, W)");
         let (h, w) = (x.shape()[1], x.shape()[2]);
-        let r = self.plan.r();
+        let r = self.state.plan.r();
         assert!(h >= r && w >= r, "input smaller than the filter");
-        let mut out = Tensor::zeros(&[self.out_channels(), h - r + 1, w - r + 1]);
+        let mut out = Tensor::zeros(&[self.compiled.out_channels(), h - r + 1, w - r + 1]);
         self.conv2d_batch_into(1, x.data(), h, w, out.data_mut());
         out
     }
@@ -346,21 +461,8 @@ impl ConvExecutor {
         w: usize,
         out: &mut [f32],
     ) {
-        let Self { plan, backend, qdq } = self;
-        match backend {
-            Backend::Dense(bank) => plan.conv2d_with_filters_batch_into(n, x, h, w, bank, out),
-            Backend::Sparse(bank) => {
-                plan.conv2d_sparse_with_filters_batch_into(n, x, h, w, bank, out)
-            }
-            Backend::QuantDense { bank, q } => {
-                qdq_into(q, x, qdq);
-                plan.conv2d_with_filters_batch_into(n, qdq, h, w, bank, out)
-            }
-            Backend::QuantSparse { bank, q } => {
-                qdq_into(q, x, qdq);
-                plan.conv2d_sparse_with_filters_batch_into(n, qdq, h, w, bank, out)
-            }
-        }
+        let Self { compiled, state } = self;
+        compiled.conv2d_batch_into(state, n, x, h, w, out)
     }
 }
 

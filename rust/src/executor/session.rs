@@ -1,13 +1,21 @@
-//! `Session` — a compiled graph ready to serve.
+//! `Session` — a compiled graph ready to serve — and [`CompiledModel`],
+//! the immutable artifact set it executes.
 //!
-//! A [`Session`] is the product of three ingredients: a typed
-//! [`Graph`], a [`WeightSource`] binding one tensor per conv/fc node,
-//! and one [`ExecPolicy`] per conv node.  Compilation prepares every
-//! conv's [`ConvExecutor`] (transform + prune + quantize once) and sizes
-//! the ping-pong activation workspace; after that,
-//! [`Session::forward`] / [`Session::forward_batch`] run the whole op
-//! chain with **zero steady-state heap allocations** and return typed
-//! [`GraphError`]s instead of panicking on bad requests.
+//! Compilation produces two layers with different sharing contracts:
+//!
+//! - [`CompiledModel`] holds everything immutable after prepare: the
+//!   typed [`Graph`], every conv's transformed filter bank / quantizer
+//!   (a [`crate::executor::CompiledConv`] behind an `Arc`), the fc
+//!   weight matrices, and the effective per-conv policies.  It is the
+//!   product of a [`Graph`], a [`WeightSource`], and one [`ExecPolicy`]
+//!   per conv node.  N serving replicas share **one** `Arc<CompiledModel>`
+//!   — cloning a session never re-transforms filters or duplicates the
+//!   banks (the replica-pool memory model; see README "Scaling out").
+//! - [`Session`] adds the mutable per-replica state: a ping-pong
+//!   activation [`Workspace`] plus each conv's private plan scratch.
+//!   [`Session::forward`] / [`Session::forward_batch`] run the whole op
+//!   chain with **zero steady-state heap allocations** and return typed
+//!   [`GraphError`]s instead of panicking on bad requests.
 //!
 //! ```
 //! use swcnn::executor::{ExecPolicy, Session};
@@ -26,10 +34,11 @@
 //! assert!(sess.forward(&[0.0; 7]).is_err());
 //! ```
 
-use crate::executor::{ConvExecutor, ExecPolicy};
+use crate::executor::{CompiledConv, ConvState, ExecPolicy};
 use crate::nn;
 use crate::nn::graph::{Graph, GraphError, Op, Shape, WeightSource};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// The batched serving workspace: two ping-pong activation buffers sized
 /// once at build time for the largest intermediate of the deepest batch.
@@ -42,47 +51,44 @@ struct Workspace {
     b: Vec<f32>,
 }
 
-/// Per-node prepared state: conv executors and fc weight matrices, keyed
-/// by graph node id.
-enum Prepared {
+/// Per-node compiled state: shared conv artifacts and fc weight
+/// matrices, keyed by graph node id.  Everything here is immutable
+/// after build — the sharing contract behind the replica pool.
+enum CompiledNode {
     /// Shape-only op (pad / relu / pool / flatten).
     None,
-    Conv(Box<ConvExecutor>),
+    Conv(Arc<CompiledConv>),
     Fc(Tensor),
 }
 
-/// A compiled graph + weights + policies: the single serving engine
-/// behind [`crate::coordinator::InferenceServer::start_native`].
-pub struct Session {
+/// The immutable compiled artifacts of a graph: transformed filter
+/// banks, quantizer scales, fc weights, plan constants, and effective
+/// policies.  Build once, then stamp out any number of [`Session`]
+/// replicas with [`Session::from_model`] — they all read these banks
+/// in place.
+pub struct CompiledModel {
     graph: Graph,
     /// One entry per graph node, same indexing as `graph.nodes()`.
-    prepared: Vec<Prepared>,
+    nodes: Vec<CompiledNode>,
     /// The policy each conv node was prepared with (after the
     /// small-channel guard), in conv order — what a tuned profile can be
     /// checked against.
     conv_policies: Vec<ExecPolicy>,
-    max_batch: usize,
-    ws: Workspace,
-    /// Set while a forward pass is in flight; a panic that unwinds out
-    /// of the pass leaves it set, so the workspace is known-torn until
-    /// [`Session::reset_workspace`] runs.
-    poisoned: bool,
 }
 
-// Manual: prepared banks and workspace buffers are noise; what a dump
-// needs is the graph size, batch bound, policies, and poison state.
-impl std::fmt::Debug for Session {
+// Manual: prepared banks are noise; what a dump needs is the graph
+// size, policies, and backend selection.
+impl std::fmt::Debug for CompiledModel {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Session")
+        f.debug_struct("CompiledModel")
+            .field("network", &self.graph.name())
             .field("nodes", &self.graph.nodes().len())
             .field("conv_policies", &self.conv_policies.len())
-            .field("max_batch", &self.max_batch)
-            .field("poisoned", &self.poisoned)
             .finish_non_exhaustive()
     }
 }
 
-impl Session {
+impl CompiledModel {
     /// Compile `graph` with one policy per conv node (in graph order).
     /// Weights are pulled from `source` in the canonical
     /// [`Graph::weight_requests`] order.
@@ -116,8 +122,8 @@ impl Session {
             }
             tensors.push((spec.node, t));
         }
-        let mut prepared: Vec<Prepared> =
-            graph.nodes().iter().map(|_| Prepared::None).collect();
+        let mut nodes: Vec<CompiledNode> =
+            graph.nodes().iter().map(|_| CompiledNode::None).collect();
         let mut conv_policies = Vec::with_capacity(convs.len());
         for (info, policy) in convs.iter().zip(policies) {
             let w = &tensors
@@ -131,24 +137,20 @@ impl Session {
             // The small-channel guard keeps narrow layers unpruned,
             // exactly as the legacy executor did.
             let policy = policy.for_conv(&info.shape);
-            prepared[info.node] = Prepared::Conv(Box::new(ConvExecutor::prepare(w, &policy)?));
+            nodes[info.node] =
+                CompiledNode::Conv(Arc::new(CompiledConv::prepare(w, &policy)?));
             conv_policies.push(policy);
         }
         for (node, t) in tensors {
             if matches!(graph.nodes()[node].op, Op::Fc { .. }) {
-                prepared[node] = Prepared::Fc(t);
+                nodes[node] = CompiledNode::Fc(t);
             }
         }
-        let mut sess = Self {
+        Ok(Self {
             graph,
-            prepared,
+            nodes,
             conv_policies,
-            max_batch: 0,
-            ws: Workspace::default(),
-            poisoned: false,
-        };
-        sess.size_workspace(1);
-        Ok(sess)
+        })
     }
 
     /// Compile with one uniform policy for every conv node.
@@ -159,6 +161,127 @@ impl Session {
     ) -> Result<Self, GraphError> {
         let n = graph.conv_infos().len();
         Self::build(graph, source, &vec![policy; n])
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The effective per-conv policies the model was compiled with
+    /// (small-channel guard applied), in conv order.
+    pub fn conv_policies(&self) -> &[ExecPolicy] {
+        &self.conv_policies
+    }
+
+    pub fn input_elements(&self) -> usize {
+        self.graph.input_elements()
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.graph.output_elements()
+    }
+
+    /// Per-conv backend names (executor selection, for reporting), in
+    /// conv order.
+    pub fn conv_backends(&self) -> Vec<&'static str> {
+        self.nodes
+            .iter()
+            .filter_map(|p| match p {
+                CompiledNode::Conv(cc) => Some(cc.backend_name()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Fresh per-replica conv state (plan over the shared constants +
+    /// qdq staging), in conv order.  No filter transform runs here.
+    fn conv_states(&self) -> Vec<ConvState> {
+        self.nodes
+            .iter()
+            .filter_map(|p| match p {
+                CompiledNode::Conv(cc) => Some(cc.new_state()),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// A compiled graph + weights + policies plus one replica's mutable
+/// workspace: the single serving engine behind
+/// [`crate::coordinator::InferenceServer::start_native`].  Multiple
+/// sessions stamped from one [`CompiledModel`] share the transformed
+/// filter banks byte-for-byte.
+pub struct Session {
+    model: Arc<CompiledModel>,
+    /// Per-conv mutable scratch, same order as
+    /// [`CompiledModel::conv_policies`].
+    conv_states: Vec<ConvState>,
+    max_batch: usize,
+    ws: Workspace,
+    /// Set while a forward pass is in flight; a panic that unwinds out
+    /// of the pass leaves it set, so the workspace is known-torn until
+    /// [`Session::reset_workspace`] runs.
+    poisoned: bool,
+}
+
+// Manual: prepared banks and workspace buffers are noise; what a dump
+// needs is the graph size, batch bound, policies, and poison state.
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("nodes", &self.model.graph.nodes().len())
+            .field("conv_policies", &self.model.conv_policies.len())
+            .field("max_batch", &self.max_batch)
+            .field("poisoned", &self.poisoned)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Session {
+    /// Compile `graph` with one policy per conv node (in graph order) —
+    /// [`CompiledModel::build`] plus a single replica over it.
+    pub fn build(
+        graph: Graph,
+        source: &mut dyn WeightSource,
+        policies: &[ExecPolicy],
+    ) -> Result<Self, GraphError> {
+        Ok(Self::from_model(Arc::new(CompiledModel::build(
+            graph, source, policies,
+        )?)))
+    }
+
+    /// Compile with one uniform policy for every conv node.
+    pub fn uniform(
+        graph: Graph,
+        source: &mut dyn WeightSource,
+        policy: ExecPolicy,
+    ) -> Result<Self, GraphError> {
+        Ok(Self::from_model(Arc::new(CompiledModel::uniform(
+            graph, source, policy,
+        )?)))
+    }
+
+    /// Stamp out one replica over already-compiled artifacts.
+    /// Infallible and cheap: allocates only this replica's workspace and
+    /// plan scratch — the filter banks are shared, never re-transformed
+    /// (`winograd::filter_transform_count` proves it).
+    pub fn from_model(model: Arc<CompiledModel>) -> Self {
+        let conv_states = model.conv_states();
+        let mut sess = Self {
+            model,
+            conv_states,
+            max_batch: 0,
+            ws: Workspace::default(),
+            poisoned: false,
+        };
+        sess.size_workspace(1);
+        sess
+    }
+
+    /// The shared immutable artifacts this replica executes.  Clone the
+    /// `Arc` and [`Session::from_model`] it to stamp out siblings.
+    pub fn model(&self) -> &Arc<CompiledModel> {
+        &self.model
     }
 
     /// Pre-size the ping-pong workspace for fused batches up to `n`
@@ -185,8 +308,8 @@ impl Session {
     /// activation anywhere in the chain (every node's output, plus the
     /// graph input).
     fn size_workspace(&mut self, n: usize) {
-        let mut cap = self.graph.input_elements();
-        for node in self.graph.nodes() {
+        let mut cap = self.model.graph.input_elements();
+        for node in self.model.graph.nodes() {
             cap = cap.max(node.out_shape.elements());
         }
         self.max_batch = n;
@@ -195,33 +318,27 @@ impl Session {
     }
 
     pub fn graph(&self) -> &Graph {
-        &self.graph
+        &self.model.graph
     }
 
     /// The effective per-conv policies the session was compiled with
     /// (small-channel guard applied), in conv order.
     pub fn conv_policies(&self) -> &[ExecPolicy] {
-        &self.conv_policies
+        &self.model.conv_policies
     }
 
     pub fn input_elements(&self) -> usize {
-        self.graph.input_elements()
+        self.model.input_elements()
     }
 
     pub fn output_elements(&self) -> usize {
-        self.graph.output_elements()
+        self.model.output_elements()
     }
 
     /// Per-conv backend names (executor selection, for reporting), in
     /// conv order.
     pub fn conv_backends(&self) -> Vec<&'static str> {
-        self.prepared
-            .iter()
-            .filter_map(|p| match p {
-                Prepared::Conv(ex) => Some(ex.backend_name()),
-                _ => None,
-            })
-            .collect()
+        self.model.conv_backends()
     }
 
     /// Full forward pass: flat (C * H * W) image -> the graph's output
@@ -312,7 +429,7 @@ impl Session {
         images: &[&[f32]],
         out: &mut [f32],
     ) -> Result<(), GraphError> {
-        let need = images.len() * self.graph.output_elements();
+        let need = images.len() * self.model.graph.output_elements();
         if out.len() != need {
             return Err(GraphError::Output {
                 expected: need,
@@ -343,7 +460,7 @@ impl Session {
                 max: self.max_batch,
             });
         }
-        let ie = self.graph.input_elements();
+        let ie = self.model.graph.input_elements();
         for (i, im) in images.iter().enumerate() {
             if im.len() != ie {
                 return Err(GraphError::Input {
@@ -357,8 +474,8 @@ impl Session {
         // of a stage leaves the flag set and the workspace quarantined.
         self.poisoned = true;
         let Self {
-            graph,
-            prepared,
+            model,
+            conv_states,
             ws,
             ..
         } = self;
@@ -366,11 +483,12 @@ impl Session {
         for (i, im) in images.iter().enumerate() {
             a[i * ie..(i + 1) * ie].copy_from_slice(im);
         }
-        let mut cur = graph.input_shape();
-        for (node, prep) in graph.nodes().iter().zip(prepared.iter_mut()) {
+        let mut cur = model.graph.input_shape();
+        let mut ci = 0; // running conv index into this replica's states
+        for (node, compiled) in model.graph.nodes().iter().zip(model.nodes.iter()) {
             let out = node.out_shape;
             let (src, dst) = (n * cur.elements(), n * out.elements());
-            match (&node.op, prep) {
+            match (&node.op, compiled) {
                 (Op::Pad { p }, _) => {
                     let Shape::Chw(c, h, w) = cur else {
                         unreachable!("pad input is a map by construction")
@@ -378,11 +496,12 @@ impl Session {
                     nn::pad_same_into(&a[..src], n * c, h, w, *p, &mut b[..dst]);
                     std::mem::swap(a, b);
                 }
-                (Op::Conv2d { .. }, Prepared::Conv(ex)) => {
+                (Op::Conv2d { .. }, CompiledNode::Conv(cc)) => {
                     let Shape::Chw(_, h, w) = cur else {
                         unreachable!("conv input is a map by construction")
                     };
-                    ex.conv2d_batch_into(n, &a[..src], h, w, &mut b[..dst]);
+                    cc.conv2d_batch_into(&mut conv_states[ci], n, &a[..src], h, w, &mut b[..dst]);
+                    ci += 1;
                     std::mem::swap(a, b);
                 }
                 (Op::Relu, _) => nn::relu_slice(&mut a[..src]),
@@ -394,11 +513,11 @@ impl Session {
                     std::mem::swap(a, b);
                 }
                 (Op::Flatten, _) => {} // shape bookkeeping only
-                (Op::Fc { .. }, Prepared::Fc(wm)) => {
+                (Op::Fc { .. }, CompiledNode::Fc(wm)) => {
                     nn::fc_into(wm, n, &a[..src], &mut b[..dst]);
                     std::mem::swap(a, b);
                 }
-                _ => unreachable!("prepared state matches the op by construction"),
+                _ => unreachable!("compiled state matches the op by construction"),
             }
             cur = out;
         }
@@ -413,6 +532,7 @@ mod tests {
     use crate::nn::graph::{GraphBuilder, Synthetic};
     use crate::nn::vgg_tiny;
     use crate::util::Rng;
+    use crate::winograd::filter_transform_count;
 
     #[test]
     fn session_runs_vgg_tiny_end_to_end() {
@@ -432,6 +552,47 @@ mod tests {
         assert_eq!(logits.len(), 10);
         assert!(logits.iter().all(|v| v.is_finite()));
         assert_eq!(logits, sess.forward(&image).unwrap(), "deterministic");
+    }
+
+    #[test]
+    fn replicas_share_one_compiled_model_without_retransform() {
+        // The replica-pool memory contract: compile once, stamp out N
+        // sessions, and the transformed filter banks are neither rebuilt
+        // nor duplicated.  The transform counter is thread-local and all
+        // work here stays on this thread, so the count is exact.
+        let model = Arc::new(
+            CompiledModel::uniform(
+                vgg_tiny(),
+                &mut Synthetic::new(5),
+                ExecPolicy::sparse(2, 0.7),
+            )
+            .unwrap(),
+        );
+        let after_build = filter_transform_count();
+        let mut replicas: Vec<Session> = (0..4)
+            .map(|_| Session::from_model(Arc::clone(&model)))
+            .collect();
+        assert_eq!(
+            filter_transform_count(),
+            after_build,
+            "stamping replicas must not re-transform filters"
+        );
+        // 4 replicas + the original Arc.
+        assert_eq!(Arc::strong_count(&model), 5);
+        let mut rng = Rng::new(7);
+        let image = rng.gaussian_vec(3 * 32 * 32);
+        let outs: Vec<Vec<f32>> = replicas
+            .iter_mut()
+            .map(|s| s.forward(&image).unwrap())
+            .collect();
+        for out in &outs[1..] {
+            assert_eq!(out, &outs[0], "replicas must be bit-identical");
+        }
+        assert_eq!(
+            filter_transform_count(),
+            after_build,
+            "serving must never touch the transform path"
+        );
     }
 
     #[test]

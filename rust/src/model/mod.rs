@@ -112,6 +112,32 @@ impl LayerModel {
         total / (long / lanes as f64 + short / row_speedup)
     }
 
+    /// Modeled throughput factor of running the layer's plan engine with
+    /// `workers` threads (the capacity planner's cluster term).  Workers
+    /// map onto the scheduler's cluster dimension: the l^2 batched
+    /// matmuls (M_W + S_W) retire in `ceil(l^2 / workers)` waves, so
+    /// their speedup is the quantized `l^2 / ceil(l^2 / workers)` —
+    /// sublinear whenever workers does not divide l^2, and saturated at
+    /// l^2 workers.  The tile-parallel transform adds (S_B + S_A) split
+    /// evenly (tiles vastly outnumber workers).  `workers = 1` is
+    /// exactly 1.0.
+    pub fn worker_speedup(&self, workers: usize) -> f64 {
+        assert!(workers >= 1, "workers must be at least 1");
+        if workers == 1 {
+            return 1.0;
+        }
+        let a = &self.arithmetic;
+        let matmul = (a.m_w + a.s_w) as f64;
+        let transform = (a.s_b + a.s_a) as f64;
+        let total = matmul + transform;
+        if total == 0.0 {
+            return 1.0;
+        }
+        let l2 = self.l * self.l;
+        let wave_speedup = l2 as f64 / l2.div_ceil(workers) as f64;
+        total / (matmul / wave_speedup + transform / workers as f64)
+    }
+
     /// Per-image data volume when `batch` images share one weight stream:
     /// the transformed feature maps (D_wi + D_wo) are paid per image, the
     /// transformed weights D_wk amortize across the fused batch.  This is
@@ -359,6 +385,35 @@ mod tests {
         // terms — the overall win must still not regress.
         let lm = LayerModel::new(&layer.shape(), 2);
         assert!(lm.vector_speedup(8) >= lm.vector_speedup(4));
+    }
+
+    #[test]
+    fn worker_speedup_is_monotone_quantized_and_sublinear() {
+        let layer = ConvLayer {
+            name: "t",
+            stage: 1,
+            in_ch: 32,
+            out_ch: 32,
+            hw: 32,
+            r: 3,
+        };
+        for m in [2usize, 4, 6] {
+            let lm = LayerModel::new(&layer.shape(), m);
+            assert_eq!(lm.worker_speedup(1), 1.0);
+            let mut prev = 1.0;
+            for w in 2..=16 {
+                let s = lm.worker_speedup(w);
+                assert!(s >= prev - 1e-12, "m={m} w={w}: {s} < {prev}");
+                assert!(s <= w as f64 + 1e-12, "m={m} w={w}: superlinear {s}");
+                prev = s;
+            }
+        }
+        // F(2,3): l^2 = 16, so 3 workers leave a 6-wave matmul schedule —
+        // strictly below the linear 3x.
+        let lm = LayerModel::new(&layer.shape(), 2);
+        assert!(lm.worker_speedup(3) < 3.0);
+        // ...while worker counts dividing l^2 keep the matmul term exact.
+        assert!(lm.worker_speedup(4) > lm.worker_speedup(3));
     }
 
     #[test]

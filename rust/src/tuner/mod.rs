@@ -31,6 +31,16 @@
 //! [`crate::model::LayerModel::volume_per_image`] amortizes the
 //! transformed-weight volume D_wk across the batch, and the tuner picks
 //! the knee where a larger batch stops paying.
+//!
+//! The same model answers the **capacity-planning** question behind
+//! [`crate::coordinator::ReplicaPool`]: for a given core budget, how
+//! many replicas × workers-per-replica?  Replicas scale throughput
+//! linearly but split the fused batch (weight streaming amortizes
+//! worse); workers speed one replica up sublinearly
+//! ([`LayerModel::worker_speedup`]'s quantized matmul waves).
+//! [`plan_capacity`] scores every split of the budget and
+//! [`Tuner::tune`] persists the pick in the profile
+//! ([`TuneProfile::capacity`], schema 4).
 
 use crate::bench::time_it;
 use crate::executor::{ConvExecutor, ExecPolicy};
@@ -77,6 +87,12 @@ pub struct TuneOptions {
     /// Fused-batch knee: stop growing the batch once the next candidate
     /// improves the model's per-image volume by less than this fraction.
     pub batch_knee: f64,
+    /// Core budget for replica-pool capacity planning: `Some(cores)`
+    /// makes [`Tuner::tune`] score every replicas × workers split of the
+    /// budget (on the per-layer configurations it just chose) and
+    /// persist the best as [`TuneProfile::capacity`].  `None` (default)
+    /// skips planning — the profile describes a single session.
+    pub core_budget: Option<usize>,
 }
 
 impl Default for TuneOptions {
@@ -99,8 +115,87 @@ impl Default for TuneOptions {
             calib_top: 3,
             min_gain: 0.05,
             batch_knee: 0.03,
+            core_budget: None,
         }
     }
+}
+
+/// A replicas × workers split of a core budget, chosen by
+/// [`plan_capacity`] and persisted in [`TuneProfile::capacity`] —
+/// what a [`crate::coordinator::PoolBuilder`] consumes
+/// ([`crate::coordinator::PoolBuilder::from_capacity`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityPlan {
+    /// The core budget the plan was scored for.
+    pub core_budget: usize,
+    /// Chosen replica count (each replica = one supervised worker loop
+    /// over a private workspace; all share one compiled model).
+    pub replicas: usize,
+    /// Chosen plan worker count per replica
+    /// (`replicas * workers <= core_budget`).
+    pub workers: usize,
+    /// Modeled relative throughput of the chosen split (images per
+    /// model work unit, scaled by the replica count) — comparable only
+    /// across splits of the same graph and batch.
+    pub modeled_throughput: f64,
+}
+
+/// Score every replicas × workers split of `core_budget` on the §5.1
+/// model and return the best.  The trade the model captures: replicas
+/// multiply throughput but divide the fused batch between them
+/// ([`LayerModel::volume_per_image`] — the shared weight stream
+/// amortizes worse per replica), while workers accelerate one replica
+/// sublinearly ([`LayerModel::worker_speedup`]'s quantized matmul
+/// waves).  `layers` are the per-conv models at their **chosen** tile
+/// sizes; `batch` is the fused serving batch the pool splits.
+/// Deterministic: ties go to fewer replicas (cheaper in workspaces),
+/// which also means more workers.
+pub fn plan_capacity(
+    layers: &[LayerModel],
+    batch: usize,
+    core_budget: usize,
+) -> Result<CapacityPlan, GraphError> {
+    if core_budget == 0 {
+        return Err(GraphError::Config(
+            "capacity planning needs a core budget of at least 1".to_string(),
+        ));
+    }
+    if batch == 0 {
+        return Err(GraphError::Config(
+            "capacity planning needs a fused batch of at least 1".to_string(),
+        ));
+    }
+    if layers.is_empty() {
+        return Err(GraphError::Config(
+            "capacity planning needs at least one conv layer".to_string(),
+        ));
+    }
+    let mut best: Option<CapacityPlan> = None;
+    for replicas in 1..=core_budget {
+        let workers = core_budget / replicas;
+        // Each replica sees its share of the fused batch: weight
+        // streaming amortizes over fewer images as the pool widens.
+        let per_replica_batch = batch.div_ceil(replicas);
+        let cost_per_image: f64 = layers
+            .iter()
+            .map(|lm| {
+                let a = &lm.arithmetic;
+                let ops = (a.m_w + a.s_w + a.s_b + a.s_a) as f64;
+                ops / lm.worker_speedup(workers) + lm.volume_per_image(per_replica_batch)
+            })
+            .sum();
+        let throughput = replicas as f64 / cost_per_image;
+        if best.map_or(true, |b| throughput > b.modeled_throughput) {
+            best = Some(CapacityPlan {
+                core_budget,
+                replicas,
+                workers,
+                modeled_throughput: throughput,
+            });
+        }
+    }
+    // core_budget >= 1 guarantees at least the (1, core_budget) split.
+    best.ok_or_else(|| GraphError::Config("capacity planning scored no splits".to_string()))
 }
 
 /// One conv node's tuned configuration plus the evidence behind it.
@@ -155,6 +250,11 @@ pub struct TuneProfile {
     /// [`simd::detected_features`]) — calibration evidence for a vector
     /// width is machine-specific, so artifacts carry their provenance.
     pub cpu_features: String,
+    /// Replica-pool capacity plan (schema 4): the model-chosen
+    /// replicas × workers split of [`TuneOptions::core_budget`].
+    /// `None` when the tune ran without a budget (or the profile
+    /// predates schema 4) — the profile then describes one session.
+    pub capacity: Option<CapacityPlan>,
     pub layers: Vec<LayerTune>,
 }
 
@@ -333,9 +433,10 @@ impl TuneProfile {
             .collect()
     }
 
-    /// Serialize to the profile's JSON form (schema 3: node-keyed rows
-    /// with per-layer vector widths and the tuning machine's CPU
-    /// features; schema-2 profiles still load, defaulting both).
+    /// Serialize to the profile's JSON form (schema 4: schema 3's
+    /// node-keyed rows with per-layer vector widths and CPU-feature
+    /// provenance, plus the optional replica-pool capacity plan;
+    /// schema-2/3 profiles still load, defaulting the missing fields).
     pub fn to_json(&self) -> Json {
         let layers: Vec<Json> = self
             .layers
@@ -365,9 +466,22 @@ impl TuneProfile {
                 ]))
             })
             .collect();
+        let capacity = match &self.capacity {
+            Some(c) => Json::Obj(BTreeMap::from([
+                ("core_budget".to_string(), Json::Num(c.core_budget as f64)),
+                ("replicas".to_string(), Json::Num(c.replicas as f64)),
+                ("workers".to_string(), Json::Num(c.workers as f64)),
+                (
+                    "modeled_throughput".to_string(),
+                    Json::Num(c.modeled_throughput),
+                ),
+            ])),
+            None => Json::Null,
+        };
         Json::Obj(BTreeMap::from([
-            ("schema".to_string(), Json::Num(3.0)),
+            ("schema".to_string(), Json::Num(4.0)),
             ("kind".to_string(), Json::Str("tune_profile".to_string())),
+            ("capacity".to_string(), capacity),
             (
                 "cpu_features".to_string(),
                 Json::Str(self.cpu_features.clone()),
@@ -497,6 +611,33 @@ impl TuneProfile {
                 "profile batch = {batch} outside supported 1..={MAX_PROFILE_BATCH}"
             )));
         }
+        // Schema-2/3 profiles predate capacity planning: absent (or
+        // null) means "no plan", exactly what those tunes computed.  A
+        // present-but-inconsistent plan is a corrupt profile.
+        let capacity = match v.get("capacity") {
+            None | Some(Json::Null) => None,
+            Some(c) => {
+                let plan = CapacityPlan {
+                    core_budget: uint(c, "core_budget")? as usize,
+                    replicas: uint(c, "replicas")? as usize,
+                    workers: uint(c, "workers")? as usize,
+                    modeled_throughput: num(c, "modeled_throughput")?,
+                };
+                if plan.replicas == 0 || plan.workers == 0 {
+                    return Err(bad(format!(
+                        "capacity plan replicas = {} / workers = {} must both be >= 1",
+                        plan.replicas, plan.workers
+                    )));
+                }
+                if plan.replicas * plan.workers > plan.core_budget {
+                    return Err(bad(format!(
+                        "capacity plan {} replicas x {} workers exceeds its {}-core budget",
+                        plan.replicas, plan.workers, plan.core_budget
+                    )));
+                }
+                Some(plan)
+            }
+        };
         Ok(Self {
             network: v
                 .get("network")
@@ -513,6 +654,7 @@ impl TuneProfile {
                 .and_then(|f| f.as_str())
                 .unwrap_or_default()
                 .to_string(),
+            capacity,
             layers,
         })
     }
@@ -711,6 +853,19 @@ impl Tuner {
             layers.push(lt);
         }
         let batch = self.choose_batch(&convs, &layers);
+        // Capacity planning runs on the per-layer configurations just
+        // chosen — each conv scored at its tuned tile size.
+        let capacity = match self.opts.core_budget {
+            Some(cores) => {
+                let models: Vec<LayerModel> = convs
+                    .iter()
+                    .zip(&layers)
+                    .map(|(info, lt)| LayerModel::new(&info.shape, lt.m))
+                    .collect();
+                Some(plan_capacity(&models, batch, cores)?)
+            }
+            None => None,
+        };
         Ok(TuneProfile {
             network: self.graph.name().to_string(),
             base_m: self.base.m,
@@ -718,6 +873,7 @@ impl Tuner {
             bits: self.base.bits,
             batch,
             cpu_features: simd::detected_features().to_string(),
+            capacity,
             layers,
         })
     }
@@ -1300,6 +1456,100 @@ mod tests {
             measured <= default,
             "chosen {measured}s must not be slower than default {default}s"
         );
+    }
+
+    #[test]
+    fn capacity_plan_splits_the_core_budget() {
+        let convs = vgg_tiny().conv_infos();
+        let models: Vec<LayerModel> = convs
+            .iter()
+            .map(|i| LayerModel::new(&i.shape, 2))
+            .collect();
+        let p1 = plan_capacity(&models, 8, 1).expect("budget 1");
+        assert_eq!((p1.replicas, p1.workers), (1, 1));
+        for budget in [2usize, 4, 8, 16, 64] {
+            let p = plan_capacity(&models, 8, budget).expect("plans");
+            assert_eq!(p.core_budget, budget);
+            assert!(p.replicas >= 1 && p.workers >= 1);
+            assert!(
+                p.replicas * p.workers <= budget,
+                "{budget}: {} x {} overcommits",
+                p.replicas,
+                p.workers
+            );
+            assert!(p.modeled_throughput > 0.0);
+            // More cores never model slower: the (1, budget) split alone
+            // already beats (1, 1).
+            assert!(p.modeled_throughput >= p1.modeled_throughput);
+            // Deterministic: same inputs, same plan.
+            assert_eq!(p, plan_capacity(&models, 8, budget).expect("replan"));
+        }
+        // Past the l^2 worker-saturation point, splitting the budget into
+        // replicas is the only way to keep scaling — F(2,3) saturates at
+        // 16 workers, so a 64-core budget must fan out.
+        let p64 = plan_capacity(&models, 8, 64).expect("budget 64");
+        assert!(p64.replicas > 1, "{p64:?}");
+        // Typed refusals for degenerate inputs.
+        assert!(plan_capacity(&models, 8, 0).is_err());
+        assert!(plan_capacity(&models, 0, 8).is_err());
+        assert!(plan_capacity(&[], 8, 8).is_err());
+    }
+
+    #[test]
+    fn tune_with_core_budget_persists_capacity_schema4() {
+        let base = ExecPolicy::sparse(2, 0.7);
+        let profile = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(TuneOptions {
+                core_budget: Some(8),
+                ..model_only()
+            })
+            .tune()
+            .unwrap();
+        let plan = profile.capacity.expect("budgeted tune plans capacity");
+        assert_eq!(plan.core_budget, 8);
+        assert!(plan.replicas * plan.workers <= 8);
+        // The plan survives the JSON artifact byte-for-byte.
+        let text = profile.to_json().to_string();
+        assert!(text.contains("\"schema\": 4") || text.contains("\"schema\":4"), "{text}");
+        assert!(text.contains("capacity"), "{text}");
+        let back = TuneProfile::from_json(&Json::parse(&text).expect("parse")).expect("decode");
+        assert_eq!(profile, back);
+        // An unbudgeted tune stays plan-free (and still round-trips).
+        let bare = Tuner::new(vgg_tiny(), base, 7)
+            .with_options(model_only())
+            .tune()
+            .unwrap();
+        assert_eq!(bare.capacity, None);
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_capacity_plans() {
+        let template = |cap: &str| {
+            format!(
+                r#"{{"kind": "tune_profile", "network": "n", "base_m": 2,
+                     "sparsity": 0.5, "batch": 4, "capacity": {cap},
+                     "layers": [{{"node": 1, "name": "c0", "m": 2, "workers": 1,
+                                 "backend": "dense", "predicted_cycles": 1,
+                                 "model_energy": 1.0}}]}}"#
+            )
+        };
+        // Overcommitted, zero-replica, and zero-worker plans are corrupt.
+        for cap in [
+            r#"{"core_budget": 4, "replicas": 3, "workers": 2, "modeled_throughput": 1.0}"#,
+            r#"{"core_budget": 4, "replicas": 0, "workers": 2, "modeled_throughput": 1.0}"#,
+            r#"{"core_budget": 4, "replicas": 2, "workers": 0, "modeled_throughput": 1.0}"#,
+        ] {
+            let v = Json::parse(&template(cap)).expect("test json");
+            assert!(TuneProfile::from_json(&v).is_err(), "{cap}");
+        }
+        // Null and absent both mean "no plan" (schema 2/3 compatibility).
+        let v = Json::parse(&template("null")).expect("test json");
+        assert_eq!(TuneProfile::from_json(&v).expect("null ok").capacity, None);
+        let ok =
+            r#"{"core_budget": 4, "replicas": 2, "workers": 2, "modeled_throughput": 1.5}"#;
+        let v = Json::parse(&template(ok)).expect("test json");
+        let plan = TuneProfile::from_json(&v).expect("load").capacity.expect("plan");
+        assert_eq!((plan.replicas, plan.workers), (2, 2));
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod plan;
 pub mod rational;
 pub mod simd;
 
-pub use plan::{FilterBank, SparseFilterBank, WinogradPlan};
+pub use plan::{filter_transform_count, FilterBank, PlanConsts, SparseFilterBank, WinogradPlan};
 pub use simd::VectorWidth;
 
 use crate::tensor::Tensor;

@@ -64,6 +64,26 @@ use crate::sparse::{prune_blocks, Bcoo};
 use crate::tensor::Tensor;
 use crate::winograd::rational::Rat;
 use crate::zmorton;
+use std::cell::Cell;
+use std::sync::Arc;
+
+thread_local! {
+    /// Per-thread count of filter-transform passes (see
+    /// [`filter_transform_count`]).  Thread-local rather than global so
+    /// the replica-sharing assertion is immune to unrelated tests
+    /// transforming banks on other threads of the same process.
+    static FILTER_TRANSFORMS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many filter-bank transform passes ([`WinogradPlan::transform_filters`],
+/// which the sparse variant routes through) the **current thread** has
+/// run.  The replica-pool memory contract is asserted against this: N
+/// replicas over one shared `CompiledModel` must not move this counter,
+/// because the transformed banks are built once and shared, never
+/// rebuilt per replica.
+pub fn filter_transform_count() -> u64 {
+    FILTER_TRANSFORMS.with(|c| c.get())
+}
 
 /// Flatten a rational matrix to row-major f32.
 fn flatten(rows: &[Vec<Rat>]) -> Vec<f32> {
@@ -109,8 +129,11 @@ fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
     }
 }
 
-/// The cached transform constants for one F(m, r).
-struct PlanConsts {
+/// The cached transform constants for one F(m, r) — immutable after
+/// construction.  Opaque outside the plan engine; shared across plans
+/// (and serving replicas) via `Arc`, so N plans over one F(m, r) pay the
+/// exact rational construction once.
+pub struct PlanConsts {
     m: usize,
     r: usize,
     l: usize,
@@ -324,7 +347,7 @@ impl SparseFilterBank {
 /// A Winograd convolution plan for one F(m, r): cached transforms,
 /// reusable scratch, threaded execution.
 pub struct WinogradPlan {
-    consts: PlanConsts,
+    consts: Arc<PlanConsts>,
     scratch: PlanScratch,
     threads: usize,
     vwidth: VectorWidth,
@@ -356,23 +379,38 @@ impl WinogradPlan {
         let a = transpose(&at, m, l);
         let gt = transpose(&g, l, r);
         let b = transpose(&bt, l, l);
-        let threads = Self::default_threads();
+        Self::from_consts(Arc::new(PlanConsts {
+            m,
+            r,
+            l,
+            at,
+            a,
+            g,
+            gt,
+            bt,
+            b,
+        }))
+    }
+
+    /// Build a plan over already-constructed shared transform constants:
+    /// fresh scratch, default knobs, zero rational-arithmetic cost.  This
+    /// is the replica path — N per-replica plans over one `Arc`'d set of
+    /// constants, bit-identical to N independent [`WinogradPlan::new`]
+    /// calls.
+    pub fn from_consts(consts: Arc<PlanConsts>) -> Self {
         Self {
-            consts: PlanConsts {
-                m,
-                r,
-                l,
-                at,
-                a,
-                g,
-                gt,
-                bt,
-                b,
-            },
+            consts,
             scratch: PlanScratch::default(),
-            threads,
+            threads: Self::default_threads(),
             vwidth: VectorWidth::Auto,
         }
+    }
+
+    /// The plan's shared transform constants (a cheap `Arc` clone) — what
+    /// a compiled model stores so every replica's plan points at the same
+    /// matrices.
+    pub fn shared_consts(&self) -> Arc<PlanConsts> {
+        Arc::clone(&self.consts)
     }
 
     /// Override the worker count (1 = single-threaded; results are
@@ -471,6 +509,7 @@ impl WinogradPlan {
     /// U = G g G^T per (k, c).  One-time cost per weight set; reuse the
     /// returned bank across `conv2d_with_filters` calls.
     pub fn transform_filters(&self, w: &Tensor) -> FilterBank {
+        FILTER_TRANSFORMS.with(|c| c.set(c.get() + 1));
         let (r, l) = (self.consts.r, self.consts.l);
         assert_eq!(w.shape().len(), 4, "weights must be (K, C, r, r)");
         let (k, c) = (w.shape()[0], w.shape()[1]);
@@ -598,7 +637,7 @@ impl WinogradPlan {
     ) {
         let threads = self.threads;
         let vw = self.vwidth.resolve();
-        let consts = &self.consts;
+        let consts = &*self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
         let (c, k) = (bank.c, bank.k);
@@ -775,7 +814,7 @@ impl WinogradPlan {
     ) {
         let threads = self.threads;
         let vw = self.vwidth.resolve();
-        let consts = &self.consts;
+        let consts = &*self.consts;
         let scratch = &mut self.scratch;
         let (m, r, l) = (consts.m, consts.r, consts.l);
         let (c, k) = (bank.c, bank.k);

@@ -227,6 +227,111 @@ fn shutdown_drains_admitted_requests_to_the_socket() {
 }
 
 // ---------------------------------------------------------------------------
+// Multi-model routing: several models behind one listener
+// ---------------------------------------------------------------------------
+
+const WIDE_OUT: usize = 5;
+
+/// Same input shape as [`tiny_session`], different head width and
+/// weights — so a misrouted request is observable, not coincidentally
+/// correct.
+fn wide_session() -> Session {
+    let g = GraphBuilder::new("tiny-wide", (2, 8, 8))
+        .pad(1)
+        .conv2d("c0", 4, 3)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("head", WIDE_OUT)
+        .build()
+        .expect("wide graph builds");
+    Session::uniform(g, &mut Synthetic::new(9), ExecPolicy::dense(2)).expect("wide compiles")
+}
+
+/// Two compiled models serve behind one listener, each request routed
+/// by the model id in header byte 7, each answer bit-identical to its
+/// own direct session — and an unmapped id fails typed (code 49)
+/// without killing the connection.
+#[test]
+fn one_listener_routes_multiple_models_by_id() {
+    let mut direct_tiny = tiny_session();
+    let mut direct_wide = wide_session();
+    let tiny = ServeBuilder::new(tiny_session())
+        .model(3)
+        .start()
+        .expect("tiny starts");
+    let wide = ServeBuilder::new(wide_session())
+        .model(7)
+        .start()
+        .expect("wide starts");
+    let net = NetServer::bind_models("127.0.0.1:0", vec![wide, tiny]).expect("bind");
+    assert_eq!(net.models(), vec![3, 7], "table sorts by model id");
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+
+    // A fresh client addresses model 0 — not served here.  The refusal
+    // is a typed per-request frame, and the connection stays up.
+    match client.infer(&image(40)) {
+        Err(NetError::Remote { code, msg }) => {
+            assert_eq!(code, ServeError::UnknownModel { model: 0 }.code());
+            assert!(msg.contains("model"), "{msg}");
+        }
+        other => panic!("want Remote(unknown_model), got {other:?}"),
+    }
+
+    // Same socket, interleaved across both models, bit-identical each.
+    let x = image(41);
+    client.set_model(3);
+    assert_eq!(
+        client.infer(&x).expect("model 3 serves"),
+        direct_tiny.forward(&x).expect("direct tiny")
+    );
+    client.set_model(7);
+    let y = client.infer(&x).expect("model 7 serves");
+    assert_eq!(y.len(), WIDE_OUT);
+    assert_eq!(y, direct_wide.forward(&x).expect("direct wide"));
+    client.set_model(3);
+    assert_eq!(
+        client.infer(&x).expect("model 3 again"),
+        direct_tiny.forward(&x).expect("direct tiny")
+    );
+
+    // The in-band metrics endpoint is per model: each server counted
+    // exactly the requests routed to it.
+    let doc = client.metrics_json().expect("model 3 metrics");
+    let parsed = Json::parse(&doc).expect("valid JSON");
+    assert_eq!(parsed.req("requests").unwrap().as_f64(), Some(2.0), "{doc}");
+    client.set_model(7);
+    let doc = client.metrics_json().expect("model 7 metrics");
+    let parsed = Json::parse(&doc).expect("valid JSON");
+    assert_eq!(parsed.req("requests").unwrap().as_f64(), Some(1.0), "{doc}");
+    assert_eq!(net.model_server(3).unwrap().output_elements(), OUT_ELEMS);
+    assert_eq!(net.model_server(7).unwrap().output_elements(), WIDE_OUT);
+    assert!(net.model_server(0).is_none());
+}
+
+/// `bind` stays the single-model sugar: whatever the server's id, a
+/// default client (model 0) only reaches it when the ids agree.
+#[test]
+fn single_model_bind_keeps_default_clients_working() {
+    let net = NetServer::bind("127.0.0.1:0", tiny_server()).expect("bind");
+    assert_eq!(net.models(), vec![0]);
+    let mut client = NetClient::connect(net.local_addr()).expect("connect");
+    assert_eq!(client.model(), 0, "fresh clients address the default");
+    assert_eq!(client.infer(&image(50)).expect("serves").len(), OUT_ELEMS);
+}
+
+#[test]
+fn duplicate_model_ids_refuse_the_bind() {
+    let a = ServeBuilder::new(tiny_session()).model(2).start().expect("a");
+    let b = ServeBuilder::new(tiny_session()).model(2).start().expect("b");
+    let err = NetServer::bind_models("127.0.0.1:0", vec![a, b]).expect_err("refused");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+    assert!(err.to_string().contains("model id 2"), "{err}");
+    let err = NetServer::bind_models("127.0.0.1:0", Vec::new()).expect_err("empty refused");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+}
+
+// ---------------------------------------------------------------------------
 // Dispatch: socketless mapping of frames onto the admission path
 // ---------------------------------------------------------------------------
 
@@ -234,7 +339,7 @@ fn shutdown_drains_admitted_requests_to_the_socket() {
 fn dispatch_needs_no_socket_for_metrics_and_refusals() {
     let server = tiny_server();
     // Metrics resolve synchronously with the summary JSON.
-    match dispatch::dispatch(&server, wire::Request::Metrics { id: 4 }) {
+    match dispatch::dispatch(&server, wire::Request::Metrics { id: 4, model: 0 }) {
         Dispatched::Now(wire::Response::MetricsJson { id: 4, json }) => {
             assert!(Json::parse(&json).is_ok(), "{json}");
         }
@@ -246,6 +351,7 @@ fn dispatch_needs_no_socket_for_metrics_and_refusals() {
         &server,
         wire::Request::Infer {
             id: 5,
+            model: 0,
             deadline_ms: 0,
             image: image(1),
         },
@@ -277,6 +383,7 @@ mod faulted_dispatch {
     fn infer_frame(id: u64, deadline_ms: u32, seed: u64) -> wire::Request {
         wire::Request::Infer {
             id,
+            model: 0,
             deadline_ms,
             image: image(seed),
         }
@@ -405,8 +512,9 @@ fn every_serve_error_code_crosses_the_wire_verbatim() {
         GraphError::Panic("x".into()).into(),
         GraphError::Poisoned.into(),
         ServeError::NonFinitePayload { index: 3 },
+        ServeError::UnknownModel { model: 9 },
     ];
-    assert_eq!(errors.len(), 18, "table must cover every variant");
+    assert_eq!(errors.len(), 19, "table must cover every variant");
     let mut seen = std::collections::BTreeSet::new();
     for (i, err) in errors.iter().enumerate() {
         let resp = dispatch::error_response(i as u64, err);

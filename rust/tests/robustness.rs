@@ -708,6 +708,7 @@ fn serve_error_codes_are_stable_and_collision_free() {
             48,
             "non_finite_payload",
         ),
+        (ServeError::UnknownModel { model: 7 }, 49, "unknown_model"),
     ];
     let mut seen = std::collections::BTreeSet::new();
     for (e, code, name) in &table {
@@ -723,7 +724,7 @@ fn serve_error_codes_are_stable_and_collision_free() {
         // cause while the wire-policy leaf does not.
         assert!(!e.to_string().is_empty(), "{e:?}");
         match e {
-            ServeError::NonFinitePayload { .. } => {
+            ServeError::NonFinitePayload { .. } | ServeError::UnknownModel { .. } => {
                 assert!(e.source().is_none(), "{e:?} is a leaf")
             }
             _ => assert!(e.source().is_some(), "{e:?} must chain its cause"),
@@ -736,7 +737,167 @@ fn serve_error_codes_are_stable_and_collision_free() {
         ServeError::from(GraphError::EmptyBatch).code(),
     );
     // Exhaustive: a new variant without a table row must fail loudly.
-    assert_eq!(table.len(), 18);
+    assert_eq!(table.len(), 19);
+}
+
+// ---------------------------------------------------------------------------
+// Replica pool: killed replicas, re-sharding, work stealing
+// ---------------------------------------------------------------------------
+
+mod pool {
+    use super::*;
+    use swcnn::coordinator::PoolBuilder;
+    use swcnn::executor::CompiledModel;
+
+    /// One shared compiled model for the whole module: every pool below
+    /// clones the same `Arc` — which is exactly the shared-filter-bank
+    /// contract the pool exists for, and keeps 100-seed loops cheap.
+    fn tiny_model() -> Arc<CompiledModel> {
+        let g = GraphBuilder::new("tiny", (2, 8, 8))
+            .pad(1)
+            .conv2d("c0", 4, 3)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("head", OUT_ELEMS)
+            .build()
+            .expect("tiny graph builds");
+        Arc::new(
+            CompiledModel::uniform(g, &mut Synthetic::new(3), ExecPolicy::dense(2))
+                .expect("tiny compiles"),
+        )
+    }
+
+    /// Acceptance gate: 100 seeds of a killed replica under load.  The
+    /// injected kill fires before the engine touches the batch, so a
+    /// surviving replica re-serves everything the dead one held —
+    /// every admitted request completes exactly once, bit-identical to
+    /// a direct forward, and nothing hangs.
+    #[test]
+    fn killed_replica_every_request_completes_exactly_once_100_seeds() {
+        quiet_injected_panics();
+        let model = tiny_model();
+        let x = image(77);
+        let want = {
+            let mut s = swcnn::executor::Session::from_model(Arc::clone(&model));
+            s.forward(&x).expect("baseline forward")
+        };
+        for seed in 0..100u64 {
+            let pool = PoolBuilder::new(Arc::clone(&model), 2)
+                .restart(fast_restart())
+                .window(Duration::ZERO)
+                .fault_plan(0, FaultPlan::seeded(seed).kill_on_batch(0))
+                .start()
+                .expect("pool starts");
+            let replies: Vec<_> = (0..6)
+                .map(|_| pool.infer_async(x.clone()).expect("admitted"))
+                .collect();
+            for (i, rx) in replies.into_iter().enumerate() {
+                let result = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .expect("admitted request must complete, never hang");
+                match result {
+                    Ok(y) => assert_eq!(
+                        y, want,
+                        "seed {seed} request {i}: recovery must be bit-identical"
+                    ),
+                    Err(e) => panic!(
+                        "seed {seed} request {i}: a surviving replica must re-serve \
+                         the dead one's work, got {e:?}"
+                    ),
+                }
+                assert!(
+                    rx.try_recv().is_err(),
+                    "seed {seed} request {i}: completed twice"
+                );
+            }
+            // The death was journaled and only replica 0 is gone.
+            assert_eq!(pool.dead_replicas(), vec![0], "seed {seed}");
+            assert!(
+                pool.fault_events()
+                    .iter()
+                    .any(|e| matches!(e, FaultEvent::WorkerDied)),
+                "seed {seed}: kill not journaled"
+            );
+        }
+    }
+
+    /// With no survivor, orphaned requests complete with a typed
+    /// `WorkerFault` — never silence, never a hang — and the dead pool
+    /// refuses new admissions synchronously.
+    #[test]
+    fn pool_with_no_survivor_fails_typed_never_hangs() {
+        quiet_injected_panics();
+        let pool = PoolBuilder::new(tiny_model(), 1)
+            .restart(fast_restart())
+            .window(Duration::from_millis(5))
+            .fault_plan(0, FaultPlan::seeded(8).kill_on_batch(0))
+            .start()
+            .expect("pool starts");
+        let replies: Vec<_> = (0..3)
+            .map(|i| pool.infer_async(image(1 + i)).expect("admitted"))
+            .collect();
+        for rx in replies {
+            match rx.recv_timeout(Duration::from_secs(10)).expect("completes") {
+                Err(AdmissionError::WorkerFault { msg }) => {
+                    assert!(msg.contains("replica"), "{msg}")
+                }
+                other => panic!("no-survivor completion must be WorkerFault, got {other:?}"),
+            }
+        }
+        assert_eq!(pool.dead_replicas(), vec![0]);
+        assert!(pool
+            .fault_events()
+            .iter()
+            .any(|e| matches!(e, FaultEvent::WorkerDied)));
+        match pool.infer(image(9)) {
+            Err(AdmissionError::WorkerFault { .. }) => {}
+            other => panic!("dead pool must refuse typed, got {other:?}"),
+        }
+    }
+
+    /// Shard fairness and work stealing under a pipelined burst: the
+    /// admission round-robin lands traffic on every shard, and when one
+    /// replica stalls mid-batch the healthy one steals the matured
+    /// queue behind it instead of idling.
+    #[test]
+    fn healthy_replica_steals_matured_work_from_a_stalled_shard() {
+        quiet_injected_panics();
+        let pool = PoolBuilder::new(tiny_model(), 2)
+            .restart(fast_restart())
+            .window(Duration::from_micros(500))
+            .max_batch(2)
+            .fault_plan(
+                0,
+                FaultPlan::seeded(11).latency_every_batch(Duration::from_millis(250)),
+            )
+            .start()
+            .expect("pool starts");
+        let x = image(5);
+        let replies: Vec<_> = (0..12)
+            .map(|_| pool.infer_async(x.clone()).expect("admitted"))
+            .collect();
+        for rx in replies {
+            rx.recv_timeout(Duration::from_secs(30))
+                .expect("completes")
+                .expect("both shards serve");
+        }
+        let m = pool.metrics.lock().unwrap();
+        assert_eq!(m.requests, 12);
+        // Fairness: strict round-robin admission fed both shards.
+        assert!(
+            m.replica_dispatch().iter().all(|&d| d > 0),
+            "every shard must see traffic: {:?}",
+            m.replica_dispatch()
+        );
+        // Stealing: the healthy replica (1) took matured work off the
+        // stalled shard's queue — the straggler never strands a burst.
+        assert!(
+            m.replica_steals()[1] > 0,
+            "healthy replica must steal from the stall: {:?}",
+            m.replica_steals()
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

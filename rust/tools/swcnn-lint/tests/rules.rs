@@ -91,7 +91,13 @@ fn no_wall_clock_fires_outside_coordinator_and_benches() {
         line_of(&src, "SystemTime::now();"),
     ];
     assert_eq!(lines_for(&findings, Rule::NoWallClock), want, "{findings:#?}");
-    for rel in ["coordinator/server.rs", "bench.rs", "benches/e2e.rs"] {
+    for rel in [
+        "coordinator/server.rs",
+        "coordinator/pool.rs",
+        "src/coordinator/pool.rs",
+        "bench.rs",
+        "benches/e2e.rs",
+    ] {
         let findings = scan_source(rel, &src);
         assert!(
             lines_for(&findings, Rule::NoWallClock).is_empty(),
